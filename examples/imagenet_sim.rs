@@ -1,0 +1,75 @@
+//! ImageNet-at-scale simulation (the §4.3 scenario): train the deeper
+//! 1000-class ResNet on the synthetic ImageNet stand-in with gradient
+//! accumulation active (device microbatch cap 8, mirroring the paper's
+//! 512-per-4-GPU memory limit), sweeping the batch-increase factor
+//! ×2/×4/×8 like Figure 7 — including watching the aggressive schedule's
+//! convergence degrade.
+//!
+//! Run: `cargo run --release --example imagenet_sim`
+
+use adabatch::coordinator::{train, TrainData, TrainerConfig};
+use adabatch::data::synthetic::{generate, SyntheticSpec};
+use adabatch::runtime::{default_artifacts_dir, plan, Client, Manifest, ModelRuntime};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+
+fn main() -> anyhow::Result<()> {
+    adabatch::util::logging::init();
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let rt = ModelRuntime::new(Client::cpu()?, manifest.model("resnet_deep_c1000")?.clone());
+    let d = generate(&SyntheticSpec::imagenet_sim(1));
+    let (train_d, test_d) = (TrainData::Images(d.train), TrainData::Images(d.test));
+    println!(
+        "dataset: {} train / {} test samples, 1000 classes; device µbatch cap 8",
+        train_d.len(),
+        test_d.len()
+    );
+
+    // Show the §4.3 accumulation plans the runtime will use.
+    println!("\neffective batch -> execution plan (cap 8):");
+    for r in [8usize, 32, 128, 512] {
+        let p = plan(r, 1, &rt.entry.train_batches(), Some(8))?;
+        println!(
+            "  r={r:>4}: {} µbatch × {} accumulation steps",
+            p.microbatch, p.accum_steps
+        );
+    }
+
+    let epochs = 6;
+    let interval = 2;
+    println!("\nfactor sweep (start batch 32, {epochs} epochs, interval {interval}):\n");
+    println!("{:<10} {:>10} {:>10} {:>11} {:>9}", "factor", "final err", "best err", "final batch", "diverged");
+    for factor in [1usize, 2, 4, 8] {
+        let (sched, decay) = if factor == 1 {
+            (BatchSchedule::Fixed(32), 0.1)
+        } else {
+            (
+                BatchSchedule::AdaBatch {
+                    initial: 32,
+                    interval_epochs: interval,
+                    factor,
+                    max_batch: Some(512),
+                },
+                0.1 * factor as f64,
+            )
+        };
+        let policy = AdaBatchPolicy::new(
+            &format!("x{factor}"),
+            sched,
+            LrSchedule::step(0.1, decay, interval),
+        );
+        let mut cfg = TrainerConfig::new(policy, epochs).with_seed(5);
+        cfg.max_microbatch = Some(8);
+        let (hist, _) = train(&rt, &cfg, &train_d, &test_d)?;
+        println!(
+            "x{factor:<9} {:>10.4} {:>10.4} {:>11} {:>9}",
+            hist.final_test_error(),
+            hist.best_test_error(),
+            hist.epochs.last().map(|e| e.batch).unwrap_or(0),
+            hist.diverged
+        );
+    }
+    println!("\nEvery factor shares the effective LR decay 0.1 per interval (decay =");
+    println!("0.1×factor with batch ×factor); aggressive factors reach the cap sooner,");
+    println!("trading early-epoch gradient noise for later-epoch parallelism (Fig. 7).");
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Quickstart: train a small ResNet on synthetic CIFAR-10 with the
+//! paper's §4.1 AdaBatch policy (double the batch + decay LR ×0.75 every
+//! interval) and compare against the equivalent fixed-batch baseline
+//! (decay ×0.375) — the two arms must land within ~1% test error of each
+//! other while the adaptive arm takes ~16× fewer updates in its final
+//! epochs.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use adabatch::coordinator::{train, TrainData, TrainerConfig};
+use adabatch::data::synthetic::{generate, SyntheticSpec};
+use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+
+fn main() -> anyhow::Result<()> {
+    adabatch::util::logging::init();
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let rt = ModelRuntime::new(Client::cpu()?, manifest.model("resnet_lite_c10")?.clone());
+
+    let d = generate(&SyntheticSpec::cifar10());
+    let (train_d, test_d) = (TrainData::Images(d.train), TrainData::Images(d.test));
+
+    let epochs = 10;
+    let interval = 2;
+    // §4.1 pairing: fixed decays 0.375; adaptive decays 0.75 AND doubles
+    // the batch — identical effective learning rate trajectories.
+    let fixed = AdaBatchPolicy::new(
+        "fixed-32",
+        BatchSchedule::Fixed(32),
+        LrSchedule::step(0.01, 0.375, interval),
+    );
+    let adaptive = AdaBatchPolicy::new(
+        "adabatch-32",
+        BatchSchedule::doubling(32, interval),
+        LrSchedule::step(0.01, 0.75, interval),
+    );
+    assert!(fixed.effective_lr_matches(&adaptive, epochs));
+
+    println!("== AdaBatch quickstart: ResNet-lite on synthetic CIFAR-10 ==\n");
+    for policy in [fixed, adaptive] {
+        let name = policy.name.clone();
+        let cfg = TrainerConfig::new(policy, epochs).with_seed(42);
+        let (hist, timers) = train(&rt, &cfg, &train_d, &test_d)?;
+        println!("--- {name} ---");
+        println!("epoch  batch   lr       test-err  iters");
+        for e in &hist.epochs {
+            println!(
+                "{:>5}  {:>5}  {:<8.5} {:>8.4}  {:>5}",
+                e.epoch, e.batch, e.lr, e.test_error, e.iterations
+            );
+        }
+        println!(
+            "best test error {:.4}; fwd+bwd {:.1}s over {} updates\n",
+            hist.best_test_error(),
+            timers.total("fwd_bwd").as_secs_f64(),
+            timers.count("fwd_bwd"),
+        );
+    }
+    println!("Both arms share the effective LR schedule; the adaptive arm ends at");
+    println!("batch 512 (16× the work per update → 16× fewer updates/epoch),");
+    println!("which is where the paper's multi-GPU speedup comes from.");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! End-to-end driver (the harness's required E2E validation): train the
+//! ~5M-parameter `transformer_m` character LM for a few hundred steps on
+//! a synthetic corpus with the **AdaBatch policy live** — the batch size
+//! doubles mid-run with the LR coupled — proving L1 (Pallas GEMM + fused
+//! loss kernels) → L2 (jax transformer graph) → L3 (rust coordinator,
+//! accumulation, optimizer) compose on a real workload.
+//!
+//! The loss curve is logged per ~10 updates and summarized per epoch;
+//! EXPERIMENTS.md §E2E records a reference run.
+//!
+//! Run: `make artifacts && cargo run --release --example transformer_e2e`
+//! (pass a smaller `--chars` for a quick smoke).
+
+use adabatch::coordinator::{train, TrainData, TrainerConfig};
+use adabatch::data::corpus::LmDataset;
+use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use adabatch::util::cli::Command;
+use adabatch::util::table::{write_series_csv, Series};
+
+fn main() -> anyhow::Result<()> {
+    adabatch::util::logging::init();
+    let cmd = Command::new("transformer_e2e", "end-to-end AdaBatch LM training")
+        .opt("chars", "120000", "corpus size in characters")
+        .opt("epochs", "6", "epochs")
+        .opt("interval", "2", "batch-doubling interval (epochs)")
+        .flag("help", "usage");
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let a = cmd.parse(&argv)?;
+
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let entry = manifest.model("transformer_m")?.clone();
+    println!(
+        "== transformer_e2e: {} params, seq_len {} ==",
+        entry.total_params(),
+        entry.input.x_shape[0]
+    );
+    let seq_len = entry.input.x_shape[0];
+    let rt = ModelRuntime::new(Client::cpu()?, entry);
+
+    let chars = a.usize("chars")?;
+    let train_data = TrainData::Lm(LmDataset::synthetic(chars, seq_len, 11));
+    let test_data = TrainData::Lm(LmDataset::synthetic(chars / 8, seq_len, 12));
+    println!(
+        "corpus: {} train windows, {} test windows",
+        train_data.len(),
+        test_data.len()
+    );
+
+    // AdaBatch live: start at batch 4, double every `interval` epochs with
+    // LR decay 0.75 (effective decay 0.375, §3.1). The native microbatch
+    // ladder tops out at 4, so doublings are realized by gradient
+    // accumulation — the §4.3 mechanism — visible in the iters column.
+    let epochs = a.usize("epochs")?;
+    let interval = a.usize("interval")?;
+    let policy = AdaBatchPolicy::new(
+        "adabatch-lm",
+        BatchSchedule::doubling(4, interval),
+        LrSchedule::step(0.08, 0.75, interval),
+    );
+    let cfg = TrainerConfig::new(policy, epochs).with_seed(7);
+    let t0 = std::time::Instant::now();
+    let (hist, timers) = train(&rt, &cfg, &train_data, &test_data)?;
+
+    println!("\nepoch  batch  lr       train-loss  test-loss  token-err  iters  secs");
+    let mut loss_series = Series::new("train_loss");
+    let mut err_series = Series::new("test_token_error");
+    for e in &hist.epochs {
+        println!(
+            "{:>5}  {:>5}  {:<8.5} {:>9.4}  {:>9.4}  {:>9.4}  {:>5}  {:>5.1}",
+            e.epoch, e.batch, e.lr, e.train_loss, e.test_loss, e.test_error, e.iterations, e.wall_secs
+        );
+        loss_series.push(e.epoch as f64, e.train_loss);
+        err_series.push(e.epoch as f64, e.test_error);
+    }
+    let total_updates: usize = hist.epochs.iter().map(|e| e.iterations).sum();
+    println!(
+        "\n{} updates in {:.1}s; final train loss {:.3} (uniform = ln96 ≈ 4.56); diverged={}",
+        total_updates,
+        t0.elapsed().as_secs_f64(),
+        hist.epochs.last().map(|e| e.train_loss).unwrap_or(f64::NAN),
+        hist.diverged
+    );
+    println!("{}", timers.report());
+    write_series_csv(
+        std::path::Path::new("results/transformer_e2e.csv"),
+        &[loss_series, err_series],
+    )?;
+    println!("(loss curve written to results/transformer_e2e.csv)");
+    assert!(!hist.diverged, "E2E run diverged");
+    Ok(())
+}

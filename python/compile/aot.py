@@ -1,0 +1,139 @@
+"""AOT lowering: jax -> HLO text artifacts + manifest.json.
+
+Run once by ``make artifacts``; python never runs again after this. The
+interchange format is HLO **text**, not a serialized HloModuleProto: the
+rust side links xla_extension 0.5.1, which rejects the 64-bit instruction
+ids jax >= 0.5 emits in protos (`proto.id() <= INT_MAX`); the HLO text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example and
+DESIGN.md §2).
+
+One artifact per (model, step-kind, microbatch-size): XLA specializes on
+shapes, so adaptive batch sizes at the system level become an *artifact
+ladder* at the runtime level — the rust executable cache picks the largest
+native microbatch that fits, and realizes bigger effective batches by
+gradient accumulation (paper §4.3, Eq. 5).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--matrix default|full|smoke]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, make_eval_step, make_train_step
+from .models import MODEL_REGISTRY, get_model
+
+# Build matrices: model -> (train microbatches, eval batches).
+# Chosen so (a) every experiment arm has a native microbatch, (b) the CPU
+# Table-1 efficiency sweep has a ladder, (c) total compile time stays
+# tractable on one core.
+MATRICES = {
+    "smoke": {
+        "transformer_s": ([4], [4]),
+        "resnet_lite_c10": ([8], [16]),
+    },
+    "default": {
+        "alexnet_lite_c10": ([16, 32, 64], [128]),
+        "alexnet_lite_c100": ([16, 32, 64], [128]),
+        "vgg_lite_c10": ([16, 32], [64]),
+        "vgg_lite_c100": ([16, 32], [64]),
+        "resnet_lite_c10": ([8, 16, 32, 64], [128]),
+        "resnet_lite_c100": ([8, 16, 32, 64], [128]),
+        "resnet_deep_c1000": ([8], [16]),
+        "transformer_s": ([4, 8], [8]),
+        "transformer_m": ([2, 4], [4]),
+    },
+    "full": {
+        name: ([8, 16, 32, 64], [128]) for name in MODEL_REGISTRY
+    },
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(model, step_fn, batch: int) -> str:
+    lowered = jax.jit(step_fn).lower(*example_args(model, batch))
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, matrix_name: str, only_model: str | None = None) -> dict:
+    matrix = MATRICES[matrix_name]
+    manifest = {"version": 1, "matrix": matrix_name, "models": {}}
+    for name, (train_bs, eval_bs) in sorted(matrix.items()):
+        if only_model and name != only_model:
+            continue
+        model = get_model(name)
+        mdir = os.path.join(out_dir, name)
+        os.makedirs(mdir, exist_ok=True)
+        entry = {
+            "input": {
+                "x_shape": list(model.inputs.x_shape),
+                "x_dtype": model.inputs.x_dtype,
+                "y_shape": list(model.inputs.y_shape),
+                "n_classes": model.inputs.n_classes,
+                "labels_per_sample": model.inputs.labels_per_sample,
+            },
+            "flops_per_sample": model.flops_per_sample,
+            "params": [
+                {"name": p.name, "shape": list(p.shape), "init": list(p.init)}
+                for p in model.params
+            ],
+            "artifacts": {"train": {}, "eval": {}},
+        }
+        for kind, bss, maker in (
+            ("train", train_bs, make_train_step),
+            ("eval", eval_bs, make_eval_step),
+        ):
+            for bs in bss:
+                t0 = time.time()
+                text = lower_one(model, maker(model), bs)
+                rel = f"{name}/{kind}_bs{bs}.hlo.txt"
+                with open(os.path.join(out_dir, rel), "w") as f:
+                    f.write(text)
+                entry["artifacts"][kind][str(bs)] = rel
+                print(
+                    f"[aot] {name} {kind} bs={bs}: {len(text)/1e6:.2f} MB "
+                    f"in {time.time()-t0:.1f}s",
+                    flush=True,
+                )
+        manifest["models"][name] = entry
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--matrix", default="default", choices=sorted(MATRICES))
+    ap.add_argument("--model", default=None, help="restrict to one model")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = build(args.out_dir, args.matrix, args.model)
+    # merge with an existing manifest so incremental --model runs compose
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old_models = old.get("models", {})
+        old_models.update(manifest["models"])
+        manifest["models"] = old_models
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"[aot] wrote {mpath} ({len(manifest['models'])} models)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""Batch-normalization forward as a Pallas kernel (paper Appendix A.4).
+
+BN is the one layer whose *semantics* depend on the batch size r
+(Eq. 37-40 normalize over the batch), which is why AdaBatch's claim that
+schedule equivalence holds for VGG19_BN / ResNet matters: the statistics
+get better-conditioned, not different in expectation, as r grows. The
+kernel computes the biased batch statistics in one VMEM pass per feature
+tile and applies the affine transform — cost O(m r), linear in r as
+Appendix A.4 requires.
+
+Layout: callers flatten NHWC conv activations to [rows = r*h*w, features=c]
+so both conv BN ("spatial" statistics) and FC BN share one kernel. The
+feature axis is tiled; the row axis is kept whole per tile so the reduction
+needs no cross-program accumulation (rows for our models fit VMEM; the
+estimate is in DESIGN.md §Perf).
+
+Differentiation: the L2 model uses this kernel inside a ``jax.custom_vjp``
+pair whose backward is the jnp closed form of Eq. (46)-(49) — BN backward
+is bandwidth-bound elementwise work that XLA fuses well, so a dedicated
+backward kernel would buy nothing under interpret mode (DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_FEAT_TILE = 128
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _bn_kernel(x_ref, gamma_ref, beta_ref, o_ref, *, rows: int, eps: float):
+    x = x_ref[...]
+    nrows = x.shape[0]
+    row = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    valid = row < rows
+    xv = jnp.where(valid, x, 0.0)
+    mu = jnp.sum(xv, axis=0, keepdims=True) / rows
+    d = jnp.where(valid, x - mu, 0.0)
+    var = jnp.sum(d * d, axis=0, keepdims=True) / rows
+    xhat = d * jax.lax.rsqrt(var + eps)
+    o_ref[...] = xhat * gamma_ref[...][None, :] + beta_ref[...][None, :]
+
+
+def batchnorm2d(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Batch norm over axis 0 of ``x: [rows, features]``."""
+    rows, feats = x.shape
+    ft = min(_FEAT_TILE, max(8, 1 << (feats - 1).bit_length()))
+    fp = _ceil_div(feats, ft) * ft
+    rp = max(8, 1 << (rows - 1).bit_length())
+    xp = jnp.pad(x, ((0, rp - rows), (0, fp - feats)))
+    gp = jnp.pad(gamma, (0, fp - feats))
+    bp = jnp.pad(beta, (0, fp - feats))
+    out = pl.pallas_call(
+        functools.partial(_bn_kernel, rows=rows, eps=eps),
+        grid=(fp // ft,),
+        in_specs=[
+            pl.BlockSpec((rp, ft), lambda j: (0, j)),
+            pl.BlockSpec((ft,), lambda j: (j,)),
+            pl.BlockSpec((ft,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((rp, ft), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, fp), jnp.float32),
+        interpret=True,
+    )(xp, gp, bp)
+    return out[:rows, :feats]
+
+
+# Differentiable wrapper: Pallas forward, closed-form jnp backward
+# (Eq. 46-49 in matrix form).
+
+
+@functools.partial(jax.custom_vjp)
+def batchnorm2d_vjp(x, gamma, beta):
+    return batchnorm2d(x, gamma, beta)
+
+
+def _bn_fwd(x, gamma, beta):
+    eps = 1e-5
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=0, keepdims=True)
+    out = batchnorm2d(x, gamma, beta, eps)
+    return out, (x, gamma, mu, var)
+
+
+def _bn_bwd(res, g):
+    x, gamma, mu, var = res
+    eps = 1e-5
+    r = x.shape[0]
+    inv = jax.lax.rsqrt(var + eps)
+    xhat = (x - mu) * inv
+    dgamma = jnp.sum(g * xhat, axis=0)
+    dbeta = jnp.sum(g, axis=0)
+    # Eq. (49): D^{-1} W (Vhat - D^{-2}(Uhat o Yhat)) in per-feature form
+    dx = (gamma[None, :] * inv) * (
+        g - jnp.mean(g, axis=0, keepdims=True) - xhat * jnp.mean(g * xhat, axis=0, keepdims=True)
+    )
+    return dx, dgamma, dbeta
+
+
+batchnorm2d_vjp.defvjp(_bn_fwd, _bn_bwd)

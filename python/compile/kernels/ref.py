@@ -1,0 +1,106 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an oracle here; pytest (and hypothesis
+sweeps) assert ``allclose(kernel(...), ref(...))``. These are the CORE
+correctness signal for Layer 1: the kernels must match these to numerical
+tolerance across shapes, and the L2 model is free to swap between the two
+(``use_pallas`` flag) without changing semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_bias_act(x: jax.Array, w: jax.Array, b: jax.Array, act: str = "none") -> jax.Array:
+    """``act(x @ w + b)`` — oracle for kernels.matmul.matmul_bias_act.
+
+    x: [m, k], w: [k, n], b: [n] -> [m, n]
+    """
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    return apply_act(y, act)
+
+
+def apply_act(y: jax.Array, act: str) -> jax.Array:
+    if act == "none":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        # tanh approximation (matches the kernel's closed form)
+        c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+        return 0.5 * y * (1.0 + jnp.tanh(c * (y + 0.044715 * y**3)))
+    raise ValueError(f"unknown act {act!r}")
+
+
+def act_grad(y: jax.Array, act: str) -> jax.Array:
+    """d act(y) / d y evaluated at pre-activation y."""
+    if act == "none":
+        return jnp.ones_like(y)
+    if act == "relu":
+        return (y > 0.0).astype(y.dtype)
+    if act == "gelu":
+        c = jnp.sqrt(2.0 / jnp.pi).astype(y.dtype)
+        inner = c * (y + 0.044715 * y**3)
+        t = jnp.tanh(inner)
+        dinner = c * (1.0 + 3 * 0.044715 * y**2)
+        return 0.5 * (1.0 + t) + 0.5 * y * (1.0 - t**2) * dinner
+    raise ValueError(f"unknown act {act!r}")
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.softmax_xent.softmax_xent_loss.
+
+    logits: [r, M] float32, labels: [r] int32 class ids.
+    Returns (mean_loss: scalar, correct_count: scalar f32) — Eq. (9)-(12)
+    of the paper with the 1/r batch mean folded in.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    z = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(z), axis=-1)) + m[:, 0]
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - picked)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+    return loss, correct
+
+
+def softmax_xent_grad(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """d mean_loss / d logits = (p - z*) / r  (paper Eq. 17 with batch mean)."""
+    r = logits.shape[0]
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    return (p - onehot) / r
+
+
+def sgd_momentum_update(
+    p: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    lr,
+    momentum: float,
+    weight_decay: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.sgd.sgd_momentum — PyTorch-style SGD w/ momentum.
+
+    v' = mu * v + (g + wd * p);  p' = p - lr * v'
+    (the α/r scaling of paper Eq. (2) is applied by the caller: gradients
+    arriving here are already batch-mean gradients).
+    """
+    v_new = momentum * v + (g + weight_decay * p)
+    p_new = p - lr * v_new
+    return p_new, v_new
+
+
+def batchnorm_forward(
+    x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    """Oracle for kernels.batchnorm.batchnorm2d — per-feature batch norm.
+
+    x: [r, f] (features last; conv callers reshape NHWC -> [r*h*w, c]).
+    Paper Appendix A.4, Eq. (37)-(40).
+    """
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=0, keepdims=True)
+    xhat = (x - mu) / jnp.sqrt(var + eps)
+    return xhat * gamma[None, :] + beta[None, :]

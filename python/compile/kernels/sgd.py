@@ -1,0 +1,86 @@
+"""Fused SGD-with-momentum + weight-decay Pallas update kernel.
+
+Implements the paper's update rule (Eq. 2 / Eq. 8):
+
+    W_{i+1} = W_i - (alpha/r) * dW_i
+
+in its momentum form (momentum 0.9 + weight decay are what every
+experiment in Section 4 uses):
+
+    v' = mu * v + (g + wd * p)       p' = p - lr * v'
+
+The lr handed to this kernel is the *per-sample-mean* learning rate — the
+1/r of Eq. (2) is already folded into the batch-mean gradient by the loss
+kernel, which is exactly what keeps the AdaBatch effective-LR contract: when
+the coordinator doubles r and rescales alpha, this kernel is unchanged.
+
+The kernel is a pure element-wise dual-output map over flat parameter
+buffers — one HBM pass reading (p, g, v) and writing (p', v'), replacing
+the three separate passes an unfused optimizer would take. lr arrives as a
+scalar operand so a single compiled artifact serves every point of the LR
+schedule.
+
+This kernel exists for the optional fused-train-step artifact; the default
+architecture applies updates in the rust coordinator (see DESIGN.md §2) so
+that gradient accumulation and all-reduce can interpose. Both paths are
+tested against ``ref.sgd_momentum_update``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TILE = 1024
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, v_ref, p_out, v_out, *, momentum: float, weight_decay: float):
+    p = p_ref[...]
+    g = g_ref[...] + weight_decay * p
+    v = momentum * v_ref[...] + g
+    v_out[...] = v
+    p_out[...] = p - lr_ref[0] * v
+
+
+def sgd_momentum(
+    p: jax.Array,
+    g: jax.Array,
+    v: jax.Array,
+    lr: jax.Array,
+    momentum: float = 0.9,
+    weight_decay: float = 5e-4,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused (p', v') update over a flat f32 buffer. lr: scalar array."""
+    assert p.ndim == 1 and p.shape == g.shape == v.shape
+    n = p.shape[0]
+    tile = min(_TILE, max(8, 1 << (n - 1).bit_length()))
+    np_ = _ceil_div(n, tile) * tile
+    pad = np_ - n
+    pp, gp, vp = (jnp.pad(a, (0, pad)) for a in (p, g, v))
+    p2, v2 = pl.pallas_call(
+        functools.partial(_sgd_kernel, momentum=momentum, weight_decay=weight_decay),
+        grid=(np_ // tile,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+            jax.ShapeDtypeStruct((np_,), jnp.float32),
+        ],
+        interpret=True,
+    )(jnp.reshape(lr, (1,)), pp, gp, vp)
+    return p2[:n], v2[:n]

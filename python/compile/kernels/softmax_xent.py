@@ -1,0 +1,148 @@
+"""Fused softmax + cross-entropy Pallas kernel with analytic backward.
+
+Implements the paper's loss (Appendix A.1, Eq. 9-12): per-sample cross
+entropy E(x) = -log p_i* with softmax p (Eq. 11), batch-mean reduced with
+the 1/r factor the update rule (Eq. 2) expects. The backward is the
+closed-form (p - z*)/r of Eq. 17 — also a Pallas kernel, so no softmax is
+re-materialized by autodiff.
+
+Fusing max/exp/sum/log into one VMEM-resident pass over the [r, M] logits
+tile is the classic serving/training fusion; here it also keeps the loss
+reduction linear in r (Section 3.3 invariant). The kernel additionally
+emits the per-batch correct-prediction count so evaluation needs no second
+pass over the logits.
+
+Grid: one program per batch row-tile; the class axis is kept whole in VMEM
+(M <= a few thousand for our models; the padded class tail is masked with
+-inf so it cannot win max/argmax or contribute to the partition function).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_ROW_TILE = 128
+_NEG_INF = -1e30
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _fwd_kernel(logits_ref, labels_ref, loss_ref, correct_ref, *, n_classes: int):
+    """Per row-tile: masked logsumexp loss sum + correct count."""
+    z = logits_ref[...]
+    lab = labels_ref[...]
+    rows, cols = z.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
+    class_mask = col < n_classes
+    zm = jnp.where(class_mask, z, _NEG_INF)
+    # valid rows are flagged with label >= 0 (padding rows use -1)
+    valid = lab >= 0
+    m = jnp.max(zm, axis=-1)
+    lse = jnp.log(jnp.sum(jnp.exp(zm - m[:, None]), axis=-1)) + m
+    lab_safe = jnp.where(valid, lab, 0)
+    picked = jnp.sum(jnp.where(col == lab_safe[:, None], zm, 0.0), axis=-1)
+    losses = jnp.where(valid, lse - picked, 0.0)
+    pred = jnp.argmax(zm, axis=-1).astype(jnp.int32)
+    corr = jnp.where(valid & (pred == lab_safe), 1.0, 0.0)
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        loss_ref[...] = jnp.zeros_like(loss_ref)
+        correct_ref[...] = jnp.zeros_like(correct_ref)
+
+    loss_ref[...] += jnp.sum(losses)[None]
+    correct_ref[...] += jnp.sum(corr)[None]
+
+
+def _bwd_kernel(logits_ref, labels_ref, g_ref, dlogits_ref, *, n_classes: int, inv_r: float):
+    """(p - onehot) * g / r per row-tile (Eq. 17 with batch mean)."""
+    z = logits_ref[...]
+    lab = labels_ref[...]
+    rows, cols = z.shape
+    col = jax.lax.broadcasted_iota(jnp.int32, (rows, cols), 1)
+    class_mask = col < n_classes
+    zm = jnp.where(class_mask, z, _NEG_INF)
+    valid = lab >= 0
+    m = jnp.max(zm, axis=-1, keepdims=True)
+    e = jnp.exp(zm - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    onehot = (col == jnp.where(valid, lab, -2)[:, None]).astype(z.dtype)
+    d = (p - onehot) * inv_r * g_ref[0]
+    d = jnp.where(class_mask & valid[:, None], d, 0.0)
+    dlogits_ref[...] = d
+
+
+def _pad_rows(r: int) -> int:
+    return _ceil_div(r, _ROW_TILE) * _ROW_TILE if r > _ROW_TILE else max(8, 1 << (r - 1).bit_length())
+
+
+@jax.custom_vjp
+def softmax_xent_loss(logits: jax.Array, labels: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(mean_loss, correct_count) over a batch. logits [r, M] f32, labels [r] i32."""
+    return _run_fwd(logits, labels)[:2]
+
+
+def _run_fwd(logits, labels):
+    r, n_classes = logits.shape
+    rp = _pad_rows(r)
+    tile = min(_ROW_TILE, rp)
+    cp = max(8, 1 << (n_classes - 1).bit_length())
+    zp = jnp.pad(logits, ((0, rp - r), (0, cp - n_classes)))
+    lp = jnp.pad(labels.astype(jnp.int32), (0, rp - r), constant_values=-1)
+    loss_sum, correct = pl.pallas_call(
+        functools.partial(_fwd_kernel, n_classes=n_classes),
+        grid=(rp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, cp), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ],
+        interpret=True,
+    )(zp, lp)
+    return loss_sum[0] / r, correct[0], (logits, labels)
+
+
+def _vjp_fwd(logits, labels):
+    loss, correct, res = _run_fwd(logits, labels)
+    return (loss, correct), res
+
+
+def _vjp_bwd(res, g):
+    logits, labels = res
+    gl, _gc = g  # correct-count is non-differentiable
+    r, n_classes = logits.shape
+    rp = _pad_rows(r)
+    tile = min(_ROW_TILE, rp)
+    cp = max(8, 1 << (n_classes - 1).bit_length())
+    zp = jnp.pad(logits, ((0, rp - r), (0, cp - n_classes)))
+    lp = jnp.pad(labels.astype(jnp.int32), (0, rp - r), constant_values=-1)
+    d = pl.pallas_call(
+        functools.partial(_bwd_kernel, n_classes=n_classes, inv_r=1.0 / r),
+        grid=(rp // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, cp), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, cp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, cp), jnp.float32),
+        interpret=True,
+    )(zp, lp, jnp.reshape(gl, (1,)))
+    return d[:r, :n_classes], None
+
+
+softmax_xent_loss.defvjp(_vjp_fwd, _vjp_bwd)

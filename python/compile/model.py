@@ -1,0 +1,65 @@
+"""L2 step builders: the jitted functions that get AOT-lowered to HLO.
+
+Two step kinds per model, both *pure* (no python on the request path):
+
+  train_step(params..., x, y) -> (loss, correct, grads...)
+      value_and_grad over the model's loss; gradients come back in the
+      manifest's parameter order. The optimizer deliberately does NOT live
+      here — the rust coordinator applies Eq. (2) so that AdaBatch's
+      gradient accumulation (Eq. 5), all-reduce and effective-LR coupling
+      can interpose between gradient production and the weight update.
+
+  eval_step(params..., x, y) -> (loss, correct)
+      forward-only; `correct` is the per-batch correct-prediction count
+      emitted by the fused loss kernel.
+
+Signatures use a *flat argument list* (not pytrees) because the rust side
+feeds positional PJRT literals.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from .models.common import ModelDef
+
+
+def make_train_step(model: ModelDef) -> Callable:
+    n = len(model.params)
+
+    def step(*args):
+        params = list(args[:n])
+        x, y = args[n], args[n + 1]
+
+        def lossf(params: List[jax.Array]):
+            loss, correct = model.loss_fn(params, x, y)
+            return loss, correct
+
+        (loss, correct), grads = jax.value_and_grad(lossf, has_aux=True)(params)
+        return (loss, correct, *grads)
+
+    return step
+
+
+def make_eval_step(model: ModelDef) -> Callable:
+    n = len(model.params)
+
+    def step(*args):
+        params = list(args[:n])
+        x, y = args[n], args[n + 1]
+        loss, correct = model.loss_fn(params, x, y)
+        return (loss, correct)
+
+    return step
+
+
+def example_args(model: ModelDef, batch: int):
+    """ShapeDtypeStructs for jit.lower: params..., x, y."""
+    specs = [jax.ShapeDtypeStruct(p.shape, jnp.float32) for p in model.params]
+    xd = jnp.float32 if model.inputs.x_dtype == "f32" else jnp.int32
+    x = jax.ShapeDtypeStruct((batch, *model.inputs.x_shape), xd)
+    y = jax.ShapeDtypeStruct((batch, *model.inputs.y_shape), jnp.int32)
+    return (*specs, x, y)

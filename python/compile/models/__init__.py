@@ -1,0 +1,2 @@
+from . import cnn, common, transformer  # noqa: F401
+from .common import MODEL_REGISTRY, get_model  # noqa: F401

@@ -1,0 +1,270 @@
+"""The paper's CNN family, scaled for a 1-CPU-core testbed.
+
+Section 4 trains AlexNet, VGG19_BN, ResNet-20 (CIFAR) and ResNet-50
+(ImageNet). We keep each family's distinguishing topology — AlexNet's
+plain conv->FC stack, VGG's BN'd conv blocks with maxpool, ResNet's
+identity-skip residual stages with global average pooling — at reduced
+width/depth ("-lite"), per DESIGN.md §3 (schedule-equivalence is
+architecture-generic; what matters for AdaBatch is the batch-size-dependent
+layer, BN, and the depth/residual structure, which are retained).
+
+Convolutions use ``lax.conv_general_dilated`` (NHWC/HWIO); the FC heads and
+the loss run through the Pallas kernels (matmul_bias_act, softmax_xent) so
+every model exercises the L1 hot path. BN uses the Pallas forward with the
+closed-form Eq. 46-49 backward.
+
+All flops counts follow the paper's Section 3.3 / Appendix A accounting
+(2*flops for MAC; fwd only — the coordinator multiplies by 3 for fwd+bwd
+in the usual 1:2 convention).
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels.batchnorm import batchnorm2d_vjp
+from ..kernels.matmul import matmul_bias_act
+from ..kernels.softmax_xent import softmax_xent_loss
+from .common import InputSpec, ModelDef, ParamBuilder, register
+
+IMG = (32, 32, 3)  # CIFAR-shaped NHWC sample
+
+
+def _conv(x: jax.Array, w: jax.Array, b: jax.Array, stride: int = 1, padding: str = "SAME") -> jax.Array:
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]
+
+
+def _bn_nhwc(x: jax.Array, gamma: jax.Array, beta: jax.Array) -> jax.Array:
+    """Spatial batch norm: flatten NHWC -> [n*h*w, c] for the Pallas kernel."""
+    n, h, w, c = x.shape
+    flat = x.reshape(n * h * w, c)
+    return batchnorm2d_vjp(flat, gamma, beta).reshape(n, h, w, c)
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _gap(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def _head(x2d: jax.Array, w, b, y) -> Tuple[jax.Array, jax.Array]:
+    logits = matmul_bias_act(x2d, w, b, "none")
+    return softmax_xent_loss(logits, y)
+
+
+def _conv_flops(h, w, kh, kw, cin, cout, stride=1):
+    oh, ow = h // stride, w // stride
+    return 2 * oh * ow * kh * kw * cin * cout
+
+
+# ---------------------------------------------------------------------------
+# AlexNet-lite
+# ---------------------------------------------------------------------------
+
+
+def _build_alexnet(n_classes: int, width: int = 32) -> ModelDef:
+    pb = ParamBuilder()
+    c1 = pb.conv("conv1", 3, 3, 3, width)
+    c2 = pb.conv("conv2", 3, 3, width, width * 2)
+    c3 = pb.conv("conv3", 3, 3, width * 2, width * 4)
+    feat = width * 4 * 4 * 4  # after three stride-2 reductions: 32->16->8->4
+    f1 = pb.dense("fc1", feat, 256)
+    f2 = pb.dense("fc2", 256, n_classes)
+    specs = pb.specs
+
+    def loss_fn(p: List[jax.Array], x: jax.Array, y: jax.Array):
+        h = jax.nn.relu(_conv(x, p[c1[0]], p[c1[1]], stride=2))
+        h = jax.nn.relu(_conv(h, p[c2[0]], p[c2[1]], stride=2))
+        h = jax.nn.relu(_conv(h, p[c3[0]], p[c3[1]], stride=2))
+        h = h.reshape(h.shape[0], -1)
+        h = matmul_bias_act(h, p[f1[0]], p[f1[1]], "relu")
+        return _head(h, p[f2[0]], p[f2[1]], y)
+
+    flops = (
+        _conv_flops(32, 32, 3, 3, 3, width, 2)
+        + _conv_flops(16, 16, 3, 3, width, width * 2, 2)
+        + _conv_flops(8, 8, 3, 3, width * 2, width * 4, 2)
+        + 2 * feat * 256
+        + 2 * 256 * n_classes
+    )
+    return ModelDef(
+        name=f"alexnet_lite_c{n_classes}",
+        params=specs,
+        inputs=InputSpec(IMG, "f32", (), n_classes),
+        loss_fn=loss_fn,
+        flops_per_sample=flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# VGG-lite (BN'd conv pairs + maxpool, VGG19_BN's block structure)
+# ---------------------------------------------------------------------------
+
+
+def _build_vgg(n_classes: int, width: int = 16) -> ModelDef:
+    pb = ParamBuilder()
+    cfg = [(3, width), (width, width), ("pool",), (width, 2 * width), (2 * width, 2 * width),
+           ("pool",), (2 * width, 4 * width), (4 * width, 4 * width), ("pool",)]
+    convs = []
+    bns = []
+    i = 0
+    for entry in cfg:
+        if entry == ("pool",):
+            convs.append(None)
+            bns.append(None)
+            continue
+        cin, cout = entry
+        convs.append(pb.conv(f"conv{i}", 3, 3, cin, cout))
+        bns.append(pb.bn(f"bn{i}", cout))
+        i += 1
+    feat = 4 * width * 4 * 4  # 32 -> 16 -> 8 -> 4 via three pools
+    f1 = pb.dense("fc1", feat, 128)
+    f2 = pb.dense("fc2", 128, n_classes)
+    specs = pb.specs
+
+    def loss_fn(p: List[jax.Array], x: jax.Array, y: jax.Array):
+        h = x
+        for conv_idx, bn_idx in zip(convs, bns):
+            if conv_idx is None:
+                h = _maxpool2(h)
+                continue
+            h = _conv(h, p[conv_idx[0]], p[conv_idx[1]])
+            h = _bn_nhwc(h, p[bn_idx[0]], p[bn_idx[1]])
+            h = jax.nn.relu(h)
+        h = h.reshape(h.shape[0], -1)
+        h = matmul_bias_act(h, p[f1[0]], p[f1[1]], "relu")
+        return _head(h, p[f2[0]], p[f2[1]], y)
+
+    flops = (
+        _conv_flops(32, 32, 3, 3, 3, width) + _conv_flops(32, 32, 3, 3, width, width)
+        + _conv_flops(16, 16, 3, 3, width, 2 * width) + _conv_flops(16, 16, 3, 3, 2 * width, 2 * width)
+        + _conv_flops(8, 8, 3, 3, 2 * width, 4 * width) + _conv_flops(8, 8, 3, 3, 4 * width, 4 * width)
+        + 2 * feat * 128 + 2 * 128 * n_classes
+    )
+    return ModelDef(
+        name=f"vgg_lite_c{n_classes}",
+        params=specs,
+        inputs=InputSpec(IMG, "f32", (), n_classes),
+        loss_fn=loss_fn,
+        flops_per_sample=flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ResNet-lite (ResNet-20's 3-stage CIFAR topology, n blocks per stage)
+# ---------------------------------------------------------------------------
+
+
+def _build_resnet(n_classes: int, blocks_per_stage: int = 1, width: int = 16) -> ModelDef:
+    pb = ParamBuilder()
+    stem = pb.conv("stem", 3, 3, 3, width)
+    stem_bn = pb.bn("stem_bn", width)
+    stages = []
+    cin = width
+    for s, cout in enumerate((width, 2 * width, 4 * width)):
+        blocks = []
+        for b in range(blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            name = f"s{s}b{b}"
+            c1 = pb.conv(f"{name}.c1", 3, 3, cin, cout)
+            n1 = pb.bn(f"{name}.n1", cout)
+            c2 = pb.conv(f"{name}.c2", 3, 3, cout, cout)
+            n2 = pb.bn(f"{name}.n2", cout)
+            proj = None
+            if stride != 1 or cin != cout:
+                proj = pb.conv(f"{name}.proj", 1, 1, cin, cout)
+            blocks.append((c1, n1, c2, n2, proj, stride))
+            cin = cout
+        stages.append(blocks)
+    head = pb.dense("fc", 4 * width, n_classes)
+    specs = pb.specs
+
+    def loss_fn(p: List[jax.Array], x: jax.Array, y: jax.Array):
+        h = jax.nn.relu(_bn_nhwc(_conv(x, p[stem[0]], p[stem[1]]), p[stem_bn[0]], p[stem_bn[1]]))
+        for blocks in stages:
+            for (c1, n1, c2, n2, proj, stride) in blocks:
+                shortcut = h
+                z = jax.nn.relu(_bn_nhwc(_conv(h, p[c1[0]], p[c1[1]], stride=stride), p[n1[0]], p[n1[1]]))
+                z = _bn_nhwc(_conv(z, p[c2[0]], p[c2[1]]), p[n2[0]], p[n2[1]])
+                if proj is not None:
+                    shortcut = _conv(h, p[proj[0]], p[proj[1]], stride=stride)
+                h = jax.nn.relu(z + shortcut)
+        h = _gap(h)
+        return _head(h, p[head[0]], p[head[1]], y)
+
+    # rough fwd flops: stage s at resolution 32/2^s
+    flops = _conv_flops(32, 32, 3, 3, 3, width)
+    res = 32
+    cin_f = width
+    for s, cout in enumerate((width, 2 * width, 4 * width)):
+        for b in range(blocks_per_stage):
+            stride = 2 if (s > 0 and b == 0) else 1
+            res_out = res // stride
+            flops += _conv_flops(res, res, 3, 3, cin_f, cout, stride)
+            flops += _conv_flops(res_out, res_out, 3, 3, cout, cout)
+            if stride != 1 or cin_f != cout:
+                flops += _conv_flops(res, res, 1, 1, cin_f, cout, stride)
+            cin_f = cout
+            res = res_out
+    flops += 2 * 4 * width * n_classes
+    return ModelDef(
+        name=f"resnet_lite_c{n_classes}_b{blocks_per_stage}",
+        params=specs,
+        inputs=InputSpec(IMG, "f32", (), n_classes),
+        loss_fn=loss_fn,
+        flops_per_sample=flops,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Registry entries (names are what aot.py / rust configs refer to)
+# ---------------------------------------------------------------------------
+
+
+@register("alexnet_lite_c10")
+def _a10():
+    return _build_alexnet(10)
+
+
+@register("alexnet_lite_c100")
+def _a100():
+    return _build_alexnet(100)
+
+
+@register("vgg_lite_c10")
+def _v10():
+    return _build_vgg(10)
+
+
+@register("vgg_lite_c100")
+def _v100():
+    return _build_vgg(100)
+
+
+@register("resnet_lite_c10")
+def _r10():
+    return _build_resnet(10)
+
+
+@register("resnet_lite_c100")
+def _r100():
+    return _build_resnet(100)
+
+
+@register("resnet_deep_c1000")
+def _r1000():
+    # the ImageNet/ResNet-50 stand-in: deeper (2 blocks/stage), wider,
+    # 1000-way head — used by the fig5/6/7 gradient-accumulation runs
+    return _build_resnet(1000, blocks_per_stage=2, width=24)

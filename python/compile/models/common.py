@@ -1,0 +1,134 @@
+"""Model plumbing shared by the CNN family and the transformer.
+
+A model here is a ``ModelDef``: an ordered parameter spec (name, shape,
+init) plus apply functions. Parameters cross the python/rust boundary as a
+*flat ordered list of f32 arrays* — the order in ``param_specs`` is the
+contract, recorded in ``artifacts/manifest.json`` and consumed by
+``rust/src/runtime/artifact.rs`` and ``optim/param.rs``. Keeping the
+optimizer in rust (DESIGN.md §2) requires exactly this: rust must know
+every parameter's shape, size and init recipe without importing python.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One learnable tensor. ``init`` is a recipe rust can reproduce:
+    ("zeros",), ("ones",), ("normal", std), ("uniform", bound)."""
+
+    name: str
+    shape: Tuple[int, ...]
+    init: Tuple
+
+    @property
+    def size(self) -> int:
+        return int(math.prod(self.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class InputSpec:
+    """Shape/dtype of one (micro)batch, with the batch axis symbolic."""
+
+    x_shape: Tuple[int, ...]  # per-sample shape (no batch axis)
+    x_dtype: str  # "f32" | "i32"
+    y_shape: Tuple[int, ...]  # per-sample label shape (() for class id)
+    n_classes: int
+    # number of label positions per sample (1 for images, seq_len for LM);
+    # rust uses this to turn correct-counts into error rates.
+    labels_per_sample: int = 1
+
+
+@dataclasses.dataclass
+class ModelDef:
+    name: str
+    params: List[ParamSpec]
+    inputs: InputSpec
+    # loss_fn(param_list, x, y) -> (mean_loss, correct_count)
+    loss_fn: Callable
+    flops_per_sample: int  # analytic fwd flops (Section 3.3 accounting)
+
+    def param_index(self) -> Dict[str, int]:
+        return {p.name: i for i, p in enumerate(self.params)}
+
+    def init_params(self, seed: int = 0) -> List[jax.Array]:
+        """Reference initializer (tests only — rust owns the real init)."""
+        out = []
+        key = jax.random.PRNGKey(seed)
+        for p in self.params:
+            key, sub = jax.random.split(key)
+            kind = p.init[0]
+            if kind == "zeros":
+                out.append(jnp.zeros(p.shape, jnp.float32))
+            elif kind == "ones":
+                out.append(jnp.ones(p.shape, jnp.float32))
+            elif kind == "normal":
+                out.append(jax.random.normal(sub, p.shape, jnp.float32) * p.init[1])
+            elif kind == "uniform":
+                b = p.init[1]
+                out.append(jax.random.uniform(sub, p.shape, jnp.float32, -b, b))
+            else:
+                raise ValueError(f"unknown init {p.init!r}")
+        return out
+
+
+def he_normal_std(fan_in: int) -> float:
+    return math.sqrt(2.0 / fan_in)
+
+
+def glorot_uniform_bound(fan_in: int, fan_out: int) -> float:
+    return math.sqrt(6.0 / (fan_in + fan_out))
+
+
+class ParamBuilder:
+    """Accumulates ParamSpecs while a model topology is being declared and
+    hands each layer its parameter indices."""
+
+    def __init__(self) -> None:
+        self.specs: List[ParamSpec] = []
+
+    def add(self, name: str, shape: Sequence[int], init: Tuple) -> int:
+        idx = len(self.specs)
+        self.specs.append(ParamSpec(name, tuple(int(s) for s in shape), init))
+        return idx
+
+    def conv(self, name: str, kh: int, kw: int, cin: int, cout: int) -> Tuple[int, int]:
+        """HWIO conv kernel + bias; He-normal init (fan_in = kh*kw*cin)."""
+        w = self.add(f"{name}.w", (kh, kw, cin, cout), ("normal", he_normal_std(kh * kw * cin)))
+        b = self.add(f"{name}.b", (cout,), ("zeros",))
+        return w, b
+
+    def dense(self, name: str, n_in: int, n_out: int) -> Tuple[int, int]:
+        w = self.add(f"{name}.w", (n_in, n_out), ("uniform", glorot_uniform_bound(n_in, n_out)))
+        b = self.add(f"{name}.b", (n_out,), ("zeros",))
+        return w, b
+
+    def bn(self, name: str, c: int) -> Tuple[int, int]:
+        g = self.add(f"{name}.gamma", (c,), ("ones",))
+        b = self.add(f"{name}.beta", (c,), ("zeros",))
+        return g, b
+
+
+# Registry: name -> () -> ModelDef. Populated by cnn.py / transformer.py.
+MODEL_REGISTRY: Dict[str, Callable[[], ModelDef]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        MODEL_REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+def get_model(name: str) -> ModelDef:
+    if name not in MODEL_REGISTRY:
+        raise KeyError(f"unknown model {name!r}; have {sorted(MODEL_REGISTRY)}")
+    return MODEL_REGISTRY[name]()

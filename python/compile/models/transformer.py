@@ -1,0 +1,110 @@
+"""GPT-style causal transformer LM for the end-to-end training example.
+
+The harness requires one end-to-end driver training a transformer with the
+full stack composed; AdaBatch's contribution is architecture-agnostic (its
+CIFAR/ImageNet CNNs are the paper's choice of the day), so the transformer
+is the natural modern E2E workload: every attention/MLP matmul runs through
+the Pallas ``matmul_bias_act`` kernel and the LM loss through the fused
+``softmax_xent`` kernel, i.e. the L1 hot path carries >95% of the flops.
+
+Decoder-only, pre-LayerNorm, learned positional embeddings, multi-head
+causal attention. LayerNorm (per-token, not batch-sized) uses plain jnp —
+it is not a batch-size-dependent layer, so nothing AdaBatch-relevant lives
+there. Labels are next-token ids; the loss flattens [r, T] -> [r*T] rows so
+the same Pallas loss kernel and the same rust-side correct-count contract
+serve LM and image models alike (``labels_per_sample = T``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.matmul import matmul_bias_act
+from ..kernels.softmax_xent import softmax_xent_loss
+from .common import InputSpec, ModelDef, ParamBuilder, register
+
+
+def _layernorm(x: jax.Array, g: jax.Array, b: jax.Array, eps: float = 1e-5) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _build_transformer(
+    vocab: int, d_model: int, n_layers: int, n_heads: int, seq_len: int, name: str
+) -> ModelDef:
+    assert d_model % n_heads == 0
+    d_head = d_model // n_heads
+    pb = ParamBuilder()
+    tok = pb.add("tok_emb", (vocab, d_model), ("normal", 0.02))
+    pos = pb.add("pos_emb", (seq_len, d_model), ("normal", 0.02))
+    layers = []
+    for i in range(n_layers):
+        ln1 = pb.bn(f"l{i}.ln1", d_model)  # gamma/beta pair, same spec shape
+        qkv = pb.dense(f"l{i}.qkv", d_model, 3 * d_model)
+        proj = pb.dense(f"l{i}.proj", d_model, d_model)
+        ln2 = pb.bn(f"l{i}.ln2", d_model)
+        up = pb.dense(f"l{i}.up", d_model, 4 * d_model)
+        down = pb.dense(f"l{i}.down", 4 * d_model, d_model)
+        layers.append((ln1, qkv, proj, ln2, up, down))
+    lnf = pb.bn("lnf", d_model)
+    head = pb.dense("head", d_model, vocab)
+    specs = pb.specs
+
+    scale = 1.0 / math.sqrt(d_head)
+    neg = jnp.float32(-1e30)
+
+    def loss_fn(p: List[jax.Array], x: jax.Array, y: jax.Array):
+        r, t = x.shape
+        h = p[tok][x] + p[pos][None, :t, :]
+
+        causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+        for (ln1, qkv, proj, ln2, up, down) in layers:
+            z = _layernorm(h, p[ln1[0]], p[ln1[1]])
+            flat = z.reshape(r * t, d_model)
+            qkv_out = matmul_bias_act(flat, p[qkv[0]], p[qkv[1]], "none")
+            qkv_out = qkv_out.reshape(r, t, 3, n_heads, d_head)
+            q = jnp.transpose(qkv_out[:, :, 0], (0, 2, 1, 3))  # [r, H, T, dh]
+            k = jnp.transpose(qkv_out[:, :, 1], (0, 2, 1, 3))
+            v = jnp.transpose(qkv_out[:, :, 2], (0, 2, 1, 3))
+            att = jnp.einsum("rhtd,rhsd->rhts", q, k) * scale
+            att = jnp.where(causal[None, None, :, :] > 0, att, neg)
+            att = jax.nn.softmax(att, axis=-1)
+            ctx = jnp.einsum("rhts,rhsd->rhtd", att, v)
+            ctx = jnp.transpose(ctx, (0, 2, 1, 3)).reshape(r * t, d_model)
+            h = h + matmul_bias_act(ctx, p[proj[0]], p[proj[1]], "none").reshape(r, t, d_model)
+            z = _layernorm(h, p[ln2[0]], p[ln2[1]])
+            flat = z.reshape(r * t, d_model)
+            mid = matmul_bias_act(flat, p[up[0]], p[up[1]], "gelu")
+            h = h + matmul_bias_act(mid, p[down[0]], p[down[1]], "none").reshape(r, t, d_model)
+
+        h = _layernorm(h, p[lnf[0]], p[lnf[1]])
+        logits = matmul_bias_act(h.reshape(r * t, d_model), p[head[0]], p[head[1]], "none")
+        return softmax_xent_loss(logits, y.reshape(r * t))
+
+    flops_per_tok = n_layers * (2 * d_model * 3 * d_model + 2 * d_model * d_model
+                                + 2 * 2 * seq_len * d_model  # attention scores+ctx (avg)
+                                + 2 * d_model * 8 * d_model) + 2 * d_model * vocab
+    return ModelDef(
+        name=name,
+        params=specs,
+        inputs=InputSpec((seq_len,), "i32", (seq_len,), vocab, labels_per_sample=seq_len),
+        loss_fn=loss_fn,
+        flops_per_sample=flops_per_tok * seq_len,
+    )
+
+
+@register("transformer_s")
+def _tf_s():
+    # ~0.8M params: CI-sized smoke model
+    return _build_transformer(vocab=64, d_model=64, n_layers=2, n_heads=4, seq_len=64, name="transformer_s")
+
+
+@register("transformer_m")
+def _tf_m():
+    # ~12.8M params: the E2E driver workload (examples/transformer_e2e.rs)
+    return _build_transformer(vocab=96, d_model=256, n_layers=6, n_heads=8, seq_len=128, name="transformer_m")

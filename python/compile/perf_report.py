@@ -1,0 +1,122 @@
+"""L1 static performance analysis: VMEM footprint + MXU utilization
+estimates for the Pallas kernels' BlockSpecs (DESIGN.md §Perf).
+
+interpret=True gives CPU-numpy semantics only, so TPU efficiency is
+*estimated from kernel structure*: per-grid-step VMEM residency (all
+blocks + scratch must fit the ~16 MiB/core budget with double-buffering
+headroom) and MXU utilization (fraction of each 128×128×128 systolic pass
+doing useful work given the tile shapes).
+
+Usage: cd python && python -m compile.perf_report
+"""
+
+from __future__ import annotations
+
+import math
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM
+MXU = 128  # systolic array side
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def matmul_report(m: int, k: int, n: int, bm: int, bk: int, bn: int) -> dict:
+    """VMEM + MXU numbers for one matmul tiling."""
+    # resident per grid step: x tile, w tile, out tile, f32 scratch acc
+    vmem = 4 * (bm * bk + bk * bn + bm * bn + bm * bn)
+    # double-buffered inputs on real hw:
+    vmem_db = vmem + 4 * (bm * bk + bk * bn)
+    # MXU utilization: each (bm, bk, bn) tile runs ceil(b*/128) systolic
+    # passes; useful fraction is the filled part of each 128-cube
+    passes = ceil_div(bm, MXU) * ceil_div(bk, MXU) * ceil_div(bn, MXU)
+    useful = (bm * bk * bn) / (passes * MXU**3)
+    # padding waste at the problem level
+    grid = ceil_div(m, bm) * ceil_div(k, bk) * ceil_div(n, bn)
+    problem_useful = (m * k * n) / (grid * bm * bk * bn)
+    return {
+        "vmem_bytes": vmem,
+        "vmem_double_buffered": vmem_db,
+        "fits": vmem_db <= VMEM_BYTES,
+        "mxu_tile_util": useful,
+        "problem_fill": problem_useful,
+        "est_mxu_util": useful * problem_useful,
+    }
+
+
+def softmax_xent_report(rows: int, classes: int, row_tile: int) -> dict:
+    cp = max(8, 1 << (classes - 1).bit_length())
+    vmem = 4 * (row_tile * cp + row_tile + 2)
+    return {
+        "vmem_bytes": vmem,
+        "fits": vmem <= VMEM_BYTES,
+        "padded_class_fill": classes / cp,
+        "bandwidth_bound": True,  # one pass over logits; no MXU work
+    }
+
+
+def sgd_report(n: int, tile: int) -> dict:
+    # reads p,g,v + writes p,v per tile: 5 streams
+    vmem = 4 * 5 * tile
+    return {
+        "vmem_bytes": vmem,
+        "fits": vmem <= VMEM_BYTES,
+        "streams": 5,
+        "arithmetic_intensity_flops_per_byte": 4 / (5 * 4),
+    }
+
+
+def fmt(x) -> str:
+    if isinstance(x, bool):
+        return "yes" if x else "NO"
+    if isinstance(x, float):
+        return f"{x:.3f}"
+    if isinstance(x, int) and x > 4096:
+        return f"{x / 1024:.1f} KiB"
+    return str(x)
+
+
+def main() -> None:
+    print("## L1 static perf analysis (TPU estimates from BlockSpecs)\n")
+    print("### matmul_bias_act (TILE 128x128x128, clamped on small shapes)\n")
+    cases = [
+        ("FC head 512x256x100 (cnn)", 512, 256, 100, 128, 128, 128),
+        ("transformer qkv 512x256x768", 512, 256, 768, 128, 128, 128),
+        ("transformer mlp 512x256x1024", 512, 256, 1024, 128, 128, 128),
+        ("LM head 512x256x96", 512, 256, 96, 128, 128, 128),
+        ("small test 32x64x16 (clamped)", 32, 64, 16, 32, 64, 16),
+    ]
+    hdr = ["case", "vmem(2x buf)", "fits", "tile MXU util", "problem fill", "est MXU util"]
+    print(" | ".join(hdr))
+    print("|".join(["---"] * len(hdr)))
+    for name, m, k, n, bm, bk, bn in cases:
+        r = matmul_report(m, k, n, bm, bk, bn)
+        print(
+            f"{name} | {fmt(r['vmem_double_buffered'])} | {fmt(r['fits'])} | "
+            f"{fmt(r['mxu_tile_util'])} | {fmt(r['problem_fill'])} | {fmt(r['est_mxu_util'])}"
+        )
+    print("\n### softmax_xent (row tile 128, classes padded to pow2)\n")
+    for rows, classes in [(128, 10), (128, 100), (512, 1000), (512, 96)]:
+        r = softmax_xent_report(rows, classes, 128)
+        print(
+            f"rows={rows} classes={classes}: vmem={fmt(r['vmem_bytes'])} "
+            f"fits={fmt(r['fits'])} class-fill={fmt(r['padded_class_fill'])} (bandwidth-bound)"
+        )
+    print("\n### sgd_momentum (tile 1024)\n")
+    r = sgd_report(1 << 20, 1024)
+    print(
+        f"1M-param update: vmem/tile={fmt(r['vmem_bytes'])} fits={fmt(r['fits'])} "
+        f"AI={r['arithmetic_intensity_flops_per_byte']:.2f} flop/B -> HBM-bandwidth-bound "
+        f"(fusion saves 3 passes vs unfused p/v/g walk)"
+    )
+    print(
+        "\nNotes: batch growth adds whole m-axis grid steps (linear work, §3.3);\n"
+        "tile shapes stay MXU-aligned at every ladder point, so estimated MXU\n"
+        "utilization is batch-size-invariant — the TPU analogue of the paper's\n"
+        "'flops/epoch constant, efficiency rises with r' argument."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""AOT pipeline: HLO text artifacts are well-formed, parseable, and the
+manifest round-trips the contract rust depends on."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.model import make_eval_step, make_train_step
+from compile.models import get_model
+
+
+@pytest.fixture(scope="module")
+def smoke_dir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(d), "smoke")
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return str(d), manifest
+
+
+def test_hlo_text_is_parseable_hlo(smoke_dir):
+    d, manifest = smoke_dir
+    for name, entry in manifest["models"].items():
+        for kind in ("train", "eval"):
+            for bs, rel in entry["artifacts"][kind].items():
+                with open(os.path.join(d, rel)) as f:
+                    text = f.read()
+                assert text.startswith("HloModule"), rel
+                assert "ENTRY" in text, rel
+
+
+def test_manifest_has_rust_contract(smoke_dir):
+    _, manifest = smoke_dir
+    for name, entry in manifest["models"].items():
+        assert entry["flops_per_sample"] > 0
+        inp = entry["input"]
+        assert inp["x_dtype"] in ("f32", "i32")
+        assert inp["n_classes"] >= 2
+        assert inp["labels_per_sample"] >= 1
+        model = get_model(name)
+        assert len(entry["params"]) == len(model.params)
+        for spec, p in zip(entry["params"], model.params):
+            assert spec["name"] == p.name
+            assert tuple(spec["shape"]) == p.shape
+            assert spec["init"][0] in ("zeros", "ones", "normal", "uniform")
+
+
+def test_train_artifact_has_grad_outputs(smoke_dir):
+    """The train artifact's ROOT tuple must have 2 + n_params elements."""
+    d, manifest = smoke_dir
+    for name, entry in manifest["models"].items():
+        n = len(entry["params"])
+        rel = next(iter(entry["artifacts"]["train"].values()))
+        with open(os.path.join(d, rel)) as f:
+            text = f.read()
+        # The entry computation returns a tuple; count its element types on
+        # the ROOT line.
+        root = [l for l in text.splitlines() if "ROOT" in l and "tuple(" in l]
+        assert root, f"no ROOT tuple in {rel}"
+        arity = root[-1].count("f32[") + root[-1].count("s32[")
+        # ROOT line lists the tuple shape then operands; require >= outputs
+        assert arity >= 2 + n, (rel, arity, n)
+
+
+def test_batch_size_specialization(smoke_dir):
+    """Artifacts are shape-specialized: the batch size appears in the
+    entry parameter shapes."""
+    d, manifest = smoke_dir
+    entry = manifest["models"]["resnet_lite_c10"]
+    rel = entry["artifacts"]["train"]["8"]
+    with open(os.path.join(d, rel)) as f:
+        text = f.read()
+    assert "f32[8,32,32,3]" in text
+
+
+def test_lower_one_deterministic():
+    model = get_model("transformer_s")
+    a = aot.lower_one(model, make_eval_step(model), 4)
+    b = aot.lower_one(model, make_eval_step(model), 4)
+    assert a == b
+
+
+def test_matrices_reference_known_models():
+    from compile.models import MODEL_REGISTRY
+
+    for mname, matrix in aot.MATRICES.items():
+        for model_name in matrix:
+            assert model_name in MODEL_REGISTRY, (mname, model_name)

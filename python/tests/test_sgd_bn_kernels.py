@@ -1,0 +1,94 @@
+"""L1 correctness: fused SGD-momentum kernel and batch-norm kernel vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import batchnorm, ref, sgd
+
+
+@pytest.mark.parametrize("n", [1, 7, 1024, 4097])
+@pytest.mark.parametrize("mu,wd", [(0.9, 5e-4), (0.0, 0.0), (0.99, 1e-4)])
+def test_sgd_matches_ref(n, mu, wd):
+    rng = np.random.default_rng(n)
+    p, g, v = (jnp.asarray(rng.standard_normal(n), jnp.float32) for _ in range(3))
+    lr = jnp.float32(0.05)
+    p2, v2 = sgd.sgd_momentum(p, g, v, lr, mu, wd)
+    pr, vr = ref.sgd_momentum_update(p, g, v, lr, mu, wd)
+    np.testing.assert_allclose(p2, pr, rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(v2, vr, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    lr=st.floats(1e-5, 1.0),
+    mu=st.floats(0.0, 0.999),
+    wd=st.floats(0.0, 1e-2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sgd_hypothesis(n, lr, mu, wd, seed):
+    rng = np.random.default_rng(seed)
+    p, g, v = (jnp.asarray(rng.standard_normal(n), jnp.float32) for _ in range(3))
+    lrj = jnp.float32(lr)
+    p2, v2 = sgd.sgd_momentum(p, g, v, lrj, mu, wd)
+    pr, vr = ref.sgd_momentum_update(p, g, v, lrj, mu, wd)
+    np.testing.assert_allclose(p2, pr, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(v2, vr, rtol=1e-5, atol=1e-5)
+
+
+def test_sgd_zero_grad_with_decay_still_moves():
+    p = jnp.ones(16)
+    g = jnp.zeros(16)
+    v = jnp.zeros(16)
+    p2, v2 = sgd.sgd_momentum(p, g, v, jnp.float32(0.1), 0.9, 1e-2)
+    # v' = wd*p = 0.01, p' = 1 - 0.1*0.01
+    np.testing.assert_allclose(p2, np.full(16, 1 - 0.1 * 0.01), rtol=1e-6)
+
+
+@pytest.mark.parametrize("r,f", [(2, 1), (8, 4), (64, 130), (33, 16), (256, 8)])
+def test_bn_matches_ref(r, f):
+    rng = np.random.default_rng(r * 31 + f)
+    x = jnp.asarray(rng.standard_normal((r, f)) * 2 + 1, jnp.float32)
+    ga = jnp.asarray(rng.standard_normal(f), jnp.float32)
+    be = jnp.asarray(rng.standard_normal(f), jnp.float32)
+    np.testing.assert_allclose(
+        batchnorm.batchnorm2d(x, ga, be), ref.batchnorm_forward(x, ga, be),
+        rtol=3e-4, atol=3e-4,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=st.integers(2, 128), f=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_bn_hypothesis(r, f, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((r, f)), jnp.float32)
+    ga = jnp.asarray(rng.standard_normal(f), jnp.float32)
+    be = jnp.asarray(rng.standard_normal(f), jnp.float32)
+    np.testing.assert_allclose(
+        batchnorm.batchnorm2d(x, ga, be), ref.batchnorm_forward(x, ga, be),
+        rtol=5e-4, atol=5e-4,
+    )
+
+
+def test_bn_output_is_normalized():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((512, 6)) * 5 + 3, jnp.float32)
+    out = batchnorm.batchnorm2d(x, jnp.ones(6), jnp.zeros(6))
+    np.testing.assert_allclose(np.mean(out, axis=0), np.zeros(6), atol=1e-4)
+    np.testing.assert_allclose(np.std(out, axis=0), np.ones(6), atol=1e-2)
+
+
+def test_bn_vjp_matches_autodiff_of_ref():
+    rng = np.random.default_rng(12)
+    x = jnp.asarray(rng.standard_normal((20, 5)), jnp.float32)
+    ga = jnp.asarray(rng.standard_normal(5), jnp.float32)
+    be = jnp.asarray(rng.standard_normal(5), jnp.float32)
+    f1 = lambda x, ga, be: jnp.sum(jnp.cos(batchnorm.batchnorm2d_vjp(x, ga, be)))
+    f2 = lambda x, ga, be: jnp.sum(jnp.cos(ref.batchnorm_forward(x, ga, be)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(x, ga, be)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(x, ga, be)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=3e-3, atol=3e-3)

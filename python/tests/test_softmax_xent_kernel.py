@@ -1,0 +1,82 @@
+"""L1 correctness: fused softmax-xent kernel vs oracle (loss, count, grad)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, softmax_xent
+
+
+def _batch(rng, r, m, scale=3.0):
+    z = jnp.asarray(rng.standard_normal((r, m)) * scale, jnp.float32)
+    y = jnp.asarray(rng.integers(0, m, r), jnp.int32)
+    return z, y
+
+
+@pytest.mark.parametrize("r,m", [(1, 2), (8, 10), (128, 100), (130, 1000), (37, 17)])
+def test_loss_and_correct_match_ref(r, m):
+    rng = np.random.default_rng(r * 101 + m)
+    z, y = _batch(rng, r, m)
+    loss, corr = softmax_xent.softmax_xent_loss(z, y)
+    lref, cref = ref.softmax_xent(z, y)
+    np.testing.assert_allclose(loss, lref, rtol=1e-5, atol=1e-5)
+    assert float(corr) == float(cref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=st.integers(1, 64), m=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_shapes(r, m, seed):
+    rng = np.random.default_rng(seed)
+    z, y = _batch(rng, r, m)
+    loss, corr = softmax_xent.softmax_xent_loss(z, y)
+    lref, cref = ref.softmax_xent(z, y)
+    np.testing.assert_allclose(loss, lref, rtol=2e-5, atol=2e-5)
+    assert float(corr) == float(cref)
+
+
+def test_grad_is_p_minus_onehot_over_r():
+    """Paper Eq. 17: d mean-loss/d logits == (p - z*)/r."""
+    rng = np.random.default_rng(0)
+    z, y = _batch(rng, 24, 13)
+    g = jax.grad(lambda z: softmax_xent.softmax_xent_loss(z, y)[0])(z)
+    np.testing.assert_allclose(g, ref.softmax_xent_grad(z, y), rtol=1e-5, atol=1e-6)
+
+
+def test_grad_rows_sum_to_zero():
+    rng = np.random.default_rng(2)
+    z, y = _batch(rng, 16, 9)
+    g = jax.grad(lambda z: softmax_xent.softmax_xent_loss(z, y)[0])(z)
+    np.testing.assert_allclose(jnp.sum(g, axis=-1), jnp.zeros(16), atol=1e-6)
+
+
+def test_numerically_stable_large_logits():
+    z = jnp.asarray([[1e4, -1e4, 0.0], [5e3, 5e3, 5e3]], jnp.float32)
+    y = jnp.asarray([0, 1], jnp.int32)
+    loss, corr = softmax_xent.softmax_xent_loss(z, y)
+    assert np.isfinite(float(loss))
+    lref, _ = ref.softmax_xent(z, y)
+    np.testing.assert_allclose(loss, lref, rtol=1e-5, atol=1e-5)
+
+
+def test_perfect_prediction_low_loss():
+    m = 11
+    y = jnp.arange(8, dtype=jnp.int32) % m
+    z = jax.nn.one_hot(y, m) * 50.0
+    loss, corr = softmax_xent.softmax_xent_loss(z, y)
+    assert float(loss) < 1e-3
+    assert float(corr) == 8.0
+
+
+def test_batch_mean_scaling():
+    """Concatenating a batch with itself leaves mean loss unchanged and
+    doubles the correct count — the 1/r contract of Eq. (9)."""
+    rng = np.random.default_rng(4)
+    z, y = _batch(rng, 10, 6)
+    l1, c1 = softmax_xent.softmax_xent_loss(z, y)
+    l2, c2 = softmax_xent.softmax_xent_loss(
+        jnp.concatenate([z, z]), jnp.concatenate([y, y])
+    )
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    assert float(c2) == 2 * float(c1)

@@ -1,0 +1,44 @@
+//! Bench: all-reduce algorithms over replica gradient buffers (naive vs
+//! ring vs tree) across payload sizes and replica counts — the L3 ablation
+//! for the data-parallel path, plus the simulator's predicted P100/NVLink
+//! times alongside for scale context.
+
+use adabatch::coordinator::allreduce::{allreduce_mean, Algorithm};
+use adabatch::simulator::Interconnect;
+use adabatch::util::benchkit::BenchSuite;
+use adabatch::util::rng::Pcg32;
+
+fn replicas(p: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::new(seed);
+    (0..p).map(|_| (0..n).map(|_| rng.normal()).collect()).collect()
+}
+
+fn main() {
+    let mut suite = BenchSuite::new("allreduce: naive vs ring vs tree (in-process replicas)");
+    for &p in &[2usize, 4, 8] {
+        for &n in &[10_000usize, 1_000_000] {
+            let base = replicas(p, n, (p * n) as u64);
+            let weights = vec![1.0 / p as f64; p];
+            for algo in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+                let mut bufs = base.clone();
+                suite.bench_units(
+                    &format!("{algo:?}/p{p}/n{n}"),
+                    Some((n * p) as f64),
+                    || {
+                        allreduce_mean(&mut bufs, &weights, algo);
+                    },
+                );
+            }
+        }
+    }
+    suite.print_report();
+
+    println!("modeled wire time on the paper's testbed (for scale):");
+    let ic = Interconnect::nvlink_p100();
+    for n in [10_000usize, 1_000_000] {
+        println!(
+            "  NVLink ring, 4 GPUs, {n} f32 grads: {:.3} ms",
+            ic.ring_allreduce(n * 4, 4) * 1e3
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! Bench: Figure 3 — the cluster-model speedup sweep (fast, pure-model)
+//! plus the functional multi-worker update cost on the real runtime.
+
+use adabatch::schedule::BatchSchedule;
+use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
+use adabatch::util::benchkit::{black_box, BenchSuite};
+use adabatch::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    // 1) regenerate the fig3 speedup grid (model-only, deterministic)
+    let w = Workload { flops_per_sample: 4.1e7, n_samples: 50_000, param_bytes: 270_000 * 4 };
+    let baseline = BatchSchedule::Fixed(128);
+    let mut t = Table::new(
+        "fig3 modeled speedups (ResNet-20-class workload, 4×P100+NVLink)",
+        &["schedule", "speedup vs fixed-128"],
+    );
+    let cluster = ClusterModel::new(GpuModel::p100(), Interconnect::nvlink_p100(), 4);
+    for (label, sched) in [
+        ("fixed 1024", BatchSchedule::Fixed(1024)),
+        ("fixed 2048", BatchSchedule::Fixed(2048)),
+        ("fixed 4096", BatchSchedule::Fixed(4096)),
+        (
+            "adaptive 1024-16384",
+            BatchSchedule::AdaBatch { initial: 1024, interval_epochs: 20, factor: 2, max_batch: None },
+        ),
+        (
+            "adaptive 2048-32768",
+            BatchSchedule::AdaBatch { initial: 2048, interval_epochs: 20, factor: 2, max_batch: None },
+        ),
+    ] {
+        t.row(vec![label.into(), format!("{:.2}x", cluster.speedup(&w, &baseline, &sched, 100))]);
+    }
+    t.print();
+
+    // 2) micro-bench the model itself (it sits inside planner loops)
+    let mut suite = BenchSuite::new("fig3: cluster-model evaluation cost");
+    suite.bench("schedule_cost/100-epochs", || {
+        let sched =
+            BatchSchedule::AdaBatch { initial: 1024, interval_epochs: 20, factor: 2, max_batch: None };
+        black_box(cluster.schedule_cost(&w, &sched, 100));
+    });
+    suite.print_report();
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Bench: runtime hot-path decomposition — where an update's wall time
+//! goes (gather / upload+execute / grad download / optimizer). The perf
+//! pass (EXPERIMENTS.md §Perf) drives its L3 iterations from this bench:
+//! coordination overhead must stay a small fraction of execute time.
+
+use adabatch::coordinator::{GatherBufs, TrainData};
+use adabatch::data::synthetic::{generate, SyntheticSpec};
+use adabatch::optim::param::ParamSet;
+use adabatch::optim::sgd::{Optimizer, SgdMomentum};
+use adabatch::runtime::{default_artifacts_dir, Client, HostBatch, Manifest, ModelRuntime, StepKind};
+use adabatch::util::benchkit::{black_box, BenchSuite};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_runtime: artifacts not built; skipping");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let client = Client::cpu()?;
+    let rt = ModelRuntime::new(client, manifest.model("resnet_lite_c100")?.clone());
+    let d = generate(&SyntheticSpec::cifar100());
+    let data = TrainData::Images(d.train);
+    let params = ParamSet::init(&rt.entry.params, 0);
+    let mb = *rt.entry.train_batches().last().unwrap();
+    let exe = rt.executable(StepKind::Train, mb)?;
+    let idx: Vec<usize> = (0..mb).collect();
+
+    let mut suite = BenchSuite::new(&format!("runtime hot path (resnet_lite_c100, µbatch {mb})"));
+
+    let mut bufs = GatherBufs::default();
+    suite.bench_units("gather", Some(mb as f64), || {
+        data.gather(black_box(&idx), mb, &mut bufs);
+    });
+
+    data.gather(&idx, mb, &mut bufs);
+    let x = bufs.x_f32.clone();
+    let y = bufs.y.clone();
+    suite.bench_units("execute (upload+fwd+bwd+download)", Some(mb as f64), || {
+        let _ = exe.run(&params, HostBatch::F32(&x), &y).expect("step");
+    });
+
+    // optimizer over the real parameter set
+    let grads = exe.run(&params, HostBatch::F32(&x), &y)?.grads.unwrap();
+    let mut p2 = params.clone();
+    let mut opt = SgdMomentum::paper_cifar();
+    suite.bench_units(
+        &format!("sgd step ({} params)", p2.total_len()),
+        Some(p2.total_len() as f64),
+        || {
+            opt.step(&mut p2, &grads, 0.01);
+        },
+    );
+
+    // eval path
+    let eb = rt.eval_batch()?;
+    let eexe = rt.executable(StepKind::Eval, eb)?;
+    let eidx: Vec<usize> = (0..eb.min(data.len())).collect();
+    let mut ebufs = GatherBufs::default();
+    data.gather(&eidx, eb, &mut ebufs);
+    let (ex, ey) = (ebufs.x_f32.clone(), ebufs.y.clone());
+    suite.bench_units("eval execute", Some(eb as f64), || {
+        let _ = eexe.run(&params, HostBatch::F32(&ex), &ey).expect("eval");
+    });
+
+    suite.print_report();
+    let exec = suite.results[1].mean();
+    let over = suite.results[0].mean() + suite.results[2].mean();
+    println!(
+        "coordination overhead (gather+sgd) = {:.2}% of execute time",
+        100.0 * over / exec
+    );
+    Ok(())
+}

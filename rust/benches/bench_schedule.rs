@@ -1,0 +1,61 @@
+//! Bench + ablation: schedule machinery. (a) micro-costs of policy
+//! evaluation and epoch planning (they sit on the per-update path);
+//! (b) the DESIGN.md ablation comparing AdaBatch's fixed-interval doubling
+//! against the gradient-variance adaptive criterion on simulated gradient
+//! statistics (decision quality at zero training cost).
+
+use adabatch::data::loader::BatchPlanner;
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, GradStats, GradVarianceController};
+use adabatch::util::benchkit::{black_box, BenchSuite};
+use adabatch::util::rng::Pcg32;
+use adabatch::util::table::Table;
+
+fn main() {
+    let mut suite = BenchSuite::new("schedule machinery micro-costs");
+    let policy = AdaBatchPolicy::sec42_adaptive_warmup(1024);
+    suite.bench("policy.at (warmup epoch)", || {
+        black_box(policy.at(3, 17, 391));
+    });
+    suite.bench("policy.at (decay epoch)", || {
+        black_box(policy.at(57, 17, 391));
+    });
+    let planner = BatchPlanner::train(50_000, 7);
+    suite.bench("plan_epoch 50k samples @ bs 1024", || {
+        black_box(planner.plan_epoch(3, 1024));
+    });
+    suite.bench("runtime::plan (ladder search)", || {
+        black_box(adabatch::runtime::plan(16384, 4, &[8, 16, 32, 64, 128], Some(64)).unwrap());
+    });
+    suite.print_report();
+
+    // ablation: interval doubling vs variance criterion on a synthetic
+    // training trace where gradient signal decays geometrically (the
+    // classic SGD regime) — compare when each schedule reaches large batch.
+    let mut table = Table::new(
+        "ablation: interval-doubling (paper) vs gradient-variance criterion",
+        &["iteration", "signal/noise", "AdaBatch batch", "variance-ctrl batch"],
+    );
+    let interval_iters = 200; // "epoch" = 100 iters, double every 2 epochs
+    let schedule = BatchSchedule::doubling(128, 2);
+    let mut ctrl = GradVarianceController::new(128, 2.0, 25, 2, 16384);
+    let mut rng = Pcg32::new(9);
+    for it in 0..1200usize {
+        let epoch = it / 100;
+        let signal = (0.98f64).powi(it as i32); // decaying mean-gradient norm²
+        let noise = 1.0 + 0.1 * rng.normal() as f64; // stationary variance
+        let _ = ctrl.observe(GradStats { mean_grad_sq_norm: signal, grad_variance: noise.max(0.0) });
+        if it % interval_iters == 0 {
+            table.row(vec![
+                it.to_string(),
+                format!("{:.3}", signal / (noise / ctrl.current_batch() as f64)),
+                schedule.batch_at(epoch).to_string(),
+                ctrl.current_batch().to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "Both schedules reach large batches as gradient signal decays; the paper's\n\
+         fixed-interval rule needs no statistics plumbing — the trade DESIGN.md discusses."
+    );
+}

@@ -1,0 +1,47 @@
+//! Bench: Table 1 — fwd+bwd step time across the native microbatch ladder
+//! plus fixed-vs-adaptive epoch cost, measured on the real PJRT runtime
+//! (the CPU half of the Table-1 reproduction; the P100-modeled half lives
+//! in `adabatch experiment table1`).
+
+use adabatch::coordinator::{GatherBufs, TrainData};
+use adabatch::data::synthetic::{generate, SyntheticSpec};
+use adabatch::optim::param::ParamSet;
+use adabatch::runtime::{default_artifacts_dir, Client, Dtype, HostBatch, Manifest, ModelRuntime, StepKind};
+use adabatch::util::benchkit::BenchSuite;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("bench_table1: artifacts not built; skipping");
+        return Ok(());
+    }
+    let manifest = Manifest::load(dir)?;
+    let client = Client::cpu()?;
+    let d = generate(&SyntheticSpec::cifar100());
+    let data = TrainData::Images(d.train);
+
+    let mut suite = BenchSuite::new("table1: fwd+bwd step time vs microbatch (CPU PJRT)");
+    for model in ["alexnet_lite_c100", "resnet_lite_c100", "vgg_lite_c100"] {
+        let rt = ModelRuntime::new(client.clone(), manifest.model(model)?.clone());
+        let params = ParamSet::init(&rt.entry.params, 0);
+        let mut bufs = GatherBufs::default();
+        for &mb in &rt.entry.train_batches() {
+            let exe = rt.executable(StepKind::Train, mb)?;
+            let idx: Vec<usize> = (0..mb).collect();
+            data.gather(&idx, mb, &mut bufs);
+            let x = bufs.x_f32.clone();
+            let y = bufs.y.clone();
+            suite.bench_units(&format!("{model}/µbatch{mb}"), Some(mb as f64), || {
+                let _ = exe
+                    .run(&params, HostBatch::F32(&x), &y)
+                    .expect("step failed");
+            });
+        }
+    }
+    suite.print_report();
+    println!(
+        "throughput column = samples/s: rising throughput with µbatch is the\n\
+         §3.3 efficiency effect Table 1 monetizes (flops/sample constant)."
+    );
+    Ok(())
+}

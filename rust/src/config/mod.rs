@@ -1,0 +1,194 @@
+//! Typed job configuration: what the CLI/experiments construct and the
+//! controller consumes. Binds together model choice, dataset spec,
+//! schedule policy and runtime knobs, with validation that catches
+//! ill-formed jobs before any compilation happens.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::allreduce::Algorithm;
+use crate::coordinator::controller::TrainerConfig;
+use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+
+/// Which dataset family a job trains on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetChoice {
+    /// synthetic CIFAR-10 stand-in
+    Cifar10,
+    /// synthetic CIFAR-100 stand-in
+    Cifar100,
+    /// synthetic ImageNet stand-in (1000 classes), samples per class
+    ImagenetSim { per_class: usize },
+    /// synthetic character corpus, (chars, seq_len)
+    Corpus { chars: usize, seq_len: usize },
+}
+
+impl DatasetChoice {
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "cifar10" => DatasetChoice::Cifar10,
+            "cifar100" => DatasetChoice::Cifar100,
+            "imagenet-sim" => DatasetChoice::ImagenetSim { per_class: 2 },
+            "corpus" => DatasetChoice::Corpus { chars: 200_000, seq_len: 128 },
+            other => bail!("unknown dataset {other:?} (cifar10|cifar100|imagenet-sim|corpus)"),
+        })
+    }
+}
+
+/// A fully-specified training job.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    pub model: String,
+    pub dataset: DatasetChoice,
+    pub trainer: TrainerConfig,
+}
+
+impl JobConfig {
+    pub fn new(model: &str, dataset: DatasetChoice, policy: AdaBatchPolicy, epochs: usize) -> Self {
+        JobConfig {
+            model: model.to_string(),
+            dataset,
+            trainer: TrainerConfig::new(policy, epochs),
+        }
+    }
+
+    /// Sanity rules shared by the CLI and the experiment harnesses.
+    pub fn validate(&self) -> Result<()> {
+        if self.trainer.epochs == 0 {
+            bail!("epochs must be > 0");
+        }
+        if self.trainer.workers == 0 {
+            bail!("workers must be > 0");
+        }
+        let r0 = self.trainer.policy.batch.initial();
+        if r0 == 0 {
+            bail!("initial batch must be > 0");
+        }
+        if !r0.is_power_of_two() {
+            bail!("initial batch {r0} must be a power of two (the artifact ladder is)");
+        }
+        if self.trainer.policy.lr.base <= 0.0 {
+            bail!("base lr must be positive");
+        }
+        let lm_model = self.model.starts_with("transformer");
+        let lm_data = matches!(self.dataset, DatasetChoice::Corpus { .. });
+        if lm_model != lm_data {
+            bail!(
+                "model {} and dataset {:?} are incompatible (LM models need corpus data)",
+                self.model,
+                self.dataset
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Build a policy from CLI-ish knobs (the `adabatch train` entrypoint).
+#[allow(clippy::too_many_arguments)]
+pub fn build_policy(
+    name: &str,
+    initial_batch: usize,
+    interval: usize,
+    factor: usize,
+    base_lr: f64,
+    lr_decay: f64,
+    warmup_epochs: usize,
+    warmup_scale: f64,
+) -> AdaBatchPolicy {
+    let batch = if factor <= 1 {
+        BatchSchedule::Fixed(initial_batch)
+    } else {
+        BatchSchedule::AdaBatch {
+            initial: initial_batch,
+            interval_epochs: interval,
+            factor,
+            max_batch: None,
+        }
+    };
+    let lr = if warmup_epochs > 0 {
+        LrSchedule::step_with_warmup(base_lr, lr_decay, interval, warmup_epochs, warmup_scale)
+    } else {
+        LrSchedule::step(base_lr, lr_decay, interval)
+    };
+    AdaBatchPolicy::new(name, batch, lr)
+}
+
+/// Parse an all-reduce algorithm name.
+pub fn allreduce_from_name(name: &str) -> Result<Algorithm> {
+    Ok(match name {
+        "naive" => Algorithm::Naive,
+        "ring" => Algorithm::Ring,
+        "tree" => Algorithm::Tree,
+        other => bail!("unknown allreduce {other:?} (naive|ring|tree)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> JobConfig {
+        JobConfig::new(
+            "resnet_lite_c10",
+            DatasetChoice::Cifar10,
+            AdaBatchPolicy::sec41_adaptive(128),
+            10,
+        )
+    }
+
+    #[test]
+    fn valid_job_passes() {
+        job().validate().unwrap();
+    }
+
+    #[test]
+    fn zero_epochs_rejected() {
+        let mut j = job();
+        j.trainer.epochs = 0;
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn non_power_of_two_batch_rejected() {
+        let mut j = job();
+        j.trainer.policy = AdaBatchPolicy::sec41_adaptive(100);
+        assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn lm_model_needs_corpus() {
+        let j = JobConfig::new(
+            "transformer_s",
+            DatasetChoice::Cifar10,
+            AdaBatchPolicy::sec41_adaptive(4),
+            2,
+        );
+        assert!(j.validate().is_err());
+        let j = JobConfig::new(
+            "transformer_s",
+            DatasetChoice::Corpus { chars: 1000, seq_len: 64 },
+            AdaBatchPolicy::sec41_adaptive(4),
+            2,
+        );
+        j.validate().unwrap();
+    }
+
+    #[test]
+    fn dataset_names_parse() {
+        assert_eq!(DatasetChoice::from_name("cifar10").unwrap(), DatasetChoice::Cifar10);
+        assert!(DatasetChoice::from_name("mnist").is_err());
+    }
+
+    #[test]
+    fn build_policy_fixed_vs_adaptive() {
+        let fixed = build_policy("f", 128, 20, 1, 0.01, 0.375, 0, 1.0);
+        assert_eq!(fixed.batch, BatchSchedule::Fixed(128));
+        let ada = build_policy("a", 128, 20, 2, 0.01, 0.75, 0, 1.0);
+        assert_eq!(ada.batch.batch_at(20), 256);
+    }
+
+    #[test]
+    fn allreduce_names() {
+        assert_eq!(allreduce_from_name("ring").unwrap(), Algorithm::Ring);
+        assert!(allreduce_from_name("x").is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! Gradient accumulation — the Eq. (5) mechanism that realizes effective
+//! batches larger than any native artifact (paper §4.3).
+//!
+//! Each microbatch step returns a *microbatch-mean* gradient (the 1/m is in
+//! the loss kernel). Accumulating β equal microbatches and dividing by β
+//! therefore reproduces the βm-batch mean gradient exactly:
+//!
+//! ```text
+//! (1/β) Σ_j (1/m) Σ_{i∈j} ∇ℓ_i  ==  (1/(βm)) Σ_i ∇ℓ_i
+//! ```
+//!
+//! The accumulator also tracks per-microbatch gradient norms, feeding the
+//! variance-based adaptive controller (`schedule::adaptive`) for free.
+
+use crate::optim::param::{ParamSet, ParamSpec};
+
+/// Accumulates microbatch-mean gradients into an effective-batch mean.
+#[derive(Debug)]
+pub struct GradAccumulator {
+    acc: ParamSet,
+    count: usize,
+    /// running loss/correct sums (weighted by microbatch count)
+    loss_sum: f64,
+    correct_sum: f64,
+    /// per-microbatch squared gradient norms (for the adaptive baseline)
+    micro_sq_norms: Vec<f64>,
+}
+
+impl GradAccumulator {
+    pub fn new(specs: &[ParamSpec]) -> Self {
+        GradAccumulator {
+            acc: ParamSet::zeros_like(specs),
+            count: 0,
+            loss_sum: 0.0,
+            correct_sum: 0.0,
+            micro_sq_norms: Vec::new(),
+        }
+    }
+
+    /// Add one microbatch result (microbatch-mean gradient + its loss).
+    pub fn add(&mut self, grads: &ParamSet, loss: f32, correct: f32) {
+        self.acc.add_assign(grads);
+        self.count += 1;
+        self.loss_sum += loss as f64;
+        self.correct_sum += correct as f64;
+        self.micro_sq_norms.push(grads.sq_norm());
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Finalize into (mean gradients, mean loss, total correct,
+    /// microbatch norms); resets for reuse without reallocating.
+    pub fn finish(&mut self) -> (ParamSet, f64, f64, Vec<f64>) {
+        assert!(self.count > 0, "finish() with no accumulated microbatches");
+        let inv = 1.0 / self.count as f32;
+        self.acc.scale(inv);
+        let grads = ParamSet {
+            specs: self.acc.specs.clone(),
+            bufs: std::mem::take(&mut self.acc.bufs),
+        };
+        // re-arm with fresh zero buffers of the right shapes
+        self.acc = ParamSet::zeros_like(&grads.specs);
+        let loss = self.loss_sum / self.count as f64;
+        let correct = self.correct_sum;
+        let norms = std::mem::take(&mut self.micro_sq_norms);
+        self.count = 0;
+        self.loss_sum = 0.0;
+        self.correct_sum = 0.0;
+        (grads, loss, correct, norms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::param::Init;
+    use crate::util::propcheck::{self, Pair, UsizeRange};
+    use crate::util::rng::Pcg32;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![ParamSpec { name: "w".into(), shape: vec![4], init: Init::Zeros }]
+    }
+
+    fn grad(vals: [f32; 4]) -> ParamSet {
+        let mut p = ParamSet::zeros_like(&specs());
+        p.bufs[0] = vals.to_vec();
+        p
+    }
+
+    #[test]
+    fn mean_of_two_microbatches() {
+        let mut acc = GradAccumulator::new(&specs());
+        acc.add(&grad([2.0, 0.0, 4.0, -2.0]), 1.0, 3.0);
+        acc.add(&grad([0.0, 2.0, 0.0, 2.0]), 3.0, 5.0);
+        let (g, loss, correct, norms) = acc.finish();
+        assert_eq!(g.bufs[0], vec![1.0, 1.0, 2.0, 0.0]);
+        assert_eq!(loss, 2.0);
+        assert_eq!(correct, 8.0);
+        assert_eq!(norms.len(), 2);
+    }
+
+    #[test]
+    fn single_microbatch_identity() {
+        let mut acc = GradAccumulator::new(&specs());
+        acc.add(&grad([1.0, 2.0, 3.0, 4.0]), 0.5, 1.0);
+        let (g, loss, _, _) = acc.finish();
+        assert_eq!(g.bufs[0], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(loss, 0.5);
+    }
+
+    #[test]
+    fn reusable_after_finish() {
+        let mut acc = GradAccumulator::new(&specs());
+        acc.add(&grad([4.0; 4]), 1.0, 0.0);
+        let _ = acc.finish();
+        acc.add(&grad([2.0; 4]), 2.0, 1.0);
+        let (g, loss, correct, _) = acc.finish();
+        assert_eq!(g.bufs[0], vec![2.0; 4]);
+        assert_eq!(loss, 2.0);
+        assert_eq!(correct, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "no accumulated")]
+    fn finish_empty_panics() {
+        GradAccumulator::new(&specs()).finish();
+    }
+
+    #[test]
+    fn prop_accumulated_mean_equals_direct_mean() {
+        propcheck::check(
+            "accumulator computes the exact mean (Eq. 5)",
+            Pair(UsizeRange(1, 16), UsizeRange(1, 64)),
+            |&(beta, n)| {
+                let specs = vec![ParamSpec {
+                    name: "w".into(),
+                    shape: vec![n],
+                    init: Init::Zeros,
+                }];
+                let mut rng = Pcg32::new((beta * 1000 + n) as u64);
+                let micro: Vec<Vec<f32>> = (0..beta)
+                    .map(|_| (0..n).map(|_| rng.normal()).collect())
+                    .collect();
+                let mut acc = GradAccumulator::new(&specs);
+                for m in &micro {
+                    let mut g = ParamSet::zeros_like(&specs);
+                    g.bufs[0] = m.clone();
+                    acc.add(&g, 0.0, 0.0);
+                }
+                let (g, _, _, norms) = acc.finish();
+                if norms.len() != beta {
+                    return false;
+                }
+                (0..n).all(|i| {
+                    let direct: f32 =
+                        micro.iter().map(|m| m[i]).sum::<f32>() / beta as f32;
+                    (g.bufs[0][i] - direct).abs() <= 1e-5 * direct.abs().max(1.0)
+                })
+            },
+        );
+    }
+}

@@ -1,0 +1,257 @@
+//! Checkpointing: save/restore parameters + optimizer momentum + schedule
+//! position, so long AdaBatch runs survive restarts — a framework-grade
+//! necessity the paper's 90-epoch ImageNet runs imply.
+//!
+//! Format: a small JSON header (model name, epoch, schedule point, tensor
+//! table with byte offsets) followed by raw little-endian f32 payloads.
+//! The header's tensor table is validated against the live `ParamSet`
+//! shape-by-shape on load — loading a checkpoint from a different model
+//! or manifest revision fails loudly, never silently.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::optim::param::ParamSet;
+use crate::util::json::Json;
+
+const MAGIC: &str = "adabatch-ckpt-v1";
+
+/// Everything needed to resume a run.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub model: String,
+    pub epoch: usize,
+    pub batch: usize,
+    pub params: ParamSet,
+    /// momentum buffers (empty Vec when the optimizer had no state yet)
+    pub velocity: Option<ParamSet>,
+}
+
+fn f32s_to_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+impl Checkpoint {
+    /// Serialize to `path` (atomically: write temp + rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut tensors = Vec::new();
+        let mut payload: Vec<u8> = Vec::new();
+        let mut append = |name: String, buf: &[f32]| {
+            let off = payload.len();
+            payload.extend_from_slice(&f32s_to_bytes(buf));
+            tensors.push(Json::obj(vec![
+                ("name", Json::str(name)),
+                ("offset", Json::num(off as f64)),
+                ("len", Json::num(buf.len() as f64)),
+            ]));
+        };
+        for (spec, buf) in self.params.specs.iter().zip(&self.params.bufs) {
+            append(format!("param/{}", spec.name), buf);
+        }
+        if let Some(v) = &self.velocity {
+            for (spec, buf) in v.specs.iter().zip(&v.bufs) {
+                append(format!("velocity/{}", spec.name), buf);
+            }
+        }
+        let header = Json::obj(vec![
+            ("magic", Json::str(MAGIC)),
+            ("model", Json::str(self.model.clone())),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("batch", Json::num(self.batch as f64)),
+            ("tensors", Json::Arr(tensors)),
+        ])
+        .to_string();
+
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let tmp = path.with_extension("tmp");
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&(header.len() as u64).to_le_bytes())?;
+            f.write_all(header.as_bytes())?;
+            f.write_all(&payload)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Load and validate against the expected parameter specs.
+    pub fn load(path: &Path, expect: &ParamSet) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let hlen = u64::from_le_bytes(len8) as usize;
+        if hlen > 64 << 20 {
+            bail!("checkpoint header implausibly large ({hlen} bytes)");
+        }
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let header = Json::parse(std::str::from_utf8(&hbuf)?)
+            .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+        if header.get("magic").and_then(Json::as_str) != Some(MAGIC) {
+            bail!("not an adabatch checkpoint (bad magic)");
+        }
+        let mut payload = Vec::new();
+        f.read_to_end(&mut payload)?;
+
+        let tensors = header
+            .get("tensors")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing tensor table"))?;
+        let fetch = |name: &str| -> Result<Vec<f32>> {
+            let t = tensors
+                .iter()
+                .find(|t| t.get("name").and_then(Json::as_str) == Some(name))
+                .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor {name}"))?;
+            let off = t.get("offset").and_then(Json::as_usize).unwrap_or(0);
+            let len = t.get("len").and_then(Json::as_usize).unwrap_or(0);
+            let bytes = payload
+                .get(off..off + len * 4)
+                .ok_or_else(|| anyhow::anyhow!("tensor {name} out of bounds"))?;
+            Ok(bytes_to_f32s(bytes))
+        };
+
+        let mut params = ParamSet::zeros_like(&expect.specs);
+        for (spec, buf) in expect.specs.iter().zip(&mut params.bufs) {
+            let v = fetch(&format!("param/{}", spec.name))?;
+            if v.len() != spec.size() {
+                bail!(
+                    "tensor param/{} has {} elements, expected {} — wrong model/manifest?",
+                    spec.name,
+                    v.len(),
+                    spec.size()
+                );
+            }
+            *buf = v;
+        }
+        let has_velocity = tensors
+            .iter()
+            .any(|t| t.get("name").and_then(Json::as_str).is_some_and(|n| n.starts_with("velocity/")));
+        let velocity = if has_velocity {
+            let mut v = ParamSet::zeros_like(&expect.specs);
+            for (spec, buf) in expect.specs.iter().zip(&mut v.bufs) {
+                *buf = fetch(&format!("velocity/{}", spec.name))?;
+            }
+            Some(v)
+        } else {
+            None
+        };
+
+        Ok(Checkpoint {
+            model: header
+                .get("model")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            epoch: header.get("epoch").and_then(Json::as_usize).unwrap_or(0),
+            batch: header.get("batch").and_then(Json::as_usize).unwrap_or(0),
+            params,
+            velocity,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::param::{Init, ParamSpec};
+
+    fn params(seed: u64) -> ParamSet {
+        let specs = vec![
+            ParamSpec { name: "w".into(), shape: vec![4, 3], init: Init::Normal(0.5) },
+            ParamSpec { name: "b".into(), shape: vec![3], init: Init::Uniform(0.2) },
+        ];
+        ParamSet::init(&specs, seed)
+    }
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("adabatch_ckpt_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_with_velocity() {
+        let p = params(1);
+        let v = params(2);
+        let ck = Checkpoint {
+            model: "m".into(),
+            epoch: 17,
+            batch: 256,
+            params: p.clone(),
+            velocity: Some(v.clone()),
+        };
+        let path = tmpfile("rt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path, &p).unwrap();
+        assert_eq!(back.model, "m");
+        assert_eq!(back.epoch, 17);
+        assert_eq!(back.batch, 256);
+        assert_eq!(back.params.bufs, p.bufs);
+        assert_eq!(back.velocity.unwrap().bufs, v.bufs);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn roundtrip_without_velocity() {
+        let p = params(3);
+        let ck = Checkpoint { model: "m".into(), epoch: 0, batch: 32, params: p.clone(), velocity: None };
+        let path = tmpfile("nv");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path, &p).unwrap();
+        assert!(back.velocity.is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let p = params(4);
+        let ck = Checkpoint { model: "m".into(), epoch: 0, batch: 32, params: p.clone(), velocity: None };
+        let path = tmpfile("mm");
+        ck.save(&path).unwrap();
+        // expect a different shape -> must fail
+        let other_specs = vec![
+            ParamSpec { name: "w".into(), shape: vec![5, 3], init: Init::Zeros },
+            ParamSpec { name: "b".into(), shape: vec![3], init: Init::Zeros },
+        ];
+        let other = ParamSet::zeros_like(&other_specs);
+        let err = Checkpoint::load(&path, &other).unwrap_err().to_string();
+        assert!(err.contains("expected"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn missing_tensor_rejected() {
+        let p = params(5);
+        let ck = Checkpoint { model: "m".into(), epoch: 0, batch: 32, params: p.clone(), velocity: None };
+        let path = tmpfile("mt");
+        ck.save(&path).unwrap();
+        let mut specs = p.specs.clone();
+        specs.push(ParamSpec { name: "extra".into(), shape: vec![2], init: Init::Zeros });
+        let other = ParamSet::zeros_like(&specs);
+        assert!(Checkpoint::load(&path, &other).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn garbage_file_rejected() {
+        let path = tmpfile("gb");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path, &params(6)).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

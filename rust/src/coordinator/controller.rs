@@ -1,0 +1,293 @@
+//! The training controller — AdaBatch's coordination loop.
+//!
+//! Per epoch: consult the [`AdaBatchPolicy`] for (batch, LR); pre-plan how
+//! that effective batch maps onto workers × native microbatches ×
+//! accumulation steps ([`crate::runtime::plan`]); walk the shuffled epoch;
+//! for every update shard the batch over replicas, run the AOT train step
+//! per microbatch, accumulate (Eq. 5), all-reduce, and apply SGD (Eq. 2).
+//! Batch-size *transitions* are just a different plan the next epoch — the
+//! executable ladder means no recompilation beyond first use of a size.
+//!
+//! Also owns: the effective-LR audit (the policy invariant is asserted at
+//! every transition), divergence detection (Fig. 7b), phase timers
+//! (Table 1's fwd+bwd split comes from here), and the optional
+//! gradient-variance controller override (the adaptive-criterion baseline).
+
+use anyhow::{bail, Context, Result};
+use std::time::Instant;
+
+use super::accumulate::GradAccumulator;
+use super::allreduce::{allreduce_params, Algorithm};
+use super::dataset::{GatherBufs, TrainData};
+use super::eval::evaluate;
+use crate::data::loader::BatchPlanner;
+use crate::data::shard::{shard_batch, shard_weights};
+use crate::metrics::{EpochRecord, PhaseTimers, RunHistory};
+use crate::optim::param::ParamSet;
+use crate::optim::sgd::Optimizer;
+use crate::runtime::{plan_schedule, Dtype, HostBatch, ModelRuntime, StepKind};
+use crate::schedule::{AdaBatchPolicy, GradVarianceController};
+
+/// Training-run configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub policy: AdaBatchPolicy,
+    pub epochs: usize,
+    /// logical data-parallel replicas (the paper's GPU count)
+    pub workers: usize,
+    /// per-device memory cap expressed as a max native microbatch
+    pub max_microbatch: Option<usize>,
+    pub allreduce: Algorithm,
+    pub seed: u64,
+    /// evaluate every k epochs (1 = every epoch, like the paper's curves)
+    pub eval_every: usize,
+    /// stop early when params/loss go non-finite
+    pub divergence_guard: bool,
+}
+
+impl TrainerConfig {
+    pub fn new(policy: AdaBatchPolicy, epochs: usize) -> Self {
+        TrainerConfig {
+            policy,
+            epochs,
+            workers: 1,
+            max_microbatch: None,
+            allreduce: Algorithm::Ring,
+            seed: 0,
+            eval_every: 1,
+            divergence_guard: true,
+        }
+    }
+
+    pub fn with_workers(mut self, w: usize) -> Self {
+        self.workers = w;
+        self
+    }
+
+    pub fn with_seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Clamp a scheduled effective batch to the dataset size, preserving
+/// planability (falls to the largest power of two ≤ n). The paper never
+/// hits this (ImageNet >> any batch); our scaled datasets can.
+pub fn clamp_batch(r: usize, n: usize) -> usize {
+    if r <= n {
+        return r;
+    }
+    let mut p = 1usize;
+    while p * 2 <= n {
+        p *= 2;
+    }
+    p
+}
+
+/// Run one full training job; returns the per-epoch history.
+pub fn train(
+    rt: &ModelRuntime,
+    cfg: &TrainerConfig,
+    train_data: &TrainData,
+    test_data: &TrainData,
+) -> Result<(RunHistory, PhaseTimers)> {
+    let n = train_data.len();
+    if n == 0 {
+        bail!("empty training set");
+    }
+    let natives = rt.entry.train_batches();
+
+    // -- pre-flight: artifacts must match the manifest (stale-artifact
+    // guard; cheap header parse, no compilation) —
+    crate::runtime::validate::validate_model(&rt.entry)
+        .context("artifact validation failed")?;
+
+    // -- pre-flight: every batch size the schedule will request must plan —
+    let mut ladder: Vec<usize> = (0..cfg.epochs)
+        .map(|e| clamp_batch(cfg.policy.batch.batch_at(e), n))
+        .collect();
+    ladder.dedup();
+    let mut distinct = ladder.clone();
+    distinct.sort_unstable();
+    distinct.dedup();
+    plan_schedule(&distinct, cfg.workers, &natives, cfg.max_microbatch)
+        .context("schedule pre-flight failed")?;
+
+    let mut params = ParamSet::init(&rt.entry.params, cfg.seed);
+    let mut opt = crate::optim::sgd::SgdMomentum::paper_cifar();
+    let planner = BatchPlanner::train(n, cfg.seed ^ 0xDA7A);
+    let mut history = RunHistory::new(&cfg.policy.name);
+    let mut timers = PhaseTimers::new();
+    let mut worker_bufs: Vec<GatherBufs> = (0..cfg.workers).map(|_| GatherBufs::default()).collect();
+    let mut eval_bufs = GatherBufs::default();
+    let mut accs: Vec<GradAccumulator> =
+        (0..cfg.workers).map(|_| GradAccumulator::new(&rt.entry.params)).collect();
+
+    let mut last_batch = 0usize;
+    'epochs: for epoch in 0..cfg.epochs {
+        let t_epoch = Instant::now();
+        let point = cfg.policy.at_epoch(epoch);
+        let r = clamp_batch(point.batch, n);
+        let plan = crate::runtime::plan(r, cfg.workers, &natives, cfg.max_microbatch)?;
+        if r != last_batch {
+            log::info!(
+                "[{}] epoch {epoch}: batch {r} = {} workers × {} µbatch × {} accum, lr {:.5}",
+                cfg.policy.name,
+                plan.workers,
+                plan.microbatch,
+                plan.accum_steps,
+                point.lr
+            );
+            last_batch = r;
+        }
+        let exe = rt.executable(StepKind::Train, plan.microbatch)?;
+        let epoch_plan = planner.plan_epoch(epoch, r);
+        let iters = epoch_plan.batches.len();
+        let mut loss_sum = 0.0f64;
+
+        for (it, batch) in epoch_plan.batches.iter().enumerate() {
+            let lr = cfg.policy.at(epoch, it, iters).lr;
+            let shards = shard_batch(&batch.indices, cfg.workers);
+            let weights = shard_weights(&shards);
+            // per-replica gradient production (logical workers; the PJRT
+            // CPU client serializes execution on this 1-core testbed)
+            let mut replica_grads: Vec<ParamSet> = Vec::with_capacity(cfg.workers);
+            for (w, shard) in shards.iter().enumerate() {
+                let bufs = &mut worker_bufs[w];
+                let acc = &mut accs[w];
+                for chunk in shard.chunks(plan.microbatch) {
+                    timers.time("gather", || {
+                        train_data.gather(chunk, plan.microbatch, bufs)
+                    });
+                    let x = match train_data.x_dtype() {
+                        Dtype::F32 => HostBatch::F32(&bufs.x_f32),
+                        Dtype::I32 => HostBatch::I32(&bufs.x_i32),
+                    };
+                    let out = timers.time("fwd_bwd", || exe.run(&params, x, &bufs.y))?;
+                    acc.add(out.grads.as_ref().expect("train step must emit grads"), out.loss, out.correct);
+                }
+                let (g, loss, _correct, _norms) = acc.finish();
+                loss_sum += loss * weights[w];
+                replica_grads.push(g);
+            }
+            timers.time("allreduce", || {
+                allreduce_params(&mut replica_grads, &weights, cfg.allreduce)
+            });
+            timers.time("optim", || opt.step(&mut params, &replica_grads[0], lr));
+
+            if cfg.divergence_guard && !replica_grads[0].all_finite() {
+                log::warn!("[{}] diverged at epoch {epoch} iter {it}", cfg.policy.name);
+                history.diverged = true;
+                break 'epochs;
+            }
+        }
+
+        if cfg.divergence_guard && !params.all_finite() {
+            history.diverged = true;
+            break 'epochs;
+        }
+
+        let mean_train_loss = loss_sum / iters.max(1) as f64;
+        let (test_loss, test_error) = if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
+            let ev = timers.time("eval", || evaluate(rt, &params, test_data, &mut eval_bufs))?;
+            (ev.loss, ev.error)
+        } else {
+            let prev = history.epochs.last();
+            (
+                prev.map(|p| p.test_loss).unwrap_or(f64::NAN),
+                prev.map(|p| p.test_error).unwrap_or(f64::NAN),
+            )
+        };
+        history.push(EpochRecord {
+            epoch,
+            batch: r,
+            lr: point.lr,
+            train_loss: mean_train_loss,
+            test_loss,
+            test_error,
+            iterations: iters,
+            wall_secs: t_epoch.elapsed().as_secs_f64(),
+        });
+    }
+    Ok((history, timers))
+}
+
+/// Variant of [`train`] driven by the gradient-variance adaptive baseline:
+/// the batch size is chosen by the controller's SNR test instead of a fixed
+/// interval schedule (the Byrd/De/Balles-style comparison arm).
+pub fn train_variance_adaptive(
+    rt: &ModelRuntime,
+    cfg: &TrainerConfig,
+    controller: &mut GradVarianceController,
+    train_data: &TrainData,
+    test_data: &TrainData,
+) -> Result<RunHistory> {
+    let n = train_data.len();
+    if n == 0 {
+        bail!("empty training set");
+    }
+    let natives = rt.entry.train_batches();
+    let mut params = ParamSet::init(&rt.entry.params, cfg.seed);
+    let mut opt = crate::optim::sgd::SgdMomentum::paper_cifar();
+    let planner = BatchPlanner::train(n, cfg.seed ^ 0xDA7A);
+    let mut history = RunHistory::new("variance-adaptive");
+    let mut bufs = GatherBufs::default();
+    let mut eval_bufs = GatherBufs::default();
+    let mut acc = GradAccumulator::new(&rt.entry.params);
+
+    for epoch in 0..cfg.epochs {
+        let t_epoch = Instant::now();
+        let r = clamp_batch(controller.current_batch(), n);
+        let plan = crate::runtime::plan(r, 1, &natives, cfg.max_microbatch)?;
+        let exe = rt.executable(StepKind::Train, plan.microbatch)?;
+        let epoch_plan = planner.plan_epoch(epoch, r);
+        let iters = epoch_plan.batches.len();
+        let mut loss_sum = 0.0f64;
+        for (it, batch) in epoch_plan.batches.iter().enumerate() {
+            // effective-LR coupling: when the controller grew the batch by
+            // β vs its initial size, training keeps α/r constant by NOT
+            // decaying lr (batch growth *is* the decay — §3.1)
+            let lr = cfg.policy.at(epoch, it, iters).lr;
+            for chunk in batch.indices.chunks(plan.microbatch) {
+                train_data.gather(chunk, plan.microbatch, &mut bufs);
+                let x = match train_data.x_dtype() {
+                    Dtype::F32 => HostBatch::F32(&bufs.x_f32),
+                    Dtype::I32 => HostBatch::I32(&bufs.x_i32),
+                };
+                let out = exe.run(&params, x, &bufs.y)?;
+                acc.add(out.grads.as_ref().unwrap(), out.loss, out.correct);
+            }
+            let (g, loss, _c, norms) = acc.finish();
+            loss_sum += loss;
+            let stats = GradVarianceController::stats_from_norms(&norms, g.sq_norm());
+            let _ = controller.observe(stats);
+            opt.step(&mut params, &g, lr);
+        }
+        let ev = evaluate(rt, &params, test_data, &mut eval_bufs)?;
+        history.push(EpochRecord {
+            epoch,
+            batch: r,
+            lr: cfg.policy.at_epoch(epoch).lr,
+            train_loss: loss_sum / iters.max(1) as f64,
+            test_loss: ev.loss,
+            test_error: ev.error,
+            iterations: iters,
+            wall_secs: t_epoch.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(history)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clamp_batch_powers_of_two() {
+        assert_eq!(clamp_batch(128, 1000), 128);
+        assert_eq!(clamp_batch(2048, 1000), 512);
+        assert_eq!(clamp_batch(2048, 2048), 2048);
+        assert_eq!(clamp_batch(7, 3), 2);
+        assert_eq!(clamp_batch(4, 4), 4);
+    }
+}

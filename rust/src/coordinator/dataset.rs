@@ -1,0 +1,144 @@
+//! Unified dataset view for the training controller: images (f32 pixels,
+//! one class label per sample) and LM windows (i32 tokens, one label per
+//! position) behind one gather interface matching the runtime's
+//! [`HostBatch`](crate::runtime::HostBatch) contract.
+
+use crate::data::corpus::LmDataset;
+use crate::data::loader::{gather_f32, gather_i32};
+use crate::data::synthetic::{ImageDataset, IMG_LEN};
+use crate::runtime::Dtype;
+
+/// A dataset the controller can train/evaluate on.
+#[derive(Debug, Clone)]
+pub enum TrainData {
+    Images(ImageDataset),
+    Lm(LmDataset),
+}
+
+/// Reusable gather buffers (one per worker keeps the hot loop
+/// allocation-free).
+#[derive(Debug, Default)]
+pub struct GatherBufs {
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    pub y: Vec<i32>,
+}
+
+impl TrainData {
+    /// Number of trainable units (samples or LM windows).
+    pub fn len(&self) -> usize {
+        match self {
+            TrainData::Images(d) => d.len(),
+            TrainData::Lm(d) => d.num_windows(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn x_dtype(&self) -> Dtype {
+        match self {
+            TrainData::Images(_) => Dtype::F32,
+            TrainData::Lm(_) => Dtype::I32,
+        }
+    }
+
+    /// Label rows contributed per sample (1 for images, seq_len for LM).
+    pub fn labels_per_sample(&self) -> usize {
+        match self {
+            TrainData::Images(_) => 1,
+            TrainData::Lm(d) => d.seq_len,
+        }
+    }
+
+    /// Gather `idx` into `bufs`, padding with zeros / label −1 up to
+    /// `pad_to` samples (the eval-tail contract: the loss kernel ignores
+    /// label<0 rows).
+    pub fn gather(&self, idx: &[usize], pad_to: usize, bufs: &mut GatherBufs) {
+        assert!(idx.len() <= pad_to);
+        match self {
+            TrainData::Images(d) => {
+                gather_f32(&d.images, IMG_LEN, idx, &mut bufs.x_f32);
+                gather_i32(&d.labels, 1, idx, &mut bufs.y);
+                bufs.x_f32.resize(pad_to * IMG_LEN, 0.0);
+                bufs.y.resize(pad_to, -1);
+            }
+            TrainData::Lm(d) => {
+                bufs.x_i32.clear();
+                bufs.y.clear();
+                for &w in idx {
+                    let (x, y) = d.window(w);
+                    bufs.x_i32.extend_from_slice(x);
+                    bufs.y.extend_from_slice(y);
+                }
+                bufs.x_i32.resize(pad_to * d.seq_len, 0);
+                bufs.y.resize(pad_to * d.seq_len, -1);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec};
+
+    fn images() -> TrainData {
+        let mut spec = SyntheticSpec::cifar10();
+        spec.n_classes = 3;
+        spec.train_per_class = 4;
+        spec.test_per_class = 1;
+        TrainData::Images(generate(&spec).train)
+    }
+
+    #[test]
+    fn image_gather_exact() {
+        let d = images();
+        let mut bufs = GatherBufs::default();
+        d.gather(&[0, 5], 2, &mut bufs);
+        assert_eq!(bufs.x_f32.len(), 2 * IMG_LEN);
+        assert_eq!(bufs.y.len(), 2);
+        assert!(bufs.y.iter().all(|&l| l >= 0));
+        assert_eq!(d.x_dtype(), Dtype::F32);
+        assert_eq!(d.labels_per_sample(), 1);
+    }
+
+    #[test]
+    fn image_gather_padded() {
+        let d = images();
+        let mut bufs = GatherBufs::default();
+        d.gather(&[1], 4, &mut bufs);
+        assert_eq!(bufs.x_f32.len(), 4 * IMG_LEN);
+        assert_eq!(bufs.y.len(), 4);
+        assert!(bufs.y[0] >= 0);
+        assert_eq!(&bufs.y[1..], &[-1, -1, -1]);
+        assert!(bufs.x_f32[IMG_LEN..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn lm_gather_windows() {
+        let d = TrainData::Lm(LmDataset::synthetic(4000, 32, 5));
+        assert!(d.len() > 50);
+        assert_eq!(d.labels_per_sample(), 32);
+        assert_eq!(d.x_dtype(), Dtype::I32);
+        let mut bufs = GatherBufs::default();
+        d.gather(&[0, 3], 3, &mut bufs);
+        assert_eq!(bufs.x_i32.len(), 3 * 32);
+        assert_eq!(bufs.y.len(), 3 * 32);
+        // padding window all -1 labels
+        assert!(bufs.y[64..].iter().all(|&l| l == -1));
+        // next-token alignment within the first window
+        assert_eq!(bufs.x_i32[1..32], bufs.y[0..31]);
+    }
+
+    #[test]
+    fn gather_reuses_buffers() {
+        let d = images();
+        let mut bufs = GatherBufs::default();
+        d.gather(&[0, 1, 2], 3, &mut bufs);
+        let cap = bufs.x_f32.capacity();
+        d.gather(&[3, 4], 3, &mut bufs);
+        assert_eq!(bufs.x_f32.capacity(), cap, "no realloc on same-size gather");
+    }
+}

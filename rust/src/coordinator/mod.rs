@@ -1,0 +1,21 @@
+//! The L3 coordinator — AdaBatch's system contribution.
+//!
+//! * [`controller`] — the epoch/iteration training loop with schedule
+//!   transitions, re-planning, divergence guard and phase timing.
+//! * [`accumulate`] — gradient accumulation (Eq. 5 / §4.3).
+//! * [`allreduce`] — naive/ring/tree replica gradient reduction.
+//! * [`dataset`] — unified image/LM gather interface.
+//! * [`eval`] — padded test-set evaluation.
+
+pub mod accumulate;
+pub mod allreduce;
+pub mod checkpoint;
+pub mod controller;
+pub mod dataset;
+pub mod eval;
+
+pub use accumulate::GradAccumulator;
+pub use allreduce::{allreduce_mean, allreduce_params, Algorithm};
+pub use controller::{clamp_batch, train, train_variance_adaptive, TrainerConfig};
+pub use dataset::{GatherBufs, TrainData};
+pub use eval::{evaluate, EvalResult};

@@ -1,0 +1,218 @@
+//! Epoch iterator with **dynamic batch size** — the data-path half of
+//! AdaBatch.
+//!
+//! A [`BatchPlanner`] walks one epoch of shuffled sample indices and cuts
+//! it into effective batches of whatever size the schedule dictates *at
+//! that epoch*; batch boundaries therefore move between epochs while the
+//! underlying sample permutation logic stays identical to the fixed-batch
+//! baseline (same PRNG stream per epoch), preserving the paper's paired-
+//! comparison methodology. Truncation of the ragged final batch follows
+//! §3.1's "implementations must in practice either pad the last batch or
+//! correctly handle truncated batches": training drops it (PyTorch
+//! drop_last semantics, keeping Eq. 2's 1/r exact), evaluation keeps it.
+
+use crate::util::rng::Pcg32;
+
+/// One effective batch: the sample indices it covers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchIndices {
+    pub indices: Vec<usize>,
+}
+
+/// Shuffled epoch cut into effective batches of size `batch`.
+#[derive(Debug, Clone)]
+pub struct EpochPlan {
+    pub epoch: usize,
+    pub batch: usize,
+    pub batches: Vec<BatchIndices>,
+    /// samples dropped by train-mode truncation this epoch
+    pub dropped: usize,
+}
+
+/// Deterministic epoch planner over a dataset of `n` samples.
+#[derive(Debug, Clone)]
+pub struct BatchPlanner {
+    pub n: usize,
+    pub seed: u64,
+    /// drop ragged final batch (train) vs keep it (eval)
+    pub drop_last: bool,
+    pub shuffle: bool,
+}
+
+impl BatchPlanner {
+    pub fn train(n: usize, seed: u64) -> Self {
+        BatchPlanner { n, seed, drop_last: true, shuffle: true }
+    }
+
+    pub fn eval(n: usize) -> Self {
+        BatchPlanner { n, seed: 0, drop_last: false, shuffle: false }
+    }
+
+    /// Plan one epoch at effective batch size `batch`.
+    pub fn plan_epoch(&self, epoch: usize, batch: usize) -> EpochPlan {
+        assert!(batch > 0, "batch size must be positive");
+        let mut order: Vec<usize> = (0..self.n).collect();
+        if self.shuffle {
+            // stream derived from (seed, epoch): all arms at the same epoch
+            // see the same permutation regardless of their batch size
+            let mut rng = Pcg32::new(self.seed).split(epoch as u64);
+            rng.shuffle(&mut order);
+        }
+        let mut batches = Vec::with_capacity(self.n / batch + 1);
+        let mut i = 0;
+        while i + batch <= self.n {
+            batches.push(BatchIndices { indices: order[i..i + batch].to_vec() });
+            i += batch;
+        }
+        let mut dropped = 0;
+        if i < self.n {
+            if self.drop_last {
+                dropped = self.n - i;
+            } else {
+                batches.push(BatchIndices { indices: order[i..].to_vec() });
+            }
+        }
+        EpochPlan { epoch, batch, batches, dropped }
+    }
+
+    /// Iterations per epoch at a given batch size (the paper's q̃ = q/β).
+    pub fn iters_per_epoch(&self, batch: usize) -> usize {
+        if self.drop_last {
+            self.n / batch
+        } else {
+            self.n.div_ceil(batch)
+        }
+    }
+}
+
+/// Gather a batch of images into a contiguous NHWC buffer.
+pub fn gather_f32(samples: &[f32], sample_len: usize, idx: &[usize], out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(idx.len() * sample_len);
+    for &i in idx {
+        out.extend_from_slice(&samples[i * sample_len..(i + 1) * sample_len]);
+    }
+}
+
+/// Gather labels (or token windows) into a contiguous i32 buffer.
+pub fn gather_i32(labels: &[i32], per_sample: usize, idx: &[usize], out: &mut Vec<i32>) {
+    out.clear();
+    out.reserve(idx.len() * per_sample);
+    for &i in idx {
+        out.extend_from_slice(&labels[i * per_sample..(i + 1) * per_sample]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, Triple, UsizeRange};
+    use std::collections::HashSet;
+
+    #[test]
+    fn exact_partition_when_divisible() {
+        let p = BatchPlanner::train(100, 1);
+        let plan = p.plan_epoch(0, 25);
+        assert_eq!(plan.batches.len(), 4);
+        assert_eq!(plan.dropped, 0);
+        let all: HashSet<usize> = plan.batches.iter().flat_map(|b| b.indices.clone()).collect();
+        assert_eq!(all.len(), 100);
+    }
+
+    #[test]
+    fn train_drops_ragged_tail() {
+        let p = BatchPlanner::train(103, 1);
+        let plan = p.plan_epoch(0, 25);
+        assert_eq!(plan.batches.len(), 4);
+        assert_eq!(plan.dropped, 3);
+        assert_eq!(p.iters_per_epoch(25), 4);
+    }
+
+    #[test]
+    fn eval_keeps_ragged_tail() {
+        let p = BatchPlanner::eval(103);
+        let plan = p.plan_epoch(0, 25);
+        assert_eq!(plan.batches.len(), 5);
+        assert_eq!(plan.batches[4].indices.len(), 3);
+        assert_eq!(plan.dropped, 0);
+        assert_eq!(p.iters_per_epoch(25), 5);
+    }
+
+    #[test]
+    fn eval_is_identity_order() {
+        let p = BatchPlanner::eval(10);
+        let plan = p.plan_epoch(0, 4);
+        assert_eq!(plan.batches[0].indices, vec![0, 1, 2, 3]);
+        assert_eq!(plan.batches[2].indices, vec![8, 9]);
+    }
+
+    #[test]
+    fn same_epoch_same_permutation_across_batch_sizes() {
+        // the paired-trial property: an arm at batch 10 and an arm at batch
+        // 20 walk the same shuffled order within an epoch
+        let p = BatchPlanner::train(40, 7);
+        let small = p.plan_epoch(3, 10);
+        let large = p.plan_epoch(3, 20);
+        let flat_s: Vec<usize> = small.batches.iter().flat_map(|b| b.indices.clone()).collect();
+        let flat_l: Vec<usize> = large.batches.iter().flat_map(|b| b.indices.clone()).collect();
+        assert_eq!(flat_s, flat_l);
+    }
+
+    #[test]
+    fn different_epochs_different_permutations() {
+        let p = BatchPlanner::train(50, 7);
+        let a = p.plan_epoch(0, 50);
+        let b = p.plan_epoch(1, 50);
+        assert_ne!(a.batches[0].indices, b.batches[0].indices);
+    }
+
+    #[test]
+    fn prop_batches_partition_prefix() {
+        propcheck::check(
+            "train plan covers a prefix-permutation without repeats",
+            Triple(UsizeRange(1, 500), UsizeRange(1, 64), UsizeRange(0, 20)),
+            |&(n, batch, epoch)| {
+                let p = BatchPlanner::train(n, 99);
+                let plan = p.plan_epoch(epoch, batch);
+                let mut seen = HashSet::new();
+                for b in &plan.batches {
+                    if b.indices.len() != batch {
+                        return false;
+                    }
+                    for &i in &b.indices {
+                        if i >= n || !seen.insert(i) {
+                            return false;
+                        }
+                    }
+                }
+                seen.len() + plan.dropped == n
+            },
+        );
+    }
+
+    #[test]
+    fn prop_eval_covers_everything_in_order() {
+        propcheck::check(
+            "eval plan covers all indices exactly once",
+            Pair(UsizeRange(1, 300), UsizeRange(1, 64)),
+            |&(n, batch)| {
+                let p = BatchPlanner::eval(n);
+                let plan = p.plan_epoch(0, batch);
+                let flat: Vec<usize> = plan.batches.iter().flat_map(|b| b.indices.clone()).collect();
+                flat == (0..n).collect::<Vec<_>>()
+            },
+        );
+    }
+
+    #[test]
+    fn gather_helpers() {
+        let samples = vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]; // 3 samples of len 2
+        let mut out = Vec::new();
+        gather_f32(&samples, 2, &[2, 0], &mut out);
+        assert_eq!(out, vec![4.0, 5.0, 0.0, 1.0]);
+        let labels = vec![10, 11, 12];
+        let mut li = Vec::new();
+        gather_i32(&labels, 1, &[1, 2], &mut li);
+        assert_eq!(li, vec![11, 12]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dataset substrates and the dynamic-batch data path.
+//!
+//! * [`synthetic`] — CIFAR/ImageNet stand-in image datasets (DESIGN.md §3).
+//! * [`corpus`] — synthetic character corpus + tokenizer for the LM E2E.
+//! * [`loader`] — shuffled epoch planning with **dynamic batch sizes**.
+//! * [`shard`] — per-worker batch sharding for data parallelism.
+
+pub mod corpus;
+pub mod loader;
+pub mod shard;
+pub mod synthetic;
+
+pub use loader::{BatchIndices, BatchPlanner, EpochPlan};
+pub use synthetic::{generate, ImageDataset, SyntheticData, SyntheticSpec};

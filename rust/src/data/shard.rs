@@ -1,0 +1,122 @@
+//! Per-worker sharding of an effective batch — the data-parallel split the
+//! paper gets from `torch.nn.DataParallel` over 4 P100s (§4.2).
+//!
+//! Contract: a batch of r samples split over p workers yields p disjoint
+//! contiguous shards whose union is the batch, sizes as equal as possible
+//! (first `r % p` workers get one extra). Synchronous data-parallel SGD
+//! then averages worker gradients weighted by shard size, which
+//! [`shard_weights`] provides so the all-reduce reproduces the single-
+//! device batch-mean gradient bit-for-bit in expectation.
+
+/// Split `indices` into `workers` near-equal contiguous shards. Workers
+/// beyond `indices.len()` receive empty shards (they idle that step).
+pub fn shard_batch(indices: &[usize], workers: usize) -> Vec<Vec<usize>> {
+    assert!(workers > 0);
+    let n = indices.len();
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        out.push(indices[start..start + len].to_vec());
+        start += len;
+    }
+    out
+}
+
+/// Weight of each worker's gradient in the weighted average (shard size /
+/// batch size). Zero for idle workers.
+pub fn shard_weights(shards: &[Vec<usize>]) -> Vec<f64> {
+    let total: usize = shards.iter().map(|s| s.len()).sum();
+    if total == 0 {
+        return vec![0.0; shards.len()];
+    }
+    shards.iter().map(|s| s.len() as f64 / total as f64).collect()
+}
+
+/// Largest shard size — the per-device microbatch the runtime must fit
+/// (drives executable selection and the paper's "fits in GPU memory"
+/// constraint).
+pub fn max_shard(shards: &[Vec<usize>]) -> usize {
+    shards.iter().map(|s| s.len()).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, UsizeRange};
+
+    #[test]
+    fn even_split() {
+        let idx: Vec<usize> = (0..8).collect();
+        let shards = shard_batch(&idx, 4);
+        assert_eq!(shards, vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]]);
+        assert_eq!(shard_weights(&shards), vec![0.25; 4]);
+    }
+
+    #[test]
+    fn uneven_split_front_loaded() {
+        let idx: Vec<usize> = (0..10).collect();
+        let shards = shard_batch(&idx, 4);
+        assert_eq!(shards[0].len(), 3);
+        assert_eq!(shards[1].len(), 3);
+        assert_eq!(shards[2].len(), 2);
+        assert_eq!(shards[3].len(), 2);
+        assert_eq!(max_shard(&shards), 3);
+    }
+
+    #[test]
+    fn more_workers_than_samples() {
+        let idx = vec![7, 8];
+        let shards = shard_batch(&idx, 4);
+        assert_eq!(shards[0], vec![7]);
+        assert_eq!(shards[1], vec![8]);
+        assert!(shards[2].is_empty() && shards[3].is_empty());
+        let w = shard_weights(&shards);
+        assert_eq!(w, vec![0.5, 0.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let shards = shard_batch(&[], 3);
+        assert!(shards.iter().all(|s| s.is_empty()));
+        assert_eq!(shard_weights(&shards), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn prop_shards_partition() {
+        propcheck::check(
+            "shards are a disjoint ordered partition with balanced sizes",
+            Pair(UsizeRange(0, 500), UsizeRange(1, 16)),
+            |&(n, p)| {
+                let idx: Vec<usize> = (0..n).collect();
+                let shards = shard_batch(&idx, p);
+                if shards.len() != p {
+                    return false;
+                }
+                let flat: Vec<usize> = shards.iter().flatten().copied().collect();
+                if flat != idx {
+                    return false;
+                }
+                let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+                let max = *sizes.iter().max().unwrap();
+                let min = *sizes.iter().min().unwrap();
+                max - min <= 1
+            },
+        );
+    }
+
+    #[test]
+    fn prop_weights_sum_to_one() {
+        propcheck::check(
+            "non-empty batch weights sum to 1",
+            Pair(UsizeRange(1, 300), UsizeRange(1, 12)),
+            |&(n, p)| {
+                let idx: Vec<usize> = (0..n).collect();
+                let w = shard_weights(&shard_batch(&idx, p));
+                (w.iter().sum::<f64>() - 1.0).abs() < 1e-12
+            },
+        );
+    }
+}

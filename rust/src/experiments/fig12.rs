@@ -1,0 +1,107 @@
+//! Figures 1 & 2 — CIFAR-10/100 test error: adaptive vs fixed small vs
+//! fixed large batch (§4.1).
+//!
+//! Paper setup: VGG19_BN / ResNet-20 / AlexNet, 100 epochs, base LR 0.01,
+//! SGD momentum 0.9 wd 5e-4; fixed arms decay LR ×0.375 every 20 epochs;
+//! adaptive arm decays ×0.75 and doubles the batch at the same points
+//! (equal effective LR). Fixed batches 256 & 4096 (VGG/ResNet), 512 & 8192
+//! (AlexNet). Claim: adaptive stays within 1% of the small fixed batch;
+//! the large fixed batch is clearly worse.
+//!
+//! Scaling (÷4 batches, ÷5 epochs): 20 epochs, interval 4, fixed {32, 512}
+//! (AlexNet {64, 512}), adaptive 32→512 (64→1024 capped by data), on the
+//! synthetic CIFAR stand-ins. What must reproduce: the *ordering*
+//! adaptive ≈ fixed-small < fixed-large, and the <1–2% gap.
+
+use anyhow::Result;
+
+use super::harness::{best_error_stats, emit_series, error_series, pm, ExpCtx};
+use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use crate::util::table::Table;
+
+pub struct Arm {
+    pub label: String,
+    pub policy: AdaBatchPolicy,
+}
+
+/// The §4.1 trio of arms at a scaled ladder.
+pub fn sec41_arms(small: usize, large: usize, interval: usize) -> Vec<Arm> {
+    vec![
+        Arm {
+            label: format!("fixed {small}"),
+            policy: AdaBatchPolicy::new(
+                &format!("fixed-{small}"),
+                BatchSchedule::Fixed(small),
+                LrSchedule::step(0.01, 0.375, interval),
+            ),
+        },
+        Arm {
+            label: format!("fixed {large}"),
+            policy: AdaBatchPolicy::new(
+                &format!("fixed-{large}"),
+                BatchSchedule::Fixed(large),
+                LrSchedule::step(0.01, 0.375, interval),
+            ),
+        },
+        Arm {
+            label: format!("adaptive {small}-"),
+            policy: AdaBatchPolicy::new(
+                "adabatch",
+                BatchSchedule::AdaBatch {
+                    initial: small,
+                    interval_epochs: interval,
+                    factor: 2,
+                    max_batch: Some(large),
+                },
+                LrSchedule::step(0.01, 0.75, interval),
+            ),
+        },
+    ]
+}
+
+pub fn networks(classes: usize) -> Vec<(&'static str, String)> {
+    vec![
+        ("VGG-lite", format!("vgg_lite_c{classes}")),
+        ("ResNet-lite", format!("resnet_lite_c{classes}")),
+        ("AlexNet-lite", format!("alexnet_lite_c{classes}")),
+    ]
+}
+
+/// Run fig1 (classes=10) or fig2 (classes=100).
+pub fn run(ctx: &ExpCtx, classes: usize) -> Result<()> {
+    let figure = if classes == 10 { "fig1" } else { "fig2" };
+    println!(
+        "## {figure}: CIFAR-{classes} test error, adaptive vs fixed (paper §4.1)\n"
+    );
+    let data = if classes == 10 { ctx.cifar10() } else { ctx.cifar100() };
+    let interval = (ctx.epochs / 5).max(1);
+    let mut table = Table::new(
+        &format!("{figure}: lowest test error (mean ± σ over {} trial(s))", ctx.trials),
+        &["network", "arm", "final batch", "best error", "within-1% of small?"],
+    );
+    let mut all_series = Vec::new();
+    for (disp, model) in networks(classes) {
+        let rt = ctx.runtime(&model)?;
+        let arms = sec41_arms(32, 512, interval);
+        let mut small_err = f64::NAN;
+        for (i, arm) in arms.iter().enumerate() {
+            let runs = ctx.run_arm(&rt, &arm.policy, &data, None)?;
+            let (mean, sd) = best_error_stats(&runs);
+            if i == 0 {
+                small_err = mean;
+            }
+            let within = if (mean - small_err) <= 0.02 { "yes" } else { "no" };
+            table.row(vec![
+                disp.to_string(),
+                arm.label.clone(),
+                arm.policy.batch.final_batch(ctx.epochs).to_string(),
+                pm(mean, sd),
+                within.to_string(),
+            ]);
+            all_series.push(error_series(&format!("{disp}/{}", arm.label), &runs));
+        }
+    }
+    table.print();
+    emit_series(&ctx.outdir, figure, &all_series)?;
+    Ok(())
+}

@@ -1,0 +1,146 @@
+//! Figure 3 — multi-GPU (4×P100) speedup bars + test errors for large
+//! fixed vs adaptive batches with LR warmup (§4.2).
+//!
+//! Paper arms (VGG19_BN & ResNet-20, CIFAR-100, 100 epochs): baseline
+//! fixed 128 (LR 0.1, decay 0.25/20ep); fixed 1024/2048/4096 with 5-epoch
+//! warmup; adaptive 1024–16384 / 2048–32768 with warmup, doubling every
+//! 20, decay 0.5. Headline: adaptive 1024–16384 reaches 3.54× (VGG) and
+//! 6.25× (ResNet) with <2% error change.
+//!
+//! Reproduction: *test errors* come from functional runs (4 logical
+//! workers, ring all-reduce, warmup policies — scaled ladder); *speedups*
+//! come from the calibrated 4×P100+NVLink cluster model evaluated on the
+//! paper's actual ladder, using each network's real flops/params from the
+//! manifest (scaled up by the paper/our width ratio is unnecessary — the
+//! ratio cancels in speedups).
+
+use anyhow::Result;
+
+use super::harness::{best_error_stats, emit_series, error_series, pm, ExpCtx};
+use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use crate::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
+use crate::util::table::Table;
+
+/// Paper-reported Fig-3 speedups for the adaptive arms (for side-by-side).
+const PAPER_HEADLINES: &[(&str, &str, f64)] = &[
+    ("vgg", "adaptive 1024-16384 (LR)", 3.54),
+    ("resnet", "adaptive 1024-16384 (LR)", 6.25),
+];
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    println!("## fig3: multi-GPU speedup + test error (paper §4.2)\n");
+
+    // ---- speedup bars from the calibrated cluster model (paper ladder) ----
+    // Calibration: one anchor per network — the paper's adaptive-1024
+    // headline (3.54× VGG, 6.25× ResNet) pins the utilization knee via
+    // bisection; every other bar is then a *prediction*. (The Table-1 knee
+    // doesn't transfer: Fig 3's fixed-128 baseline puts only 32 samples on
+    // each GPU, a regime Table 1 never measures — see EXPERIMENTS.md.)
+    let mut bars = Table::new(
+        "fig3 speedups: 4×P100+NVLink model, baseline fixed 128 (anchor = paper headline)",
+        &["network", "arm", "modeled speedup", "paper"],
+    );
+    for (network, headline) in [("vgg", 3.54), ("resnet", 6.25)] {
+        // CIFAR-100 workload: 50k samples; flops/params representative of
+        // the full-size networks (VGG19 ≈ 0.4 GF/sample, 20M params;
+        // ResNet-20 ≈ 41 MF/sample, 0.27M params)
+        let w = if network == "vgg" {
+            Workload { flops_per_sample: 4.0e8, n_samples: 50_000, param_bytes: 20_000_000 * 4 }
+        } else {
+            Workload { flops_per_sample: 4.1e7, n_samples: 50_000, param_bytes: 270_000 * 4 }
+        };
+        let baseline = BatchSchedule::Fixed(128);
+        let headline_sched = BatchSchedule::AdaBatch {
+            initial: 1024, interval_epochs: 20, factor: 2, max_batch: None,
+        };
+        let knee = crate::simulator::calibrate::fit_by_bisection(headline, 1.0, 4000.0, |h| {
+            let gpu = GpuModel::p100().with_knee(0.55, h);
+            ClusterModel::new(gpu, Interconnect::nvlink_p100(), 4)
+                .speedup(&w, &baseline, &headline_sched, 100)
+        })
+        .expect("headline within model range");
+        let gpu = GpuModel::p100().with_knee(0.55, knee);
+        let cluster = ClusterModel::new(gpu, Interconnect::nvlink_p100(), 4);
+        let arms: Vec<(String, BatchSchedule)> = vec![
+            ("fixed 1024 (LR)".into(), BatchSchedule::Fixed(1024)),
+            ("fixed 2048 (LR)".into(), BatchSchedule::Fixed(2048)),
+            ("fixed 4096 (LR)".into(), BatchSchedule::Fixed(4096)),
+            (
+                "adaptive 1024-16384 (LR)".into(),
+                BatchSchedule::AdaBatch { initial: 1024, interval_epochs: 20, factor: 2, max_batch: None },
+            ),
+            (
+                "adaptive 2048-32768 (LR)".into(),
+                BatchSchedule::AdaBatch { initial: 2048, interval_epochs: 20, factor: 2, max_batch: None },
+            ),
+        ];
+        for (label, sched) in arms {
+            let s = cluster.speedup(&w, &baseline, &sched, 100);
+            let paper = PAPER_HEADLINES
+                .iter()
+                .find(|(n, l, _)| *n == network && *l == label)
+                .map(|(_, _, v)| format!("{v:.2}x (anchor)"))
+                .unwrap_or_else(|| "—".into());
+            bars.row(vec![network.to_string(), label, format!("{s:.2}x"), paper]);
+        }
+        println!("({network}: calibrated knee r_half = {knee:.0} samples/GPU)");
+    }
+    bars.print();
+    bars.write_csv(&ctx.outdir.join("fig3_speedups.csv"))?;
+
+    // ---- functional test errors with 4 logical workers (scaled ladder) ----
+    let data = ctx.cifar100();
+    let interval = (ctx.epochs / 5).max(1);
+    let warmup = (ctx.epochs / 20).max(1);
+    let mut errs = Table::new(
+        &format!(
+            "fig3 test errors: functional runs, 4 workers, {} epochs (scaled ladder /4)",
+            ctx.epochs
+        ),
+        &["network", "arm", "best error"],
+    );
+    let mut series = Vec::new();
+    for (disp, model) in [("VGG-lite", "vgg_lite_c100"), ("ResNet-lite", "resnet_lite_c100")] {
+        let rt = ctx.runtime(model)?;
+        let arms = vec![
+            (
+                "baseline fixed 32".to_string(),
+                AdaBatchPolicy::new("b32", BatchSchedule::Fixed(32), LrSchedule::step(0.1, 0.25, interval)),
+            ),
+            (
+                "fixed 256 (LR)".to_string(),
+                AdaBatchPolicy::new(
+                    "f256",
+                    BatchSchedule::Fixed(256),
+                    LrSchedule::step_with_warmup(0.1, 0.25, interval, warmup, 256.0 / 32.0),
+                ),
+            ),
+            (
+                "adaptive 256-1024 (LR)".to_string(),
+                AdaBatchPolicy::new(
+                    "a256",
+                    BatchSchedule::AdaBatch { initial: 256, interval_epochs: interval, factor: 2, max_batch: Some(1024) },
+                    LrSchedule::step_with_warmup(0.1, 0.5, interval, warmup, 256.0 / 32.0),
+                ),
+            ),
+        ];
+        for (label, policy) in arms {
+            let mut c = ExpCtx {
+                client: ctx.client.clone(),
+                manifest: ctx.manifest.clone(),
+                outdir: ctx.outdir.clone(),
+                epochs: ctx.epochs,
+                trials: ctx.trials,
+                workers: 4,
+            };
+            c.workers = 4;
+            let runs = c.run_arm(&rt, &policy, &data, None)?;
+            let (m, s) = best_error_stats(&runs);
+            errs.row(vec![disp.to_string(), label.clone(), pm(m, s)]);
+            series.push(error_series(&format!("{disp}/{label}"), &runs));
+        }
+    }
+    errs.print();
+    emit_series(&ctx.outdir, "fig3_errors", &series)?;
+    Ok(())
+}

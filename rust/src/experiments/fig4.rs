@@ -1,0 +1,76 @@
+//! Figure 4 — CIFAR-100 test-error *curves* for four arms (§4.2):
+//! fixed 128, adaptive 128–2048, fixed 1024 + LR warmup, adaptive
+//! 1024–16384 + LR warmup. Claim: the adaptive curves track their fixed
+//! counterparts within <1%, and warmup composes with AdaBatch.
+//!
+//! Scaled arms (÷4 batches, ÷5 epochs): fixed 32, adaptive 32–512,
+//! fixed 256+LR, adaptive 256–1024+LR on synthetic CIFAR-100.
+
+use anyhow::Result;
+
+use super::harness::{emit_series, error_series, ExpCtx};
+use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use crate::util::table::Table;
+
+pub fn arms(interval: usize, warmup: usize) -> Vec<(String, AdaBatchPolicy)> {
+    vec![
+        (
+            "fixed 32".into(),
+            AdaBatchPolicy::new("fixed-32", BatchSchedule::Fixed(32), LrSchedule::step(0.1, 0.25, interval)),
+        ),
+        (
+            "adaptive 32-512".into(),
+            AdaBatchPolicy::new(
+                "ada-32",
+                BatchSchedule::AdaBatch { initial: 32, interval_epochs: interval, factor: 2, max_batch: Some(512) },
+                LrSchedule::step(0.1, 0.5, interval),
+            ),
+        ),
+        (
+            "fixed 256 (LR)".into(),
+            AdaBatchPolicy::new(
+                "fixed-256-lr",
+                BatchSchedule::Fixed(256),
+                LrSchedule::step_with_warmup(0.1, 0.25, interval, warmup, 8.0),
+            ),
+        ),
+        (
+            "adaptive 256-1024 (LR)".into(),
+            AdaBatchPolicy::new(
+                "ada-256-lr",
+                BatchSchedule::AdaBatch { initial: 256, interval_epochs: interval, factor: 2, max_batch: Some(1024) },
+                LrSchedule::step_with_warmup(0.1, 0.5, interval, warmup, 8.0),
+            ),
+        ),
+    ]
+}
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    println!("## fig4: CIFAR-100 test error curves, 4 arms (paper §4.2)\n");
+    let data = ctx.cifar100();
+    let interval = (ctx.epochs / 5).max(1);
+    let warmup = (ctx.epochs / 20).max(1);
+    let mut series = Vec::new();
+    let mut summary = Table::new(
+        "fig4 curve endpoints",
+        &["network", "arm", "final error", "best error", "final batch"],
+    );
+    for (disp, model) in [("VGG-lite", "vgg_lite_c100"), ("ResNet-lite", "resnet_lite_c100")] {
+        let rt = ctx.runtime(model)?;
+        for (label, policy) in arms(interval, warmup) {
+            let runs = ctx.run_arm(&rt, &policy, &data, None)?;
+            let h = &runs[0].0;
+            summary.row(vec![
+                disp.to_string(),
+                label.clone(),
+                format!("{:.3}", h.final_test_error()),
+                format!("{:.3}", h.best_test_error()),
+                h.epochs.last().map(|e| e.batch).unwrap_or(0).to_string(),
+            ]);
+            series.push(error_series(&format!("{disp}/{label}"), &runs));
+        }
+    }
+    summary.print();
+    emit_series(&ctx.outdir, "fig4", &series)?;
+    Ok(())
+}

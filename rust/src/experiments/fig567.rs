@@ -1,0 +1,145 @@
+//! Figures 5–7 — ImageNet/ResNet-50 convergence under AdaBatch (§4.3),
+//! on the synthetic ImageNet stand-in with the deeper 1000-class ResNet.
+//!
+//! * **Fig 5**: fixed 256/4096/8192/16384 vs adaptive 4096→16384 (double +
+//!   LR decay 0.2 every 30 ep, fixed decay 0.1). Gradient accumulation
+//!   realizes everything above the 512 device cap (here: µbatch cap 8).
+//!   Claim: adaptive ≈ fixed-4096; fixed 8192/16384 are worse.
+//! * **Fig 6**: with 5-epoch LR warmup, starting at 8192/16384: adaptive
+//!   tracks the small fixed arm and beats the big fixed arms.
+//! * **Fig 7**: batch-increase factor sweep ×2/×4/×8 (LR decay
+//!   0.2/0.4/0.8): all fine from 8192; ×8 from 16384 diverges (growth too
+//!   aggressive too early).
+//!
+//! Scaling: ladder ÷64 (paper 256…524288 → 4…8192 on 2000 samples),
+//! epochs ÷5 with interval 30→6, device cap 512→8 (forcing the same
+//! accumulation structure: effective/cap ratios preserved at the start).
+
+use anyhow::Result;
+
+use super::harness::{emit_series, error_series, ExpCtx};
+use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use crate::util::table::Table;
+
+const MODEL: &str = "resnet_deep_c1000";
+/// device memory cap, scaled from the paper's 512
+const CAP: usize = 8;
+
+fn fixed(batch: usize, interval: usize, warmup: usize, base_batch: usize) -> AdaBatchPolicy {
+    let scale = batch as f64 / base_batch as f64;
+    let lr = if warmup > 0 && batch > base_batch {
+        LrSchedule::step_with_warmup(0.1, 0.1, interval, warmup, scale)
+    } else {
+        LrSchedule::step(0.1, 0.1, interval)
+    };
+    AdaBatchPolicy::new(&format!("fixed-{batch}"), BatchSchedule::Fixed(batch), lr)
+}
+
+fn adaptive(
+    start: usize,
+    factor: usize,
+    interval: usize,
+    warmup: usize,
+    base_batch: usize,
+    cap: usize,
+) -> AdaBatchPolicy {
+    let scale = start as f64 / base_batch as f64;
+    let decay = 0.1 * factor as f64;
+    let lr = if warmup > 0 && start > base_batch {
+        LrSchedule::step_with_warmup(0.1, decay, interval, warmup, scale)
+    } else {
+        LrSchedule::step(0.1, decay, interval)
+    };
+    AdaBatchPolicy::new(
+        &format!("ada-{start}-x{factor}"),
+        BatchSchedule::AdaBatch { initial: start, interval_epochs: interval, factor, max_batch: Some(cap) },
+        lr,
+    )
+}
+
+fn run_family(
+    ctx: &ExpCtx,
+    figure: &str,
+    arms: Vec<(String, AdaBatchPolicy)>,
+) -> Result<()> {
+    // 1000-class stand-in, trimmed for the 1-core budget: 1000 train
+    // samples, 256 (class-interleaved, so balanced) test samples
+    let data = {
+        let (train, test) = ctx.imagenet(1);
+        let test = match test {
+            crate::coordinator::TrainData::Images(mut d) => {
+                d.images.truncate(256 * crate::data::synthetic::IMG_LEN);
+                d.labels.truncate(256);
+                crate::coordinator::TrainData::Images(d)
+            }
+            other => other,
+        };
+        (train, test)
+    };
+    let rt = ctx.runtime(MODEL)?;
+    let mut series = Vec::new();
+    let mut summary = Table::new(
+        &format!("{figure} endpoints ({} epochs, µbatch cap {CAP} → accumulation)", ctx.epochs),
+        &["arm", "final error", "best error", "final batch", "diverged"],
+    );
+    for (label, policy) in arms {
+        let runs = ctx.run_arm(&rt, &policy, &data, Some(CAP))?;
+        let h = &runs[0].0;
+        summary.row(vec![
+            label.clone(),
+            format!("{:.3}", h.final_test_error()),
+            format!("{:.3}", h.best_test_error()),
+            h.epochs.last().map(|e| e.batch).unwrap_or(0).to_string(),
+            h.diverged.to_string(),
+        ]);
+        series.push(error_series(&label, &runs));
+    }
+    summary.print();
+    emit_series(&ctx.outdir, figure, &series)?;
+    Ok(())
+}
+
+/// Fig 5: no warmup, ladder {4, 64, 128, 256} fixed + adaptive 64→256.
+pub fn run_fig5(ctx: &ExpCtx) -> Result<()> {
+    println!("## fig5: ImageNet-sim test error, adaptive vs fixed (paper §4.3)\n");
+    let interval = (ctx.epochs / 3).max(1);
+    let arms = vec![
+        ("fixed 8 (≈256)".into(), fixed(8, interval, 0, 8)),
+        ("fixed 64 (≈4096)".into(), fixed(64, interval, 0, 8)),
+        ("fixed 128 (≈8192)".into(), fixed(128, interval, 0, 8)),
+        ("fixed 256 (≈16384)".into(), fixed(256, interval, 0, 8)),
+        ("adaptive 64-256".into(), adaptive(64, 2, interval, 0, 8, 256)),
+    ];
+    run_family(ctx, "fig5", arms)
+}
+
+/// Fig 6: warmup arms starting at the scaled 8192 (=128) and 16384 (=256).
+pub fn run_fig6(ctx: &ExpCtx) -> Result<()> {
+    println!("## fig6: ImageNet-sim with LR warmup, large starts (paper §4.3)\n");
+    let interval = (ctx.epochs / 3).max(1);
+    let warmup = 1;
+    let arms = vec![
+        ("fixed 128 (LR)".into(), fixed(128, interval, warmup, 4)),
+        ("fixed 256 (LR)".into(), fixed(256, interval, warmup, 4)),
+        ("fixed 512 (LR)".into(), fixed(512, interval, warmup, 4)),
+        ("adaptive 128-512 (LR)".into(), adaptive(128, 2, interval, warmup, 4, 512)),
+        ("adaptive 256-1024 (LR)".into(), adaptive(256, 2, interval, warmup, 4, 1024)),
+    ];
+    run_family(ctx, "fig6", arms)
+}
+
+/// Fig 7: factor sweep ×2/×4/×8 from two starting batches.
+pub fn run_fig7(ctx: &ExpCtx) -> Result<()> {
+    println!("## fig7: batch-increase factor sweep (paper §4.3)\n");
+    let interval = (ctx.epochs / 3).max(1);
+    let warmup = 1;
+    let arms = vec![
+        ("start 128, fixed".into(), fixed(128, interval, warmup, 4)),
+        ("start 128, x2".into(), adaptive(128, 2, interval, warmup, 4, 8192)),
+        ("start 128, x4".into(), adaptive(128, 4, interval, warmup, 4, 8192)),
+        ("start 128, x8".into(), adaptive(128, 8, interval, warmup, 4, 8192)),
+        ("start 256, x4".into(), adaptive(256, 4, interval, warmup, 4, 8192)),
+        ("start 256, x8".into(), adaptive(256, 8, interval, warmup, 4, 8192)),
+    ];
+    run_family(ctx, "fig7", arms)
+}

@@ -1,0 +1,84 @@
+//! §3.3 / Appendix A — flops-per-epoch invariance check.
+//!
+//! The paper's §3.3 argument: every layer's cost is linear in the batch
+//! size, so flops/iteration grows with r while flops/epoch is constant.
+//! Two validations:
+//!
+//! 1. **Analytic**: per-sample flops from the manifest × samples/epoch is
+//!    independent of r by construction; we tabulate flops/iteration vs
+//!    flops/epoch across the ladder.
+//! 2. **Measured**: wall time per *sample* through the real runtime as a
+//!    function of microbatch — the CPU analogue of the efficiency curve
+//!    u(r) (time/sample should be flat-to-falling, never rising linearly,
+//!    confirming the linear-flops property end to end).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use super::harness::ExpCtx;
+use crate::coordinator::{GatherBufs, TrainData};
+use crate::optim::param::ParamSet;
+use crate::runtime::{Dtype, HostBatch, StepKind};
+use crate::util::table::Table;
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    println!("## flops: work-per-epoch invariance (paper §3.3 / Appendix A)\n");
+    let mut analytic = Table::new(
+        "analytic flops (fwd, from manifest): iteration grows ∝ r, epoch constant",
+        &["model", "r", "flops/iter", "flops/epoch (n=2000)"],
+    );
+    for model in ["alexnet_lite_c100", "vgg_lite_c100", "resnet_lite_c100"] {
+        let entry = ctx.manifest.model(model)?;
+        let f = entry.flops_per_sample as f64;
+        for r in [32usize, 128, 512, 2048] {
+            let iters = 2000 / r.max(1);
+            analytic.row(vec![
+                model.to_string(),
+                r.to_string(),
+                format!("{:.3e}", f * r as f64),
+                format!("{:.3e}", f * r as f64 * iters.max(1) as f64),
+            ]);
+        }
+    }
+    analytic.print();
+    analytic.write_csv(&ctx.outdir.join("flops_analytic.csv"))?;
+
+    // measured per-sample step time across native microbatches
+    let mut measured = Table::new(
+        "measured fwd+bwd per sample vs native microbatch (CPU PJRT)",
+        &["model", "µbatch", "ms/step", "ms/sample"],
+    );
+    let (train_data, _) = ctx.cifar100();
+    for model in ["resnet_lite_c100", "alexnet_lite_c100"] {
+        let rt = ctx.runtime(model)?;
+        let params = ParamSet::init(&rt.entry.params, 0);
+        let mut bufs = GatherBufs::default();
+        for &mb in rt.entry.train_batches().iter() {
+            let exe = rt.executable(StepKind::Train, mb)?;
+            let idx: Vec<usize> = (0..mb).collect();
+            train_data.gather(&idx, mb, &mut bufs);
+            let x = match train_data.x_dtype() {
+                Dtype::F32 => HostBatch::F32(&bufs.x_f32),
+                Dtype::I32 => HostBatch::I32(&bufs.x_i32),
+            };
+            // warmup + timed reps
+            exe.run(&params, x, &bufs.y)?;
+            let reps = 3;
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                exe.run(&params, x, &bufs.y)?;
+            }
+            let per_step = t0.elapsed().as_secs_f64() / reps as f64;
+            measured.row(vec![
+                model.to_string(),
+                mb.to_string(),
+                format!("{:.1}", per_step * 1e3),
+                format!("{:.2}", per_step * 1e3 / mb as f64),
+            ]);
+        }
+        let _ = TrainData::Images; // keep import shape stable
+    }
+    measured.print();
+    measured.write_csv(&ctx.outdir.join("flops_measured.csv"))?;
+    Ok(())
+}

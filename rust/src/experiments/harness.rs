@@ -1,0 +1,165 @@
+//! Shared experiment plumbing: runtime construction, scaled datasets, the
+//! multi-trial arm runner, and result emission (markdown to stdout, CSV
+//! series under `results/`).
+//!
+//! Scaling contract (DESIGN.md §3): the paper's batch ladders are divided
+//! by 4 (128→32, 2048→512, …), its 100/90-epoch runs by 5 (20/18 epochs,
+//! decay interval 20→4 / 30→6), and datasets are the synthetic stand-ins.
+//! Each experiment module documents its own mapping in its header.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{train, TrainData, TrainerConfig};
+use crate::data::synthetic::{generate, SyntheticSpec};
+use crate::metrics::{PhaseTimers, RunHistory};
+use crate::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
+use crate::schedule::AdaBatchPolicy;
+use crate::util::stats;
+use crate::util::table::{write_series_csv, Series};
+
+/// Shared context for one experiment invocation.
+pub struct ExpCtx {
+    pub client: Client,
+    pub manifest: Manifest,
+    pub outdir: PathBuf,
+    /// epochs per run (scaled default; CLI-overridable)
+    pub epochs: usize,
+    /// trials per arm (paper uses 5; scaled default 1–3)
+    pub trials: usize,
+    pub workers: usize,
+}
+
+impl ExpCtx {
+    pub fn new(epochs: usize, trials: usize) -> Result<ExpCtx> {
+        let dir = default_artifacts_dir();
+        Ok(ExpCtx {
+            client: Client::cpu()?,
+            manifest: Manifest::load(&dir)?,
+            outdir: PathBuf::from("results"),
+            epochs,
+            trials,
+            workers: 1,
+        })
+    }
+
+    pub fn runtime(&self, model: &str) -> Result<ModelRuntime> {
+        Ok(ModelRuntime::new(
+            self.client.clone(),
+            self.manifest.model(model)?.clone(),
+        ))
+    }
+
+    /// Scaled synthetic CIFAR-10 (2000 train / 400 test).
+    pub fn cifar10(&self) -> (TrainData, TrainData) {
+        let d = generate(&SyntheticSpec::cifar10());
+        (TrainData::Images(d.train), TrainData::Images(d.test))
+    }
+
+    /// Scaled synthetic CIFAR-100 (2400 train / 600 test).
+    pub fn cifar100(&self) -> (TrainData, TrainData) {
+        let d = generate(&SyntheticSpec::cifar100());
+        (TrainData::Images(d.train), TrainData::Images(d.test))
+    }
+
+    /// Scaled synthetic ImageNet (1000 classes × per_class).
+    pub fn imagenet(&self, per_class: usize) -> (TrainData, TrainData) {
+        let d = generate(&SyntheticSpec::imagenet_sim(per_class));
+        (TrainData::Images(d.train), TrainData::Images(d.test))
+    }
+
+    /// Run one arm for `trials` seeds; returns per-trial histories.
+    pub fn run_arm(
+        &self,
+        rt: &ModelRuntime,
+        policy: &AdaBatchPolicy,
+        data: &(TrainData, TrainData),
+        max_microbatch: Option<usize>,
+    ) -> Result<Vec<(RunHistory, PhaseTimers)>> {
+        let mut out = Vec::with_capacity(self.trials);
+        for trial in 0..self.trials {
+            let mut cfg = TrainerConfig::new(policy.clone(), self.epochs)
+                .with_seed(1000 + trial as u64)
+                .with_workers(self.workers);
+            cfg.max_microbatch = max_microbatch;
+            out.push(train(rt, &cfg, &data.0, &data.1)?);
+        }
+        Ok(out)
+    }
+}
+
+/// mean ± σ of the best test error across trials — the number the paper's
+/// figure legends quote.
+pub fn best_error_stats(runs: &[(RunHistory, PhaseTimers)]) -> (f64, f64) {
+    let errs: Vec<f64> = runs.iter().map(|(h, _)| h.best_test_error()).collect();
+    (stats::mean(&errs), stats::std_dev(&errs))
+}
+
+/// Turn trial-0's error curve into a named plot series.
+pub fn error_series(name: &str, runs: &[(RunHistory, PhaseTimers)]) -> Series {
+    let mut s = Series::new(name);
+    if let Some((h, _)) = runs.first() {
+        for (x, y) in h.error_series() {
+            s.push(x, y);
+        }
+    }
+    s
+}
+
+/// Write all series of one figure under `results/<figure>.csv`.
+pub fn emit_series(outdir: &PathBuf, figure: &str, series: &[Series]) -> Result<()> {
+    let path = outdir.join(format!("{figure}.csv"));
+    write_series_csv(&path, series)?;
+    println!("(series written to {})", path.display());
+    Ok(())
+}
+
+/// Format `mean ± σ` as the paper's legends do.
+pub fn pm(mean: f64, sd: f64) -> String {
+    format!("{:.3} ± {:.3}", mean, sd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::EpochRecord;
+
+    fn hist(errs: &[f64]) -> (RunHistory, PhaseTimers) {
+        let mut h = RunHistory::new("x");
+        for (i, &e) in errs.iter().enumerate() {
+            h.push(EpochRecord {
+                epoch: i,
+                batch: 32,
+                lr: 0.1,
+                train_loss: 1.0,
+                test_loss: 1.0,
+                test_error: e,
+                iterations: 1,
+                wall_secs: 0.0,
+            });
+        }
+        (h, PhaseTimers::new())
+    }
+
+    #[test]
+    fn best_error_stats_across_trials() {
+        let runs = vec![hist(&[0.5, 0.4]), hist(&[0.6, 0.45])];
+        let (m, s) = best_error_stats(&runs);
+        assert!((m - 0.425).abs() < 1e-12);
+        assert!(s > 0.0);
+    }
+
+    #[test]
+    fn series_from_first_trial() {
+        let runs = vec![hist(&[0.9, 0.8, 0.7])];
+        let s = error_series("arm", &runs);
+        assert_eq!(s.points.len(), 3);
+        assert_eq!(s.last_y(), Some(0.7));
+    }
+
+    #[test]
+    fn pm_formatting() {
+        assert_eq!(pm(0.1234, 0.0021), "0.123 ± 0.002");
+    }
+}

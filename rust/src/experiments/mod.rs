@@ -1,0 +1,37 @@
+//! Experiment harnesses — one module per paper table/figure (DESIGN.md §5
+//! experiment index), dispatched by name from the CLI
+//! (`adabatch experiment <id>`).
+
+pub mod ablation;
+pub mod fig12;
+pub mod fig3;
+pub mod fig4;
+pub mod fig567;
+pub mod flops;
+pub mod harness;
+pub mod table1;
+
+use anyhow::{bail, Result};
+use harness::ExpCtx;
+
+/// All runnable experiment ids.
+pub const ALL: &[&str] = &[
+    "fig1", "fig2", "table1", "fig3", "fig4", "fig5", "fig6", "fig7", "flops", "ablation",
+];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, ctx: &ExpCtx) -> Result<()> {
+    match id {
+        "fig1" => fig12::run(ctx, 10),
+        "fig2" => fig12::run(ctx, 100),
+        "table1" => table1::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig567::run_fig5(ctx),
+        "fig6" => fig567::run_fig6(ctx),
+        "fig7" => fig567::run_fig7(ctx),
+        "flops" => flops::run(ctx),
+        "ablation" => ablation::run(ctx),
+        other => bail!("unknown experiment {other:?}; available: {ALL:?}"),
+    }
+}

@@ -1,0 +1,141 @@
+//! Table 1 — CIFAR-100 forward/backward wall time over 100 epochs,
+//! adaptive vs fixed batch (§4.1).
+//!
+//! Two complementary reproductions:
+//!
+//! 1. **Measured (this testbed)**: actual fwd+bwd phase seconds from the
+//!    CPU PJRT runtime for fixed-small vs adaptive schedules — honest CPU
+//!    numbers demonstrating the mechanism (fewer, larger steps).
+//! 2. **Modeled (paper's testbed)**: the calibrated P100 model
+//!    (`simulator::calibrate` fits the utilization knee to each network's
+//!    Table-1 speedup, then the model regenerates the full rows) — this is
+//!    where the paper's 1.17–1.49× shape is checked.
+
+use anyhow::Result;
+
+use super::harness::ExpCtx;
+use crate::coordinator::{train, TrainerConfig};
+use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use crate::simulator::{calibrate, TABLE1_ANCHORS};
+use crate::util::table::Table;
+
+/// Paper Table 1 reference rows (seconds over 100 epochs, mean of 5).
+const PAPER_ROWS: &[(&str, &str, f64, f64)] = &[
+    ("VGG19_BN", "128", 933.79, 1571.35),
+    ("VGG19_BN", "128-2048", 707.13, 1322.59),
+    ("ResNet-20", "128", 256.59, 661.35),
+    ("ResNet-20", "128-2048", 218.97, 578.63),
+    ("AlexNet", "256", 66.24, 129.39),
+    ("AlexNet", "256-4096", 44.34, 89.69),
+];
+
+pub fn run(ctx: &ExpCtx) -> Result<()> {
+    println!("## table1: fwd/bwd running time, adaptive vs fixed (paper §4.1)\n");
+
+    // -- part 1: modeled P100 rows from calibrated knees ------------------
+    let mut modeled = Table::new(
+        "Table 1 (modeled P100; knee calibrated per network, paper numbers alongside)",
+        &["network", "batch", "paper fwd(s)", "model fwd(s)", "paper bwd(s)", "model bwd(s)", "fwd speedup (paper / model)"],
+    );
+    for anchor in TABLE1_ANCHORS {
+        let cal = calibrate(anchor).expect("paper anchors must calibrate");
+        let (paper_fixed, paper_ada) = match anchor.network {
+            "vgg" => (&PAPER_ROWS[0], &PAPER_ROWS[1]),
+            "resnet" => (&PAPER_ROWS[2], &PAPER_ROWS[3]),
+            _ => (&PAPER_ROWS[4], &PAPER_ROWS[5]),
+        };
+        // Solve the implied workload so the fixed row matches exactly, then
+        // predict the adaptive row: T ∝ (1 + h/r); scale k from fixed row.
+        let sched = BatchSchedule::doubling(anchor.r0, 20);
+        let inv_mean = crate::simulator::calibrate::mean_inv_batch(&sched, 100);
+        let k_fwd = paper_fixed.2 / (1.0 + cal.r_half_fwd / anchor.r0 as f64);
+        let k_bwd = paper_fixed.3 / (1.0 + cal.r_half_bwd / anchor.r0 as f64);
+        let model_fixed_fwd = paper_fixed.2; // exact by construction
+        let model_ada_fwd = k_fwd * (1.0 + cal.r_half_fwd * inv_mean);
+        let model_fixed_bwd = paper_fixed.3;
+        let model_ada_bwd = k_bwd * (1.0 + cal.r_half_bwd * inv_mean);
+        modeled.row(vec![
+            anchor.network.to_string(),
+            format!("{}", anchor.r0),
+            format!("{:.2}", paper_fixed.2),
+            format!("{model_fixed_fwd:.2}"),
+            format!("{:.2}", paper_fixed.3),
+            format!("{model_fixed_bwd:.2}"),
+            "1.00 / 1.00".into(),
+        ]);
+        modeled.row(vec![
+            anchor.network.to_string(),
+            format!("{}-{}", anchor.r0, anchor.r0 * 16),
+            format!("{:.2}", paper_ada.2),
+            format!("{model_ada_fwd:.2}"),
+            format!("{:.2}", paper_ada.3),
+            format!("{model_ada_bwd:.2}"),
+            format!(
+                "{:.2} / {:.2}",
+                paper_fixed.2 / paper_ada.2,
+                model_fixed_fwd / model_ada_fwd
+            ),
+        ]);
+    }
+    modeled.print();
+    modeled.write_csv(&ctx.outdir.join("table1_modeled.csv"))?;
+
+    // -- part 2: measured CPU phase times on the scaled workload ----------
+    let mut measured = Table::new(
+        &format!(
+            "Table 1 (measured, this CPU testbed: CIFAR-100-sim, {} epochs, scaled ladder)",
+            ctx.epochs
+        ),
+        &["network", "batch", "fwd+bwd (s)", "updates", "speedup"],
+    );
+    let interval = (ctx.epochs / 5).max(1);
+    let data = ctx.cifar100();
+    for (disp, model, small) in [
+        ("VGG-lite", "vgg_lite_c100", 32usize),
+        ("ResNet-lite", "resnet_lite_c100", 32),
+        ("AlexNet-lite", "alexnet_lite_c100", 64),
+    ] {
+        let rt = ctx.runtime(model)?;
+        let mut fixed_time = f64::NAN;
+        for (label, sched, lr_decay) in [
+            ("fixed", BatchSchedule::Fixed(small), 0.375),
+            (
+                "adaptive",
+                BatchSchedule::AdaBatch {
+                    initial: small,
+                    interval_epochs: interval,
+                    factor: 2,
+                    max_batch: Some(512),
+                },
+                0.75,
+            ),
+        ] {
+            let policy = AdaBatchPolicy::new(
+                label,
+                sched.clone(),
+                LrSchedule::step(0.01, lr_decay, interval),
+            );
+            let cfg = TrainerConfig::new(policy, ctx.epochs).with_seed(0);
+            let (hist, timers) = train(&rt, &cfg, &data.0, &data.1)?;
+            let t = timers.total("fwd_bwd").as_secs_f64();
+            let updates: usize = hist.epochs.iter().map(|e| e.iterations).sum();
+            if label == "fixed" {
+                fixed_time = t;
+            }
+            measured.row(vec![
+                disp.to_string(),
+                sched.label(ctx.epochs),
+                format!("{t:.2}"),
+                updates.to_string(),
+                format!("{:.2}x", fixed_time / t),
+            ]);
+        }
+    }
+    measured.print();
+    measured.write_csv(&ctx.outdir.join("table1_measured.csv"))?;
+    println!(
+        "note: CPU XLA lacks the GPU's batch-efficiency curve, so measured CPU \
+         speedups are smaller than the paper's; the modeled P100 rows carry the shape check."
+    );
+    Ok(())
+}

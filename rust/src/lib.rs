@@ -1,0 +1,30 @@
+//! # AdaBatch — adaptive batch sizes for training deep neural networks
+//!
+//! Rust + JAX + Pallas reproduction of Devarakonda, Naumov & Garland,
+//! *AdaBatch: Adaptive Batch Sizes for Training Deep Neural Networks*
+//! (2017). Three-layer architecture (see DESIGN.md):
+//!
+//! * **L3 (this crate)** — the training coordinator: batch-size/LR
+//!   schedules with the effective-learning-rate coupling invariant,
+//!   gradient accumulation, data-parallel workers + all-reduce, PJRT
+//!   runtime with a per-batch-size executable cache, GPU-cluster
+//!   performance simulator, and the experiment harnesses that regenerate
+//!   every table and figure of the paper.
+//! * **L2** — JAX model graphs (`python/compile/models/`), AOT-lowered to
+//!   HLO text artifacts consumed by [`runtime`].
+//! * **L1** — Pallas kernels (`python/compile/kernels/`) for the GEMM /
+//!   loss / optimizer hot paths, verified against pure-jnp oracles.
+//!
+//! Python never runs at training time: `make artifacts` is the only python
+//! step, after which the `adabatch` binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod optim;
+pub mod runtime;
+pub mod schedule;
+pub mod simulator;
+pub mod util;

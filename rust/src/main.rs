@@ -1,0 +1,229 @@
+//! `adabatch` — CLI entrypoint for the AdaBatch training coordinator.
+//!
+//! Subcommands:
+//! * `train` — run one training job with explicit schedule knobs;
+//! * `experiment <id>` — regenerate a paper table/figure (fig1..fig7,
+//!   table1, flops);
+//! * `inspect-artifacts` — list models/batches in the artifact manifest;
+//! * `simulate` — query the P100-cluster performance model directly.
+//!
+//! Everything runs from the AOT artifacts (`make artifacts`); no python at
+//! run time.
+
+use anyhow::{bail, Result};
+
+use adabatch::config::{allreduce_from_name, build_policy, DatasetChoice, JobConfig};
+use adabatch::coordinator::{train, TrainData};
+use adabatch::data::corpus::LmDataset;
+use adabatch::data::synthetic::{generate, SyntheticSpec};
+use adabatch::experiments::{self, harness::ExpCtx};
+use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
+use adabatch::schedule::BatchSchedule;
+use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
+use adabatch::util::cli::Command;
+use adabatch::util::logging;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(sub) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match sub.as_str() {
+        "train" => cmd_train(rest),
+        "experiment" => cmd_experiment(rest),
+        "inspect-artifacts" => cmd_inspect(rest),
+        "simulate" => cmd_simulate(rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (see `adabatch help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "adabatch — AdaBatch: adaptive batch sizes for training deep neural networks\n\n\
+         subcommands:\n\
+         \x20 train               run a training job (see `adabatch train --help`)\n\
+         \x20 experiment <id>     regenerate a paper table/figure: {ids}\n\
+         \x20 inspect-artifacts   list AOT models and native batch sizes\n\
+         \x20 simulate            query the P100 cluster performance model\n\
+         \x20 help                this message",
+        ids = experiments::ALL.join(", ")
+    );
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("train", "run one AdaBatch training job")
+        .opt("model", "resnet_lite_c10", "model name from the artifact manifest")
+        .opt("dataset", "cifar10", "cifar10|cifar100|imagenet-sim|corpus")
+        .opt("epochs", "12", "training epochs")
+        .opt("batch", "32", "initial effective batch size (power of two)")
+        .opt("interval", "4", "epochs between schedule steps")
+        .opt("factor", "2", "batch growth factor (1 = fixed batch)")
+        .opt("lr", "0.01", "base learning rate")
+        .opt("lr-decay", "0.75", "LR decay per interval")
+        .opt("warmup", "0", "LR warmup epochs (Goyal et al.)")
+        .opt("warmup-scale", "1.0", "warmup target scale (batch/base-batch)")
+        .opt("workers", "1", "logical data-parallel replicas")
+        .opt("allreduce", "ring", "naive|ring|tree")
+        .opt("max-microbatch", "0", "device memory cap (0 = none)")
+        .opt("seed", "0", "PRNG seed")
+        .flag("help", "show usage");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+
+    let policy = build_policy(
+        "cli",
+        a.usize("batch")?,
+        a.usize("interval")?,
+        a.usize("factor")?,
+        a.f64("lr")?,
+        a.f64("lr-decay")?,
+        a.usize("warmup")?,
+        a.f64("warmup-scale")?,
+    );
+    let dataset = DatasetChoice::from_name(&a.str("dataset"))?;
+    let mut job = JobConfig::new(&a.str("model"), dataset.clone(), policy, a.usize("epochs")?);
+    job.trainer.workers = a.usize("workers")?;
+    job.trainer.seed = a.u64("seed")?;
+    job.trainer.allreduce = allreduce_from_name(&a.str("allreduce"))?;
+    let cap = a.usize("max-microbatch")?;
+    job.trainer.max_microbatch = (cap > 0).then_some(cap);
+    job.validate()?;
+
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    let rt = ModelRuntime::new(Client::cpu()?, manifest.model(&job.model)?.clone());
+    let (train_data, test_data) = load_dataset(&dataset);
+    let (hist, timers) = train(&rt, &job.trainer, &train_data, &test_data)?;
+
+    println!("\nepoch  batch    lr        train-loss  test-loss  test-err  iters  secs");
+    for e in &hist.epochs {
+        println!(
+            "{:>5}  {:>6}  {:<8.5} {:>10.4}  {:>9.4}  {:>8.4}  {:>5}  {:>5.1}",
+            e.epoch, e.batch, e.lr, e.train_loss, e.test_loss, e.test_error, e.iterations, e.wall_secs
+        );
+    }
+    println!(
+        "\nbest test error: {:.4}   total wall: {:.1}s   diverged: {}",
+        hist.best_test_error(),
+        hist.total_wall_secs(),
+        hist.diverged
+    );
+    println!("\n{}", timers.report());
+    Ok(())
+}
+
+fn load_dataset(choice: &DatasetChoice) -> (TrainData, TrainData) {
+    match choice {
+        DatasetChoice::Cifar10 => {
+            let d = generate(&SyntheticSpec::cifar10());
+            (TrainData::Images(d.train), TrainData::Images(d.test))
+        }
+        DatasetChoice::Cifar100 => {
+            let d = generate(&SyntheticSpec::cifar100());
+            (TrainData::Images(d.train), TrainData::Images(d.test))
+        }
+        DatasetChoice::ImagenetSim { per_class } => {
+            let d = generate(&SyntheticSpec::imagenet_sim(*per_class));
+            (TrainData::Images(d.train), TrainData::Images(d.test))
+        }
+        DatasetChoice::Corpus { chars, seq_len } => (
+            TrainData::Lm(LmDataset::synthetic(*chars, *seq_len, 11)),
+            TrainData::Lm(LmDataset::synthetic(chars / 8, *seq_len, 12)),
+        ),
+    }
+}
+
+fn cmd_experiment(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("experiment", "regenerate a paper table/figure")
+        .opt("epochs", "15", "epochs per run (scaled default)")
+        .opt("trials", "1", "trials per arm")
+        .opt("workers", "1", "logical replicas for functional runs")
+        .flag("help", "show usage");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        println!("ids: {}", experiments::ALL.join(", "));
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    if a.positional.is_empty() {
+        bail!("which experiment? ids: {}", experiments::ALL.join(", "));
+    }
+    let mut ctx = ExpCtx::new(a.usize("epochs")?, a.usize("trials")?)?;
+    ctx.workers = a.usize("workers")?;
+    for id in &a.positional {
+        experiments::run(id, &ctx)?;
+    }
+    Ok(())
+}
+
+fn cmd_inspect(_argv: &[String]) -> Result<()> {
+    let manifest = Manifest::load(default_artifacts_dir())?;
+    println!("artifacts root: {}\n", manifest.root.display());
+    println!("{:<22} {:>10} {:>14}  {:<18} {}", "model", "params", "flops/sample", "train µbatches", "eval");
+    for (name, e) in &manifest.models {
+        println!(
+            "{:<22} {:>10} {:>14.3e}  {:<18} {:?}",
+            name,
+            e.total_params(),
+            e.flops_per_sample as f64,
+            format!("{:?}", e.train_batches()),
+            e.eval_batches(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("simulate", "P100-cluster performance model query")
+        .opt("gpus", "4", "number of GPUs")
+        .opt("flops", "4.1e7", "forward flops per sample")
+        .opt("samples", "50000", "samples per epoch")
+        .opt("params", "270000", "parameter count (f32)")
+        .opt("baseline", "128", "baseline fixed batch")
+        .opt("batch", "1024", "adaptive initial batch")
+        .opt("interval", "20", "doubling interval (epochs)")
+        .opt("epochs", "100", "epochs")
+        .flag("help", "show usage");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    let cluster = ClusterModel::new(GpuModel::p100(), Interconnect::nvlink_p100(), a.usize("gpus")?);
+    let w = Workload {
+        flops_per_sample: a.f64("flops")?,
+        n_samples: a.usize("samples")?,
+        param_bytes: a.usize("params")? * 4,
+    };
+    let baseline = BatchSchedule::Fixed(a.usize("baseline")?);
+    let adaptive = BatchSchedule::doubling(a.usize("batch")?, a.usize("interval")?);
+    let epochs = a.usize("epochs")?;
+    let cb = cluster.schedule_cost(&w, &baseline, epochs);
+    let ca = cluster.schedule_cost(&w, &adaptive, epochs);
+    println!("baseline {}: fwd {:.1}s bwd {:.1}s comm {:.1}s total {:.1}s",
+        baseline.label(epochs), cb.fwd, cb.bwd, cb.comm, cb.total());
+    println!("adaptive {}: fwd {:.1}s bwd {:.1}s comm {:.1}s total {:.1}s",
+        adaptive.label(epochs), ca.fwd, ca.bwd, ca.comm, ca.total());
+    println!("speedup: {:.2}x", cb.total() / ca.total());
+    Ok(())
+}

@@ -1,0 +1,210 @@
+//! Training metrics: phase timers (fwd+bwd vs. marshalling vs. optimizer —
+//! the split Table 1 reports), counters, and loss/error history.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Named wall-clock phase accumulator.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimers {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under phase `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, name: &str, d: Duration) {
+        *self.totals.entry(name.to_string()).or_default() += d;
+        *self.counts.entry(name.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, name: &str) -> Duration {
+        self.totals.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn count(&self, name: &str) -> u64 {
+        self.counts.get(name).copied().unwrap_or_default()
+    }
+
+    pub fn mean_secs(&self, name: &str) -> f64 {
+        let c = self.count(name);
+        if c == 0 {
+            0.0
+        } else {
+            self.total(name).as_secs_f64() / c as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimers) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    pub fn phases(&self) -> impl Iterator<Item = (&str, Duration, u64)> {
+        self.totals
+            .iter()
+            .map(|(k, v)| (k.as_str(), *v, self.count(k)))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::from("phase timings:\n");
+        for (name, total, count) in self.phases() {
+            s.push_str(&format!(
+                "  {name:<16} total {:>10.3}s  n={count:<8} mean {:>10.6}s\n",
+                total.as_secs_f64(),
+                if count > 0 { total.as_secs_f64() / count as f64 } else { 0.0 }
+            ));
+        }
+        s
+    }
+}
+
+/// Per-epoch training record — the unit every experiment harness logs.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub batch: usize,
+    pub lr: f64,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_error: f64,
+    pub iterations: usize,
+    pub wall_secs: f64,
+}
+
+/// Accumulated history of one training run.
+#[derive(Debug, Clone, Default)]
+pub struct RunHistory {
+    pub name: String,
+    pub epochs: Vec<EpochRecord>,
+    /// training hit non-finite params/loss and stopped early (the Fig. 7b
+    /// "8× at 16384 diverges" phenomenon)
+    pub diverged: bool,
+}
+
+impl RunHistory {
+    pub fn new(name: &str) -> Self {
+        RunHistory { name: name.to_string(), epochs: Vec::new(), diverged: false }
+    }
+
+    pub fn push(&mut self, rec: EpochRecord) {
+        self.epochs.push(rec);
+    }
+
+    /// Lowest test error seen (the paper's figures plot "lowest test
+    /// error" per arm).
+    pub fn best_test_error(&self) -> f64 {
+        self.epochs
+            .iter()
+            .map(|e| e.test_error)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn final_test_error(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_error).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_wall_secs(&self) -> f64 {
+        self.epochs.iter().map(|e| e.wall_secs).sum()
+    }
+
+    pub fn mean_train_loss_last(&self, k: usize) -> f64 {
+        let n = self.epochs.len();
+        let tail: Vec<f64> = self.epochs[n.saturating_sub(k)..]
+            .iter()
+            .map(|e| e.train_loss)
+            .collect();
+        stats::mean(&tail)
+    }
+
+    /// (epoch, test_error) series for figure CSVs.
+    pub fn error_series(&self) -> Vec<(f64, f64)> {
+        self.epochs
+            .iter()
+            .map(|e| (e.epoch as f64, e.test_error))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timers_accumulate() {
+        let mut t = PhaseTimers::new();
+        t.add("fwd_bwd", Duration::from_millis(10));
+        t.add("fwd_bwd", Duration::from_millis(30));
+        t.add("optim", Duration::from_millis(5));
+        assert_eq!(t.total("fwd_bwd"), Duration::from_millis(40));
+        assert_eq!(t.count("fwd_bwd"), 2);
+        assert!((t.mean_secs("fwd_bwd") - 0.020).abs() < 1e-9);
+        assert_eq!(t.total("missing"), Duration::ZERO);
+    }
+
+    #[test]
+    fn timers_merge() {
+        let mut a = PhaseTimers::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = PhaseTimers::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(3));
+        a.merge(&b);
+        assert_eq!(a.total("x"), Duration::from_millis(3));
+        assert_eq!(a.count("x"), 2);
+        assert_eq!(a.total("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = PhaseTimers::new();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.count("work"), 1);
+    }
+
+    #[test]
+    fn history_best_error() {
+        let mut h = RunHistory::new("run");
+        for (e, err) in [(0, 0.9), (1, 0.5), (2, 0.6)] {
+            h.push(EpochRecord {
+                epoch: e,
+                batch: 128,
+                lr: 0.1,
+                train_loss: 1.0,
+                test_loss: 1.0,
+                test_error: err,
+                iterations: 10,
+                wall_secs: 1.0,
+            });
+        }
+        assert_eq!(h.best_test_error(), 0.5);
+        assert_eq!(h.final_test_error(), 0.6);
+        assert_eq!(h.total_wall_secs(), 3.0);
+        assert_eq!(h.error_series().len(), 3);
+    }
+
+    #[test]
+    fn empty_history_is_nan_best_inf() {
+        let h = RunHistory::new("empty");
+        assert!(h.final_test_error().is_nan());
+        assert_eq!(h.best_test_error(), f64::INFINITY);
+    }
+}

@@ -1,0 +1,113 @@
+//! Adam optimizer — included because Smith et al. (2017), which the paper
+//! cites as concurrent validation, shows the batch-size-increase ↔ LR-decay
+//! equivalence holds for Adam as well; the ablation benches compare
+//! AdaBatch schedules under SGD vs Adam.
+
+use super::param::ParamSet;
+use super::sgd::Optimizer;
+
+#[derive(Debug)]
+pub struct Adam {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    m: Option<ParamSet>,
+    v: Option<ParamSet>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
+        Adam { beta1, beta2, eps, weight_decay, m: None, v: None, t: 0 }
+    }
+
+    pub fn default_params() -> Self {
+        Self::new(0.9, 0.999, 1e-8, 0.0)
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut ParamSet, grads: &ParamSet, lr: f64) {
+        let m = self.m.get_or_insert_with(|| ParamSet::zeros_like(&params.specs));
+        let v = self.v.get_or_insert_with(|| ParamSet::zeros_like(&params.specs));
+        self.t += 1;
+        let t = self.t as i32;
+        let bc1 = 1.0 - self.beta1.powi(t);
+        let bc2 = 1.0 - self.beta2.powi(t);
+        let lr = lr as f32;
+        for (((p, g), mb), vb) in params
+            .bufs
+            .iter_mut()
+            .zip(&grads.bufs)
+            .zip(&mut m.bufs)
+            .zip(&mut v.bufs)
+        {
+            for i in 0..p.len() {
+                let gi = g[i] + self.weight_decay * p[i];
+                mb[i] = self.beta1 * mb[i] + (1.0 - self.beta1) * gi;
+                vb[i] = self.beta2 * vb[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = mb[i] / bc1;
+                let vhat = vb[i] / bc2;
+                p[i] -= lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::param::{Init, ParamSpec};
+
+    fn one_tensor(vals: &[f32]) -> ParamSet {
+        let specs = vec![ParamSpec {
+            name: "w".into(),
+            shape: vec![vals.len()],
+            init: Init::Zeros,
+        }];
+        let mut p = ParamSet::zeros_like(&specs);
+        p.bufs[0] = vals.to_vec();
+        p
+    }
+
+    #[test]
+    fn first_step_is_signed_lr() {
+        // With bias correction, the first Adam step ≈ lr * sign(g).
+        let mut opt = Adam::default_params();
+        let mut p = one_tensor(&[0.0, 0.0]);
+        let g = one_tensor(&[0.5, -0.25]);
+        opt.step(&mut p, &g, 0.001);
+        assert!((p.bufs[0][0] + 0.001).abs() < 1e-5);
+        assert!((p.bufs[0][1] - 0.001).abs() < 1e-5);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let mut opt = Adam::default_params();
+        let mut p = one_tensor(&[5.0, -3.0, 2.0]);
+        for _ in 0..2000 {
+            let g = ParamSet { specs: p.specs.clone(), bufs: p.bufs.clone() };
+            opt.step(&mut p, &g, 0.05);
+        }
+        assert!(p.sq_norm() < 1e-4, "{:?}", p.bufs[0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let run = || {
+            let mut opt = Adam::default_params();
+            let mut p = one_tensor(&[1.0, 2.0]);
+            for _ in 0..10 {
+                let g = one_tensor(&[0.1, -0.1]);
+                opt.step(&mut p, &g, 0.01);
+            }
+            p.bufs[0].clone()
+        };
+        assert_eq!(run(), run());
+    }
+}

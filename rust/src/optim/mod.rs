@@ -1,0 +1,14 @@
+//! Host-side optimizers over flat parameter buffers.
+//!
+//! The optimizer lives in rust (not in the L2 graph) so that gradient
+//! accumulation (Eq. 5), all-reduce, and the AdaBatch effective-LR coupling
+//! can interpose between gradient production and the weight update — see
+//! DESIGN.md §2 "Why grads cross the layer boundary".
+
+pub mod adam;
+pub mod param;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use param::{Init, ParamSet, ParamSpec};
+pub use sgd::{Optimizer, SgdMomentum};

@@ -1,0 +1,193 @@
+//! Flat parameter buffers matching the artifact manifest's ordered spec.
+//!
+//! Parameters live host-side in rust as one `Vec<f32>` per tensor, in the
+//! exact order `manifest.json` declares (the cross-layer contract — see
+//! python/compile/models/common.py). Initialization reproduces the L2
+//! recipes (He-normal for convs, Glorot-uniform for dense, ones/zeros for
+//! norms) with the deterministic [`Pcg32`], so every experiment arm can
+//! start from bit-identical weights given a seed — the paper's paired-trial
+//! methodology.
+
+use crate::util::rng::Pcg32;
+
+/// Initialization recipe, mirrored from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Init {
+    Zeros,
+    Ones,
+    Normal(f32),
+    Uniform(f32),
+}
+
+/// Shape + init metadata for one parameter tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: Init,
+}
+
+impl ParamSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The full parameter (or gradient / optimizer-state) set of one model.
+#[derive(Debug, Clone)]
+pub struct ParamSet {
+    pub specs: Vec<ParamSpec>,
+    pub bufs: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Initialize per the manifest recipes, deterministically from `seed`.
+    pub fn init(specs: &[ParamSpec], seed: u64) -> Self {
+        let root = Pcg32::new(seed);
+        let bufs = specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let mut rng = root.split(i as u64);
+                let n = spec.size();
+                match &spec.init {
+                    Init::Zeros => vec![0.0; n],
+                    Init::Ones => vec![1.0; n],
+                    Init::Normal(std) => (0..n).map(|_| rng.normal() * std).collect(),
+                    Init::Uniform(b) => (0..n).map(|_| rng.uniform(-b, *b)).collect(),
+                }
+            })
+            .collect();
+        ParamSet { specs: specs.to_vec(), bufs }
+    }
+
+    /// All-zeros set with the same shapes (gradient accumulators,
+    /// momentum state).
+    pub fn zeros_like(specs: &[ParamSpec]) -> Self {
+        let bufs = specs.iter().map(|s| vec![0.0; s.size()]).collect();
+        ParamSet { specs: specs.to_vec(), bufs }
+    }
+
+    pub fn num_tensors(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Total scalar parameter count (the "~N-param model" headline number).
+    pub fn total_len(&self) -> usize {
+        self.bufs.iter().map(|b| b.len()).sum()
+    }
+
+    /// Squared L2 norm across all tensors.
+    pub fn sq_norm(&self) -> f64 {
+        self.bufs
+            .iter()
+            .flat_map(|b| b.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum()
+    }
+
+    /// self += other (used by gradient accumulation).
+    pub fn add_assign(&mut self, other: &ParamSet) {
+        assert_eq!(self.num_tensors(), other.num_tensors());
+        for (a, b) in self.bufs.iter_mut().zip(&other.bufs) {
+            debug_assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += *y;
+            }
+        }
+    }
+
+    /// self *= k (rescaling accumulated gradients by 1/β, Eq. 5).
+    pub fn scale(&mut self, k: f32) {
+        for b in &mut self.bufs {
+            for x in b.iter_mut() {
+                *x *= k;
+            }
+        }
+    }
+
+    /// Reset to zero in place (reusing allocations — hot path of the
+    /// accumulation loop).
+    pub fn zero(&mut self) {
+        for b in &mut self.bufs {
+            b.iter_mut().for_each(|x| *x = 0.0);
+        }
+    }
+
+    /// Max |x| across all tensors (divergence guard in the controller).
+    pub fn max_abs(&self) -> f32 {
+        self.bufs
+            .iter()
+            .flat_map(|b| b.iter())
+            .fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn all_finite(&self) -> bool {
+        self.bufs.iter().all(|b| b.iter().all(|x| x.is_finite()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "w".into(), shape: vec![4, 3], init: Init::Normal(0.5) },
+            ParamSpec { name: "b".into(), shape: vec![3], init: Init::Zeros },
+            ParamSpec { name: "g".into(), shape: vec![3], init: Init::Ones },
+            ParamSpec { name: "u".into(), shape: vec![2, 2, 2], init: Init::Uniform(0.1) },
+        ]
+    }
+
+    #[test]
+    fn init_shapes_and_recipes() {
+        let p = ParamSet::init(&specs(), 1);
+        assert_eq!(p.num_tensors(), 4);
+        assert_eq!(p.bufs[0].len(), 12);
+        assert!(p.bufs[1].iter().all(|&x| x == 0.0));
+        assert!(p.bufs[2].iter().all(|&x| x == 1.0));
+        assert!(p.bufs[3].iter().all(|&x| (-0.1..0.1).contains(&x)));
+        assert_eq!(p.total_len(), 12 + 3 + 3 + 8);
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let a = ParamSet::init(&specs(), 7);
+        let b = ParamSet::init(&specs(), 7);
+        let c = ParamSet::init(&specs(), 8);
+        assert_eq!(a.bufs, b.bufs);
+        assert_ne!(a.bufs[0], c.bufs[0]);
+    }
+
+    #[test]
+    fn accumulate_and_scale() {
+        let s = specs();
+        let mut acc = ParamSet::zeros_like(&s);
+        let ones = {
+            let mut p = ParamSet::zeros_like(&s);
+            for b in &mut p.bufs {
+                b.iter_mut().for_each(|x| *x = 1.0);
+            }
+            p
+        };
+        acc.add_assign(&ones);
+        acc.add_assign(&ones);
+        acc.scale(0.5);
+        assert!(acc.bufs.iter().all(|b| b.iter().all(|&x| x == 1.0)));
+        acc.zero();
+        assert_eq!(acc.sq_norm(), 0.0);
+    }
+
+    #[test]
+    fn norm_and_finite() {
+        let s = vec![ParamSpec { name: "x".into(), shape: vec![2], init: Init::Zeros }];
+        let mut p = ParamSet::zeros_like(&s);
+        p.bufs[0] = vec![3.0, 4.0];
+        assert_eq!(p.sq_norm(), 25.0);
+        assert_eq!(p.max_abs(), 4.0);
+        assert!(p.all_finite());
+        p.bufs[0][0] = f32::NAN;
+        assert!(!p.all_finite());
+    }
+}

@@ -1,0 +1,280 @@
+//! Artifact discovery: parse `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) into typed metadata. This file is the entire
+//! cross-language contract — rust learns every model's parameter
+//! shapes/inits, input spec, per-sample flops and the available
+//! (step-kind, microbatch) HLO artifacts from here, never from python.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::optim::param::{Init, ParamSpec};
+use crate::util::json::Json;
+
+/// Input dtype of the x operand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+/// Per-model input/batch contract.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub x_shape: Vec<usize>,
+    pub x_dtype: Dtype,
+    pub y_shape: Vec<usize>,
+    pub n_classes: usize,
+    pub labels_per_sample: usize,
+}
+
+impl InputSpec {
+    pub fn x_len(&self) -> usize {
+        self.x_shape.iter().product()
+    }
+
+    pub fn y_len(&self) -> usize {
+        self.y_shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub input: InputSpec,
+    pub flops_per_sample: u64,
+    pub params: Vec<ParamSpec>,
+    /// microbatch -> HLO text path, per step kind
+    pub train: BTreeMap<usize, PathBuf>,
+    pub eval: BTreeMap<usize, PathBuf>,
+}
+
+impl ModelEntry {
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.size()).sum()
+    }
+
+    /// Native train microbatch sizes, ascending.
+    pub fn train_batches(&self) -> Vec<usize> {
+        self.train.keys().copied().collect()
+    }
+
+    pub fn eval_batches(&self) -> Vec<usize> {
+        self.eval.keys().copied().collect()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text, root)
+    }
+
+    pub fn parse(text: &str, root: PathBuf) -> Result<Manifest> {
+        let json = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let models_json = json
+            .get("models")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing models object"))?;
+        let mut models = BTreeMap::new();
+        for (name, entry) in models_json {
+            models.insert(name.clone(), parse_model(name, entry, &root)?);
+        }
+        Ok(Manifest { root, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn parse_model(name: &str, entry: &Json, root: &Path) -> Result<ModelEntry> {
+    let input = entry.get("input").ok_or_else(|| anyhow!("{name}: missing input"))?;
+    let x_dtype = match input.get("x_dtype").and_then(Json::as_str) {
+        Some("f32") => Dtype::F32,
+        Some("i32") => Dtype::I32,
+        other => bail!("{name}: bad x_dtype {other:?}"),
+    };
+    let usize_arr = |j: Option<&Json>, what: &str| -> Result<Vec<usize>> {
+        j.and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: missing {what}"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("{name}: bad {what}")))
+            .collect()
+    };
+    let spec = InputSpec {
+        x_shape: usize_arr(input.get("x_shape"), "x_shape")?,
+        x_dtype,
+        y_shape: usize_arr(input.get("y_shape"), "y_shape")?,
+        n_classes: input
+            .get("n_classes")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("{name}: bad n_classes"))?,
+        labels_per_sample: input
+            .get("labels_per_sample")
+            .and_then(Json::as_usize)
+            .unwrap_or(1),
+    };
+
+    let mut params = Vec::new();
+    for p in entry
+        .get("params")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{name}: missing params"))?
+    {
+        let pname = p
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{name}: param missing name"))?;
+        let shape: Vec<usize> = p
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: param {pname} missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect();
+        let init_arr = p
+            .get("init")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{name}: param {pname} missing init"))?;
+        let kind = init_arr
+            .first()
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("{name}: param {pname} bad init"))?;
+        let arg = init_arr.get(1).and_then(Json::as_f64).unwrap_or(0.0) as f32;
+        let init = match kind {
+            "zeros" => Init::Zeros,
+            "ones" => Init::Ones,
+            "normal" => Init::Normal(arg),
+            "uniform" => Init::Uniform(arg),
+            other => bail!("{name}: param {pname} unknown init {other:?}"),
+        };
+        params.push(ParamSpec { name: pname.to_string(), shape, init });
+    }
+
+    let parse_artifacts = |kind: &str| -> Result<BTreeMap<usize, PathBuf>> {
+        let mut out = BTreeMap::new();
+        if let Some(map) = entry.path(&["artifacts", kind]).and_then(Json::as_obj) {
+            for (bs, rel) in map {
+                let bs: usize = bs.parse().map_err(|_| anyhow!("{name}: bad batch key {bs}"))?;
+                let rel = rel
+                    .as_str()
+                    .ok_or_else(|| anyhow!("{name}: bad artifact path"))?;
+                out.insert(bs, root.join(rel));
+            }
+        }
+        Ok(out)
+    };
+
+    Ok(ModelEntry {
+        name: name.to_string(),
+        input: spec,
+        flops_per_sample: entry
+            .get("flops_per_sample")
+            .and_then(Json::as_i64)
+            .unwrap_or(0) as u64,
+        params,
+        train: parse_artifacts("train")?,
+        eval: parse_artifacts("eval")?,
+    })
+}
+
+/// Default artifacts directory: `$ADABATCH_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("ADABATCH_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "models": {
+        "m1": {
+          "input": {"x_shape": [32,32,3], "x_dtype": "f32", "y_shape": [],
+                    "n_classes": 10, "labels_per_sample": 1},
+          "flops_per_sample": 1234,
+          "params": [
+            {"name": "w", "shape": [3,3,3,16], "init": ["normal", 0.272]},
+            {"name": "b", "shape": [16], "init": ["zeros"]}
+          ],
+          "artifacts": {
+            "train": {"8": "m1/train_bs8.hlo.txt", "16": "m1/train_bs16.hlo.txt"},
+            "eval": {"32": "m1/eval_bs32.hlo.txt"}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/art")).unwrap();
+        let e = m.model("m1").unwrap();
+        assert_eq!(e.input.x_shape, vec![32, 32, 3]);
+        assert_eq!(e.input.x_dtype, Dtype::F32);
+        assert_eq!(e.input.x_len(), 3072);
+        assert_eq!(e.input.y_len(), 1);
+        assert_eq!(e.flops_per_sample, 1234);
+        assert_eq!(e.params.len(), 2);
+        assert_eq!(e.params[0].init, Init::Normal(0.272));
+        assert_eq!(e.total_params(), 3 * 3 * 3 * 16 + 16);
+        assert_eq!(e.train_batches(), vec![8, 16]);
+        assert_eq!(
+            e.train[&8],
+            PathBuf::from("/art/m1/train_bs8.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn unknown_model_error_lists_names() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/a")).unwrap();
+        let err = m.model("nope").unwrap_err().to_string();
+        assert!(err.contains("m1"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad, PathBuf::from("/a")).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_models() {
+        assert!(Manifest::parse("{}", PathBuf::from("/a")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // integration smoke against the checked-out artifacts dir when present
+        let dir = default_artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.models.is_empty());
+            for e in m.models.values() {
+                assert!(!e.params.is_empty());
+                assert!(!e.train.is_empty());
+            }
+        }
+    }
+}

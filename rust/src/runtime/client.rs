@@ -1,0 +1,59 @@
+//! PJRT client wrapper: load HLO-text artifacts and compile them on the
+//! CPU PJRT backend (the xla crate / xla_extension 0.5.1 C API).
+//!
+//! One process-wide client is shared by every executable: PJRT clients are
+//! heavyweight (thread pools, allocator arenas) and the paper's runtime
+//! model is one client per device fleet, many executables.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client handle.
+#[derive(Clone)]
+pub struct Client {
+    inner: Arc<xla::PjRtClient>,
+}
+
+impl Client {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Client> {
+        let c = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Client { inner: Arc::new(c) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.inner.device_count()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+
+    /// Load + compile an HLO **text** artifact (the interchange format —
+    /// serialized protos from jax ≥ 0.5 are rejected by xla_extension
+    /// 0.5.1, see DESIGN.md §2).
+    pub fn compile_hlo_file(&self, path: impl AsRef<Path>) -> Result<xla::PjRtLoadedExecutable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.inner
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+impl std::fmt::Debug for Client {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Client")
+            .field("platform", &self.platform())
+            .field("devices", &self.device_count())
+            .finish()
+    }
+}

@@ -1,0 +1,275 @@
+//! Compiled-step management: one PJRT executable per (model, step-kind,
+//! microbatch), compiled lazily from HLO text and cached.
+//!
+//! This cache is the systems consequence of AdaBatch: XLA specializes
+//! executables on shapes, so a batch-size *schedule* becomes an executable
+//! *ladder*. The coordinator asks for the largest native microbatch ≤ its
+//! per-worker shard and realizes the rest via gradient accumulation
+//! (paper §4.3) — see [`super::plan`].
+//!
+//! Marshalling strategy: inputs go host→device via
+//! `buffer_from_host_buffer` (no intermediate Literal copy) and execution
+//! uses `execute_b`; parameters are uploaded once per step from the
+//! host-side [`ParamSet`] (the optimizer mutates host buffers). The perf
+//! pass (EXPERIMENTS.md §Perf) measures marshalling vs. execute cost.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::artifact::{Dtype, ModelEntry};
+use super::client::Client;
+use crate::optim::param::ParamSet;
+
+/// Train or eval step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum StepKind {
+    Train,
+    Eval,
+}
+
+/// Host-side batch payload (images are f32, token ids are i32).
+#[derive(Debug, Clone, Copy)]
+pub enum HostBatch<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// Outputs of one executed step. `grads` is populated for train steps, in
+/// manifest parameter order, already batch-mean scaled (the 1/r lives in
+/// the loss kernel).
+#[derive(Debug)]
+pub struct StepOutputs {
+    pub loss: f32,
+    pub correct: f32,
+    pub grads: Option<ParamSet>,
+}
+
+/// One compiled (model, kind, microbatch) step.
+pub struct StepExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub kind: StepKind,
+    pub batch: usize,
+    entry: Arc<ModelEntry>,
+    client: Client,
+}
+
+impl StepExecutable {
+    /// Execute on a full batch of exactly `self.batch` samples.
+    pub fn run(&self, params: &ParamSet, x: HostBatch<'_>, y: &[i32]) -> Result<StepOutputs> {
+        let n_params = self.entry.params.len();
+        assert_eq!(params.num_tensors(), n_params, "param arity mismatch");
+        let raw = self.client.raw();
+
+        let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(n_params + 2);
+        for (spec, buf) in self.entry.params.iter().zip(&params.bufs) {
+            let b = raw
+                .buffer_from_host_buffer::<f32>(buf, &spec.shape, None)
+                .with_context(|| format!("uploading param {}", spec.name))?;
+            args.push(b);
+        }
+
+        let mut x_dims = Vec::with_capacity(1 + self.entry.input.x_shape.len());
+        x_dims.push(self.batch);
+        x_dims.extend_from_slice(&self.entry.input.x_shape);
+        let xb = match (x, self.entry.input.x_dtype) {
+            (HostBatch::F32(data), Dtype::F32) => {
+                raw.buffer_from_host_buffer::<f32>(data, &x_dims, None)
+            }
+            (HostBatch::I32(data), Dtype::I32) => {
+                raw.buffer_from_host_buffer::<i32>(data, &x_dims, None)
+            }
+            _ => bail!("x dtype mismatch for model {}", self.entry.name),
+        }
+        .context("uploading x")?;
+        args.push(xb);
+
+        let mut y_dims = Vec::with_capacity(1 + self.entry.input.y_shape.len());
+        y_dims.push(self.batch);
+        y_dims.extend_from_slice(&self.entry.input.y_shape);
+        args.push(
+            raw.buffer_from_host_buffer::<i32>(y, &y_dims, None)
+                .context("uploading y")?,
+        );
+
+        let out = self.exe.execute_b(&args).context("execute")?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .context("downloading outputs")?;
+        let parts = lit.to_tuple().context("untupling outputs")?;
+        let expect = match self.kind {
+            StepKind::Train => 2 + n_params,
+            StepKind::Eval => 2,
+        };
+        if parts.len() != expect {
+            bail!(
+                "{:?} step returned {} outputs, expected {expect}",
+                self.kind,
+                parts.len()
+            );
+        }
+        let loss = parts[0].get_first_element::<f32>()?;
+        let correct = parts[1].get_first_element::<f32>()?;
+        let grads = if self.kind == StepKind::Train {
+            let mut g = ParamSet::zeros_like(&self.entry.params);
+            for (i, part) in parts[2..].iter().enumerate() {
+                let v = part.to_vec::<f32>()?;
+                if v.len() != g.bufs[i].len() {
+                    bail!(
+                        "grad {} size mismatch: {} vs {}",
+                        self.entry.params[i].name,
+                        v.len(),
+                        g.bufs[i].len()
+                    );
+                }
+                g.bufs[i] = v;
+            }
+            Some(g)
+        } else {
+            None
+        };
+        Ok(StepOutputs { loss, correct, grads })
+    }
+}
+
+/// Lazily-compiled executable cache for one model.
+pub struct ModelRuntime {
+    pub client: Client,
+    pub entry: Arc<ModelEntry>,
+    cache: Mutex<BTreeMap<(StepKind, usize), Arc<StepExecutable>>>,
+    /// compile counters for tests/metrics
+    compiles: Mutex<usize>,
+}
+
+impl ModelRuntime {
+    pub fn new(client: Client, entry: ModelEntry) -> Self {
+        ModelRuntime {
+            client,
+            entry: Arc::new(entry),
+            cache: Mutex::new(BTreeMap::new()),
+            compiles: Mutex::new(0),
+        }
+    }
+
+    pub fn compiles(&self) -> usize {
+        *self.compiles.lock().unwrap()
+    }
+
+    /// The compiled step for (kind, microbatch); compiles on first use.
+    pub fn executable(&self, kind: StepKind, batch: usize) -> Result<Arc<StepExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(&(kind, batch)) {
+            return Ok(e.clone());
+        }
+        let table = match kind {
+            StepKind::Train => &self.entry.train,
+            StepKind::Eval => &self.entry.eval,
+        };
+        let path = table.get(&batch).ok_or_else(|| {
+            anyhow!(
+                "no {:?} artifact for model {} at microbatch {batch} (have {:?}); \
+                 extend the aot.py build matrix or let the planner pick a native size",
+                kind,
+                self.entry.name,
+                table.keys().collect::<Vec<_>>()
+            )
+        })?;
+        let exe = self.client.compile_hlo_file(path)?;
+        let step = Arc::new(StepExecutable {
+            exe,
+            kind,
+            batch,
+            entry: self.entry.clone(),
+            client: self.client.clone(),
+        });
+        *self.compiles.lock().unwrap() += 1;
+        self.cache
+            .lock()
+            .unwrap()
+            .insert((kind, batch), step.clone());
+        Ok(step)
+    }
+
+    /// Largest native train microbatch ≤ `cap` (None if all exceed cap).
+    pub fn largest_train_microbatch(&self, cap: usize) -> Option<usize> {
+        self.entry
+            .train
+            .keys()
+            .copied()
+            .filter(|&b| b <= cap)
+            .max()
+    }
+
+    /// The (single, largest) eval batch the artifacts provide.
+    pub fn eval_batch(&self) -> Result<usize> {
+        self.entry
+            .eval
+            .keys()
+            .copied()
+            .max()
+            .ok_or_else(|| anyhow!("model {} has no eval artifacts", self.entry.name))
+    }
+}
+
+impl std::fmt::Debug for ModelRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ModelRuntime")
+            .field("model", &self.entry.name)
+            .field("train_batches", &self.entry.train_batches())
+            .field("eval_batches", &self.entry.eval_batches())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{default_artifacts_dir, Manifest};
+
+    /// Full-stack integration: load a real artifact, run a train step and
+    /// an eval step, check output arity/finiteness. Skips (cleanly) when
+    /// artifacts have not been built.
+    #[test]
+    fn train_and_eval_roundtrip_smoke() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let entry = manifest.model("resnet_lite_c10").unwrap().clone();
+        let client = Client::cpu().unwrap();
+        let rt = ModelRuntime::new(client, entry);
+
+        let bs = rt.largest_train_microbatch(8).unwrap();
+        let exe = rt.executable(StepKind::Train, bs).unwrap();
+        let params = ParamSet::init(&rt.entry.params, 0);
+        let x = vec![0.1f32; bs * rt.entry.input.x_len()];
+        let y: Vec<i32> = (0..bs as i32).map(|i| i % 10).collect();
+        let out = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        assert!(out.loss.is_finite());
+        assert!((0.0..=bs as f32).contains(&out.correct));
+        let grads = out.grads.unwrap();
+        assert_eq!(grads.num_tensors(), rt.entry.params.len());
+        assert!(grads.all_finite());
+        assert!(grads.sq_norm() > 0.0);
+
+        // same batch twice -> identical results (deterministic CPU path)
+        let out2 = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        assert_eq!(out.loss, out2.loss);
+
+        // eval path
+        let eb = rt.eval_batch().unwrap();
+        let eexe = rt.executable(StepKind::Eval, eb).unwrap();
+        let x = vec![0.0f32; eb * rt.entry.input.x_len()];
+        let y = vec![-1i32; eb]; // all padding: zero correct
+        let out = eexe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        assert!(out.grads.is_none());
+        assert_eq!(out.correct, 0.0);
+
+        // cache: second request compiles nothing new
+        let n = rt.compiles();
+        let _ = rt.executable(StepKind::Train, bs).unwrap();
+        assert_eq!(rt.compiles(), n);
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! coordinator's hot path. Python never appears here — the artifacts plus
+//! `manifest.json` are the entire interface to Layers 1–2.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+pub mod plan;
+pub mod validate;
+
+pub use artifact::{default_artifacts_dir, Dtype, InputSpec, Manifest, ModelEntry};
+pub use client::Client;
+pub use executable::{HostBatch, ModelRuntime, StepExecutable, StepKind, StepOutputs};
+pub use plan::{plan, plan_schedule, ExecutionPlan};

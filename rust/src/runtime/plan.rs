@@ -1,0 +1,214 @@
+//! [`ExecutionPlan`] — how an *effective* batch r becomes device work.
+//!
+//! AdaBatch grows r beyond what fits natively; the paper's §4.3 answer is
+//! gradient accumulation: "when training with a batch size of 1024 we
+//! perform two forward and backward passes with batch size 512 and
+//! accumulate the gradients before updating the weights". The planner
+//! generalizes that rule across data-parallel workers:
+//!
+//! ```text
+//! effective batch r  =  workers × microbatch × accum_steps
+//! ```
+//!
+//! picking the largest native microbatch (≤ memory cap) that divides the
+//! per-worker shard. Exactness is non-negotiable — Eq. (5) only reproduces
+//! the large-batch update if the accumulated microbatches tile the batch
+//! exactly — so `plan()` fails loudly rather than silently truncating.
+
+use anyhow::{anyhow, Result};
+
+/// A realized execution plan for one effective batch size.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecutionPlan {
+    pub effective_batch: usize,
+    pub workers: usize,
+    /// per-execution native batch (an artifact exists at this size)
+    pub microbatch: usize,
+    /// sequential fwd/bwd passes per worker per update (β/workers of Eq. 5)
+    pub accum_steps: usize,
+}
+
+impl ExecutionPlan {
+    /// Samples each worker processes per update.
+    pub fn shard(&self) -> usize {
+        self.microbatch * self.accum_steps
+    }
+
+    /// Total executions per weight update across the fleet.
+    pub fn executions_per_update(&self) -> usize {
+        self.workers * self.accum_steps
+    }
+
+    /// Check the defining invariant.
+    pub fn is_exact(&self) -> bool {
+        self.workers * self.microbatch * self.accum_steps == self.effective_batch
+    }
+}
+
+/// Choose a plan for effective batch `r` over `workers` replicas given the
+/// `native` microbatch sizes (ascending or not) and an optional per-device
+/// memory cap expressed as a max microbatch.
+pub fn plan(
+    r: usize,
+    workers: usize,
+    native: &[usize],
+    max_microbatch: Option<usize>,
+) -> Result<ExecutionPlan> {
+    if r == 0 || workers == 0 {
+        return Err(anyhow!("batch and workers must be positive (r={r}, workers={workers})"));
+    }
+    if r % workers != 0 {
+        return Err(anyhow!(
+            "effective batch {r} not divisible by {workers} workers; \
+             AdaBatch ladders are powers of two — choose workers accordingly"
+        ));
+    }
+    let shard = r / workers;
+    let cap = max_microbatch.unwrap_or(usize::MAX).min(shard);
+    // largest native microbatch that divides the shard and fits the cap
+    let best = native
+        .iter()
+        .copied()
+        .filter(|&m| m <= cap && shard % m == 0)
+        .max()
+        .ok_or_else(|| {
+            anyhow!(
+                "no native microbatch divides per-worker shard {shard} under cap {cap} \
+                 (native sizes: {native:?}); extend the aot.py build matrix"
+            )
+        })?;
+    Ok(ExecutionPlan {
+        effective_batch: r,
+        workers,
+        microbatch: best,
+        accum_steps: shard / best,
+    })
+}
+
+/// Plans for every distinct batch size in a schedule (pre-flight check the
+/// controller runs before training starts, so a schedule that will fail at
+/// epoch 80 fails at epoch 0 instead).
+pub fn plan_schedule(
+    batches: &[usize],
+    workers: usize,
+    native: &[usize],
+    max_microbatch: Option<usize>,
+) -> Result<Vec<ExecutionPlan>> {
+    batches
+        .iter()
+        .map(|&r| plan(r, workers, native, max_microbatch))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Triple, UsizeRange};
+
+    const NATIVE: &[usize] = &[8, 16, 32, 64];
+
+    #[test]
+    fn native_fit_no_accumulation() {
+        let p = plan(64, 1, NATIVE, None).unwrap();
+        assert_eq!(p.microbatch, 64);
+        assert_eq!(p.accum_steps, 1);
+        assert!(p.is_exact());
+    }
+
+    #[test]
+    fn paper_example_1024_as_two_512s() {
+        // §4.3's example with a 512 cap: 1024 = 2 passes of 512
+        let p = plan(1024, 1, &[128, 256, 512], Some(512)).unwrap();
+        assert_eq!(p.microbatch, 512);
+        assert_eq!(p.accum_steps, 2);
+    }
+
+    #[test]
+    fn workers_share_the_batch() {
+        let p = plan(256, 4, NATIVE, None).unwrap();
+        assert_eq!(p.shard(), 64);
+        assert_eq!(p.microbatch, 64);
+        assert_eq!(p.accum_steps, 1);
+        assert_eq!(p.executions_per_update(), 4);
+    }
+
+    #[test]
+    fn accumulation_kicks_in_beyond_largest_native() {
+        let p = plan(2048, 4, NATIVE, None).unwrap();
+        assert_eq!(p.shard(), 512);
+        assert_eq!(p.microbatch, 64);
+        assert_eq!(p.accum_steps, 8);
+        assert!(p.is_exact());
+    }
+
+    #[test]
+    fn memory_cap_restricts_microbatch() {
+        let p = plan(256, 1, NATIVE, Some(16)).unwrap();
+        assert_eq!(p.microbatch, 16);
+        assert_eq!(p.accum_steps, 16);
+    }
+
+    #[test]
+    fn indivisible_batch_fails() {
+        assert!(plan(100, 3, NATIVE, None).is_err());
+    }
+
+    #[test]
+    fn no_fitting_native_fails() {
+        // shard 4 below the smallest native 8
+        assert!(plan(16, 4, NATIVE, None).is_err());
+        // shard 24 not divisible by any native under cap 16:
+        // 8 divides 24 -> ok actually; use 20 instead (no native divides)
+        assert!(plan(20, 1, &[8, 16], None).is_err());
+    }
+
+    #[test]
+    fn plan_schedule_preflight() {
+        let ladder = [128usize, 256, 512, 1024, 2048];
+        let plans = plan_schedule(&ladder, 4, NATIVE, None).unwrap();
+        assert_eq!(plans.len(), 5);
+        for (r, p) in ladder.iter().zip(&plans) {
+            assert_eq!(p.effective_batch, *r);
+            assert!(p.is_exact());
+        }
+        // a bad ladder fails as a whole
+        assert!(plan_schedule(&[128, 129], 1, NATIVE, None).is_err());
+    }
+
+    #[test]
+    fn prop_plans_are_exact_and_capped() {
+        propcheck::check(
+            "power-of-two batches always plan exactly",
+            Triple(UsizeRange(0, 8), UsizeRange(0, 2), UsizeRange(0, 3)),
+            |&(rexp, wexp, capexp)| {
+                let r = 64usize << rexp; // 64..16384
+                let workers = 1usize << wexp; // 1,2,4
+                let cap = 8usize << capexp; // 8..64
+                match plan(r, workers, NATIVE, Some(cap)) {
+                    Ok(p) => {
+                        p.is_exact()
+                            && p.microbatch <= cap
+                            && NATIVE.contains(&p.microbatch)
+                    }
+                    Err(_) => r / workers < 8, // only tiny shards may fail
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_picks_largest_divisor() {
+        propcheck::check(
+            "planner picks the largest feasible microbatch",
+            UsizeRange(0, 6),
+            |&exp| {
+                let r = 64usize << exp;
+                let p = plan(r, 1, NATIVE, None).unwrap();
+                // no larger native size divides the shard
+                NATIVE
+                    .iter()
+                    .all(|&m| m <= p.microbatch || r % m != 0 || m > r)
+            },
+        );
+    }
+}

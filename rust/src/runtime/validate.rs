@@ -1,0 +1,232 @@
+//! Artifact integrity validation: cross-check each HLO text artifact's
+//! ENTRY signature against the manifest *before* compiling anything.
+//!
+//! A stale `artifacts/` (manifest regenerated but HLO files from an older
+//! model revision, or vice versa) would otherwise surface as a confusing
+//! PJRT shape error mid-training — or worse, run with silently transposed
+//! parameters. `validate_model` parses the `ENTRY ... (...) -> ...` line
+//! of each artifact and verifies parameter count, parameter shapes (in
+//! manifest order), the batch-sized x/y operands and the output arity.
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::{Dtype, ModelEntry};
+
+/// Shapes extracted from an ENTRY line, e.g. `f32[8,32,32,3]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HloShape {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+/// Parse the parameter shapes of the entry computation.
+///
+/// jax-emitted HLO text carries the signature in the module header:
+/// `entry_computation_layout={(f32[3,3,3,32]{3,2,1,0}, ..., s32[16]{0})->
+/// (...)}` — we scan the parameter list for `ty[dims]` tokens (layout
+/// suffixes `{...}` and `/*index=N*/` comments are skipped naturally).
+pub fn parse_entry_params(hlo_text: &str) -> Result<Vec<HloShape>> {
+    let marker = "entry_computation_layout={(";
+    let start = hlo_text
+        .find(marker)
+        .ok_or_else(|| anyhow!("no entry_computation_layout in HLO text"))?
+        + marker.len();
+    let rest = &hlo_text[start..];
+    let end = rest
+        .find(")->")
+        .ok_or_else(|| anyhow!("malformed entry_computation_layout (no '->')"))?;
+    let args = &rest[..end];
+    let mut out = Vec::new();
+    let bytes = args.as_bytes();
+    let mut i = 0;
+    while i < bytes.len() {
+        // find the next dtype token start: a letter run followed by '['
+        if bytes[i].is_ascii_alphabetic() {
+            let ty_start = i;
+            while i < bytes.len() && (bytes[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            if i < bytes.len() && bytes[i] == b'[' {
+                let close = args[i..]
+                    .find(']')
+                    .map(|k| i + k)
+                    .ok_or_else(|| anyhow!("unterminated shape in layout"))?;
+                out.push(parse_shape(&args[ty_start..=close])?);
+                i = close + 1;
+                // skip layout suffix {…}
+                if i < bytes.len() && bytes[i] == b'{' {
+                    let c = args[i..].find('}').map(|k| i + k).unwrap_or(i);
+                    i = c + 1;
+                }
+                continue;
+            }
+        }
+        i += 1;
+    }
+    Ok(out)
+}
+
+fn parse_shape(s: &str) -> Result<HloShape> {
+    let Some(br) = s.find('[') else {
+        // scalar like "f32[]" always has brackets in HLO; bare types are odd
+        return Ok(HloShape { dtype: s.to_string(), dims: vec![] });
+    };
+    let dtype = s[..br].to_string();
+    let end = s.find(']').ok_or_else(|| anyhow!("bad shape {s:?}"))?;
+    let inner = &s[br + 1..end];
+    let dims = if inner.is_empty() {
+        vec![]
+    } else {
+        inner
+            .split(',')
+            .map(|d| {
+                d.trim()
+                    .parse::<usize>()
+                    .map_err(|_| anyhow!("bad dim in shape {s:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    Ok(HloShape { dtype, dims })
+}
+
+fn dtype_name(d: Dtype) -> &'static str {
+    match d {
+        Dtype::F32 => "f32",
+        Dtype::I32 => "s32",
+    }
+}
+
+/// Validate one artifact's ENTRY signature against the manifest entry.
+pub fn validate_artifact(entry: &ModelEntry, hlo_text: &str, batch: usize) -> Result<()> {
+    let params = parse_entry_params(hlo_text)?;
+    let expect = entry.params.len() + 2;
+    if params.len() != expect {
+        bail!(
+            "{}: artifact has {} operands, manifest implies {expect}",
+            entry.name,
+            params.len()
+        );
+    }
+    for (i, spec) in entry.params.iter().enumerate() {
+        if params[i].dims != spec.shape {
+            bail!(
+                "{}: param {} ({}) shape {:?} != manifest {:?} — stale artifacts? re-run `make artifacts`",
+                entry.name,
+                i,
+                spec.name,
+                params[i].dims,
+                spec.shape
+            );
+        }
+        if params[i].dtype != "f32" {
+            bail!("{}: param {} is {}, expected f32", entry.name, spec.name, params[i].dtype);
+        }
+    }
+    let x = &params[entry.params.len()];
+    let mut x_dims = vec![batch];
+    x_dims.extend_from_slice(&entry.input.x_shape);
+    if x.dims != x_dims || x.dtype != dtype_name(entry.input.x_dtype) {
+        bail!(
+            "{}: x operand {:?}{:?} != expected {}{:?}",
+            entry.name,
+            x.dtype,
+            x.dims,
+            dtype_name(entry.input.x_dtype),
+            x_dims
+        );
+    }
+    let y = &params[entry.params.len() + 1];
+    let mut y_dims = vec![batch];
+    y_dims.extend_from_slice(&entry.input.y_shape);
+    if y.dims != y_dims || y.dtype != "s32" {
+        bail!("{}: y operand {:?}{:?} != expected s32{:?}", entry.name, y.dtype, y.dims, y_dims);
+    }
+    Ok(())
+}
+
+/// Validate every artifact of a model (reads each HLO file's header only).
+pub fn validate_model(entry: &ModelEntry) -> Result<()> {
+    for (bs, path) in entry.train.iter().chain(entry.eval.iter()) {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        validate_artifact(entry, &text, *bs)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::param::{Init, ParamSpec};
+    use crate::runtime::artifact::InputSpec;
+
+    const ENTRY: &str = "HloModule jit_step, entry_computation_layout={(f32[3,3,3,16]{3,2,1,0}, f32[16]{0}, /*index=2*/f32[8,32,32,3]{3,2,1,0}, s32[8]{0})->(f32[], f32[], f32[3,3,3,16]{3,2,1,0}, f32[16]{0})}";
+
+    fn entry_meta() -> ModelEntry {
+        ModelEntry {
+            name: "m".into(),
+            input: InputSpec {
+                x_shape: vec![32, 32, 3],
+                x_dtype: Dtype::F32,
+                y_shape: vec![],
+                n_classes: 10,
+                labels_per_sample: 1,
+            },
+            flops_per_sample: 1,
+            params: vec![
+                ParamSpec { name: "w".into(), shape: vec![3, 3, 3, 16], init: Init::Zeros },
+                ParamSpec { name: "b".into(), shape: vec![16], init: Init::Zeros },
+            ],
+            train: Default::default(),
+            eval: Default::default(),
+        }
+    }
+
+    #[test]
+    fn parses_entry_shapes() {
+        let shapes = parse_entry_params(&format!("{ENTRY}\n")).unwrap();
+        assert_eq!(shapes.len(), 4);
+        assert_eq!(shapes[0], HloShape { dtype: "f32".into(), dims: vec![3, 3, 3, 16] });
+        assert_eq!(shapes[3], HloShape { dtype: "s32".into(), dims: vec![8] });
+    }
+
+    #[test]
+    fn valid_artifact_passes() {
+        validate_artifact(&entry_meta(), &format!("{ENTRY}"), 8).unwrap();
+    }
+
+    #[test]
+    fn wrong_batch_fails() {
+        let err = validate_artifact(&entry_meta(), &format!("HloModule m\n{ENTRY}"), 16)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("x operand"), "{err}");
+    }
+
+    #[test]
+    fn wrong_param_shape_fails() {
+        let mut e = entry_meta();
+        e.params[0].shape = vec![3, 3, 3, 32];
+        let err = validate_artifact(&e, &format!("HloModule m\n{ENTRY}"), 8)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stale artifacts"), "{err}");
+    }
+
+    #[test]
+    fn missing_entry_fails() {
+        assert!(parse_entry_params("HloModule m\n").is_err());
+    }
+
+    #[test]
+    fn real_artifacts_validate_if_built() {
+        let dir = crate::runtime::artifact::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = crate::runtime::Manifest::load(&dir).unwrap();
+        for entry in manifest.models.values() {
+            validate_model(entry).unwrap_or_else(|e| panic!("{}: {e}", entry.name));
+        }
+    }
+}

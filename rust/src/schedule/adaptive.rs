@@ -1,0 +1,192 @@
+//! Gradient-variance–based adaptive batch-size criterion — the *adaptive
+//! baseline* from the related-work the paper positions against (Byrd et
+//! al. 2012; De et al. 2016; Balles et al. 2017).
+//!
+//! Idea: SGD's useful signal per update is the squared norm of the mean
+//! gradient; its noise is the per-sample gradient variance divided by the
+//! batch size. When the measured signal-to-noise ratio drops below a
+//! threshold (training has reached the noise floor for the current r),
+//! increase the batch. This gives a *data-driven* schedule to compare
+//! against AdaBatch's fixed interval doubling — the ablation bench
+//! (`bench_schedule`) contrasts the two.
+//!
+//! The controller consumes cheap per-microbatch statistics the coordinator
+//! already has: the norm of each microbatch gradient and the norm of their
+//! mean (exactly the quantities gradient accumulation produces for free).
+
+/// Streaming gradient signal/noise estimator with a doubling recommendation.
+#[derive(Debug, Clone)]
+pub struct GradVarianceController {
+    /// Increase the batch when `E[||g_mean||²] / (Var_est / r)` falls below
+    /// this ratio (θ in Byrd et al.'s test, rearranged).
+    pub snr_threshold: f64,
+    /// Samples (iterations) to aggregate before a decision.
+    pub window: usize,
+    /// Multiplier applied on each increase.
+    pub factor: usize,
+    /// Ceiling on recommendations.
+    pub max_batch: usize,
+    current_batch: usize,
+    // accumulators over the current window
+    mean_sq_sum: f64,
+    var_sum: f64,
+    count: usize,
+    decisions: usize,
+}
+
+/// One iteration's gradient statistics (from accumulated microbatches).
+#[derive(Debug, Clone, Copy)]
+pub struct GradStats {
+    /// ||mean of microbatch gradients||²
+    pub mean_grad_sq_norm: f64,
+    /// unbiased estimate of the per-microbatch gradient variance
+    /// (mean of ||g_i - g_mean||² over microbatches)
+    pub grad_variance: f64,
+}
+
+impl GradVarianceController {
+    pub fn new(initial_batch: usize, snr_threshold: f64, window: usize, factor: usize, max_batch: usize) -> Self {
+        assert!(factor >= 2);
+        GradVarianceController {
+            snr_threshold,
+            window,
+            factor,
+            max_batch,
+            current_batch: initial_batch,
+            mean_sq_sum: 0.0,
+            var_sum: 0.0,
+            count: 0,
+            decisions: 0,
+        }
+    }
+
+    pub fn current_batch(&self) -> usize {
+        self.current_batch
+    }
+
+    pub fn decisions(&self) -> usize {
+        self.decisions
+    }
+
+    /// Feed one iteration's stats; returns `Some(new_batch)` when the
+    /// controller decides to grow.
+    pub fn observe(&mut self, stats: GradStats) -> Option<usize> {
+        self.mean_sq_sum += stats.mean_grad_sq_norm;
+        self.var_sum += stats.grad_variance;
+        self.count += 1;
+        if self.count < self.window {
+            return None;
+        }
+        let mean_signal = self.mean_sq_sum / self.count as f64;
+        let mean_noise = self.var_sum / self.count as f64 / self.current_batch as f64;
+        self.mean_sq_sum = 0.0;
+        self.var_sum = 0.0;
+        self.count = 0;
+        // Byrd-style test: grow when noise dominates signal.
+        if mean_noise > 0.0 && mean_signal / mean_noise < self.snr_threshold {
+            let next = (self.current_batch * self.factor).min(self.max_batch);
+            if next > self.current_batch {
+                self.current_batch = next;
+                self.decisions += 1;
+                return Some(next);
+            }
+        }
+        None
+    }
+
+    /// Compute [`GradStats`] from per-microbatch gradient norms — helper
+    /// for the coordinator, which tracks `||g_i||²` and `||Σ g_i||²`.
+    pub fn stats_from_norms(micro_sq_norms: &[f64], mean_sq_norm: f64) -> GradStats {
+        let n = micro_sq_norms.len().max(1) as f64;
+        let avg_sq = micro_sq_norms.iter().sum::<f64>() / n;
+        // E||g_i - ḡ||² = E||g_i||² - ||ḡ||² (biased but fine for a ratio test)
+        GradStats {
+            mean_grad_sq_norm: mean_sq_norm,
+            grad_variance: (avg_sq - mean_sq_norm).max(0.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, UsizeRange, F64Range};
+
+    fn noisy_stats(signal: f64, noise: f64) -> GradStats {
+        GradStats { mean_grad_sq_norm: signal, grad_variance: noise }
+    }
+
+    #[test]
+    fn grows_when_noise_dominates() {
+        let mut c = GradVarianceController::new(64, 1.0, 4, 2, 1024);
+        // signal 1.0, noise/r = 10.0/64 ≈ 0.156 -> snr ≈ 6.4 > 1: no growth
+        for _ in 0..4 {
+            assert_eq!(c.observe(noisy_stats(1.0, 10.0)), None);
+        }
+        // signal 0.01, snr ≈ 0.064 < 1 -> double
+        for _ in 0..3 {
+            assert_eq!(c.observe(noisy_stats(0.01, 10.0)), None);
+        }
+        assert_eq!(c.observe(noisy_stats(0.01, 10.0)), Some(128));
+        assert_eq!(c.current_batch(), 128);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut c = GradVarianceController::new(512, 1e9, 1, 2, 1024);
+        assert_eq!(c.observe(noisy_stats(0.0, 1.0)), Some(1024));
+        // at the cap: no further recommendation
+        assert_eq!(c.observe(noisy_stats(0.0, 1.0)), None);
+        assert_eq!(c.current_batch(), 1024);
+    }
+
+    #[test]
+    fn window_resets_between_decisions() {
+        let mut c = GradVarianceController::new(32, 1.0, 2, 2, 4096);
+        assert_eq!(c.observe(noisy_stats(0.0, 1.0)), None);
+        assert!(c.observe(noisy_stats(0.0, 1.0)).is_some());
+        // fresh window: first observation cannot decide
+        assert_eq!(c.observe(noisy_stats(0.0, 1.0)), None);
+    }
+
+    #[test]
+    fn stats_from_norms_variance_nonnegative() {
+        let s = GradVarianceController::stats_from_norms(&[1.0, 2.0, 3.0], 1.5);
+        assert!(s.grad_variance >= 0.0);
+        assert_eq!(s.mean_grad_sq_norm, 1.5);
+        // degenerate: mean bigger than per-sample avg clamps to 0
+        let s = GradVarianceController::stats_from_norms(&[0.1], 5.0);
+        assert_eq!(s.grad_variance, 0.0);
+    }
+
+    #[test]
+    fn prop_batch_monotone_and_bounded() {
+        propcheck::check(
+            "controller batch is monotone non-decreasing and ≤ cap",
+            Pair(UsizeRange(8, 256), F64Range(0.0, 10.0)),
+            |&(r0, noise)| {
+                let mut c = GradVarianceController::new(r0, 1.0, 3, 2, 2048);
+                let mut prev = c.current_batch();
+                for i in 0..50 {
+                    let s = noisy_stats(if i % 7 == 0 { 0.001 } else { 1.0 }, noise);
+                    let _ = c.observe(s);
+                    let cur = c.current_batch();
+                    if cur < prev || cur > 2048 {
+                        return false;
+                    }
+                    prev = cur;
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn high_snr_never_grows() {
+        let mut c = GradVarianceController::new(64, 0.5, 2, 2, 4096);
+        for _ in 0..100 {
+            assert_eq!(c.observe(noisy_stats(100.0, 0.01)), None);
+        }
+        assert_eq!(c.decisions(), 0);
+    }
+}

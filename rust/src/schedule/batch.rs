@@ -1,0 +1,249 @@
+//! Batch-size schedules — the paper's §3 contribution.
+//!
+//! A [`BatchSchedule`] maps an epoch index to the *effective* batch size r
+//! used for every weight update in that epoch. The AdaBatch variant grows
+//! the batch geometrically at fixed epoch intervals (the paper doubles
+//! every 20 epochs on CIFAR, and sweeps ×2/×4/×8 every 30 epochs on
+//! ImageNet in Fig. 7); `max_batch` caps growth the way the paper's
+//! 524,288 cap falls out of 90 epochs × factor 8 from 8192.
+
+/// Effective-batch-size schedule over epochs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BatchSchedule {
+    /// The paper's baseline: one static r for all epochs.
+    Fixed(usize),
+    /// AdaBatch: start at `initial`, multiply by `factor` every
+    /// `interval_epochs`, optionally capped at `max_batch`.
+    AdaBatch {
+        initial: usize,
+        interval_epochs: usize,
+        factor: usize,
+        max_batch: Option<usize>,
+    },
+    /// Explicit piecewise-constant schedule: sorted (start_epoch, batch)
+    /// pairs; the first pair must start at epoch 0.
+    Piecewise(Vec<(usize, usize)>),
+}
+
+impl BatchSchedule {
+    /// The paper's canonical doubling schedule (§4.1): double every
+    /// `interval` epochs.
+    pub fn doubling(initial: usize, interval: usize) -> Self {
+        BatchSchedule::AdaBatch { initial, interval_epochs: interval, factor: 2, max_batch: None }
+    }
+
+    /// Batch size in force at `epoch`.
+    pub fn batch_at(&self, epoch: usize) -> usize {
+        match self {
+            BatchSchedule::Fixed(r) => *r,
+            BatchSchedule::AdaBatch { initial, interval_epochs, factor, max_batch } => {
+                let steps = if *interval_epochs == 0 { 0 } else { epoch / interval_epochs };
+                let mut r = *initial as u128;
+                for _ in 0..steps {
+                    r = r.saturating_mul(*factor as u128);
+                    if let Some(cap) = max_batch {
+                        if r >= *cap as u128 {
+                            return *cap;
+                        }
+                    }
+                    // protect against absurd overflow in long sweeps
+                    if r > usize::MAX as u128 {
+                        return max_batch.unwrap_or(usize::MAX);
+                    }
+                }
+                let r = r as usize;
+                match max_batch {
+                    Some(cap) => r.min(*cap),
+                    None => r,
+                }
+            }
+            BatchSchedule::Piecewise(points) => {
+                let mut cur = points.first().map(|p| p.1).unwrap_or(1);
+                for (start, r) in points {
+                    if *start <= epoch {
+                        cur = *r;
+                    } else {
+                        break;
+                    }
+                }
+                cur
+            }
+        }
+    }
+
+    /// Initial batch size (epoch 0).
+    pub fn initial(&self) -> usize {
+        self.batch_at(0)
+    }
+
+    /// Largest batch reached within `total_epochs` epochs (the paper quotes
+    /// this as the headline: e.g. 16384 for adaptive 1024–16384 over 100
+    /// epochs with doubling every 20).
+    pub fn final_batch(&self, total_epochs: usize) -> usize {
+        if total_epochs == 0 {
+            return self.initial();
+        }
+        self.batch_at(total_epochs - 1)
+    }
+
+    /// Epochs at which the batch size changes (for logging / re-planning).
+    pub fn transition_epochs(&self, total_epochs: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut prev = self.batch_at(0);
+        for e in 1..total_epochs {
+            let r = self.batch_at(e);
+            if r != prev {
+                out.push(e);
+                prev = r;
+            }
+        }
+        out
+    }
+
+    /// The growth factor relative to epoch 0 at `epoch` — the β of Eq. (4).
+    pub fn beta_at(&self, epoch: usize) -> f64 {
+        self.batch_at(epoch) as f64 / self.initial() as f64
+    }
+
+    /// True if the schedule never decreases (sanity constraint the paper's
+    /// schedules all obey; shrinking schedules are future work in §5).
+    pub fn is_monotonic(&self, total_epochs: usize) -> bool {
+        (1..total_epochs).all(|e| self.batch_at(e) >= self.batch_at(e - 1))
+    }
+
+    /// Human-readable range label like "128-2048" used in the paper's
+    /// figure legends.
+    pub fn label(&self, total_epochs: usize) -> String {
+        match self {
+            BatchSchedule::Fixed(r) => format!("{r}"),
+            _ => format!("{}-{}", self.initial(), self.final_batch(total_epochs)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, Triple, UsizeRange};
+
+    #[test]
+    fn fixed_is_constant() {
+        let s = BatchSchedule::Fixed(128);
+        for e in 0..200 {
+            assert_eq!(s.batch_at(e), 128);
+        }
+    }
+
+    #[test]
+    fn paper_cifar_doubling() {
+        // §4.1: 128 doubling every 20 epochs over 100 epochs -> 128..2048
+        let s = BatchSchedule::doubling(128, 20);
+        assert_eq!(s.batch_at(0), 128);
+        assert_eq!(s.batch_at(19), 128);
+        assert_eq!(s.batch_at(20), 256);
+        assert_eq!(s.batch_at(99), 2048);
+        assert_eq!(s.final_batch(100), 2048);
+        assert_eq!(s.label(100), "128-2048");
+    }
+
+    #[test]
+    fn paper_fig7_factors() {
+        // Fig 7a: start 8192, factor 8, every 30 epochs, 90 epochs
+        // -> 8192, 65536, 524288 (the paper's 524,288 headline)
+        let s = BatchSchedule::AdaBatch {
+            initial: 8192,
+            interval_epochs: 30,
+            factor: 8,
+            max_batch: None,
+        };
+        assert_eq!(s.batch_at(29), 8192);
+        assert_eq!(s.batch_at(30), 65536);
+        assert_eq!(s.batch_at(60), 524_288);
+        assert_eq!(s.final_batch(90), 524_288);
+        // Fig 7b: start 16384, factor 4 -> 262,144 final
+        let s = BatchSchedule::AdaBatch {
+            initial: 16384,
+            interval_epochs: 30,
+            factor: 4,
+            max_batch: None,
+        };
+        assert_eq!(s.final_batch(90), 262_144);
+    }
+
+    #[test]
+    fn transitions_at_intervals() {
+        let s = BatchSchedule::doubling(64, 10);
+        assert_eq!(s.transition_epochs(40), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn cap_respected() {
+        let s = BatchSchedule::AdaBatch {
+            initial: 128,
+            interval_epochs: 5,
+            factor: 2,
+            max_batch: Some(512),
+        };
+        assert_eq!(s.batch_at(100), 512);
+        assert!(s.is_monotonic(100));
+    }
+
+    #[test]
+    fn piecewise_lookup() {
+        let s = BatchSchedule::Piecewise(vec![(0, 32), (10, 64), (50, 256)]);
+        assert_eq!(s.batch_at(0), 32);
+        assert_eq!(s.batch_at(9), 32);
+        assert_eq!(s.batch_at(10), 64);
+        assert_eq!(s.batch_at(49), 64);
+        assert_eq!(s.batch_at(200), 256);
+    }
+
+    #[test]
+    fn beta_matches_growth() {
+        let s = BatchSchedule::doubling(128, 20);
+        assert_eq!(s.beta_at(0), 1.0);
+        assert_eq!(s.beta_at(20), 2.0);
+        assert_eq!(s.beta_at(85), 16.0);
+    }
+
+    #[test]
+    fn prop_adabatch_monotonic_and_initial() {
+        propcheck::check(
+            "adabatch schedules are monotonic, start at initial",
+            Triple(UsizeRange(1, 4096), UsizeRange(1, 30), UsizeRange(2, 8)),
+            |&(initial, interval, factor)| {
+                let s = BatchSchedule::AdaBatch {
+                    initial,
+                    interval_epochs: interval,
+                    factor,
+                    max_batch: Some(1 << 20),
+                };
+                s.initial() == initial && s.is_monotonic(120)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_beta_is_power_of_factor() {
+        propcheck::check(
+            "beta at interval boundaries is factor^k",
+            Pair(UsizeRange(1, 512), UsizeRange(1, 25)),
+            |&(initial, interval)| {
+                let s = BatchSchedule::doubling(initial, interval);
+                (0..5).all(|k| s.beta_at(k * interval) == (1u64 << k) as f64)
+            },
+        );
+    }
+
+    #[test]
+    fn no_overflow_on_extreme_growth() {
+        let s = BatchSchedule::AdaBatch {
+            initial: 1 << 40,
+            interval_epochs: 1,
+            factor: 8,
+            max_batch: None,
+        };
+        // must not panic
+        let _ = s.batch_at(100);
+    }
+}

@@ -1,0 +1,146 @@
+//! Learning-rate schedules: step decay plus the gradual linear warmup of
+//! Goyal et al. (2017), which the paper composes with AdaBatch in §4.2/4.3.
+//!
+//! Conventions: `lr_at(epoch, iter_in_epoch, iters_in_epoch)` so warmup can
+//! ramp *within* the first epochs exactly like the reference
+//! implementation (per-iteration linear interpolation from `base` to
+//! `target` over `warmup_epochs`).
+
+/// Step-decay learning rate with optional gradual linear warmup.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LrSchedule {
+    /// LR before any scaling (the "base learning rate" of the paper, e.g.
+    /// 0.01 in §4.1, 0.1 in §4.2/4.3).
+    pub base: f64,
+    /// Multiplicative decay applied every `interval_epochs` (0.375 / 0.75 /
+    /// 0.25 / 0.5 / 0.1 / 0.2 ... in the various experiments).
+    pub decay: f64,
+    /// Epochs between decays (20 on CIFAR, 30 on ImageNet).
+    pub interval_epochs: usize,
+    /// Linear-scaling warmup: ramp from `base` to `base * scale` over the
+    /// first `warmup_epochs` epochs (Goyal et al.). `scale` is usually
+    /// batch / base_batch.
+    pub warmup_epochs: usize,
+    pub warmup_scale: f64,
+}
+
+impl LrSchedule {
+    /// Plain step decay, no warmup.
+    pub fn step(base: f64, decay: f64, interval_epochs: usize) -> Self {
+        LrSchedule { base, decay, interval_epochs, warmup_epochs: 0, warmup_scale: 1.0 }
+    }
+
+    /// Step decay with the Goyal et al. gradual warmup to `base * scale`.
+    pub fn step_with_warmup(
+        base: f64,
+        decay: f64,
+        interval_epochs: usize,
+        warmup_epochs: usize,
+        scale: f64,
+    ) -> Self {
+        LrSchedule { base, decay, interval_epochs, warmup_epochs, warmup_scale: scale }
+    }
+
+    /// Post-warmup target LR.
+    pub fn target(&self) -> f64 {
+        self.base * self.warmup_scale
+    }
+
+    /// LR at a given (epoch, iteration) position.
+    pub fn lr_at(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
+        if epoch < self.warmup_epochs {
+            // per-iteration linear ramp base -> target across warmup_epochs
+            let total = (self.warmup_epochs * iters_per_epoch.max(1)) as f64;
+            let pos = (epoch * iters_per_epoch.max(1) + iter.min(iters_per_epoch)) as f64;
+            let frac = (pos / total).min(1.0);
+            return self.base + (self.target() - self.base) * frac;
+        }
+        let decays = if self.interval_epochs == 0 { 0 } else { epoch / self.interval_epochs } as i32;
+        self.target() * self.decay.powi(decays)
+    }
+
+    /// Epoch-granularity LR (iteration 0 of the epoch); what the paper's
+    /// schedules quote.
+    pub fn lr_epoch(&self, epoch: usize) -> f64 {
+        self.lr_at(epoch, 0, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, F64Range, UsizeRange};
+
+    #[test]
+    fn paper_41_baseline_decay() {
+        // §4.1 fixed-batch arm: base 0.01 decayed by 0.375 every 20 epochs
+        let s = LrSchedule::step(0.01, 0.375, 20);
+        assert!((s.lr_epoch(0) - 0.01).abs() < 1e-12);
+        assert!((s.lr_epoch(19) - 0.01).abs() < 1e-12);
+        assert!((s.lr_epoch(20) - 0.00375).abs() < 1e-12);
+        assert!((s.lr_epoch(99) - 0.01 * 0.375f64.powi(4)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        // Goyal-style: base 0.1, scale 8 (batch 1024 vs 128), 5-epoch warmup
+        let s = LrSchedule::step_with_warmup(0.1, 0.5, 20, 5, 8.0);
+        let iters = 100;
+        assert!((s.lr_at(0, 0, iters) - 0.1).abs() < 1e-9);
+        let mid = s.lr_at(2, 50, iters);
+        assert!((mid - (0.1 + 0.7 * 0.5)).abs() < 1e-9, "{mid}");
+        // after warmup the decayed target applies
+        assert!((s.lr_at(5, 0, iters) - 0.8).abs() < 1e-9);
+        assert!((s.lr_at(20, 0, iters) - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warmup_monotone_nondecreasing_within_warmup() {
+        let s = LrSchedule::step_with_warmup(0.1, 0.25, 20, 5, 16.0);
+        let iters = 50;
+        let mut prev = 0.0;
+        for e in 0..5 {
+            for i in 0..iters {
+                let lr = s.lr_at(e, i, iters);
+                assert!(lr >= prev - 1e-12, "lr decreased during warmup");
+                prev = lr;
+            }
+        }
+    }
+
+    #[test]
+    fn no_warmup_ignores_iter() {
+        let s = LrSchedule::step(0.01, 0.5, 10);
+        assert_eq!(s.lr_at(3, 0, 100), s.lr_at(3, 99, 100));
+    }
+
+    #[test]
+    fn prop_lr_positive_and_decaying() {
+        propcheck::check(
+            "step lr stays positive and non-increasing across epochs",
+            Pair(F64Range(1e-4, 1.0), F64Range(0.05, 0.99)),
+            |&(base, decay)| {
+                let s = LrSchedule::step(base, decay, 7);
+                let mut prev = f64::INFINITY;
+                (0..100).all(|e| {
+                    let lr = s.lr_epoch(e);
+                    let ok = lr > 0.0 && lr <= prev + 1e-15;
+                    prev = lr;
+                    ok
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn prop_warmup_hits_target() {
+        propcheck::check(
+            "warmup reaches base*scale at warmup end",
+            Pair(UsizeRange(1, 10), F64Range(1.0, 32.0)),
+            |&(we, scale)| {
+                let s = LrSchedule::step_with_warmup(0.1, 0.5, 1000, we, scale);
+                (s.lr_at(we, 0, 10) - 0.1 * scale).abs() < 1e-9
+            },
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Batch-size and learning-rate schedules — the paper's §3 contribution.
+//!
+//! * [`batch::BatchSchedule`] — fixed / AdaBatch-geometric / piecewise
+//!   batch-size schedules over epochs.
+//! * [`lr::LrSchedule`] — step decay with the Goyal et al. gradual warmup.
+//! * [`policy::AdaBatchPolicy`] — the coupled schedule with the
+//!   effective-learning-rate invariant (Eq. 3–5) and constructors for every
+//!   experiment arm in §4.
+//! * [`adaptive::GradVarianceController`] — the gradient-variance adaptive
+//!   baseline (Byrd/De/Balles et al.) used by the ablation benches.
+
+pub mod adaptive;
+pub mod batch;
+pub mod lr;
+pub mod policy;
+
+pub use adaptive::{GradStats, GradVarianceController};
+pub use batch::BatchSchedule;
+pub use lr::LrSchedule;
+pub use policy::{AdaBatchPolicy, PolicyPoint};

@@ -1,0 +1,173 @@
+//! Multi-GPU cluster model: compose [`GpuModel`] compute with
+//! [`Interconnect`] all-reduce to predict epoch/schedule times — the
+//! engine behind Table 1 and Figure 3's speedup bars.
+
+use super::gpu::GpuModel;
+use super::interconnect::Interconnect;
+use crate::schedule::BatchSchedule;
+
+/// A training workload's static cost description.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    /// forward flops per sample (from the artifact manifest)
+    pub flops_per_sample: f64,
+    /// dataset size (samples per epoch)
+    pub n_samples: usize,
+    /// total parameter bytes (gradient payload for all-reduce)
+    pub param_bytes: usize,
+}
+
+/// Cluster = p identical GPUs + interconnect.
+#[derive(Debug, Clone)]
+pub struct ClusterModel {
+    pub gpu: GpuModel,
+    pub interconnect: Interconnect,
+    pub gpus: usize,
+}
+
+/// Per-epoch cost breakdown.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochCost {
+    pub fwd: f64,
+    pub bwd: f64,
+    pub comm: f64,
+}
+
+impl EpochCost {
+    pub fn total(&self) -> f64 {
+        self.fwd + self.bwd + self.comm
+    }
+}
+
+impl ClusterModel {
+    pub fn new(gpu: GpuModel, interconnect: Interconnect, gpus: usize) -> Self {
+        assert!(gpus >= 1);
+        ClusterModel { gpu, interconnect, gpus }
+    }
+
+    /// Cost of one epoch at effective batch `r` (synchronous data-parallel:
+    /// each update splits r across the GPUs, then all-reduces gradients).
+    /// Microbatches smaller than the fleet leave GPUs idle — exactly the
+    /// small-batch scaling pathology the paper motivates with (§3.2).
+    pub fn epoch_cost(&self, w: &Workload, r: usize) -> EpochCost {
+        let active = self.gpus.min(r.max(1));
+        let per_gpu = r.div_ceil(active);
+        let updates = (w.n_samples / r.max(1)).max(1) as f64;
+        let fwd = updates * self.gpu.fwd_time(w.flops_per_sample, per_gpu);
+        let bwd = updates * self.gpu.bwd_time(w.flops_per_sample, per_gpu);
+        let comm = updates * self.interconnect.ring_allreduce(w.param_bytes, active);
+        EpochCost { fwd, bwd, comm }
+    }
+
+    /// Total cost of `epochs` epochs under a batch schedule.
+    pub fn schedule_cost(&self, w: &Workload, schedule: &BatchSchedule, epochs: usize) -> EpochCost {
+        let mut acc = EpochCost::default();
+        for e in 0..epochs {
+            let c = self.epoch_cost(w, schedule.batch_at(e));
+            acc.fwd += c.fwd;
+            acc.bwd += c.bwd;
+            acc.comm += c.comm;
+        }
+        acc
+    }
+
+    /// Speedup of `schedule` over `baseline` across `epochs` (the Fig. 3
+    /// quantity: both normalized to the same workload).
+    pub fn speedup(
+        &self,
+        w: &Workload,
+        baseline: &BatchSchedule,
+        schedule: &BatchSchedule,
+        epochs: usize,
+    ) -> f64 {
+        self.schedule_cost(w, baseline, epochs).total() / self.schedule_cost(w, schedule, epochs).total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, UsizeRange};
+
+    fn cluster(p: usize) -> ClusterModel {
+        ClusterModel::new(GpuModel::p100(), Interconnect::nvlink_p100(), p)
+    }
+
+    fn workload() -> Workload {
+        Workload { flops_per_sample: 5e8, n_samples: 50_000, param_bytes: 80 << 20 }
+    }
+
+    #[test]
+    fn adaptive_beats_fixed_small() {
+        // The Table-1 phenomenon: adaptive 128->2048 is faster per 100
+        // epochs than fixed 128 on a single GPU.
+        let c = cluster(1);
+        let w = workload();
+        let s = c.speedup(
+            &w,
+            &BatchSchedule::Fixed(128),
+            &BatchSchedule::doubling(128, 20),
+            100,
+        );
+        assert!(s > 1.05 && s < 3.0, "speedup {s}");
+    }
+
+    #[test]
+    fn multi_gpu_amplifies_adaptive_gain() {
+        // Fig 3: with 4 GPUs + comm, large adaptive batches win bigger
+        // because all-reduce amortizes.
+        let w = workload();
+        let s1 = cluster(1).speedup(
+            &w,
+            &BatchSchedule::Fixed(128),
+            &BatchSchedule::doubling(1024, 20),
+            100,
+        );
+        let s4 = cluster(4).speedup(
+            &w,
+            &BatchSchedule::Fixed(128),
+            &BatchSchedule::doubling(1024, 20),
+            100,
+        );
+        assert!(s4 > s1, "4-GPU speedup {s4} should exceed 1-GPU {s1}");
+        assert!(s4 > 2.0, "{s4}");
+    }
+
+    #[test]
+    fn comm_shrinks_with_batch() {
+        let c = cluster(4);
+        let w = workload();
+        let small = c.epoch_cost(&w, 128);
+        let large = c.epoch_cost(&w, 4096);
+        assert!(large.comm < small.comm);
+        // flops/epoch identical -> fwd+bwd differ only via utilization
+        assert!(large.fwd < small.fwd);
+    }
+
+    #[test]
+    fn tiny_batch_leaves_gpus_idle() {
+        let c = cluster(4);
+        let w = workload();
+        // batch 2 on 4 GPUs: only 2 active; per-GPU microbatch 1
+        let cost = c.epoch_cost(&w, 2);
+        assert!(cost.total() > c.epoch_cost(&w, 128).total());
+    }
+
+    #[test]
+    fn prop_speedup_positive_finite() {
+        propcheck::check(
+            "schedule speedups are positive and finite",
+            Pair(UsizeRange(0, 6), UsizeRange(1, 4)),
+            |&(exp, gpus)| {
+                let r = 64usize << exp;
+                let s = cluster(gpus).speedup(
+                    &workload(),
+                    &BatchSchedule::Fixed(128),
+                    &BatchSchedule::doubling(r, 20),
+                    100,
+                );
+                s.is_finite() && s > 0.0
+            },
+        );
+    }
+}

@@ -1,0 +1,157 @@
+//! Analytic per-layer flop model — the paper's Appendix A cost accounting
+//! implemented directly, independently of the manifest's numbers.
+//!
+//! * fully connected (A.2): fwd (13)–(14) and bwd (21)–(23) are O(mnr);
+//! * convolution (A.3): fwd (27)–(28) O(k₁k₂m'n'r), bwd (34)–(36)
+//!   O(k₁'k₂'mnr);
+//! * batch norm (A.4): fwd (37)–(40) and bwd (46)–(51) O(mr).
+//!
+//! Every term is **linear in the batch size r** — `epoch_flops` asserts
+//! the §3.3 invariance exactly, and the unit tests cross-check the
+//! manifest's per-sample numbers for the -lite models.
+
+/// One layer's shape description for cost accounting.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// m×n weights: y = Wx + b
+    Dense { n_in: usize, n_out: usize },
+    /// kh×kw kernel, cin→cout channels, output resolution oh×ow
+    Conv { kh: usize, kw: usize, cin: usize, cout: usize, oh: usize, ow: usize },
+    /// features normalized over the batch (rows = spatial positions/sample)
+    BatchNorm { features: usize, rows_per_sample: usize },
+}
+
+impl Layer {
+    /// Forward flops for a batch of r samples (MAC = 2 flops).
+    pub fn fwd_flops(&self, r: usize) -> u64 {
+        let r = r as u64;
+        match *self {
+            Layer::Dense { n_in, n_out } => 2 * n_in as u64 * n_out as u64 * r,
+            Layer::Conv { kh, kw, cin, cout, oh, ow } => {
+                2 * (kh * kw * cin * cout * oh * ow) as u64 * r
+            }
+            Layer::BatchNorm { features, rows_per_sample } => {
+                // mean, var, normalize, affine ≈ 8 ops per element (A.4)
+                8 * (features * rows_per_sample) as u64 * r
+            }
+        }
+    }
+
+    /// Backward flops (A.2/A.3/A.4: ≈ 2× forward for the GEMM/conv layers —
+    /// one pass for dX, one for dW; BN backward ≈ 2× its forward too).
+    pub fn bwd_flops(&self, r: usize) -> u64 {
+        2 * self.fwd_flops(r)
+    }
+}
+
+/// A network as a layer list.
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    pub layers: Vec<Layer>,
+}
+
+impl CostModel {
+    pub fn fwd_flops(&self, r: usize) -> u64 {
+        self.layers.iter().map(|l| l.fwd_flops(r)).sum()
+    }
+
+    pub fn step_flops(&self, r: usize) -> u64 {
+        self.layers.iter().map(|l| l.fwd_flops(r) + l.bwd_flops(r)).sum()
+    }
+
+    /// Flops for one epoch of n samples at batch r (dropping the ragged
+    /// tail like the training loader). The §3.3 claim: for r | n this is
+    /// independent of r.
+    pub fn epoch_flops(&self, n: usize, r: usize) -> u64 {
+        let updates = (n / r.max(1)) as u64;
+        updates * self.step_flops(r)
+    }
+
+    /// The alexnet_lite topology (mirrors python/compile/models/cnn.py) —
+    /// used to cross-check the manifest's flops_per_sample.
+    pub fn alexnet_lite(n_classes: usize, width: usize) -> CostModel {
+        let w = width;
+        CostModel {
+            layers: vec![
+                Layer::Conv { kh: 3, kw: 3, cin: 3, cout: w, oh: 16, ow: 16 },
+                Layer::Conv { kh: 3, kw: 3, cin: w, cout: 2 * w, oh: 8, ow: 8 },
+                Layer::Conv { kh: 3, kw: 3, cin: 2 * w, cout: 4 * w, oh: 4, ow: 4 },
+                Layer::Dense { n_in: 4 * w * 16, n_out: 256 },
+                Layer::Dense { n_in: 256, n_out: n_classes },
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, UsizeRange};
+
+    #[test]
+    fn dense_matches_closed_form() {
+        let l = Layer::Dense { n_in: 100, n_out: 50 };
+        assert_eq!(l.fwd_flops(8), 2 * 100 * 50 * 8);
+        assert_eq!(l.bwd_flops(8), 2 * l.fwd_flops(8));
+    }
+
+    #[test]
+    fn conv_matches_appendix_a3() {
+        // O(k1 k2 m' n' r) with cin*cout channel pairs, MAC=2
+        let l = Layer::Conv { kh: 3, kw: 3, cin: 16, cout: 32, oh: 8, ow: 8 };
+        assert_eq!(l.fwd_flops(4), 2 * 3 * 3 * 16 * 32 * 8 * 8 * 4);
+    }
+
+    #[test]
+    fn epoch_flops_invariant_in_r() {
+        // §3.3: for r | n, flops/epoch does not depend on r
+        let m = CostModel::alexnet_lite(10, 32);
+        let n = 2048;
+        let base = m.epoch_flops(n, 32);
+        for r in [64usize, 128, 256, 512, 1024, 2048] {
+            assert_eq!(m.epoch_flops(n, r), base, "r={r}");
+        }
+    }
+
+    #[test]
+    fn matches_manifest_alexnet_number() {
+        // manifest says alexnet_lite_c10 fwd ≈ 6.215e6 flops/sample
+        // (cnn.py counts conv+dense only; BN absent in alexnet_lite)
+        let m = CostModel::alexnet_lite(10, 32);
+        let per_sample = m.fwd_flops(1);
+        let expect = 6.215e6;
+        let rel = (per_sample as f64 - expect).abs() / expect;
+        assert!(rel < 0.02, "per_sample={per_sample} vs {expect}");
+    }
+
+    #[test]
+    fn prop_linear_in_batch() {
+        propcheck::check(
+            "every layer's cost is linear in r (Appendix A)",
+            Pair(UsizeRange(1, 64), UsizeRange(1, 8)),
+            |&(r, k)| {
+                let layers = [
+                    Layer::Dense { n_in: 37, n_out: 11 },
+                    Layer::Conv { kh: 3, kw: 3, cin: 4, cout: 8, oh: 5, ow: 7 },
+                    Layer::BatchNorm { features: 16, rows_per_sample: 9 },
+                ];
+                layers
+                    .iter()
+                    .all(|l| l.fwd_flops(r * k) == l.fwd_flops(r) * k as u64)
+            },
+        );
+    }
+
+    #[test]
+    fn prop_epoch_invariance_for_divisors() {
+        propcheck::check(
+            "epoch flops equal across power-of-two batch sizes",
+            UsizeRange(0, 6),
+            |&exp| {
+                let m = CostModel::alexnet_lite(100, 16);
+                let n = 4096;
+                m.epoch_flops(n, 32 << exp) == m.epoch_flops(n, 32)
+            },
+        );
+    }
+}

@@ -1,0 +1,143 @@
+//! Single-GPU performance model — the P100 substitute (DESIGN.md §3).
+//!
+//! The paper's performance claims rest on one empirical fact (§3.2/3.3 and
+//! NVIDIA 2016): *hardware efficiency grows with per-device batch size and
+//! saturates*, while flops/epoch stays constant. We model utilization with
+//! a saturating hyperbola
+//!
+//! ```text
+//! u(r) = u_max · r / (r + r_half)
+//! ```
+//!
+//! (`r_half` = microbatch at which half of `u_max` is reached — the knee).
+//! Time for a pass is then `flops / (peak · u(r))`. This one-parameter knee
+//! family is expressive enough to calibrate each (network, phase) pair to
+//! the paper's *fixed-batch* measurements and then *predict* the adaptive
+//! rows and the multi-GPU bars — see [`super::calibrate`].
+
+/// Device model (defaults: Tesla P100 SXM2).
+#[derive(Debug, Clone)]
+pub struct GpuModel {
+    pub name: String,
+    /// peak fp32 throughput, flops/s
+    pub peak_flops: f64,
+    /// memory bandwidth, bytes/s (HBM2)
+    pub mem_bw: f64,
+    /// asymptotic utilization fraction at large batch
+    pub util_max: f64,
+    /// microbatch at which utilization reaches util_max/2
+    pub r_half: f64,
+    /// fixed per-kernel-launch overhead, seconds
+    pub launch_overhead: f64,
+}
+
+impl GpuModel {
+    /// Tesla P100 (SXM2, NVLink): 10.6 TF/s fp32, 732 GB/s HBM2.
+    pub fn p100() -> Self {
+        GpuModel {
+            name: "P100".into(),
+            peak_flops: 10.6e12,
+            mem_bw: 732e9,
+            util_max: 0.55,
+            r_half: 64.0,
+            launch_overhead: 8e-6,
+        }
+    }
+
+    pub fn with_knee(mut self, util_max: f64, r_half: f64) -> Self {
+        self.util_max = util_max;
+        self.r_half = r_half;
+        self
+    }
+
+    /// Utilization at per-device microbatch r.
+    pub fn utilization(&self, r: usize) -> f64 {
+        let r = r as f64;
+        self.util_max * r / (r + self.r_half)
+    }
+
+    /// Seconds for a forward pass over a microbatch of r samples of a model
+    /// costing `flops_per_sample` (fwd).
+    pub fn fwd_time(&self, flops_per_sample: f64, r: usize) -> f64 {
+        let flops = flops_per_sample * r as f64;
+        flops / (self.peak_flops * self.utilization(r)) + self.launch_overhead
+    }
+
+    /// Backward ≈ 2× forward flops (the standard 1:2 fwd:bwd convention the
+    /// paper's Appendix A cost model follows).
+    pub fn bwd_time(&self, flops_per_sample: f64, r: usize) -> f64 {
+        let flops = 2.0 * flops_per_sample * r as f64;
+        flops / (self.peak_flops * self.utilization(r)) + self.launch_overhead
+    }
+
+    /// Fwd+bwd seconds for one pass.
+    pub fn step_time(&self, flops_per_sample: f64, r: usize) -> f64 {
+        self.fwd_time(flops_per_sample, r) + self.bwd_time(flops_per_sample, r)
+    }
+
+    /// Seconds for one *epoch* of n samples at fixed microbatch r
+    /// (per-device, no communication). §3.3: flops/epoch is constant, so
+    /// this varies only through u(r) and launch overheads.
+    pub fn epoch_time(&self, flops_per_sample: f64, n_samples: usize, r: usize) -> f64 {
+        let iters = (n_samples / r.max(1)).max(1);
+        iters as f64 * self.step_time(flops_per_sample, r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, UsizeRange};
+
+    #[test]
+    fn utilization_saturates() {
+        let g = GpuModel::p100();
+        assert!(g.utilization(1) < 0.02);
+        assert!((g.utilization(64) - 0.275).abs() < 1e-9); // half of u_max at knee
+        assert!(g.utilization(100_000) > 0.54);
+        assert!(g.utilization(100_000) < g.util_max);
+    }
+
+    #[test]
+    fn bigger_batch_faster_epoch() {
+        let g = GpuModel::p100();
+        let f = 1e9; // 1 Gflop/sample
+        let n = 50_000;
+        let t128 = g.epoch_time(f, n, 128);
+        let t2048 = g.epoch_time(f, n, 2048);
+        assert!(t2048 < t128, "epoch time must fall with batch: {t128} vs {t2048}");
+        // and the speedup is bounded by the utilization ratio
+        let bound = (1.0 / g.utilization(128)) / (1.0 / g.utilization(2048));
+        assert!(t128 / t2048 <= bound * 1.1);
+    }
+
+    #[test]
+    fn bwd_is_twice_fwd_asymptotically() {
+        let g = GpuModel { launch_overhead: 0.0, ..GpuModel::p100() };
+        let f = 5e8;
+        let r = 512;
+        assert!((g.bwd_time(f, r) / g.fwd_time(f, r) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_utilization_monotone_in_r() {
+        propcheck::check(
+            "utilization is monotone increasing in microbatch",
+            Pair(UsizeRange(1, 4096), UsizeRange(1, 4096)),
+            |&(a, b)| {
+                let g = GpuModel::p100();
+                let (lo, hi) = (a.min(b), a.max(b));
+                g.utilization(lo) <= g.utilization(hi) + 1e-15
+            },
+        );
+    }
+
+    #[test]
+    fn prop_epoch_time_positive() {
+        propcheck::check(
+            "epoch time strictly positive",
+            Pair(UsizeRange(1, 1 << 14), UsizeRange(1, 60_000)),
+            |&(r, n)| GpuModel::p100().epoch_time(1e9, n, r) > 0.0,
+        );
+    }
+}

@@ -1,0 +1,105 @@
+//! Interconnect model: ring all-reduce cost over NVLink/PCIe — the
+//! communication half of the multi-GPU experiments (§4.2's 4×P100 +
+//! NVLink testbed).
+//!
+//! Standard ring all-reduce cost model (Thakur et al.): each of the
+//! 2(p−1) phases moves `bytes/p`, so
+//!
+//! ```text
+//! T(bytes, p) = 2·(p−1)/p · bytes / BW  +  2·(p−1) · latency
+//! ```
+//!
+//! AdaBatch's scaling argument (§3.2) is that growing the batch amortizes
+//! exactly this term: all-reduce cost is per *update*, and updates/epoch
+//! shrink as 1/r.
+
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    pub name: String,
+    /// effective per-link bandwidth, bytes/s
+    pub bandwidth: f64,
+    /// per-phase latency, seconds
+    pub latency: f64,
+}
+
+impl Interconnect {
+    /// NVLink 1.0 on P100: 4 links × 20 GB/s per direction; an effective
+    /// ring uses one link pair — 40 GB/s effective with µs-scale latency.
+    pub fn nvlink_p100() -> Self {
+        Interconnect { name: "NVLink".into(), bandwidth: 40e9, latency: 5e-6 }
+    }
+
+    /// PCIe 3.0 x16 fallback (for the ablation contrasting interconnects).
+    pub fn pcie3() -> Self {
+        Interconnect { name: "PCIe3".into(), bandwidth: 12e9, latency: 15e-6 }
+    }
+
+    /// Seconds for a ring all-reduce of `bytes` across `p` devices.
+    pub fn ring_allreduce(&self, bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let p = p as f64;
+        2.0 * (p - 1.0) / p * bytes as f64 / self.bandwidth + 2.0 * (p - 1.0) * self.latency
+    }
+
+    /// Seconds for a naive all-to-root reduce + broadcast (the baseline
+    /// torch DataParallel actually uses scatter/gather through device 0).
+    pub fn star_allreduce(&self, bytes: usize, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let p = p as f64;
+        2.0 * (p - 1.0) * bytes as f64 / self.bandwidth + 2.0 * self.latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Pair, UsizeRange};
+
+    #[test]
+    fn single_device_free() {
+        let ic = Interconnect::nvlink_p100();
+        assert_eq!(ic.ring_allreduce(1 << 30, 1), 0.0);
+        assert_eq!(ic.star_allreduce(1 << 30, 1), 0.0);
+    }
+
+    #[test]
+    fn ring_beats_star_at_scale() {
+        let ic = Interconnect::nvlink_p100();
+        let bytes = 100 << 20; // 100 MB of gradients
+        assert!(ic.ring_allreduce(bytes, 4) < ic.star_allreduce(bytes, 4));
+    }
+
+    #[test]
+    fn bandwidth_term_dominates_large_payloads() {
+        let ic = Interconnect::nvlink_p100();
+        // 4 devices, 1 GB: ~ 2*(3/4)*1e9/40e9 = 37.5 ms
+        let t = ic.ring_allreduce(1_000_000_000, 4);
+        assert!((t - 0.0375).abs() / 0.0375 < 0.01, "{t}");
+    }
+
+    #[test]
+    fn nvlink_faster_than_pcie() {
+        let bytes = 50 << 20;
+        assert!(
+            Interconnect::nvlink_p100().ring_allreduce(bytes, 4)
+                < Interconnect::pcie3().ring_allreduce(bytes, 4)
+        );
+    }
+
+    #[test]
+    fn prop_cost_monotone_in_bytes_and_devices() {
+        propcheck::check(
+            "ring allreduce monotone in payload",
+            Pair(UsizeRange(1, 1 << 26), UsizeRange(2, 16)),
+            |&(bytes, p)| {
+                let ic = Interconnect::nvlink_p100();
+                ic.ring_allreduce(bytes, p) <= ic.ring_allreduce(bytes * 2, p)
+                    && ic.ring_allreduce(bytes, p) <= ic.ring_allreduce(bytes, p + 1) + 1e-12
+            },
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! GPU-cluster performance simulator — the hardware substitute for the
+//! paper's 4×P100+NVLink testbed (DESIGN.md §3 "Hardware adaptation").
+//!
+//! * [`gpu::GpuModel`] — saturating batch-efficiency device model.
+//! * [`interconnect::Interconnect`] — ring/star all-reduce cost.
+//! * [`cluster::ClusterModel`] — composed epoch/schedule cost + speedups.
+//! * [`calibrate`] — fit the efficiency knee to Table 1 anchors, predict
+//!   the rest.
+
+pub mod calibrate;
+pub mod cluster;
+pub mod flops;
+pub mod gpu;
+pub mod interconnect;
+
+pub use calibrate::{calibrate, fit_r_half, predicted_speedup, Table1Anchor, TABLE1_ANCHORS};
+pub use cluster::{ClusterModel, EpochCost, Workload};
+pub use gpu::GpuModel;
+pub use interconnect::Interconnect;

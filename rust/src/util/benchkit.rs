@@ -1,0 +1,230 @@
+//! Micro-benchmark harness (criterion is unavailable offline; DESIGN.md §3).
+//!
+//! Modeled on criterion's core loop: warmup, then `samples` timed batches
+//! with automatic per-batch iteration scaling so each sample lasts long
+//! enough for the clock to resolve. Reports mean ± σ, median, min/max and
+//! throughput. `cargo bench` binaries (`harness = false`) build a
+//! [`BenchSuite`], call [`BenchSuite::bench*`] per case and `report()` at
+//! the end; the output format is a stable markdown table so EXPERIMENTS.md
+//! can embed it verbatim.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+    pub iters_per_sample: u64,
+    /// optional units-per-iteration for throughput (e.g. samples, bytes)
+    pub throughput_units: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn std_dev(&self) -> f64 {
+        stats::std_dev(&self.samples)
+    }
+
+    pub fn median(&self) -> f64 {
+        stats::median(&self.samples)
+    }
+
+    pub fn min(&self) -> f64 {
+        stats::min(&self.samples)
+    }
+
+    pub fn throughput(&self) -> Option<f64> {
+        self.throughput_units.map(|u| u / self.mean())
+    }
+}
+
+pub struct BenchOpts {
+    pub warmup: Duration,
+    pub samples: usize,
+    pub min_sample_time: Duration,
+    pub max_total_time: Duration,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        BenchOpts {
+            warmup: Duration::from_millis(200),
+            samples: 12,
+            min_sample_time: Duration::from_millis(20),
+            max_total_time: Duration::from_secs(20),
+        }
+    }
+}
+
+pub struct BenchSuite {
+    pub title: String,
+    pub opts: BenchOpts,
+    pub results: Vec<BenchResult>,
+}
+
+impl BenchSuite {
+    pub fn new(title: &str) -> Self {
+        // Honor quick mode for CI: ADABATCH_BENCH_FAST=1 shrinks the budget.
+        let mut opts = BenchOpts::default();
+        if std::env::var("ADABATCH_BENCH_FAST").as_deref() == Ok("1") {
+            opts.warmup = Duration::from_millis(20);
+            opts.samples = 4;
+            opts.min_sample_time = Duration::from_millis(2);
+            opts.max_total_time = Duration::from_secs(3);
+        }
+        BenchSuite { title: title.to_string(), opts, results: Vec::new() }
+    }
+
+    /// Benchmark `f`, which performs ONE iteration of the workload.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        self.bench_units(name, None, move || f())
+    }
+
+    /// Benchmark with a throughput annotation (units processed per iter).
+    pub fn bench_units(
+        &mut self,
+        name: &str,
+        throughput_units: Option<f64>,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        // Warmup + iteration scaling: find iters such that one sample takes
+        // at least min_sample_time.
+        let warm_start = Instant::now();
+        let mut iters: u64 = 1;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            let dt = t0.elapsed();
+            if dt >= self.opts.min_sample_time || warm_start.elapsed() >= self.opts.warmup {
+                if dt < self.opts.min_sample_time && dt.as_nanos() > 0 {
+                    let scale = (self.opts.min_sample_time.as_secs_f64() / dt.as_secs_f64())
+                        .ceil() as u64;
+                    iters = iters.saturating_mul(scale.max(2)).min(1 << 30);
+                }
+                break;
+            }
+            iters = iters.saturating_mul(2).min(1 << 30);
+        }
+
+        let mut samples = Vec::with_capacity(self.opts.samples);
+        let total_start = Instant::now();
+        for _ in 0..self.opts.samples {
+            if total_start.elapsed() > self.opts.max_total_time && samples.len() >= 3 {
+                break;
+            }
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_secs_f64() / iters as f64);
+        }
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples,
+            iters_per_sample: iters,
+            throughput_units,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Render the stable markdown report.
+    pub fn report(&self) -> String {
+        let mut s = format!("## bench: {}\n\n", self.title);
+        s.push_str("| case | mean | ±σ | median | min | throughput |\n");
+        s.push_str("|---|---|---|---|---|---|\n");
+        for r in &self.results {
+            let tp = match r.throughput() {
+                Some(t) if t >= 1e9 => format!("{:.2} G/s", t / 1e9),
+                Some(t) if t >= 1e6 => format!("{:.2} M/s", t / 1e6),
+                Some(t) if t >= 1e3 => format!("{:.2} K/s", t / 1e3),
+                Some(t) => format!("{t:.2} /s"),
+                None => "—".to_string(),
+            };
+            s.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} |\n",
+                r.name,
+                fmt_time(r.mean()),
+                fmt_time(r.std_dev()),
+                fmt_time(r.median()),
+                fmt_time(r.min()),
+                tp
+            ));
+        }
+        s
+    }
+
+    pub fn print_report(&self) {
+        println!("{}", self.report());
+    }
+}
+
+pub fn fmt_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.3} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.3} µs", secs * 1e6)
+    } else {
+        format!("{:.1} ns", secs * 1e9)
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value (criterion's
+/// `black_box` — stabilized std::hint::black_box wrapper, kept for parity).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        std::env::set_var("ADABATCH_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("t");
+        let r = suite.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(!r.samples.is_empty());
+        assert!(r.mean() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        std::env::set_var("ADABATCH_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("t");
+        suite.bench_units("sum", Some(100.0), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(suite.results[0].throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn report_is_markdown() {
+        std::env::set_var("ADABATCH_BENCH_FAST", "1");
+        let mut suite = BenchSuite::new("fmt");
+        suite.bench("a", || {
+            black_box(1 + 1);
+        });
+        let rep = suite.report();
+        assert!(rep.contains("| case |"));
+        assert!(rep.contains("| a |"));
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" µs"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

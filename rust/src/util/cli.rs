@@ -1,0 +1,259 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands, with typed accessors and an auto-generated usage string.
+//! Unknown flags are errors — experiment drivers should fail loudly rather
+//! than silently ignore a typo'd hyperparameter.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({why})")]
+    BadValue { key: String, value: String, why: String },
+}
+
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<ArgSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: Some(default), is_flag: false });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let kind = if spec.is_flag {
+                String::new()
+            } else if let Some(d) = spec.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, kind, spec.help));
+        }
+        s
+    }
+
+    /// Parse a raw argv slice (without the program/subcommand names).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        // seed defaults
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError::Unknown(key.clone()))?;
+                if spec.is_flag {
+                    args.flags.push(key);
+                } else {
+                    let val = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(key.clone()))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // required check
+        for spec in &self.specs {
+            if !spec.is_flag && spec.default.is_none() && !args.values.contains_key(spec.name) {
+                return Err(CliError::MissingValue(spec.name.to_string()));
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> String {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("missing option --{key} (declare it on the Command)"))
+            .clone()
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, key: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.str(key);
+        raw.parse::<T>().map_err(|e| CliError::BadValue {
+            key: key.to_string(),
+            value: raw,
+            why: e.to_string(),
+        })
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, CliError> {
+        self.parse_as(key)
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64, CliError> {
+        self.parse_as(key)
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, CliError> {
+        self.parse_as(key)
+    }
+
+    pub fn f32(&self, key: &str) -> Result<f32, CliError> {
+        self.parse_as(key)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list, e.g. `--batches 128,256,512`.
+    pub fn usize_list(&self, key: &str) -> Result<Vec<usize>, CliError> {
+        let raw = self.str(key);
+        raw.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse::<usize>().map_err(|e| CliError::BadValue {
+                    key: key.to_string(),
+                    value: raw.clone(),
+                    why: e.to_string(),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("train", "train a model")
+            .opt("epochs", "10", "number of epochs")
+            .opt("lr", "0.01", "learning rate")
+            .req("model", "model name")
+            .flag("verbose", "chatty logging")
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&argv(&["--model", "resnet", "--epochs", "5"])).unwrap();
+        assert_eq!(a.usize("epochs").unwrap(), 5);
+        assert_eq!(a.f64("lr").unwrap(), 0.01);
+        assert_eq!(a.str("model"), "resnet");
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = cmd().parse(&argv(&["--model=vgg", "--verbose"])).unwrap();
+        assert_eq!(a.str("model"), "vgg");
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(matches!(cmd().parse(&argv(&[])), Err(CliError::MissingValue(_))));
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(matches!(
+            cmd().parse(&argv(&["--model", "x", "--bogus", "1"])),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = cmd().parse(&argv(&["--model", "x", "--epochs", "ten"])).unwrap();
+        assert!(matches!(a.usize("epochs"), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cmd().parse(&argv(&["--model", "x", "fig1", "fig2"])).unwrap();
+        assert_eq!(a.positional, vec!["fig1", "fig2"]);
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Command::new("t", "t").opt("batches", "128,256", "list");
+        let a = c.parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize_list("batches").unwrap(), vec![128, 256]);
+        let a = c.parse(&argv(&["--batches", "1, 2,3"])).unwrap();
+        assert_eq!(a.usize_list("batches").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--epochs"));
+        assert!(u.contains("required"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Minimal `log`-facade backend writing to stderr with wall-clock-relative
+//! timestamps. `tracing`/`env_logger` are unavailable offline; the
+//! coordinator only needs leveled, timestamped, race-free lines.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(3); // Info
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        (metadata.level() as u8) <= MAX_LEVEL.load(Ordering::Relaxed)
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.elapsed();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let line = format!(
+            "[{:>8.3}s {} {}] {}\n",
+            t.as_secs_f64(),
+            lvl,
+            record.target(),
+            record.args()
+        );
+        let _ = std::io::stderr().write_all(line.as_bytes());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+/// Install the logger (idempotent). Level comes from `ADABATCH_LOG`
+/// (error|warn|info|debug|trace), defaulting to info.
+pub fn init() {
+    let level = match std::env::var("ADABATCH_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    };
+    set_level(level);
+    let _ = log::set_logger(&LOGGER).map(|()| log::set_max_level(level));
+    Lazy::force(&START);
+}
+
+pub fn set_level(level: LevelFilter) {
+    let n = match level {
+        LevelFilter::Off => 0,
+        LevelFilter::Error => 1,
+        LevelFilter::Warn => 2,
+        LevelFilter::Info => 3,
+        LevelFilter::Debug => 4,
+        LevelFilter::Trace => 5,
+    };
+    MAX_LEVEL.store(n, Ordering::Relaxed);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (DESIGN.md §3 "Offline-environment substitutions"): PRNG, JSON, CLI,
+//! logging, property testing, micro-benchmarking, tables/CSV, statistics.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod table;

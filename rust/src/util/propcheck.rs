@@ -1,0 +1,258 @@
+//! Property-based testing mini-framework (proptest is unavailable offline;
+//! DESIGN.md §3). Randomized case generation from a seeded [`Pcg32`], with
+//! greedy shrinking on failure: when a case fails, each scalar dimension is
+//! halved toward its minimum until the failure disappears, and the smallest
+//! failing case is reported. Deterministic: `ADABATCH_PROPTEST_SEED`
+//! overrides the default seed so failures replay exactly.
+
+use super::rng::Pcg32;
+
+/// Number of random cases per property (override: ADABATCH_PROPTEST_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("ADABATCH_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+fn seed() -> u64 {
+    std::env::var("ADABATCH_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xADAB_A7C4)
+}
+
+/// A value generator with shrinking. Implementors produce a random value
+/// and enumerate "smaller" candidates for failure minimization.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg32) -> Self::Value;
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value>;
+}
+
+/// Uniform usize in [lo, hi] (inclusive).
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Pcg32) -> usize {
+        let span = (self.1 - self.0 + 1) as u32;
+        self.0 + rng.gen_range(span) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0); // jump straight to the minimum
+            let halved = self.0 + (*v - self.0) / 2;
+            if halved != self.0 && halved != *v {
+                out.push(halved);
+            }
+            if *v - 1 != halved && *v > self.0 {
+                out.push(*v - 1);
+            }
+        }
+        out
+    }
+}
+
+/// Uniform f64 in [lo, hi).
+pub struct F64Range(pub f64, pub f64);
+
+impl Gen for F64Range {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut Pcg32) -> f64 {
+        self.0 + (self.1 - self.0) * rng.next_f64()
+    }
+
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        if *v != self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2.0);
+        }
+        out
+    }
+}
+
+/// Vec of f32 drawn from N(0, scale), length in [min_len, max_len].
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Pcg32) -> Vec<f32> {
+        let len = UsizeRange(self.min_len, self.max_len).generate(rng);
+        (0..len).map(|_| rng.normal() * self.scale).collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // drop the second half
+            let keep = (v.len() / 2).max(self.min_len);
+            out.push(v[..keep].to_vec());
+        }
+        if v.iter().any(|x| *x != 0.0) {
+            out.push(vec![0.0; v.len()]); // all-zeros of same length
+        }
+        out
+    }
+}
+
+/// Pair combinator.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Pcg32) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Triple combinator.
+pub struct Triple<A, B, C>(pub A, pub B, pub C);
+
+impl<A: Gen, B: Gen, C: Gen> Gen for Triple<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+
+    fn generate(&self, rng: &mut Pcg32) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng), self.2.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone(), v.2.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b, v.2.clone())));
+        out.extend(self.2.shrink(&v.2).into_iter().map(|c| (v.0.clone(), v.1.clone(), c)));
+        out
+    }
+}
+
+/// Run `prop` on `default_cases()` random values from `gen`; on failure,
+/// shrink (up to 200 steps) and panic with the minimal counterexample.
+pub fn check<G: Gen>(name: &str, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    check_cases(name, gen, default_cases(), prop)
+}
+
+pub fn check_cases<G: Gen>(name: &str, gen: G, cases: usize, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Pcg32::new(seed() ^ hash_name(name));
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if prop(&v) {
+            continue;
+        }
+        // shrink
+        let mut smallest = v.clone();
+        let mut steps = 0;
+        'outer: while steps < 200 {
+            for cand in gen.shrink(&smallest) {
+                steps += 1;
+                if !prop(&cand) {
+                    smallest = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property {name:?} failed at case {case}\n  original: {v:?}\n  shrunk:   {smallest:?}"
+        );
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("usize in range", UsizeRange(2, 10), |&v| (2..=10).contains(&v));
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        check("pair ranges", Pair(UsizeRange(1, 4), F64Range(0.0, 1.0)), |(a, b)| {
+            (1..=4).contains(a) && (0.0..1.0).contains(b)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk")]
+    fn failing_property_shrinks() {
+        check("always fails above 5", UsizeRange(0, 100), |&v| v <= 5);
+    }
+
+    #[test]
+    fn shrink_reaches_minimum() {
+        // the minimal counterexample for v > 5 within [0, 100] is 6
+        let gen = UsizeRange(0, 100);
+        let prop = |v: &usize| *v <= 5;
+        let mut smallest = 80usize;
+        loop {
+            let mut improved = false;
+            for cand in gen.shrink(&smallest) {
+                if !prop(&cand) && cand < smallest {
+                    smallest = cand;
+                    improved = true;
+                    break;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        assert_eq!(smallest, 6);
+    }
+
+    #[test]
+    fn vec_gen_respects_len() {
+        check(
+            "vec len bounds",
+            VecF32 { min_len: 3, max_len: 9, scale: 1.0 },
+            |v| (3..=9).contains(&v.len()),
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut r1 = Pcg32::new(seed() ^ hash_name("x"));
+        let mut r2 = Pcg32::new(seed() ^ hash_name("x"));
+        let g = UsizeRange(0, 1000);
+        for _ in 0..20 {
+            assert_eq!(g.generate(&mut r1), g.generate(&mut r2));
+        }
+    }
+}

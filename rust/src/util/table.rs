@@ -1,0 +1,173 @@
+//! Table/CSV emission for experiment outputs — every figure/table harness
+//! prints a markdown table (for EXPERIMENTS.md) and can dump CSV series
+//! (for external plotting).
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row arity mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut s = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(s, "### {}\n", self.title);
+        }
+        let _ = writeln!(s, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(s, "|{}|", vec!["---"; self.headers.len()].join("|"));
+        for row in &self.rows {
+            let _ = writeln!(s, "| {} |", row.join(" | "));
+        }
+        s
+    }
+
+    pub fn csv(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.headers.iter().map(|h| csv_escape(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.iter().map(|c| csv_escape(c)).collect::<Vec<_>>().join(","));
+        }
+        s
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.csv())
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.markdown());
+    }
+}
+
+fn csv_escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Convenience: a named series of (x, y) points, dumped as two-column CSV —
+/// the unit of exchange for every "figure" experiment.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str) -> Self {
+        Series { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn last_y(&self) -> Option<f64> {
+        self.points.last().map(|p| p.1)
+    }
+
+    pub fn min_y(&self) -> Option<f64> {
+        self.points
+            .iter()
+            .map(|p| p.1)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+}
+
+/// Write multiple series into one long-format CSV: series,x,y.
+pub fn write_series_csv(path: &Path, series: &[Series]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("series,x,y\n");
+    for ser in series {
+        for (x, y) in &ser.points {
+            let _ = writeln!(s, "{},{},{}", csv_escape(&ser.name), x, y);
+        }
+    }
+    std::fs::write(path, s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("### demo"));
+        assert!(md.contains("| a | b |"));
+        assert!(md.contains("| 1 | 2 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a"]);
+        t.row(vec!["has,comma".into()]);
+        t.row(vec!["has\"quote".into()]);
+        let csv = t.csv();
+        assert!(csv.contains("\"has,comma\""));
+        assert!(csv.contains("\"has\"\"quote\""));
+    }
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("err");
+        s.push(1.0, 0.5);
+        s.push(2.0, 0.25);
+        s.push(3.0, 0.3);
+        assert_eq!(s.last_y(), Some(0.3));
+        assert_eq!(s.min_y(), Some(0.25));
+    }
+
+    #[test]
+    fn series_csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join("adabatch_table_test");
+        let path = dir.join("s.csv");
+        let mut s = Series::new("a");
+        s.push(0.0, 1.0);
+        write_series_csv(&path, &[s]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("series,x,y\n"));
+        assert!(text.contains("a,0,1"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

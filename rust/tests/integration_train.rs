@@ -1,0 +1,148 @@
+//! Full-stack integration tests: rust coordinator → PJRT runtime → AOT
+//! HLO (jax/pallas). These need `make artifacts` to have run; they skip
+//! cleanly otherwise so `cargo test` stays green on a fresh checkout.
+
+use adabatch::coordinator::{train, TrainData, TrainerConfig};
+use adabatch::data::corpus::LmDataset;
+use adabatch::data::synthetic::{generate, SyntheticSpec};
+use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+
+fn runtime(model: &str) -> Option<ModelRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let entry = manifest.model(model).unwrap().clone();
+    Some(ModelRuntime::new(Client::cpu().unwrap(), entry))
+}
+
+fn small_cifar(classes: usize) -> (TrainData, TrainData) {
+    let mut spec = SyntheticSpec::cifar10();
+    spec.n_classes = classes;
+    spec.train_per_class = 256 / classes;
+    spec.test_per_class = 64 / classes;
+    let d = generate(&spec);
+    (TrainData::Images(d.train), TrainData::Images(d.test))
+}
+
+#[test]
+fn alexnet_learns_under_adabatch_policy() {
+    let Some(rt) = runtime("alexnet_lite_c10") else { return };
+    let (train_d, test_d) = small_cifar(4);
+    // doubling schedule exercises a batch transition at epoch 2
+    let policy = AdaBatchPolicy::new(
+        "it-adabatch",
+        BatchSchedule::doubling(32, 2),
+        LrSchedule::step(0.02, 0.75, 2),
+    );
+    let cfg = TrainerConfig::new(policy, 4).with_seed(7);
+    let (hist, timers) = train(&rt, &cfg, &train_d, &test_d).unwrap();
+    assert_eq!(hist.epochs.len(), 4);
+    assert!(!hist.diverged);
+    // batch transition happened
+    assert_eq!(hist.epochs[0].batch, 32);
+    assert_eq!(hist.epochs[2].batch, 64);
+    // learning happened: loss fell and error beat chance (0.75)
+    let first = hist.epochs.first().unwrap();
+    let last = hist.epochs.last().unwrap();
+    assert!(
+        last.train_loss < first.train_loss,
+        "train loss {} -> {}",
+        first.train_loss,
+        last.train_loss
+    );
+    assert!(last.test_error < 0.70, "test error {}", last.test_error);
+    // timers recorded the hot phases
+    assert!(timers.count("fwd_bwd") > 0);
+    assert!(timers.count("optim") > 0);
+}
+
+#[test]
+fn accumulation_matches_native_batch_updates() {
+    // effective batch 64 via native-64 vs via 2×32 accumulation must give
+    // (nearly) identical parameter trajectories — Eq. (5) end to end.
+    let Some(rt) = runtime("alexnet_lite_c10") else { return };
+    let (train_d, test_d) = small_cifar(4);
+    let policy = |name: &str| {
+        AdaBatchPolicy::new(name, BatchSchedule::Fixed(64), LrSchedule::step(0.02, 1.0, 100))
+    };
+    let native = {
+        let cfg = TrainerConfig::new(policy("native"), 2).with_seed(3);
+        train(&rt, &cfg, &train_d, &test_d).unwrap().0
+    };
+    let accumulated = {
+        let mut cfg = TrainerConfig::new(policy("accum"), 2).with_seed(3);
+        cfg.max_microbatch = Some(32); // force 2-step accumulation
+        train(&rt, &cfg, &train_d, &test_d).unwrap().0
+    };
+    for (a, b) in native.epochs.iter().zip(&accumulated.epochs) {
+        assert!(
+            (a.train_loss - b.train_loss).abs() < 5e-3 * a.train_loss.abs().max(1.0),
+            "epoch {}: {} vs {}",
+            a.epoch,
+            a.train_loss,
+            b.train_loss
+        );
+        assert!((a.test_error - b.test_error).abs() < 0.08);
+    }
+}
+
+#[test]
+fn data_parallel_workers_match_single_worker() {
+    // 2 logical replicas with ring all-reduce vs 1 replica: synchronous
+    // data-parallel SGD must give the same trajectory.
+    let Some(rt) = runtime("alexnet_lite_c10") else { return };
+    let (train_d, test_d) = small_cifar(4);
+    let policy = |name: &str| {
+        AdaBatchPolicy::new(name, BatchSchedule::Fixed(64), LrSchedule::step(0.02, 1.0, 100))
+    };
+    let single = {
+        let cfg = TrainerConfig::new(policy("p1"), 2).with_seed(5);
+        train(&rt, &cfg, &train_d, &test_d).unwrap().0
+    };
+    let dual = {
+        let cfg = TrainerConfig::new(policy("p2"), 2).with_seed(5).with_workers(2);
+        train(&rt, &cfg, &train_d, &test_d).unwrap().0
+    };
+    for (a, b) in single.epochs.iter().zip(&dual.epochs) {
+        assert!(
+            (a.train_loss - b.train_loss).abs() < 5e-3 * a.train_loss.abs().max(1.0),
+            "epoch {}: {} vs {}",
+            a.epoch,
+            a.train_loss,
+            b.train_loss
+        );
+    }
+}
+
+#[test]
+fn transformer_trains_on_corpus() {
+    let Some(rt) = runtime("transformer_s") else { return };
+    let data = LmDataset::synthetic(30_000, 64, 11);
+    let test = LmDataset::synthetic(4_000, 64, 12);
+    let policy = AdaBatchPolicy::new(
+        "lm",
+        BatchSchedule::doubling(4, 2),
+        LrSchedule::step(0.05, 0.75, 2),
+    );
+    let cfg = TrainerConfig::new(policy, 3).with_seed(1);
+    let (hist, _) = train(&rt, &cfg, &TrainData::Lm(data), &TrainData::Lm(test)).unwrap();
+    assert!(!hist.diverged);
+    let first = hist.epochs.first().unwrap();
+    let last = hist.epochs.last().unwrap();
+    assert!(last.train_loss < first.train_loss);
+    // char-LM on structured text: must beat uniform (ln 96 ≈ 4.56) quickly
+    assert!(last.test_loss < 4.0, "test loss {}", last.test_loss);
+}
+
+#[test]
+fn effective_lr_invariant_holds_for_paper_arms() {
+    // pure-schedule property, but placed here as the cross-arm audit the
+    // experiments rely on
+    let fixed = AdaBatchPolicy::sec41_fixed(128);
+    let ada = AdaBatchPolicy::sec41_adaptive(128);
+    assert!(fixed.effective_lr_matches(&ada, 100));
+}
