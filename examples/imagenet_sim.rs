@@ -10,7 +10,7 @@
 use adabatch::coordinator::{train, TrainData, TrainerConfig};
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::runtime::{default_artifacts_dir, plan, Client, Manifest, ModelRuntime};
-use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
 
 fn main() -> anyhow::Result<()> {
     adabatch::util::logging::init();
@@ -57,9 +57,10 @@ fn main() -> anyhow::Result<()> {
             sched,
             LrSchedule::step(0.1, decay, interval),
         );
-        let mut cfg = TrainerConfig::new(policy, epochs).with_seed(5);
+        let mut cfg = TrainerConfig::new(epochs).with_seed(5);
         cfg.max_microbatch = Some(8);
-        let (hist, _) = train(&rt, &cfg, &train_d, &test_d)?;
+        let mut governor = IntervalGovernor::new(policy);
+        let (hist, _) = train(&rt, &cfg, &mut governor, &train_d, &test_d)?;
         println!(
             "x{factor:<9} {:>10.4} {:>10.4} {:>11} {:>9}",
             hist.final_test_error(),

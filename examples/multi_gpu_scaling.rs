@@ -8,7 +8,7 @@
 use adabatch::coordinator::{train, TrainData, TrainerConfig};
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
-use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
 use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
 
 fn main() -> anyhow::Result<()> {
@@ -26,10 +26,11 @@ fn main() -> anyhow::Result<()> {
         LrSchedule::step_with_warmup(0.1, 0.5, 2, 1, 8.0),
     );
     for workers in [1usize, 2, 4] {
-        let cfg = TrainerConfig::new(policy.clone(), epochs)
+        let cfg = TrainerConfig::new(epochs)
             .with_seed(3)
             .with_workers(workers);
-        let (hist, timers) = train(&rt, &cfg, &train_d, &test_d)?;
+        let mut governor = IntervalGovernor::new(policy.clone());
+        let (hist, timers) = train(&rt, &cfg, &mut governor, &train_d, &test_d)?;
         println!(
             "workers={workers}: best err {:.4}, fwd+bwd {:.2}s, allreduce {:.3}s, diverged={}",
             hist.best_test_error(),
@@ -39,8 +40,8 @@ fn main() -> anyhow::Result<()> {
         );
     }
     println!("\n(synchronous data-parallel: error is worker-count-invariant;");
-    println!(" wall time on this 1-core testbed is serialized — the cluster model");
-    println!(" below supplies the parallel timing.)\n");
+    println!(" replicas run on real worker threads — wall-time scaling depends on");
+    println!(" host cores; the cluster model below supplies the P100 timing.)\n");
 
     println!("== part 2: calibrated 4×P100+NVLink predictions (paper ladder) ==\n");
     let w = Workload { flops_per_sample: 4.1e7, n_samples: 50_000, param_bytes: 270_000 * 4 };

@@ -10,7 +10,7 @@
 use adabatch::coordinator::{train, TrainData, TrainerConfig};
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
-use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
 
 fn main() -> anyhow::Result<()> {
     adabatch::util::logging::init();
@@ -39,8 +39,9 @@ fn main() -> anyhow::Result<()> {
     println!("== AdaBatch quickstart: ResNet-lite on synthetic CIFAR-10 ==\n");
     for policy in [fixed, adaptive] {
         let name = policy.name.clone();
-        let cfg = TrainerConfig::new(policy, epochs).with_seed(42);
-        let (hist, timers) = train(&rt, &cfg, &train_d, &test_d)?;
+        let cfg = TrainerConfig::new(epochs).with_seed(42);
+        let mut governor = IntervalGovernor::new(policy);
+        let (hist, timers) = train(&rt, &cfg, &mut governor, &train_d, &test_d)?;
         println!("--- {name} ---");
         println!("epoch  batch   lr       test-err  iters");
         for e in &hist.epochs {

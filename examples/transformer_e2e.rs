@@ -14,7 +14,7 @@
 use adabatch::coordinator::{train, TrainData, TrainerConfig};
 use adabatch::data::corpus::LmDataset;
 use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
-use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
 use adabatch::util::cli::Command;
 use adabatch::util::table::{write_series_csv, Series};
 
@@ -62,9 +62,10 @@ fn main() -> anyhow::Result<()> {
         BatchSchedule::doubling(4, interval),
         LrSchedule::step(0.08, 0.75, interval),
     );
-    let cfg = TrainerConfig::new(policy, epochs).with_seed(7);
+    let cfg = TrainerConfig::new(epochs).with_seed(7);
+    let mut governor = IntervalGovernor::new(policy);
     let t0 = std::time::Instant::now();
-    let (hist, timers) = train(&rt, &cfg, &train_data, &test_data)?;
+    let (hist, timers) = train(&rt, &cfg, &mut governor, &train_data, &test_data)?;
 
     println!("\nepoch  batch  lr       train-loss  test-loss  token-err  iters  secs");
     let mut loss_series = Series::new("train_loss");

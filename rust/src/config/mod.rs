@@ -34,11 +34,15 @@ impl DatasetChoice {
     }
 }
 
-/// A fully-specified training job.
+/// A fully-specified training job. The policy is carried beside the
+/// trainer knobs (not inside them): the trainer is criterion-agnostic and
+/// the policy becomes a governor at launch time
+/// (`IntervalGovernor::new(job.policy.clone())` for the paper's arm).
 #[derive(Debug, Clone)]
 pub struct JobConfig {
     pub model: String,
     pub dataset: DatasetChoice,
+    pub policy: AdaBatchPolicy,
     pub trainer: TrainerConfig,
 }
 
@@ -47,7 +51,8 @@ impl JobConfig {
         JobConfig {
             model: model.to_string(),
             dataset,
-            trainer: TrainerConfig::new(policy, epochs),
+            policy,
+            trainer: TrainerConfig::new(epochs),
         }
     }
 
@@ -59,14 +64,14 @@ impl JobConfig {
         if self.trainer.workers == 0 {
             bail!("workers must be > 0");
         }
-        let r0 = self.trainer.policy.batch.initial();
+        let r0 = self.policy.batch.initial();
         if r0 == 0 {
             bail!("initial batch must be > 0");
         }
         if !r0.is_power_of_two() {
             bail!("initial batch {r0} must be a power of two (the artifact ladder is)");
         }
-        if self.trainer.policy.lr.base <= 0.0 {
+        if self.policy.lr.base <= 0.0 {
             bail!("base lr must be positive");
         }
         let lm_model = self.model.starts_with("transformer");
@@ -150,7 +155,7 @@ mod tests {
     #[test]
     fn non_power_of_two_batch_rejected() {
         let mut j = job();
-        j.trainer.policy = AdaBatchPolicy::sec41_adaptive(100);
+        j.policy = AdaBatchPolicy::sec41_adaptive(100);
         assert!(j.validate().is_err());
     }
 

@@ -170,7 +170,7 @@ fn two_mut(bufs: &mut [Vec<f32>], i: usize, j: usize) -> (&mut Vec<f32>, &mut Ve
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::propcheck::{self, Pair, UsizeRange};
+    use crate::util::propcheck::{self, Pair, Triple, UsizeRange};
     use crate::util::rng::Pcg32;
 
     fn reference_mean(bufs: &[Vec<f32>], weights: &[f64]) -> Vec<f32> {
@@ -281,6 +281,38 @@ mod tests {
                     x.iter()
                         .zip(y.iter())
                         .all(|(u, v)| (u - v).abs() <= 1e-5 * u.abs().max(1.0))
+                })
+            },
+        );
+    }
+
+    /// The module-doc promise: all three algorithms agree within 1e-6
+    /// relative, for random replica counts, payload sizes and *uneven*
+    /// shard weights (f32 summation order is the only difference).
+    #[test]
+    fn prop_all_algorithms_agree_within_1e6_relative() {
+        propcheck::check(
+            "naive/ring/tree agree within 1e-6 relative (uneven weights)",
+            Triple(UsizeRange(1, 9), UsizeRange(1, 300), UsizeRange(0, 1000)),
+            |&(p, n, seed)| {
+                let bufs = random_replicas(p, n, seed as u64 * 31 + 7);
+                // uneven-shard weights like a ragged batch: first replica
+                // heavier, normalized to sum 1
+                let raw: Vec<f64> = (0..p).map(|i| if i == 0 { 2.0 } else { 1.0 }).collect();
+                let total: f64 = raw.iter().sum();
+                let weights: Vec<f64> = raw.iter().map(|w| w / total).collect();
+                let mut results = Vec::new();
+                for algo in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+                    let mut got = bufs.clone();
+                    allreduce_mean(&mut got, &weights, algo);
+                    results.push(got);
+                }
+                results.iter().all(|r| {
+                    r.iter().zip(&results[0]).all(|(a, b)| {
+                        a.iter().zip(b.iter()).all(|(x, y)| {
+                            (x - y).abs() <= 1e-6 * x.abs().max(y.abs()).max(1.0)
+                        })
+                    })
                 })
             },
         );

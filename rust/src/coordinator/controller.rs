@@ -1,54 +1,61 @@
-//! The training controller — AdaBatch's coordination loop.
+//! The training controller — AdaBatch's coordination loop, generic over
+//! the batch-size criterion.
 //!
-//! Per epoch: consult the [`AdaBatchPolicy`] for (batch, LR); pre-plan how
-//! that effective batch maps onto workers × native microbatches ×
-//! accumulation steps ([`crate::runtime::plan`]); walk the shuffled epoch;
-//! for every update shard the batch over replicas, run the AOT train step
-//! per microbatch, accumulate (Eq. 5), all-reduce, and apply SGD (Eq. 2).
-//! Batch-size *transitions* are just a different plan the next epoch — the
-//! executable ladder means no recompilation beyond first use of a size.
+//! One loop serves every criterion: a [`BatchGovernor`] decides the batch
+//! size per epoch and the coupled learning rate per iteration; the loop
+//! pre-plans how each effective batch maps onto workers × native
+//! microbatches × accumulation steps ([`crate::runtime::plan`]), walks the
+//! shuffled epoch, and for every update dispatches per-replica shards to
+//! the persistent [`Engine`] worker pool, all-reduces the shard-weighted
+//! gradients, and applies SGD (Eq. 2). Batch-size *transitions* are just a
+//! different plan the next epoch — the executable ladder means no
+//! recompilation beyond first use of a size. Governors that want gradient
+//! statistics (variance / diversity criteria) receive them after each
+//! all-reduce, from numbers the accumulation already produced.
 //!
-//! Also owns: the effective-LR audit (the policy invariant is asserted at
-//! every transition), divergence detection (Fig. 7b), phase timers
-//! (Table 1's fwd+bwd split comes from here), and the optional
-//! gradient-variance controller override (the adaptive-criterion baseline).
+//! Also owns: divergence detection (Fig. 7b) — gradients are checked
+//! *before* the optimizer step so a non-finite update never poisons the
+//! parameters — phase timers (Table 1's fwd+bwd split comes from here,
+//! merged across workers), and the padded-eval cadence.
 
 use anyhow::{bail, Context, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
-use super::accumulate::GradAccumulator;
 use super::allreduce::{allreduce_params, Algorithm};
 use super::dataset::{GatherBufs, TrainData};
+use super::engine::Engine;
 use super::eval::evaluate;
 use crate::data::loader::BatchPlanner;
 use crate::data::shard::{shard_batch, shard_weights};
 use crate::metrics::{EpochRecord, PhaseTimers, RunHistory};
 use crate::optim::param::ParamSet;
 use crate::optim::sgd::Optimizer;
-use crate::runtime::{plan_schedule, Dtype, HostBatch, ModelRuntime, StepKind};
-use crate::schedule::{AdaBatchPolicy, GradVarianceController};
+use crate::runtime::{plan_schedule, ModelRuntime, StepKind};
+use crate::schedule::{BatchGovernor, GradVarianceController};
 
-/// Training-run configuration.
+/// Training-run configuration (everything but the batch criterion — that
+/// is the [`BatchGovernor`] passed to [`train`]).
 #[derive(Debug, Clone)]
 pub struct TrainerConfig {
-    pub policy: AdaBatchPolicy,
     pub epochs: usize,
-    /// logical data-parallel replicas (the paper's GPU count)
+    /// data-parallel replicas (the paper's GPU count); each is a real
+    /// worker thread in the engine
     pub workers: usize,
     /// per-device memory cap expressed as a max native microbatch
     pub max_microbatch: Option<usize>,
     pub allreduce: Algorithm,
     pub seed: u64,
-    /// evaluate every k epochs (1 = every epoch, like the paper's curves)
+    /// evaluate every k epochs (1 = every epoch, like the paper's curves;
+    /// 0 is normalized to 1)
     pub eval_every: usize,
-    /// stop early when params/loss go non-finite
+    /// stop early when grads/params go non-finite
     pub divergence_guard: bool,
 }
 
 impl TrainerConfig {
-    pub fn new(policy: AdaBatchPolicy, epochs: usize) -> Self {
+    pub fn new(epochs: usize) -> Self {
         TrainerConfig {
-            policy,
             epochs,
             workers: 1,
             max_microbatch: None,
@@ -68,6 +75,12 @@ impl TrainerConfig {
         self.seed = s;
         self
     }
+
+    /// Eval cadence; 0 is normalized to 1 (evaluate every epoch).
+    pub fn with_eval_every(mut self, k: usize) -> Self {
+        self.eval_every = k.max(1);
+        self
+    }
 }
 
 /// Clamp a scheduled effective batch to the dataset size, preserving
@@ -84,10 +97,12 @@ pub fn clamp_batch(r: usize, n: usize) -> usize {
     p
 }
 
-/// Run one full training job; returns the per-epoch history.
-pub fn train(
+/// Run one full training job under `governor`; returns the per-epoch
+/// history and merged (coordinator + per-worker) phase timers.
+pub fn train<G: BatchGovernor + ?Sized>(
     rt: &ModelRuntime,
     cfg: &TrainerConfig,
+    governor: &mut G,
     train_data: &TrainData,
     test_data: &TrainData,
 ) -> Result<(RunHistory, PhaseTimers)> {
@@ -95,192 +110,154 @@ pub fn train(
     if n == 0 {
         bail!("empty training set");
     }
+    // guard direct-struct construction: eval_every == 0 means "every epoch"
+    let eval_every = cfg.eval_every.max(1);
     let natives = rt.entry.train_batches();
 
     // -- pre-flight: artifacts must match the manifest (stale-artifact
-    // guard; cheap header parse, no compilation) —
-    crate::runtime::validate::validate_model(&rt.entry)
-        .context("artifact validation failed")?;
+    // guard; cheap header parse, no compilation). Reference runtimes have
+    // no files to validate. --
+    if !rt.is_reference() {
+        crate::runtime::validate::validate_model(&rt.entry)
+            .context("artifact validation failed")?;
+    }
 
-    // -- pre-flight: every batch size the schedule will request must plan —
-    let mut ladder: Vec<usize> = (0..cfg.epochs)
-        .map(|e| clamp_batch(cfg.policy.batch.batch_at(e), n))
+    // -- pre-flight: every batch size the governor can ever request must
+    // plan (a schedule that would fail at epoch 80 fails at epoch 0) --
+    let mut distinct: Vec<usize> = governor
+        .ladder(cfg.epochs)
+        .iter()
+        .map(|&r| clamp_batch(r, n))
         .collect();
-    ladder.dedup();
-    let mut distinct = ladder.clone();
     distinct.sort_unstable();
     distinct.dedup();
     plan_schedule(&distinct, cfg.workers, &natives, cfg.max_microbatch)
         .context("schedule pre-flight failed")?;
 
-    let mut params = ParamSet::init(&rt.entry.params, cfg.seed);
+    let mut params = Arc::new(ParamSet::init(&rt.entry.params, cfg.seed));
     let mut opt = crate::optim::sgd::SgdMomentum::paper_cifar();
     let planner = BatchPlanner::train(n, cfg.seed ^ 0xDA7A);
-    let mut history = RunHistory::new(&cfg.policy.name);
+    let mut history = RunHistory::new(governor.name());
     let mut timers = PhaseTimers::new();
-    let mut worker_bufs: Vec<GatherBufs> = (0..cfg.workers).map(|_| GatherBufs::default()).collect();
     let mut eval_bufs = GatherBufs::default();
-    let mut accs: Vec<GradAccumulator> =
-        (0..cfg.workers).map(|_| GradAccumulator::new(&rt.entry.params)).collect();
 
-    let mut last_batch = 0usize;
-    'epochs: for epoch in 0..cfg.epochs {
-        let t_epoch = Instant::now();
-        let point = cfg.policy.at_epoch(epoch);
-        let r = clamp_batch(point.batch, n);
-        let plan = crate::runtime::plan(r, cfg.workers, &natives, cfg.max_microbatch)?;
-        if r != last_batch {
-            log::info!(
-                "[{}] epoch {epoch}: batch {r} = {} workers × {} µbatch × {} accum, lr {:.5}",
-                cfg.policy.name,
-                plan.workers,
-                plan.microbatch,
-                plan.accum_steps,
-                point.lr
-            );
-            last_batch = r;
-        }
-        let exe = rt.executable(StepKind::Train, plan.microbatch)?;
-        let epoch_plan = planner.plan_epoch(epoch, r);
-        let iters = epoch_plan.batches.len();
-        let mut loss_sum = 0.0f64;
-
-        for (it, batch) in epoch_plan.batches.iter().enumerate() {
-            let lr = cfg.policy.at(epoch, it, iters).lr;
-            let shards = shard_batch(&batch.indices, cfg.workers);
-            let weights = shard_weights(&shards);
-            // per-replica gradient production (logical workers; the PJRT
-            // CPU client serializes execution on this 1-core testbed)
-            let mut replica_grads: Vec<ParamSet> = Vec::with_capacity(cfg.workers);
-            for (w, shard) in shards.iter().enumerate() {
-                let bufs = &mut worker_bufs[w];
-                let acc = &mut accs[w];
-                for chunk in shard.chunks(plan.microbatch) {
-                    timers.time("gather", || {
-                        train_data.gather(chunk, plan.microbatch, bufs)
-                    });
-                    let x = match train_data.x_dtype() {
-                        Dtype::F32 => HostBatch::F32(&bufs.x_f32),
-                        Dtype::I32 => HostBatch::I32(&bufs.x_i32),
-                    };
-                    let out = timers.time("fwd_bwd", || exe.run(&params, x, &bufs.y))?;
-                    acc.add(out.grads.as_ref().expect("train step must emit grads"), out.loss, out.correct);
-                }
-                let (g, loss, _correct, _norms) = acc.finish();
-                loss_sum += loss * weights[w];
-                replica_grads.push(g);
+    let worker_timers = std::thread::scope(|scope| -> Result<PhaseTimers> {
+        let mut engine = Engine::start(scope, cfg.workers, train_data, &rt.entry.params);
+        let mut last_batch = 0usize;
+        let mut warned_single_micro = false;
+        'epochs: for epoch in 0..cfg.epochs {
+            let t_epoch = Instant::now();
+            let r = clamp_batch(governor.batch_for_epoch(epoch), n);
+            let plan = crate::runtime::plan(r, cfg.workers, &natives, cfg.max_microbatch)?;
+            let epoch_lr = governor.lr_coupling(epoch, 0, planner.iters_per_epoch(r).max(1));
+            if r != last_batch {
+                log::info!(
+                    "[{}] epoch {epoch}: batch {r} = {} workers × {} µbatch × {} accum, lr {:.5}",
+                    governor.name(),
+                    plan.workers,
+                    plan.microbatch,
+                    plan.accum_steps,
+                    epoch_lr
+                );
+                last_batch = r;
             }
-            timers.time("allreduce", || {
-                allreduce_params(&mut replica_grads, &weights, cfg.allreduce)
-            });
-            timers.time("optim", || opt.step(&mut params, &replica_grads[0], lr));
+            let exe = rt.executable(StepKind::Train, plan.microbatch)?;
+            let epoch_plan = planner.plan_epoch(epoch, r);
+            let iters = epoch_plan.batches.len();
+            let mut loss_sum = 0.0f64;
 
-            if cfg.divergence_guard && !replica_grads[0].all_finite() {
-                log::warn!("[{}] diverged at epoch {epoch} iter {it}", cfg.policy.name);
+            for (it, batch) in epoch_plan.batches.iter().enumerate() {
+                let lr = governor.lr_coupling(epoch, it, iters);
+                let shards = shard_batch(&batch.indices, cfg.workers);
+                let weights = shard_weights(&shards);
+                // per-replica gradient production on the worker pool
+                let mut outs = engine.dispatch(&exe, &params, shards, plan.microbatch)?;
+                for (w, out) in outs.iter().enumerate() {
+                    loss_sum += out.loss * weights[w];
+                }
+                let micro_norms: Vec<f64> = if governor.wants_stats() {
+                    outs.iter()
+                        .flat_map(|o| o.micro_sq_norms.iter().copied())
+                        .collect()
+                } else {
+                    Vec::new()
+                };
+                let mut replica_grads: Vec<ParamSet> =
+                    outs.drain(..).map(|o| o.grads).collect();
+                timers.time("allreduce", || {
+                    allreduce_params(&mut replica_grads, &weights, cfg.allreduce)
+                });
+
+                // divergence guard BEFORE the step: a non-finite gradient
+                // must never be applied to the parameters
+                if cfg.divergence_guard && !replica_grads[0].all_finite() {
+                    log::warn!("[{}] diverged at epoch {epoch} iter {it}", governor.name());
+                    history.diverged = true;
+                    break 'epochs;
+                }
+
+                if governor.wants_stats() {
+                    if micro_norms.len() < 2 && !warned_single_micro {
+                        warned_single_micro = true;
+                        log::warn!(
+                            "[{}] updates are realized as a single microbatch — the \
+                             gradient-variance estimate is always 0 and the governor \
+                             cannot adapt; lower max_microbatch or raise workers so \
+                             each update accumulates ≥ 2 microbatches",
+                            governor.name()
+                        );
+                    }
+                    let stats = GradVarianceController::stats_from_norms(
+                        &micro_norms,
+                        replica_grads[0].sq_norm(),
+                    );
+                    governor.observe(stats);
+                }
+
+                timers.time("optim", || {
+                    opt.step(Arc::make_mut(&mut params), &replica_grads[0], lr)
+                });
+            }
+
+            if cfg.divergence_guard && !params.all_finite() {
                 history.diverged = true;
                 break 'epochs;
             }
-        }
 
-        if cfg.divergence_guard && !params.all_finite() {
-            history.diverged = true;
-            break 'epochs;
+            let mean_train_loss = loss_sum / iters.max(1) as f64;
+            let (test_loss, test_error) = if epoch % eval_every == 0 || epoch + 1 == cfg.epochs {
+                let ev =
+                    timers.time("eval", || evaluate(rt, &params, test_data, &mut eval_bufs))?;
+                (ev.loss, ev.error)
+            } else {
+                let prev = history.epochs.last();
+                (
+                    prev.map(|p| p.test_loss).unwrap_or(f64::NAN),
+                    prev.map(|p| p.test_error).unwrap_or(f64::NAN),
+                )
+            };
+            history.push(EpochRecord {
+                epoch,
+                batch: r,
+                lr: epoch_lr,
+                train_loss: mean_train_loss,
+                test_loss,
+                test_error,
+                iterations: iters,
+                wall_secs: t_epoch.elapsed().as_secs_f64(),
+            });
         }
-
-        let mean_train_loss = loss_sum / iters.max(1) as f64;
-        let (test_loss, test_error) = if epoch % cfg.eval_every == 0 || epoch + 1 == cfg.epochs {
-            let ev = timers.time("eval", || evaluate(rt, &params, test_data, &mut eval_bufs))?;
-            (ev.loss, ev.error)
-        } else {
-            let prev = history.epochs.last();
-            (
-                prev.map(|p| p.test_loss).unwrap_or(f64::NAN),
-                prev.map(|p| p.test_error).unwrap_or(f64::NAN),
-            )
-        };
-        history.push(EpochRecord {
-            epoch,
-            batch: r,
-            lr: point.lr,
-            train_loss: mean_train_loss,
-            test_loss,
-            test_error,
-            iterations: iters,
-            wall_secs: t_epoch.elapsed().as_secs_f64(),
-        });
-    }
+        Ok(engine.shutdown())
+    })?;
+    timers.merge(&worker_timers);
     Ok((history, timers))
-}
-
-/// Variant of [`train`] driven by the gradient-variance adaptive baseline:
-/// the batch size is chosen by the controller's SNR test instead of a fixed
-/// interval schedule (the Byrd/De/Balles-style comparison arm).
-pub fn train_variance_adaptive(
-    rt: &ModelRuntime,
-    cfg: &TrainerConfig,
-    controller: &mut GradVarianceController,
-    train_data: &TrainData,
-    test_data: &TrainData,
-) -> Result<RunHistory> {
-    let n = train_data.len();
-    if n == 0 {
-        bail!("empty training set");
-    }
-    let natives = rt.entry.train_batches();
-    let mut params = ParamSet::init(&rt.entry.params, cfg.seed);
-    let mut opt = crate::optim::sgd::SgdMomentum::paper_cifar();
-    let planner = BatchPlanner::train(n, cfg.seed ^ 0xDA7A);
-    let mut history = RunHistory::new("variance-adaptive");
-    let mut bufs = GatherBufs::default();
-    let mut eval_bufs = GatherBufs::default();
-    let mut acc = GradAccumulator::new(&rt.entry.params);
-
-    for epoch in 0..cfg.epochs {
-        let t_epoch = Instant::now();
-        let r = clamp_batch(controller.current_batch(), n);
-        let plan = crate::runtime::plan(r, 1, &natives, cfg.max_microbatch)?;
-        let exe = rt.executable(StepKind::Train, plan.microbatch)?;
-        let epoch_plan = planner.plan_epoch(epoch, r);
-        let iters = epoch_plan.batches.len();
-        let mut loss_sum = 0.0f64;
-        for (it, batch) in epoch_plan.batches.iter().enumerate() {
-            // effective-LR coupling: when the controller grew the batch by
-            // β vs its initial size, training keeps α/r constant by NOT
-            // decaying lr (batch growth *is* the decay — §3.1)
-            let lr = cfg.policy.at(epoch, it, iters).lr;
-            for chunk in batch.indices.chunks(plan.microbatch) {
-                train_data.gather(chunk, plan.microbatch, &mut bufs);
-                let x = match train_data.x_dtype() {
-                    Dtype::F32 => HostBatch::F32(&bufs.x_f32),
-                    Dtype::I32 => HostBatch::I32(&bufs.x_i32),
-                };
-                let out = exe.run(&params, x, &bufs.y)?;
-                acc.add(out.grads.as_ref().unwrap(), out.loss, out.correct);
-            }
-            let (g, loss, _c, norms) = acc.finish();
-            loss_sum += loss;
-            let stats = GradVarianceController::stats_from_norms(&norms, g.sq_norm());
-            let _ = controller.observe(stats);
-            opt.step(&mut params, &g, lr);
-        }
-        let ev = evaluate(rt, &params, test_data, &mut eval_bufs)?;
-        history.push(EpochRecord {
-            epoch,
-            batch: r,
-            lr: cfg.policy.at_epoch(epoch).lr,
-            train_loss: loss_sum / iters.max(1) as f64,
-            test_loss: ev.loss,
-            test_error: ev.error,
-            iterations: iters,
-            wall_secs: t_epoch.elapsed().as_secs_f64(),
-        });
-    }
-    Ok(history)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::synthetic::{generate, ImageDataset, SyntheticSpec, IMG_LEN};
+    use crate::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
 
     #[test]
     fn clamp_batch_powers_of_two() {
@@ -289,5 +266,110 @@ mod tests {
         assert_eq!(clamp_batch(2048, 2048), 2048);
         assert_eq!(clamp_batch(7, 3), 2);
         assert_eq!(clamp_batch(4, 4), 4);
+    }
+
+    fn small_images(classes: usize) -> (TrainData, TrainData) {
+        let mut spec = SyntheticSpec::cifar10();
+        spec.n_classes = classes;
+        spec.train_per_class = 128 / classes;
+        spec.test_per_class = 32 / classes;
+        let d = generate(&spec);
+        (TrainData::Images(d.train), TrainData::Images(d.test))
+    }
+
+    fn ref_rt(classes: usize) -> ModelRuntime {
+        ModelRuntime::reference_classifier("ref_linear", IMG_LEN, classes, &[8, 16, 32, 64], 64)
+    }
+
+    fn doubling_gov(initial: usize, interval: usize) -> IntervalGovernor {
+        IntervalGovernor::new(AdaBatchPolicy::new(
+            "test-ada",
+            BatchSchedule::doubling(initial, interval),
+            LrSchedule::step(0.05, 0.75, interval),
+        ))
+    }
+
+    #[test]
+    fn trains_end_to_end_on_reference_backend() {
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        let cfg = TrainerConfig::new(4).with_seed(11);
+        let mut gov = doubling_gov(16, 2);
+        let (hist, timers) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+        assert_eq!(hist.epochs.len(), 4);
+        assert!(!hist.diverged);
+        assert_eq!(hist.epochs[0].batch, 16);
+        assert_eq!(hist.epochs[2].batch, 32);
+        let (first, last) = (hist.epochs.first().unwrap(), hist.epochs.last().unwrap());
+        assert!(
+            last.train_loss < first.train_loss,
+            "loss {} -> {}",
+            first.train_loss,
+            last.train_loss
+        );
+        assert!(timers.count("fwd_bwd") > 0);
+        assert!(timers.count("optim") > 0);
+        assert!(timers.count("gather") > 0);
+    }
+
+    #[test]
+    fn eval_every_zero_is_normalized_not_a_panic() {
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        let mut cfg = TrainerConfig::new(2).with_seed(3);
+        cfg.eval_every = 0; // direct struct poke, bypassing the builder
+        let mut gov = doubling_gov(16, 4);
+        let (hist, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+        assert_eq!(hist.epochs.len(), 2);
+        assert!(hist.epochs.iter().all(|e| e.test_error.is_finite()));
+        // and the builder normalizes too
+        assert_eq!(TrainerConfig::new(2).with_eval_every(0).eval_every, 1);
+    }
+
+    #[test]
+    fn divergence_guard_fires_before_params_are_poisoned() {
+        // one NaN pixel makes that batch's gradient non-finite; the guard
+        // must stop the run with the *parameters still finite* (the old
+        // loop stepped first and corrupted them on the same iteration)
+        let classes = 2;
+        let n = 32;
+        let mut images = vec![0.1f32; n * IMG_LEN];
+        images[5 * IMG_LEN + 3] = f32::NAN;
+        let labels: Vec<i32> = (0..n as i32).map(|i| i % classes as i32).collect();
+        let data = TrainData::Images(ImageDataset { n_classes: classes, images, labels });
+        let rt = ref_rt(classes);
+        let cfg = TrainerConfig::new(2).with_seed(1);
+        let mut gov = IntervalGovernor::new(AdaBatchPolicy::new(
+            "nan-run",
+            BatchSchedule::Fixed(32),
+            LrSchedule::step(0.05, 1.0, 100),
+        ));
+        let (hist, _) = train(&rt, &cfg, &mut gov, &data, &data).unwrap();
+        assert!(hist.diverged, "NaN gradient must trip the guard");
+        // the guard fired on the very first update, so nothing was logged
+        assert!(hist.epochs.is_empty());
+    }
+
+    #[test]
+    fn variance_governor_drives_the_same_loop() {
+        use crate::schedule::VarianceGovernor;
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        let mut cfg = TrainerConfig::new(3).with_seed(5);
+        // force ≥2 microbatches per update: the variance estimate needs
+        // more than one accumulated gradient to be non-zero
+        cfg.max_microbatch = Some(8);
+        // threshold so high every window decision grows the batch
+        let ctrl = GradVarianceController::new(16, 1e12, 2, 2, 64);
+        let mut gov = VarianceGovernor::new(ctrl, LrSchedule::step(0.05, 1.0, 100));
+        let (hist, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+        assert!(!hist.diverged);
+        assert_eq!(hist.epochs[0].batch, 16);
+        assert!(
+            hist.epochs.last().unwrap().batch > 16,
+            "governor never grew: {:?}",
+            hist.epochs.iter().map(|e| e.batch).collect::<Vec<_>>()
+        );
+        assert!(gov.decisions() > 0);
     }
 }

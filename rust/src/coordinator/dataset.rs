@@ -4,9 +4,13 @@
 //! [`HostBatch`](crate::runtime::HostBatch) contract.
 
 use crate::data::corpus::LmDataset;
-use crate::data::loader::{gather_f32, gather_i32};
+use crate::data::loader::{gather_f32, gather_i32, Gather};
 use crate::data::synthetic::{ImageDataset, IMG_LEN};
 use crate::runtime::Dtype;
+
+// Re-exported from the data layer (one set per worker keeps the hot loop
+// allocation-free); historical home of the type.
+pub use crate::data::loader::GatherBufs;
 
 /// A dataset the controller can train/evaluate on.
 #[derive(Debug, Clone)]
@@ -15,13 +19,10 @@ pub enum TrainData {
     Lm(LmDataset),
 }
 
-/// Reusable gather buffers (one per worker keeps the hot loop
-/// allocation-free).
-#[derive(Debug, Default)]
-pub struct GatherBufs {
-    pub x_f32: Vec<f32>,
-    pub x_i32: Vec<i32>,
-    pub y: Vec<i32>,
+impl Gather for TrainData {
+    fn gather_into(&self, idx: &[usize], pad_to: usize, bufs: &mut GatherBufs) {
+        self.gather(idx, pad_to, bufs);
+    }
 }
 
 impl TrainData {

@@ -1,0 +1,382 @@
+//! The worker-pool execution engine — real data-parallel replicas.
+//!
+//! The paper's headline systems claim is parallel efficiency: adaptive
+//! batches keep devices busy as the batch grows (up to 6.25× on 4 GPUs,
+//! §4.2). The original coordinator walked its replicas in a serial `for`
+//! loop; this module gives each logical replica a **persistent OS thread**
+//! that owns its own [`GradAccumulator`] and gather buffers, fed
+//! per-iteration shards over channels. Each worker additionally runs a
+//! [`Prefetcher`] gather thread, so host-side batch assembly overlaps the
+//! fwd/bwd execution of the previous microbatch (double buffering).
+//!
+//! Determinism model (DESIGN.md §4): synchronous data-parallel SGD. One
+//! `dispatch` = one weight update's gradient production. Each worker's
+//! shard computation is sequential and self-contained; results are
+//! re-ordered by worker index before the (deterministic, coordinator-side)
+//! all-reduce, so a run's trajectory is a pure function of (seed, config)
+//! regardless of thread scheduling. Parameters are shared by `Arc`
+//! snapshot: workers hold a clone only while computing, so the
+//! coordinator's `Arc::make_mut` update after the barrier mutates in
+//! place — copy-on-write cost only ever appears under a scheduling race,
+//! never wrong results.
+//!
+//! Worker phase timers ("gather" = prefetch wait, "fwd_bwd" = step
+//! execution) are merged into the run's [`PhaseTimers`] at shutdown, both
+//! flat and under a `w{i}/` prefix for per-worker attribution.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::{Scope, ScopedJoinHandle};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::accumulate::GradAccumulator;
+use super::dataset::TrainData;
+use crate::data::loader::Prefetcher;
+use crate::metrics::PhaseTimers;
+use crate::optim::param::{ParamSet, ParamSpec};
+use crate::runtime::{Dtype, HostBatch, StepExecutable};
+
+/// One worker's contribution to one weight update.
+#[derive(Debug)]
+pub struct WorkerOut {
+    /// shard-mean gradient (microbatch-mean accumulated over accum steps)
+    pub grads: ParamSet,
+    /// shard-mean loss
+    pub loss: f64,
+    pub correct: f64,
+    /// per-microbatch ‖g‖² (feeds data-driven governors)
+    pub micro_sq_norms: Vec<f64>,
+}
+
+enum Job {
+    Run {
+        /// update sequence number, echoed back with the result so a
+        /// dispatch can never consume a stale straggler from an earlier
+        /// (failed) update
+        seq: u64,
+        exe: Arc<StepExecutable>,
+        params: Arc<ParamSet>,
+        shard: Vec<usize>,
+        microbatch: usize,
+    },
+    Finish,
+}
+
+/// A pool of persistent replica workers bound to one training run's scope.
+pub struct Engine<'scope> {
+    job_txs: Vec<Sender<Job>>,
+    res_rx: Receiver<(usize, u64, Result<WorkerOut>)>,
+    handles: Vec<ScopedJoinHandle<'scope, PhaseTimers>>,
+    seq: u64,
+}
+
+impl<'scope> Engine<'scope> {
+    /// Spawn `workers` replica threads (plus one prefetch thread each)
+    /// inside `scope`, all reading from the borrowed `data`.
+    pub fn start<'env: 'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        workers: usize,
+        data: &'env TrainData,
+        specs: &'env [ParamSpec],
+    ) -> Engine<'scope> {
+        assert!(workers > 0, "engine needs at least one worker");
+        let (res_tx, res_rx) = channel();
+        let mut job_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let res_tx = res_tx.clone();
+            handles.push(scope.spawn(move || worker_loop(w, scope, rx, res_tx, data, specs)));
+            job_txs.push(tx);
+        }
+        Engine { job_txs, res_rx, handles, seq: 0 }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.job_txs.len()
+    }
+
+    /// Run one synchronous update's gradient production: one shard per
+    /// worker, results returned in worker order. Barrier semantics — all
+    /// workers finish before this returns (synchronous SGD).
+    pub fn dispatch(
+        &mut self,
+        exe: &Arc<StepExecutable>,
+        params: &Arc<ParamSet>,
+        shards: Vec<Vec<usize>>,
+        microbatch: usize,
+    ) -> Result<Vec<WorkerOut>> {
+        assert_eq!(shards.len(), self.job_txs.len(), "one shard per worker");
+        self.seq += 1;
+        let seq = self.seq;
+        let p = shards.len();
+        for (tx, shard) in self.job_txs.iter().zip(shards) {
+            tx.send(Job::Run {
+                seq,
+                exe: exe.clone(),
+                params: params.clone(),
+                shard,
+                microbatch,
+            })
+            .map_err(|_| anyhow!("worker pool shut down"))?;
+        }
+        let mut outs: Vec<Option<WorkerOut>> = (0..p).map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..p {
+            // discard stragglers from an earlier update that errored out
+            // mid-dispatch — only this update's seq counts. Poll with a
+            // timeout so a panicked worker (which will never reply, while
+            // its siblings keep the channel open) surfaces as an error
+            // instead of a permanent hang.
+            let (w, res) = loop {
+                match self.res_rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok((w, s, res)) => {
+                        if s == seq {
+                            break (w, res);
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        if self.handles.iter().any(|h| h.is_finished()) {
+                            return Err(anyhow!(
+                                "a worker thread exited mid-update (panicked?)"
+                            ));
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(anyhow!("worker pool died mid-update"));
+                    }
+                }
+            };
+            match res {
+                Ok(out) => outs[w] = Some(out),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(outs
+            .into_iter()
+            .map(|o| o.expect("every worker replies exactly once"))
+            .collect())
+    }
+
+    /// Stop all workers and return their merged phase timers. A worker
+    /// that panicked is re-raised here rather than silently dropped.
+    pub fn shutdown(self) -> PhaseTimers {
+        for tx in &self.job_txs {
+            let _ = tx.send(Job::Finish);
+        }
+        let mut merged = PhaseTimers::new();
+        for (w, handle) in self.handles.into_iter().enumerate() {
+            match handle.join() {
+                Ok(timers) => {
+                    merged.merge(&timers);
+                    merged.merge_prefixed(&format!("w{w}/"), &timers);
+                }
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        merged
+    }
+}
+
+fn worker_loop<'scope, 'env: 'scope>(
+    index: usize,
+    scope: &'scope Scope<'scope, 'env>,
+    jobs: Receiver<Job>,
+    results: Sender<(usize, u64, Result<WorkerOut>)>,
+    data: &'env TrainData,
+    specs: &'env [ParamSpec],
+) -> PhaseTimers {
+    let prefetcher = Prefetcher::spawn(scope, data);
+    let mut acc = GradAccumulator::new(specs);
+    let mut timers = PhaseTimers::new();
+    while let Ok(job) = jobs.recv() {
+        match job {
+            Job::Finish => break,
+            Job::Run { seq, exe, params, shard, microbatch } => {
+                let out = run_shard(
+                    &prefetcher,
+                    &mut acc,
+                    &mut timers,
+                    data,
+                    &exe,
+                    &params,
+                    &shard,
+                    microbatch,
+                    specs,
+                );
+                // release the params snapshot *before* replying so the
+                // coordinator's post-barrier make_mut stays copy-free
+                drop(params);
+                drop(exe);
+                if results.send((index, seq, out)).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    timers
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_shard(
+    prefetcher: &Prefetcher,
+    acc: &mut GradAccumulator,
+    timers: &mut PhaseTimers,
+    data: &TrainData,
+    exe: &StepExecutable,
+    params: &ParamSet,
+    shard: &[usize],
+    microbatch: usize,
+    specs: &[ParamSpec],
+) -> Result<WorkerOut> {
+    if shard.is_empty() {
+        // idle worker this step (more workers than samples): zero-weight
+        // contribution, all-reduce ignores it
+        return Ok(WorkerOut {
+            grads: ParamSet::zeros_like(specs),
+            loss: 0.0,
+            correct: 0.0,
+            micro_sq_norms: Vec::new(),
+        });
+    }
+    let n_chunks = shard.len().div_ceil(microbatch);
+    for chunk in shard.chunks(microbatch) {
+        prefetcher.request(chunk.to_vec(), microbatch);
+    }
+    let dtype = data.x_dtype();
+    let mut failure: Option<anyhow::Error> = None;
+    for _ in 0..n_chunks {
+        // drain every prefetched buffer even after a failure, so the
+        // prefetcher is clean for the next job
+        let bufs = timers.time("gather", || prefetcher.next());
+        if failure.is_none() {
+            let x = match dtype {
+                Dtype::F32 => HostBatch::F32(&bufs.x_f32),
+                Dtype::I32 => HostBatch::I32(&bufs.x_i32),
+            };
+            match timers.time("fwd_bwd", || exe.run(params, x, &bufs.y)) {
+                Ok(out) => acc.add(
+                    out.grads.as_ref().expect("train step must emit grads"),
+                    out.loss,
+                    out.correct,
+                ),
+                Err(e) => failure = Some(e),
+            }
+        }
+        prefetcher.recycle(bufs);
+    }
+    if let Some(e) = failure {
+        if acc.count() > 0 {
+            let _ = acc.finish(); // reset for the next job
+        }
+        return Err(e);
+    }
+    let (grads, loss, correct, micro_sq_norms) = acc.finish();
+    Ok(WorkerOut { grads, loss, correct, micro_sq_norms })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+    use crate::runtime::{ModelRuntime, StepKind};
+
+    fn tiny_data() -> TrainData {
+        let mut spec = SyntheticSpec::cifar10();
+        spec.n_classes = 4;
+        spec.train_per_class = 16;
+        spec.test_per_class = 4;
+        TrainData::Images(generate(&spec).train)
+    }
+
+    #[test]
+    fn pool_produces_weighted_mean_of_serial_shards() {
+        let data = tiny_data();
+        let rt = ModelRuntime::reference_classifier("ref", IMG_LEN, 4, &[4, 8], 16);
+        let exe = rt.executable(StepKind::Train, 4).unwrap();
+        let params = Arc::new(ParamSet::init(&rt.entry.params, 7));
+        let batch: Vec<usize> = (0..16).collect();
+        let shards = crate::data::shard::shard_batch(&batch, 2);
+
+        // serial reference: run each shard inline through the same exe
+        let mut serial: Vec<WorkerOut> = Vec::new();
+        std::thread::scope(|s| {
+            let pf = Prefetcher::spawn(s, &data);
+            let mut acc = GradAccumulator::new(&rt.entry.params);
+            let mut timers = PhaseTimers::new();
+            for shard in &shards {
+                let specs = &rt.entry.params;
+                let out =
+                    run_shard(&pf, &mut acc, &mut timers, &data, &exe, &params, shard, 4, specs);
+                serial.push(out.unwrap());
+            }
+        });
+
+        // pool: same shards through two real threads
+        let pooled: Vec<WorkerOut> = std::thread::scope(|s| {
+            let mut engine = Engine::start(s, 2, &data, &rt.entry.params);
+            let outs = engine.dispatch(&exe, &params, shards.clone(), 4).unwrap();
+            engine.shutdown();
+            outs
+        });
+
+        for (a, b) in serial.iter().zip(&pooled) {
+            assert_eq!(a.loss, b.loss, "per-shard loss must be bitwise equal");
+            assert_eq!(a.micro_sq_norms, b.micro_sq_norms);
+            for (x, y) in a.grads.bufs.iter().zip(&b.grads.bufs) {
+                assert_eq!(x, y, "per-shard grads must be bitwise equal");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shards_idle_cleanly() {
+        let data = tiny_data();
+        let rt = ModelRuntime::reference_classifier("ref", IMG_LEN, 4, &[4], 16);
+        let exe = rt.executable(StepKind::Train, 4).unwrap();
+        let params = Arc::new(ParamSet::init(&rt.entry.params, 0));
+        std::thread::scope(|s| {
+            let mut engine = Engine::start(s, 3, &data, &rt.entry.params);
+            // 4 samples over 3 workers: last worker idles? (4 = 2+1+1)
+            let shards = crate::data::shard::shard_batch(&[0, 1, 2, 3], 3);
+            let outs = engine.dispatch(&exe, &params, shards, 4).unwrap();
+            assert_eq!(outs.len(), 3);
+            // a second dispatch with an all-empty tail still works
+            let shards = crate::data::shard::shard_batch(&[0], 3);
+            let outs = engine.dispatch(&exe, &params, shards, 4).unwrap();
+            assert_eq!(outs[1].micro_sq_norms.len(), 0);
+            assert_eq!(outs[2].loss, 0.0);
+            let timers = engine.shutdown();
+            assert!(timers.count("fwd_bwd") > 0);
+            assert!(timers.count("w0/fwd_bwd") > 0);
+        });
+    }
+
+    #[test]
+    fn pool_timers_cover_all_workers() {
+        let data = tiny_data();
+        let rt = ModelRuntime::reference_classifier("ref", IMG_LEN, 4, &[8], 16);
+        let exe = rt.executable(StepKind::Train, 8).unwrap();
+        let params = Arc::new(ParamSet::init(&rt.entry.params, 1));
+        let timers = std::thread::scope(|s| {
+            let mut engine = Engine::start(s, 2, &data, &rt.entry.params);
+            let batch: Vec<usize> = (0..16).collect();
+            for _ in 0..3 {
+                let shards = crate::data::shard::shard_batch(&batch, 2);
+                engine.dispatch(&exe, &params, shards, 8).unwrap();
+            }
+            engine.shutdown()
+        });
+        assert_eq!(timers.count("fwd_bwd"), 2 * 3);
+        assert_eq!(timers.count("w0/fwd_bwd"), 3);
+        assert_eq!(timers.count("w1/fwd_bwd"), 3);
+        assert!(timers.count("gather") >= 6);
+    }
+}

@@ -1,7 +1,10 @@
 //! The L3 coordinator — AdaBatch's system contribution.
 //!
-//! * [`controller`] — the epoch/iteration training loop with schedule
-//!   transitions, re-planning, divergence guard and phase timing.
+//! * [`controller`] — the single training loop, generic over
+//!   [`crate::schedule::BatchGovernor`]: schedule transitions,
+//!   re-planning, divergence guard and phase timing.
+//! * [`engine`] — the persistent worker-pool execution engine (one thread
+//!   per data-parallel replica, with prefetching).
 //! * [`accumulate`] — gradient accumulation (Eq. 5 / §4.3).
 //! * [`allreduce`] — naive/ring/tree replica gradient reduction.
 //! * [`dataset`] — unified image/LM gather interface.
@@ -12,10 +15,12 @@ pub mod allreduce;
 pub mod checkpoint;
 pub mod controller;
 pub mod dataset;
+pub mod engine;
 pub mod eval;
 
 pub use accumulate::GradAccumulator;
 pub use allreduce::{allreduce_mean, allreduce_params, Algorithm};
-pub use controller::{clamp_batch, train, train_variance_adaptive, TrainerConfig};
+pub use controller::{clamp_batch, train, TrainerConfig};
 pub use dataset::{GatherBufs, TrainData};
+pub use engine::{Engine, WorkerOut};
 pub use eval::{evaluate, EvalResult};

@@ -85,6 +85,94 @@ impl BatchPlanner {
     }
 }
 
+/// Reusable gather buffers (one set per consumer keeps the hot loop
+/// allocation-free).
+#[derive(Debug, Default)]
+pub struct GatherBufs {
+    pub x_f32: Vec<f32>,
+    pub x_i32: Vec<i32>,
+    pub y: Vec<i32>,
+}
+
+/// Anything a [`Prefetcher`] can gather batches from (implemented by
+/// `coordinator::dataset::TrainData`; kept as a trait so the data layer
+/// does not depend on the coordinator).
+pub trait Gather: Sync {
+    /// Gather `idx` into `bufs`, padding to `pad_to` samples.
+    fn gather_into(&self, idx: &[usize], pad_to: usize, bufs: &mut GatherBufs);
+}
+
+/// Double-buffered gather prefetcher: a dedicated thread fills one
+/// [`GatherBufs`] while the consumer computes on the other, so host-side
+/// gather overlaps fwd/bwd execution. Exactly [`Prefetcher::DEPTH`]
+/// buffers circulate (request → fill → consume → recycle), which bounds
+/// memory to two in-flight batches and applies natural back-pressure: the
+/// gather thread blocks until the consumer recycles a buffer.
+///
+/// Built on scoped threads so the dataset is borrowed, not cloned —
+/// `spawn` ties the prefetch thread's lifetime to the caller's
+/// [`std::thread::scope`].
+pub struct Prefetcher {
+    req_tx: std::sync::mpsc::Sender<(Vec<usize>, usize)>,
+    full_rx: std::sync::mpsc::Receiver<GatherBufs>,
+    recycle_tx: std::sync::mpsc::Sender<GatherBufs>,
+}
+
+impl Prefetcher {
+    /// Buffers in circulation (double buffering).
+    pub const DEPTH: usize = 2;
+
+    /// Spawn the gather thread inside `scope`, reading from `data`.
+    pub fn spawn<'scope, 'env, D>(
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        data: &'env D,
+    ) -> Prefetcher
+    where
+        D: Gather + ?Sized,
+    {
+        use std::sync::mpsc::channel;
+        let (req_tx, req_rx) = channel::<(Vec<usize>, usize)>();
+        let (full_tx, full_rx) = channel::<GatherBufs>();
+        let (recycle_tx, recycle_rx) = channel::<GatherBufs>();
+        for _ in 0..Self::DEPTH {
+            recycle_tx.send(GatherBufs::default()).expect("fresh channel");
+        }
+        scope.spawn(move || {
+            while let Ok((idx, pad_to)) = req_rx.recv() {
+                // block until the consumer hands a buffer back
+                let Ok(mut bufs) = recycle_rx.recv() else { break };
+                data.gather_into(&idx, pad_to, &mut bufs);
+                if full_tx.send(bufs).is_err() {
+                    break; // consumer gone
+                }
+            }
+        });
+        Prefetcher { req_tx, full_rx, recycle_tx }
+    }
+
+    /// Queue one gather. Requests are index lists only (cheap); at most
+    /// DEPTH gathers are materialized at a time regardless of how many
+    /// are queued.
+    pub fn request(&self, idx: Vec<usize>, pad_to: usize) {
+        self.req_tx
+            .send((idx, pad_to))
+            .expect("prefetch thread terminated");
+    }
+
+    /// Receive the next filled buffer, in request order (blocks until the
+    /// gather thread produces it).
+    pub fn next(&self) -> GatherBufs {
+        self.full_rx.recv().expect("prefetch thread terminated")
+    }
+
+    /// Return a consumed buffer to circulation.
+    pub fn recycle(&self, bufs: GatherBufs) {
+        // the gather thread may already have exited (end of training);
+        // dropping the buffer is then correct
+        let _ = self.recycle_tx.send(bufs);
+    }
+}
+
 /// Gather a batch of images into a contiguous NHWC buffer.
 pub fn gather_f32(samples: &[f32], sample_len: usize, idx: &[usize], out: &mut Vec<f32>) {
     out.clear();
@@ -202,6 +290,49 @@ mod tests {
                 flat == (0..n).collect::<Vec<_>>()
             },
         );
+    }
+
+    /// Minimal Gather impl: "sample i" is the single f32 value i.
+    struct ScalarData;
+
+    impl Gather for ScalarData {
+        fn gather_into(&self, idx: &[usize], pad_to: usize, bufs: &mut GatherBufs) {
+            bufs.x_f32.clear();
+            bufs.x_f32.extend(idx.iter().map(|&i| i as f32));
+            bufs.x_f32.resize(pad_to, -1.0);
+            bufs.y.clear();
+            bufs.y.extend(idx.iter().map(|&i| i as i32));
+            bufs.y.resize(pad_to, -1);
+        }
+    }
+
+    #[test]
+    fn prefetcher_delivers_in_request_order() {
+        std::thread::scope(|s| {
+            let pf = Prefetcher::spawn(s, &ScalarData);
+            // queue more requests than DEPTH: back-pressure must not lose
+            // or reorder any of them
+            for k in 0..5usize {
+                pf.request(vec![k, k + 10], 3);
+            }
+            for k in 0..5usize {
+                let bufs = pf.next();
+                assert_eq!(bufs.x_f32, vec![k as f32, (k + 10) as f32, -1.0]);
+                assert_eq!(bufs.y, vec![k as i32, (k + 10) as i32, -1]);
+                pf.recycle(bufs);
+            }
+        });
+    }
+
+    #[test]
+    fn prefetcher_shuts_down_cleanly_on_drop() {
+        std::thread::scope(|s| {
+            let pf = Prefetcher::spawn(s, &ScalarData);
+            pf.request(vec![1], 1);
+            let b = pf.next();
+            drop(pf); // gather thread must exit; scope would hang otherwise
+            drop(b);
+        });
     }
 
     #[test]

@@ -1,84 +1,102 @@
-//! Ablation — AdaBatch's fixed-interval doubling vs the gradient-variance
-//! adaptive criterion (Byrd et al. 2012 / De et al. 2016 / Balles et al.
-//! 2017), the alternative §2 positions AdaBatch against.
+//! Ablation — the batch-size *criterion family* head-to-head, every arm
+//! running through the same generic training loop:
 //!
-//! The variance controller doubles the batch when the measured
-//! signal-to-noise ratio of the gradient falls below a threshold, using
-//! statistics the accumulation loop produces for free. The comparison run
-//! shows (a) both reach large batches, (b) the interval rule needs no
-//! statistics plumbing or threshold tuning — the paper's simplicity
-//! argument — while (c) the variance rule adapts its transition points to
-//! the actual optimization trace.
+//! * AdaBatch's fixed-interval doubling (§3, the paper's rule);
+//! * the gradient-variance / SNR criterion (Byrd et al. 2012; De et al.
+//!   2016; Balles et al. 2017);
+//! * the gradient-diversity criterion (Yin et al. 2018; DiveBatch);
+//! * a fixed small-batch reference.
+//!
+//! The comparison shows (a) all adaptive arms reach large batches, (b)
+//! the interval rule needs no statistics plumbing or threshold tuning —
+//! the paper's simplicity argument — while (c) the data-driven rules
+//! adapt their transition points to the actual optimization trace. Each
+//! criterion is a [`BatchGovernor`]; none required a bespoke loop.
 
 use anyhow::Result;
 
 use super::harness::ExpCtx;
-use crate::coordinator::{train, train_variance_adaptive, TrainerConfig};
-use crate::schedule::{AdaBatchPolicy, BatchSchedule, GradVarianceController, LrSchedule};
+use crate::coordinator::{train, TrainerConfig};
+use crate::metrics::RunHistory;
+use crate::schedule::{
+    AdaBatchPolicy, BatchGovernor, BatchSchedule, DiversityGovernor, GradVarianceController,
+    IntervalGovernor, LrSchedule, VarianceGovernor,
+};
 use crate::util::table::Table;
 
 pub fn run(ctx: &ExpCtx) -> Result<()> {
-    println!("## ablation: interval doubling vs gradient-variance criterion\n");
+    println!("## ablation: batch-size criteria (interval vs variance vs diversity)\n");
     let data = ctx.cifar10();
     let rt = ctx.runtime("alexnet_lite_c10")?;
     let interval = (ctx.epochs / 5).max(1);
 
     let mut table = Table::new(
-        "schedule ablation (synthetic CIFAR-10, AlexNet-lite)",
-        &["arm", "best error", "final batch", "batch transitions"],
+        "criterion ablation (synthetic CIFAR-10, AlexNet-lite)",
+        &["arm", "best error", "final batch", "batch transitions", "decisions"],
     );
 
-    // arm 1: the paper's interval rule
-    let interval_policy = AdaBatchPolicy::new(
-        "interval-x2",
-        BatchSchedule::doubling(32, interval),
-        LrSchedule::step(0.01, 0.75, interval),
-    );
-    let cfg = TrainerConfig::new(interval_policy.clone(), ctx.epochs).with_seed(21);
-    let (hist, _) = train(&rt, &cfg, &data.0, &data.1)?;
-    let transitions: Vec<usize> = interval_policy.batch.transition_epochs(ctx.epochs);
-    table.row(vec![
-        "AdaBatch interval ×2".into(),
-        format!("{:.3}", hist.best_test_error()),
-        hist.epochs.last().map(|e| e.batch).unwrap_or(0).to_string(),
-        format!("{transitions:?}"),
-    ]);
+    // flat LR for the data-driven arms: batch growth *is* the decay (§3.1)
+    let flat_lr = || LrSchedule::step(0.01, 1.0, ctx.epochs + 1);
+    // Data-driven criteria read per-microbatch gradient statistics, which
+    // only exist when an update accumulates ≥ 2 microbatches — cap their
+    // device microbatch at the largest native size ≤ half the initial
+    // batch (None would let batch 32 run as one native-32 pass and the
+    // variance estimate would be identically zero).
+    let stats_cap = rt.largest_train_microbatch(32 / 2);
 
-    // arm 2: variance-based controller (same base LR, no step decay — the
-    // batch growth *is* the decay)
-    let flat_policy = AdaBatchPolicy::new(
-        "variance",
-        BatchSchedule::Fixed(32),
-        LrSchedule::step(0.01, 1.0, ctx.epochs + 1),
-    );
-    let cfg = TrainerConfig::new(flat_policy, ctx.epochs).with_seed(21);
-    let mut ctrl = GradVarianceController::new(32, 1.0, 8, 2, 512);
-    let hist = train_variance_adaptive(&rt, &cfg, &mut ctrl, &data.0, &data.1)?;
-    let trans: Vec<usize> = hist
-        .epochs
-        .windows(2)
-        .filter(|w| w[1].batch != w[0].batch)
-        .map(|w| w[1].epoch)
-        .collect();
-    table.row(vec![
-        "gradient-variance ×2".into(),
-        format!("{:.3}", hist.best_test_error()),
-        hist.epochs.last().map(|e| e.batch).unwrap_or(0).to_string(),
-        format!("{trans:?} ({} decisions)", ctrl.decisions()),
-    ]);
+    let mut arms: Vec<(&str, Box<dyn BatchGovernor>, Option<usize>)> = vec![
+        (
+            "AdaBatch interval ×2",
+            Box::new(IntervalGovernor::new(AdaBatchPolicy::new(
+                "interval-x2",
+                BatchSchedule::doubling(32, interval),
+                LrSchedule::step(0.01, 0.75, interval),
+            ))),
+            None,
+        ),
+        (
+            "gradient-variance ×2",
+            Box::new(VarianceGovernor::new(
+                GradVarianceController::new(32, 1.0, 8, 2, 512),
+                flat_lr(),
+            )),
+            stats_cap,
+        ),
+        (
+            "gradient-diversity",
+            Box::new(DiversityGovernor::new(32, flat_lr(), 8, 2, 512)),
+            stats_cap,
+        ),
+        (
+            "fixed 32",
+            Box::new(IntervalGovernor::new(AdaBatchPolicy::sec41_fixed(32))),
+            None,
+        ),
+    ];
 
-    // arm 3: fixed small baseline for reference
-    let fixed = AdaBatchPolicy::sec41_fixed(32);
-    let cfg = TrainerConfig::new(fixed, ctx.epochs).with_seed(21);
-    let (hist, _) = train(&rt, &cfg, &data.0, &data.1)?;
-    table.row(vec![
-        "fixed 32".into(),
-        format!("{:.3}", hist.best_test_error()),
-        "32".into(),
-        "[]".into(),
-    ]);
+    for (label, governor, max_microbatch) in arms.iter_mut() {
+        let mut cfg = TrainerConfig::new(ctx.epochs).with_seed(21).with_workers(ctx.workers);
+        cfg.max_microbatch = *max_microbatch;
+        let (hist, _) = train(&rt, &cfg, governor.as_mut(), &data.0, &data.1)?;
+        table.row(vec![
+            label.to_string(),
+            format!("{:.3}", hist.best_test_error()),
+            hist.epochs.last().map(|e| e.batch).unwrap_or(0).to_string(),
+            format!("{:?}", transitions(&hist)),
+            governor.decisions().to_string(),
+        ]);
+    }
 
     table.print();
     table.write_csv(&ctx.outdir.join("ablation.csv"))?;
     Ok(())
+}
+
+/// Epochs at which the realized batch size changed.
+fn transitions(hist: &RunHistory) -> Vec<usize> {
+    hist.epochs
+        .windows(2)
+        .filter(|w| w[1].batch != w[0].batch)
+        .map(|w| w[1].epoch)
+        .collect()
 }

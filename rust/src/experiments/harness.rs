@@ -15,7 +15,7 @@ use crate::coordinator::{train, TrainData, TrainerConfig};
 use crate::data::synthetic::{generate, SyntheticSpec};
 use crate::metrics::{PhaseTimers, RunHistory};
 use crate::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
-use crate::schedule::AdaBatchPolicy;
+use crate::schedule::{AdaBatchPolicy, IntervalGovernor};
 use crate::util::stats;
 use crate::util::table::{write_series_csv, Series};
 
@@ -69,7 +69,9 @@ impl ExpCtx {
         (TrainData::Images(d.train), TrainData::Images(d.test))
     }
 
-    /// Run one arm for `trials` seeds; returns per-trial histories.
+    /// Run one arm for `trials` seeds; returns per-trial histories. Paper
+    /// arms are interval policies, so each trial gets a fresh
+    /// [`IntervalGovernor`] over the shared generic loop.
     pub fn run_arm(
         &self,
         rt: &ModelRuntime,
@@ -79,11 +81,12 @@ impl ExpCtx {
     ) -> Result<Vec<(RunHistory, PhaseTimers)>> {
         let mut out = Vec::with_capacity(self.trials);
         for trial in 0..self.trials {
-            let mut cfg = TrainerConfig::new(policy.clone(), self.epochs)
+            let mut cfg = TrainerConfig::new(self.epochs)
                 .with_seed(1000 + trial as u64)
                 .with_workers(self.workers);
             cfg.max_microbatch = max_microbatch;
-            out.push(train(rt, &cfg, &data.0, &data.1)?);
+            let mut governor = IntervalGovernor::new(policy.clone());
+            out.push(train(rt, &cfg, &mut governor, &data.0, &data.1)?);
         }
         Ok(out)
     }

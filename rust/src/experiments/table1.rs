@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use super::harness::ExpCtx;
 use crate::coordinator::{train, TrainerConfig};
-use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use crate::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
 use crate::simulator::{calibrate, TABLE1_ANCHORS};
 use crate::util::table::Table;
 
@@ -115,8 +115,9 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 sched.clone(),
                 LrSchedule::step(0.01, lr_decay, interval),
             );
-            let cfg = TrainerConfig::new(policy, ctx.epochs).with_seed(0);
-            let (hist, timers) = train(&rt, &cfg, &data.0, &data.1)?;
+            let cfg = TrainerConfig::new(ctx.epochs).with_seed(0);
+            let mut governor = IntervalGovernor::new(policy);
+            let (hist, timers) = train(&rt, &cfg, &mut governor, &data.0, &data.1)?;
             let t = timers.total("fwd_bwd").as_secs_f64();
             let updates: usize = hist.epochs.iter().map(|e| e.iterations).sum();
             if label == "fixed" {

@@ -4,12 +4,15 @@
 //! *AdaBatch: Adaptive Batch Sizes for Training Deep Neural Networks*
 //! (2017). Three-layer architecture (see DESIGN.md):
 //!
-//! * **L3 (this crate)** — the training coordinator: batch-size/LR
-//!   schedules with the effective-learning-rate coupling invariant,
-//!   gradient accumulation, data-parallel workers + all-reduce, PJRT
-//!   runtime with a per-batch-size executable cache, GPU-cluster
-//!   performance simulator, and the experiment harnesses that regenerate
-//!   every table and figure of the paper.
+//! * **L3 (this crate)** — the training coordinator: a single training
+//!   loop generic over [`schedule::BatchGovernor`] batch-size criteria
+//!   (interval / gradient-variance / gradient-diversity) with the
+//!   effective-learning-rate coupling invariant, gradient accumulation, a
+//!   worker-pool execution engine (one thread per data-parallel replica,
+//!   prefetching, all-reduce), a runtime with a per-batch-size executable
+//!   cache (PJRT artifacts or the pure-Rust reference backend), a
+//!   GPU-cluster performance simulator, and the experiment harnesses that
+//!   regenerate every table and figure of the paper.
 //! * **L2** — JAX model graphs (`python/compile/models/`), AOT-lowered to
 //!   HLO text artifacts consumed by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) for the GEMM /

@@ -18,7 +18,10 @@ use adabatch::data::corpus::LmDataset;
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::experiments::{self, harness::ExpCtx};
 use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
-use adabatch::schedule::BatchSchedule;
+use adabatch::schedule::{
+    BatchGovernor, BatchSchedule, DiversityGovernor, GradVarianceController, IntervalGovernor,
+    LrSchedule, VarianceGovernor,
+};
 use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
 use adabatch::util::cli::Command;
 use adabatch::util::logging;
@@ -80,10 +83,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("lr-decay", "0.75", "LR decay per interval")
         .opt("warmup", "0", "LR warmup epochs (Goyal et al.)")
         .opt("warmup-scale", "1.0", "warmup target scale (batch/base-batch)")
-        .opt("workers", "1", "logical data-parallel replicas")
+        .opt("workers", "1", "data-parallel replica threads")
         .opt("allreduce", "ring", "naive|ring|tree")
         .opt("max-microbatch", "0", "device memory cap (0 = none)")
         .opt("seed", "0", "PRNG seed")
+        .opt("governor", "interval", "criterion: interval|variance|diversity")
+        .opt("max-batch", "0", "adaptive-governor batch cap (0 = 16× initial)")
         .flag("help", "show usage");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.usage());
@@ -91,9 +96,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     let a = cmd.parse(argv)?;
 
+    let initial_batch = a.usize("batch")?;
     let policy = build_policy(
         "cli",
-        a.usize("batch")?,
+        initial_batch,
         a.usize("interval")?,
         a.usize("factor")?,
         a.f64("lr")?,
@@ -110,10 +116,59 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     job.trainer.max_microbatch = (cap > 0).then_some(cap);
     job.validate()?;
 
+    // batch criterion: the paper's interval policy, or a data-driven
+    // governor. Data-driven governors keep the LR flat after warmup
+    // (growth is the decay, §3.1) — --lr-decay/--interval shape the
+    // interval governor only.
+    let max_batch = match a.usize("max-batch")? {
+        0 => initial_batch * 16,
+        m => m,
+    };
+    let factor = a.usize("factor")?.max(2);
+    let warmup = a.usize("warmup")?;
+    let flat_lr = if warmup > 0 {
+        LrSchedule::step_with_warmup(
+            a.f64("lr")?,
+            1.0,
+            job.trainer.epochs + 1,
+            warmup,
+            a.f64("warmup-scale")?,
+        )
+    } else {
+        LrSchedule::step(a.f64("lr")?, 1.0, job.trainer.epochs + 1)
+    };
+    let governor_name = a.str("governor");
+    let mut governor: Box<dyn BatchGovernor> = match governor_name.as_str() {
+        "interval" => Box::new(IntervalGovernor::new(job.policy.clone())),
+        "variance" => Box::new(VarianceGovernor::new(
+            GradVarianceController::new(initial_batch, 1.0, 8, factor, max_batch),
+            flat_lr,
+        )),
+        "diversity" => {
+            Box::new(DiversityGovernor::new(initial_batch, flat_lr, 8, factor, max_batch))
+        }
+        other => bail!("unknown governor {other:?} (interval|variance|diversity)"),
+    };
     let manifest = Manifest::load(default_artifacts_dir())?;
     let rt = ModelRuntime::new(Client::cpu()?, manifest.model(&job.model)?.clone());
+
+    // Variance/diversity statistics come from per-microbatch gradients, so
+    // an update realized as ONE microbatch carries no signal. Default the
+    // memory cap to the largest *native* microbatch ≤ half the initial
+    // batch so accumulation always yields ≥ 2 microbatches; an explicit
+    // --max-microbatch wins, and if no native size fits the controller
+    // warns and runs without adaptation signal.
+    if governor_name != "interval" && job.trainer.max_microbatch.is_none() {
+        if let Some(cap) = rt.largest_train_microbatch(initial_batch / 2) {
+            job.trainer.max_microbatch = Some(cap);
+            log::info!(
+                "--governor {governor_name}: defaulting --max-microbatch to {cap} so \
+                 every update accumulates ≥ 2 microbatches (gradient statistics need them)"
+            );
+        }
+    }
     let (train_data, test_data) = load_dataset(&dataset);
-    let (hist, timers) = train(&rt, &job.trainer, &train_data, &test_data)?;
+    let (hist, timers) = train(&rt, &job.trainer, governor.as_mut(), &train_data, &test_data)?;
 
     println!("\nepoch  batch    lr        train-loss  test-loss  test-err  iters  secs");
     for e in &hist.epochs {

@@ -57,6 +57,18 @@ impl PhaseTimers {
         }
     }
 
+    /// Merge `other` under `prefix` (e.g. `w3/fwd_bwd`) — how the engine
+    /// folds per-worker timers into the run's timers without losing
+    /// attribution.
+    pub fn merge_prefixed(&mut self, prefix: &str, other: &PhaseTimers) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(format!("{prefix}{k}")).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(format!("{prefix}{k}")).or_default() += *v;
+        }
+    }
+
     pub fn phases(&self) -> impl Iterator<Item = (&str, Duration, u64)> {
         self.totals
             .iter()
@@ -170,6 +182,18 @@ mod tests {
         assert_eq!(a.total("x"), Duration::from_millis(3));
         assert_eq!(a.count("x"), 2);
         assert_eq!(a.total("y"), Duration::from_millis(3));
+    }
+
+    #[test]
+    fn timers_merge_prefixed() {
+        let mut worker = PhaseTimers::new();
+        worker.add("fwd_bwd", Duration::from_millis(4));
+        let mut run = PhaseTimers::new();
+        run.merge(&worker);
+        run.merge_prefixed("w0/", &worker);
+        assert_eq!(run.total("fwd_bwd"), Duration::from_millis(4));
+        assert_eq!(run.total("w0/fwd_bwd"), Duration::from_millis(4));
+        assert_eq!(run.count("w0/fwd_bwd"), 1);
     }
 
     #[test]

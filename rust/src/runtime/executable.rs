@@ -1,5 +1,5 @@
-//! Compiled-step management: one PJRT executable per (model, step-kind,
-//! microbatch), compiled lazily from HLO text and cached.
+//! Compiled-step management: one executable per (model, step-kind,
+//! microbatch), resolved lazily and cached.
 //!
 //! This cache is the systems consequence of AdaBatch: XLA specializes
 //! executables on shapes, so a batch-size *schedule* becomes an executable
@@ -7,11 +7,21 @@
 //! per-worker shard and realizes the rest via gradient accumulation
 //! (paper §4.3) — see [`super::plan`].
 //!
-//! Marshalling strategy: inputs go host→device via
-//! `buffer_from_host_buffer` (no intermediate Literal copy) and execution
-//! uses `execute_b`; parameters are uploaded once per step from the
-//! host-side [`ParamSet`] (the optimizer mutates host buffers). The perf
-//! pass (EXPERIMENTS.md §Perf) measures marshalling vs. execute cost.
+//! Two backends sit behind the same [`StepExecutable`] interface:
+//!
+//! * **PJRT** — compile HLO-text artifacts through the xla bindings.
+//!   Marshalling strategy: inputs go host→device via
+//!   `buffer_from_host_buffer` (no intermediate Literal copy), execution
+//!   uses `execute_b`; parameters are uploaded once per step from the
+//!   host-side [`ParamSet`] (the optimizer mutates host buffers).
+//! * **Reference** — the pure-Rust differentiable models of
+//!   [`super::reference`], used by tests/CI and any machine without the
+//!   native runtime. Same step contract, no artifacts needed.
+//!
+//! Executables are immutable after construction and shared across the
+//! worker-pool engine's threads as `Arc<StepExecutable>`; `run` takes
+//! `&self` and allocates its own outputs, so concurrent microbatch
+//! execution from multiple workers is safe by construction.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
@@ -20,6 +30,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use super::artifact::{Dtype, ModelEntry};
 use super::client::Client;
+use super::reference::{RefKind, RefModel};
 use crate::optim::param::ParamSet;
 
 /// Train or eval step.
@@ -46,21 +57,42 @@ pub struct StepOutputs {
     pub grads: Option<ParamSet>,
 }
 
-/// One compiled (model, kind, microbatch) step.
+/// The execution substrate behind one step.
+enum ExecImpl {
+    Pjrt { exe: xla::PjRtLoadedExecutable, client: Client },
+    Reference(RefModel),
+}
+
+/// One resolved (model, kind, microbatch) step.
 pub struct StepExecutable {
-    exe: xla::PjRtLoadedExecutable,
+    imp: ExecImpl,
     pub kind: StepKind,
     pub batch: usize,
     entry: Arc<ModelEntry>,
-    client: Client,
 }
 
 impl StepExecutable {
-    /// Execute on a full batch of exactly `self.batch` samples.
+    /// Execute on a full (padded) batch of exactly `self.batch` samples.
     pub fn run(&self, params: &ParamSet, x: HostBatch<'_>, y: &[i32]) -> Result<StepOutputs> {
+        match &self.imp {
+            ExecImpl::Reference(model) => {
+                model.run(params, x, y, self.batch, self.kind == StepKind::Train)
+            }
+            ExecImpl::Pjrt { exe, client } => self.run_pjrt(exe, client, params, x, y),
+        }
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        client: &Client,
+        params: &ParamSet,
+        x: HostBatch<'_>,
+        y: &[i32],
+    ) -> Result<StepOutputs> {
         let n_params = self.entry.params.len();
         assert_eq!(params.num_tensors(), n_params, "param arity mismatch");
-        let raw = self.client.raw();
+        let raw = client.raw();
 
         let mut args: Vec<xla::PjRtBuffer> = Vec::with_capacity(n_params + 2);
         for (spec, buf) in self.entry.params.iter().zip(&params.bufs) {
@@ -93,7 +125,7 @@ impl StepExecutable {
                 .context("uploading y")?,
         );
 
-        let out = self.exe.execute_b(&args).context("execute")?;
+        let out = exe.execute_b(&args).context("execute")?;
         let lit = out[0][0]
             .to_literal_sync()
             .context("downloading outputs")?;
@@ -133,30 +165,102 @@ impl StepExecutable {
     }
 }
 
-/// Lazily-compiled executable cache for one model.
+/// Which substrate a [`ModelRuntime`] executes on.
+enum Backend {
+    Pjrt(Client),
+    Reference(RefModel),
+}
+
+/// Lazily-resolved executable cache for one model.
 pub struct ModelRuntime {
-    pub client: Client,
     pub entry: Arc<ModelEntry>,
+    backend: Backend,
     cache: Mutex<BTreeMap<(StepKind, usize), Arc<StepExecutable>>>,
     /// compile counters for tests/metrics
     compiles: Mutex<usize>,
 }
 
 impl ModelRuntime {
+    /// PJRT-backed runtime over AOT artifacts.
     pub fn new(client: Client, entry: ModelEntry) -> Self {
         ModelRuntime {
-            client,
             entry: Arc::new(entry),
+            backend: Backend::Pjrt(client),
             cache: Mutex::new(BTreeMap::new()),
             compiles: Mutex::new(0),
         }
+    }
+
+    /// Pure-Rust linear-softmax classifier runtime (no artifacts needed):
+    /// `in_dim` flat f32 features → `n_classes` logits. `train_batches`
+    /// plays the role of the native artifact ladder.
+    pub fn reference_classifier(
+        name: &str,
+        in_dim: usize,
+        n_classes: usize,
+        train_batches: &[usize],
+        eval_batch: usize,
+    ) -> Self {
+        let model = RefModel { kind: RefKind::Linear { in_dim }, n_classes };
+        let entry = reference_entry(
+            name,
+            vec![in_dim],
+            Dtype::F32,
+            vec![],
+            in_dim,
+            n_classes,
+            1,
+            train_batches,
+            eval_batch,
+        );
+        ModelRuntime {
+            entry: Arc::new(entry),
+            backend: Backend::Reference(model),
+            cache: Mutex::new(BTreeMap::new()),
+            compiles: Mutex::new(0),
+        }
+    }
+
+    /// Pure-Rust bigram LM runtime over token windows of `seq_len`.
+    pub fn reference_lm(
+        name: &str,
+        vocab: usize,
+        seq_len: usize,
+        train_batches: &[usize],
+        eval_batch: usize,
+    ) -> Self {
+        let model = RefModel { kind: RefKind::Bigram { vocab, seq_len }, n_classes: vocab };
+        let entry = reference_entry(
+            name,
+            vec![seq_len],
+            Dtype::I32,
+            vec![seq_len],
+            vocab,
+            vocab,
+            seq_len,
+            train_batches,
+            eval_batch,
+        );
+        ModelRuntime {
+            entry: Arc::new(entry),
+            backend: Backend::Reference(model),
+            cache: Mutex::new(BTreeMap::new()),
+            compiles: Mutex::new(0),
+        }
+    }
+
+    /// True when this runtime executes the pure-Rust reference backend
+    /// (no artifact files exist to validate or compile).
+    pub fn is_reference(&self) -> bool {
+        matches!(self.backend, Backend::Reference(_))
     }
 
     pub fn compiles(&self) -> usize {
         *self.compiles.lock().unwrap()
     }
 
-    /// The compiled step for (kind, microbatch); compiles on first use.
+    /// The resolved step for (kind, microbatch); compiles/builds on first
+    /// use.
     pub fn executable(&self, kind: StepKind, batch: usize) -> Result<Arc<StepExecutable>> {
         if let Some(e) = self.cache.lock().unwrap().get(&(kind, batch)) {
             return Ok(e.clone());
@@ -165,22 +269,29 @@ impl ModelRuntime {
             StepKind::Train => &self.entry.train,
             StepKind::Eval => &self.entry.eval,
         };
-        let path = table.get(&batch).ok_or_else(|| {
-            anyhow!(
-                "no {:?} artifact for model {} at microbatch {batch} (have {:?}); \
+        let Some(path) = table.get(&batch) else {
+            bail!(
+                "no {:?} step for model {} at microbatch {batch} (have {:?}); \
                  extend the aot.py build matrix or let the planner pick a native size",
                 kind,
                 self.entry.name,
                 table.keys().collect::<Vec<_>>()
-            )
-        })?;
-        let exe = self.client.compile_hlo_file(path)?;
+            );
+        };
+        let imp = match &self.backend {
+            // `path` is a reference:// pseudo-entry — only ladder
+            // membership matters for the reference backend
+            Backend::Reference(model) => ExecImpl::Reference(*model),
+            Backend::Pjrt(client) => {
+                let exe = client.compile_hlo_file(path)?;
+                ExecImpl::Pjrt { exe, client: client.clone() }
+            }
+        };
         let step = Arc::new(StepExecutable {
-            exe,
+            imp,
             kind,
             batch,
             entry: self.entry.clone(),
-            client: self.client.clone(),
         });
         *self.compiles.lock().unwrap() += 1;
         self.cache
@@ -211,10 +322,47 @@ impl ModelRuntime {
     }
 }
 
+/// Fabricate a [`ModelEntry`] for a reference-backend model. The artifact
+/// maps carry `reference://` pseudo-paths purely so the (kind, batch)
+/// ladder lookups work; nothing ever reads them from disk.
+#[allow(clippy::too_many_arguments)]
+fn reference_entry(
+    name: &str,
+    x_shape: Vec<usize>,
+    x_dtype: Dtype,
+    y_shape: Vec<usize>,
+    w_rows: usize,
+    n_classes: usize,
+    labels_per_sample: usize,
+    train_batches: &[usize],
+    eval_batch: usize,
+) -> ModelEntry {
+    use crate::optim::param::{Init, ParamSpec};
+    use crate::runtime::artifact::InputSpec;
+    let pseudo = |bs: usize, kind: &str| {
+        (bs, std::path::PathBuf::from(format!("reference://{name}/{kind}_bs{bs}")))
+    };
+    ModelEntry {
+        name: name.to_string(),
+        input: InputSpec { x_shape, x_dtype, y_shape, n_classes, labels_per_sample },
+        flops_per_sample: (2 * w_rows * n_classes) as u64,
+        params: vec![
+            ParamSpec { name: "w".into(), shape: vec![w_rows, n_classes], init: Init::Normal(0.01) },
+            ParamSpec { name: "b".into(), shape: vec![n_classes], init: Init::Zeros },
+        ],
+        train: train_batches.iter().map(|&bs| pseudo(bs, "train")).collect(),
+        eval: std::iter::once(pseudo(eval_batch, "eval")).collect(),
+    }
+}
+
 impl std::fmt::Debug for ModelRuntime {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("ModelRuntime")
             .field("model", &self.entry.name)
+            .field("backend", &match &self.backend {
+                Backend::Pjrt(_) => "pjrt",
+                Backend::Reference(_) => "reference",
+            })
             .field("train_batches", &self.entry.train_batches())
             .field("eval_batches", &self.entry.eval_batches())
             .finish()
@@ -271,5 +419,45 @@ mod tests {
         let n = rt.compiles();
         let _ = rt.executable(StepKind::Train, bs).unwrap();
         assert_eq!(rt.compiles(), n);
+    }
+
+    /// The same contract, always runnable: the reference backend honors
+    /// the executable ladder, the cache, and the step output shape.
+    #[test]
+    fn reference_backend_roundtrip() {
+        let rt = ModelRuntime::reference_classifier("ref", 12, 4, &[4, 8], 16);
+        assert!(rt.is_reference());
+        assert_eq!(rt.entry.train_batches(), vec![4, 8]);
+        assert_eq!(rt.eval_batch().unwrap(), 16);
+        assert_eq!(rt.largest_train_microbatch(6), Some(4));
+
+        let exe = rt.executable(StepKind::Train, 8).unwrap();
+        let params = ParamSet::init(&rt.entry.params, 1);
+        let x = vec![0.25f32; 8 * 12];
+        let y: Vec<i32> = (0..8).map(|i| i % 4).collect();
+        let out = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        let g = out.grads.unwrap();
+        assert_eq!(g.num_tensors(), 2);
+        assert!(g.all_finite());
+
+        // determinism + cache behavior, no artifacts required
+        let out2 = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        assert_eq!(out.loss, out2.loss);
+        assert_eq!(rt.compiles(), 1);
+        let _ = rt.executable(StepKind::Train, 8).unwrap();
+        assert_eq!(rt.compiles(), 1);
+
+        // off-ladder request fails loudly, like a missing artifact
+        assert!(rt.executable(StepKind::Train, 5).is_err());
+    }
+
+    /// The worker-pool engine shares executables across threads — keep
+    /// the Send + Sync guarantee visible at compile time.
+    #[test]
+    fn step_executable_is_send_sync() {
+        fn is_send_sync<T: Send + Sync>() {}
+        is_send_sync::<StepExecutable>();
+        is_send_sync::<ModelRuntime>();
     }
 }

@@ -6,9 +6,11 @@ pub mod artifact;
 pub mod client;
 pub mod executable;
 pub mod plan;
+pub mod reference;
 pub mod validate;
 
 pub use artifact::{default_artifacts_dir, Dtype, InputSpec, Manifest, ModelEntry};
 pub use client::Client;
 pub use executable::{HostBatch, ModelRuntime, StepExecutable, StepKind, StepOutputs};
 pub use plan::{plan, plan_schedule, ExecutionPlan};
+pub use reference::{RefKind, RefModel};

@@ -1,0 +1,261 @@
+//! Reference execution backend: a pure-Rust differentiable model behind
+//! the same [`StepExecutable`](super::StepExecutable) contract as the PJRT
+//! artifacts.
+//!
+//! Purpose: the coordinator, worker-pool engine, governors, accumulation
+//! and all-reduce are all *runtime-agnostic* — this backend lets the whole
+//! training stack run end-to-end (tests, benches, CI) on machines without
+//! the native xla_extension library or built artifacts. It implements the
+//! exact kernel semantics the AOT loss kernels promise:
+//!
+//! * loss is the **mean over `batch × labels_per_sample` rows including
+//!   padding**, with label < 0 rows contributing zero (eval's un-padding
+//!   arithmetic in `coordinator::eval` depends on this);
+//! * train-step gradients are **batch-mean scaled** (the 1/r of Eq. 2
+//!   lives in the loss), so accumulation/all-reduce reproduce large-batch
+//!   updates without further scaling;
+//! * execution is deterministic: fixed summation order, no threading.
+//!
+//! Two model families cover both dataset shapes the coordinator feeds:
+//! a linear softmax classifier for image data (f32 x, one label/sample)
+//! and a bigram LM for token data (i32 x, one label per position).
+
+use anyhow::{bail, Result};
+
+use super::executable::{HostBatch, StepOutputs};
+use crate::optim::param::ParamSet;
+
+/// Which differentiable reference model to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RefKind {
+    /// logits = x · W + b over flattened features (images).
+    Linear { in_dim: usize },
+    /// logits\[t\] = W\[token_t\] + b per position (token windows).
+    Bigram { vocab: usize, seq_len: usize },
+}
+
+/// A reference model instance: parameter layout is `[w, b]` with
+/// `w: [rows, n_classes]` (rows = in_dim or vocab) and `b: [n_classes]`.
+#[derive(Debug, Clone, Copy)]
+pub struct RefModel {
+    pub kind: RefKind,
+    pub n_classes: usize,
+}
+
+impl RefModel {
+    /// Label rows each sample contributes (1 for images, seq_len for LM).
+    pub fn rows_per_sample(&self) -> usize {
+        match self.kind {
+            RefKind::Linear { .. } => 1,
+            RefKind::Bigram { seq_len, .. } => seq_len,
+        }
+    }
+
+    /// Execute one step on a padded batch of exactly `batch` samples,
+    /// mirroring [`StepExecutable::run`](super::StepExecutable::run).
+    pub fn run(
+        &self,
+        params: &ParamSet,
+        x: HostBatch<'_>,
+        y: &[i32],
+        batch: usize,
+        want_grads: bool,
+    ) -> Result<StepOutputs> {
+        if params.num_tensors() != 2 {
+            bail!("reference model expects [w, b] params, got {}", params.num_tensors());
+        }
+        let c = self.n_classes;
+        let w = &params.bufs[0];
+        let b = &params.bufs[1];
+        let rows = batch * self.rows_per_sample();
+        if y.len() != rows {
+            bail!("reference model: {} labels for {rows} rows", y.len());
+        }
+        let inv = 1.0 / rows as f32;
+
+        let mut grads = want_grads.then(|| ParamSet::zeros_like(&params.specs));
+        let mut logits = vec![0.0f32; c];
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f32;
+
+        for row in 0..rows {
+            let label = y[row];
+            if label < 0 {
+                continue; // padding row: zero loss, zero grads
+            }
+            let label = label as usize;
+            if label >= c {
+                bail!("label {label} out of range for {c} classes");
+            }
+            // which w-row(s) produce this logit row
+            let w_row = match (self.kind, x) {
+                (RefKind::Linear { in_dim }, HostBatch::F32(data)) => {
+                    let xs = &data[row * in_dim..(row + 1) * in_dim];
+                    for (k, l) in logits.iter_mut().enumerate() {
+                        let mut acc = b[k];
+                        for (i, &xi) in xs.iter().enumerate() {
+                            acc += xi * w[i * c + k];
+                        }
+                        *l = acc;
+                    }
+                    usize::MAX // full dense grad, no single row
+                }
+                (RefKind::Bigram { vocab, .. }, HostBatch::I32(data)) => {
+                    let tok = data[row].clamp(0, vocab as i32 - 1) as usize;
+                    for (k, l) in logits.iter_mut().enumerate() {
+                        *l = b[k] + w[tok * c + k];
+                    }
+                    tok
+                }
+                _ => bail!("x dtype does not match reference model kind"),
+            };
+
+            // numerically-stable softmax cross-entropy
+            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f32;
+            for &l in &logits {
+                denom += (l - max).exp();
+            }
+            let log_denom = denom.ln();
+            loss_sum += f64::from((log_denom - (logits[label] - max)) * inv);
+            let argmax = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            if argmax == label {
+                correct += 1.0;
+            }
+
+            if let Some(g) = grads.as_mut() {
+                for k in 0..c {
+                    let onehot = if k == label { 1.0 } else { 0.0 };
+                    let p = ((logits[k] - max).exp() / denom) - onehot;
+                    let d = p * inv;
+                    g.bufs[1][k] += d;
+                    match (self.kind, x) {
+                        (RefKind::Linear { in_dim }, HostBatch::F32(data)) => {
+                            let xs = &data[row * in_dim..(row + 1) * in_dim];
+                            for (i, &xi) in xs.iter().enumerate() {
+                                g.bufs[0][i * c + k] += xi * d;
+                            }
+                        }
+                        (RefKind::Bigram { .. }, _) => {
+                            g.bufs[0][w_row * c + k] += d;
+                        }
+                        _ => unreachable!("dtype checked above"),
+                    }
+                }
+            }
+        }
+
+        Ok(StepOutputs { loss: loss_sum as f32, correct, grads })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::param::{Init, ParamSpec};
+
+    fn linear_model(in_dim: usize, c: usize) -> (RefModel, ParamSet) {
+        let specs = vec![
+            ParamSpec { name: "w".into(), shape: vec![in_dim, c], init: Init::Normal(0.1) },
+            ParamSpec { name: "b".into(), shape: vec![c], init: Init::Zeros },
+        ];
+        (RefModel { kind: RefKind::Linear { in_dim }, n_classes: c }, ParamSet::init(&specs, 3))
+    }
+
+    #[test]
+    fn uniform_logits_give_ln_c_loss() {
+        let (m, params) = {
+            let specs = vec![
+                ParamSpec { name: "w".into(), shape: vec![4, 3], init: Init::Zeros },
+                ParamSpec { name: "b".into(), shape: vec![3], init: Init::Zeros },
+            ];
+            let model = RefModel { kind: RefKind::Linear { in_dim: 4 }, n_classes: 3 };
+            (model, ParamSet::init(&specs, 0))
+        };
+        let x = vec![0.5f32; 2 * 4];
+        let out = m.run(&params, HostBatch::F32(&x), &[0, 2], 2, true).unwrap();
+        assert!((out.loss - (3.0f32).ln()).abs() < 1e-6, "loss {}", out.loss);
+        let g = out.grads.unwrap();
+        assert!(g.all_finite());
+        assert!(g.sq_norm() > 0.0);
+    }
+
+    #[test]
+    fn padding_rows_contribute_nothing() {
+        let (m, params) = linear_model(4, 3);
+        let x2 = vec![0.3f32; 2 * 4];
+        let full = m.run(&params, HostBatch::F32(&x2), &[1, 2], 2, true).unwrap();
+        // same two samples padded to batch 4: loss scales by 2/4, grads too
+        let x4 = {
+            let mut v = x2.clone();
+            v.extend_from_slice(&[0.0; 2 * 4]);
+            v
+        };
+        let padded = m.run(&params, HostBatch::F32(&x4), &[1, 2, -1, -1], 4, true).unwrap();
+        assert!((padded.loss - full.loss / 2.0).abs() < 1e-6);
+        assert_eq!(padded.correct, full.correct);
+        let (gf, gp) = (full.grads.unwrap(), padded.grads.unwrap());
+        for (a, b) in gf.bufs.iter().zip(&gp.bufs) {
+            for (x, y) in a.iter().zip(b) {
+                assert!((x / 2.0 - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let (m, mut params) = linear_model(3, 2);
+        let x = vec![0.7f32, -0.2, 0.4];
+        let y = [1i32];
+        let g = m.run(&params, HostBatch::F32(&x), &y, 1, true).unwrap().grads.unwrap();
+        let eps = 1e-3f32;
+        for t in 0..2 {
+            for i in 0..params.bufs[t].len() {
+                let orig = params.bufs[t][i];
+                params.bufs[t][i] = orig + eps;
+                let up = m.run(&params, HostBatch::F32(&x), &y, 1, false).unwrap().loss;
+                params.bufs[t][i] = orig - eps;
+                let dn = m.run(&params, HostBatch::F32(&x), &y, 1, false).unwrap().loss;
+                params.bufs[t][i] = orig;
+                let fd = (up - dn) / (2.0 * eps);
+                assert!(
+                    (fd - g.bufs[t][i]).abs() < 1e-3,
+                    "tensor {t} idx {i}: fd {fd} vs analytic {}",
+                    g.bufs[t][i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bigram_runs_on_token_windows() {
+        let vocab = 8;
+        let specs = vec![
+            ParamSpec { name: "w".into(), shape: vec![vocab, vocab], init: Init::Normal(0.2) },
+            ParamSpec { name: "b".into(), shape: vec![vocab], init: Init::Zeros },
+        ];
+        let params = ParamSet::init(&specs, 1);
+        let m = RefModel { kind: RefKind::Bigram { vocab, seq_len: 4 }, n_classes: vocab };
+        let x: Vec<i32> = vec![0, 1, 2, 3, 4, 5, 6, 7];
+        let y: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, -1];
+        let out = m.run(&params, HostBatch::I32(&x), &y, 2, true).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        let g = out.grads.unwrap();
+        assert!(g.all_finite());
+        // only visited token rows have gradient mass in w
+        let wg = &g.bufs[0];
+        assert!(wg.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let (m, params) = linear_model(4, 3);
+        let x = vec![0i32; 4];
+        assert!(m.run(&params, HostBatch::I32(&x), &[0], 1, true).is_err());
+    }
+}

@@ -1,0 +1,382 @@
+//! [`BatchGovernor`] — the single abstraction every batch-size criterion
+//! plugs into.
+//!
+//! The related work makes clear that batch-size criteria are a *family*:
+//! the paper's fixed-interval geometric ladder (§3), variance/SNR tests
+//! (Byrd et al. 2012; De et al. 2016; Balles et al. 2017 couple them to
+//! learning rates), and gradient-diversity rules (Yin et al. 2018;
+//! DiveBatch). Before this trait existed the coordinator forked a whole
+//! training loop per criterion; now the loop is generic and a new
+//! criterion is a ~50-line governor:
+//!
+//! * [`IntervalGovernor`] — the paper's AdaBatch arm, wrapping
+//!   [`AdaBatchPolicy`] (fixed-interval growth + coupled LR decay).
+//! * [`VarianceGovernor`] — grows when the measured gradient SNR drops
+//!   below a threshold (wraps [`GradVarianceController`]).
+//! * [`DiversityGovernor`] — grows toward `initial × diversity` where
+//!   diversity is the measured gradient-diversity ratio.
+//!
+//! Contract notes: `batch_for_epoch` is consulted once per epoch (batch
+//! transitions are epoch-granular so the executable ladder and epoch
+//! planner stay coherent); `observe` feeds per-iteration gradient
+//! statistics the accumulator produces for free, gated by `wants_stats`
+//! so static schedules pay nothing; `ladder` must enumerate every batch
+//! size the governor can ever request so the controller can pre-flight
+//! plan all of them before epoch 0.
+
+use super::adaptive::{GradStats, GradVarianceController};
+use super::lr::LrSchedule;
+use super::policy::AdaBatchPolicy;
+
+/// A batch-size criterion driving the generic training loop.
+pub trait BatchGovernor {
+    /// Display name (run-history label).
+    fn name(&self) -> &str;
+
+    /// Effective batch size in force for `epoch`.
+    fn batch_for_epoch(&mut self, epoch: usize) -> usize;
+
+    /// Learning rate at (epoch, iter) — the coupling half of the paper's
+    /// effective-LR contract. Data-driven governors typically return a
+    /// flat (or warmup-only) schedule: batch growth *is* the decay (§3.1).
+    fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64;
+
+    /// Feed one iteration's gradient statistics. Only called when
+    /// [`BatchGovernor::wants_stats`] is true.
+    fn observe(&mut self, _stats: GradStats) {}
+
+    /// Whether the loop should compute and feed [`GradStats`].
+    fn wants_stats(&self) -> bool {
+        false
+    }
+
+    /// Every batch size this governor may request over `epochs` epochs
+    /// (pre-flight planning: a schedule that would fail at epoch 80 must
+    /// fail at epoch 0 instead).
+    fn ladder(&self, epochs: usize) -> Vec<usize>;
+
+    /// Data-driven growth decisions taken so far (0 for static schedules).
+    fn decisions(&self) -> usize {
+        0
+    }
+}
+
+/// The paper's criterion: a fixed-interval coupled (batch, LR) policy.
+#[derive(Debug, Clone)]
+pub struct IntervalGovernor {
+    pub policy: AdaBatchPolicy,
+}
+
+impl IntervalGovernor {
+    pub fn new(policy: AdaBatchPolicy) -> Self {
+        IntervalGovernor { policy }
+    }
+}
+
+impl BatchGovernor for IntervalGovernor {
+    fn name(&self) -> &str {
+        &self.policy.name
+    }
+
+    fn batch_for_epoch(&mut self, epoch: usize) -> usize {
+        self.policy.batch.batch_at(epoch)
+    }
+
+    fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
+        self.policy.at(epoch, iter, iters_per_epoch).lr
+    }
+
+    fn ladder(&self, epochs: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..epochs.max(1))
+            .map(|e| self.policy.batch.batch_at(e))
+            .collect();
+        out.dedup();
+        out
+    }
+}
+
+/// Gradient-variance (SNR) criterion: double when noise dominates signal.
+#[derive(Debug, Clone)]
+pub struct VarianceGovernor {
+    name: String,
+    pub controller: GradVarianceController,
+    pub lr: LrSchedule,
+    initial_batch: usize,
+}
+
+impl VarianceGovernor {
+    pub fn new(controller: GradVarianceController, lr: LrSchedule) -> Self {
+        VarianceGovernor {
+            name: "variance-adaptive".to_string(),
+            initial_batch: controller.current_batch(),
+            controller,
+            lr,
+        }
+    }
+
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+}
+
+impl BatchGovernor for VarianceGovernor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_for_epoch(&mut self, _epoch: usize) -> usize {
+        self.controller.current_batch()
+    }
+
+    fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
+        self.lr.lr_at(epoch, iter, iters_per_epoch)
+    }
+
+    fn observe(&mut self, stats: GradStats) {
+        let _ = self.controller.observe(stats);
+    }
+
+    fn wants_stats(&self) -> bool {
+        true
+    }
+
+    fn ladder(&self, _epochs: usize) -> Vec<usize> {
+        geometric_ladder(self.initial_batch, self.controller.factor, self.controller.max_batch)
+    }
+
+    fn decisions(&self) -> usize {
+        self.controller.decisions()
+    }
+}
+
+/// Gradient-diversity criterion (Yin et al. 2018 / DiveBatch): large-batch
+/// SGD stays statistically efficient while the batch is no larger than
+/// `initial × diversity`, where the diversity ratio is
+/// `Σᵢ‖gᵢ‖² / ‖Σᵢ gᵢ‖²` — estimated here at microbatch granularity from
+/// the same accumulated statistics the variance criterion uses:
+/// `diversity ≈ 1 + Var(gᵢ)/‖ḡ‖²`.
+#[derive(Debug, Clone)]
+pub struct DiversityGovernor {
+    name: String,
+    pub lr: LrSchedule,
+    pub initial_batch: usize,
+    /// growth multiplier per decision (the ladder stays geometric so the
+    /// executable cache stays small)
+    pub factor: usize,
+    /// iterations aggregated per decision
+    pub window: usize,
+    pub max_batch: usize,
+    current: usize,
+    div_sum: f64,
+    count: usize,
+    decisions: usize,
+}
+
+impl DiversityGovernor {
+    pub fn new(
+        initial_batch: usize,
+        lr: LrSchedule,
+        window: usize,
+        factor: usize,
+        max_batch: usize,
+    ) -> Self {
+        assert!(factor >= 2, "growth factor must be ≥ 2");
+        assert!(window >= 1);
+        DiversityGovernor {
+            name: "diversity-adaptive".to_string(),
+            lr,
+            initial_batch,
+            factor,
+            window,
+            max_batch,
+            current: initial_batch,
+            div_sum: 0.0,
+            count: 0,
+            decisions: 0,
+        }
+    }
+
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn current_batch(&self) -> usize {
+        self.current
+    }
+}
+
+impl BatchGovernor for DiversityGovernor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_for_epoch(&mut self, _epoch: usize) -> usize {
+        self.current
+    }
+
+    fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
+        self.lr.lr_at(epoch, iter, iters_per_epoch)
+    }
+
+    fn observe(&mut self, stats: GradStats) {
+        if stats.mean_grad_sq_norm <= 0.0 {
+            return; // degenerate iteration: no diversity information
+        }
+        self.div_sum += 1.0 + stats.grad_variance / stats.mean_grad_sq_norm;
+        self.count += 1;
+        if self.count < self.window {
+            return;
+        }
+        let mean_diversity = self.div_sum / self.count as f64;
+        self.div_sum = 0.0;
+        self.count = 0;
+        // target batch: initial × diversity, realized conservatively as
+        // the largest geometric-ladder rung ≤ target (never overshoot the
+        // statistical-efficiency bound), clamped monotone non-decreasing
+        let target = self.initial_batch as f64 * mean_diversity;
+        let mut next = self.initial_batch;
+        while next * self.factor <= self.max_batch && (next * self.factor) as f64 <= target {
+            next *= self.factor;
+        }
+        if next > self.current {
+            self.current = next;
+            self.decisions += 1;
+        }
+    }
+
+    fn wants_stats(&self) -> bool {
+        true
+    }
+
+    fn ladder(&self, _epochs: usize) -> Vec<usize> {
+        geometric_ladder(self.initial_batch, self.factor, self.max_batch)
+    }
+
+    fn decisions(&self) -> usize {
+        self.decisions
+    }
+}
+
+/// `initial × factor^k` for k = 0.. while ≤ `max_batch` (always includes
+/// `initial`).
+fn geometric_ladder(initial: usize, factor: usize, max_batch: usize) -> Vec<usize> {
+    let mut out = vec![initial];
+    let mut r = initial;
+    while r.saturating_mul(factor) <= max_batch {
+        r *= factor;
+        out.push(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::BatchSchedule;
+
+    fn stats(signal: f64, noise: f64) -> GradStats {
+        GradStats { mean_grad_sq_norm: signal, grad_variance: noise }
+    }
+
+    #[test]
+    fn interval_governor_mirrors_policy() {
+        let policy = AdaBatchPolicy::sec41_adaptive(128);
+        let mut g = IntervalGovernor::new(policy.clone());
+        assert_eq!(g.name(), "adabatch");
+        assert!(!g.wants_stats());
+        for e in [0usize, 19, 20, 40, 99] {
+            assert_eq!(g.batch_for_epoch(e), policy.batch.batch_at(e));
+            assert_eq!(g.lr_coupling(e, 0, 100), policy.at(e, 0, 100).lr);
+        }
+        assert_eq!(g.ladder(100), vec![128, 256, 512, 1024, 2048]);
+        assert_eq!(g.decisions(), 0);
+    }
+
+    #[test]
+    fn interval_ladder_dedups_fixed() {
+        let mut g = IntervalGovernor::new(AdaBatchPolicy::sec41_fixed(64));
+        assert_eq!(g.ladder(50), vec![64]);
+        assert_eq!(g.batch_for_epoch(49), 64);
+    }
+
+    #[test]
+    fn variance_governor_grows_under_noise() {
+        let ctrl = GradVarianceController::new(32, 1.0, 2, 2, 256);
+        let mut g = VarianceGovernor::new(ctrl, LrSchedule::step(0.1, 1.0, 1000));
+        assert!(g.wants_stats());
+        assert_eq!(g.batch_for_epoch(0), 32);
+        // noise floor reached: SNR far below threshold for a full window
+        g.observe(stats(1e-6, 10.0));
+        g.observe(stats(1e-6, 10.0));
+        assert_eq!(g.batch_for_epoch(1), 64);
+        assert_eq!(g.decisions(), 1);
+        // ladder enumerates everything reachable up to the cap
+        assert_eq!(g.ladder(100), vec![32, 64, 128, 256]);
+        // LR stays flat: growth is the decay
+        assert_eq!(g.lr_coupling(0, 0, 10), g.lr_coupling(50, 3, 10));
+    }
+
+    #[test]
+    fn diversity_governor_grows_with_diversity() {
+        let mut g = DiversityGovernor::new(32, LrSchedule::step(0.1, 1.0, 1000), 2, 2, 1024);
+        assert!(g.wants_stats());
+        // diversity ≈ 1 (aligned microbatch grads): no growth
+        g.observe(stats(1.0, 0.0));
+        g.observe(stats(1.0, 0.0));
+        assert_eq!(g.batch_for_epoch(0), 32);
+        assert_eq!(g.decisions(), 0);
+        // diversity ≈ 1 + 9 = 10: target 320 → ladder lands on 256
+        g.observe(stats(1.0, 9.0));
+        g.observe(stats(1.0, 9.0));
+        assert_eq!(g.batch_for_epoch(1), 256);
+        assert_eq!(g.decisions(), 1);
+        // monotone: lower diversity later never shrinks the batch
+        g.observe(stats(1.0, 0.0));
+        g.observe(stats(1.0, 0.0));
+        assert_eq!(g.batch_for_epoch(2), 256);
+    }
+
+    #[test]
+    fn diversity_governor_respects_cap_and_degenerate_stats() {
+        let mut g = DiversityGovernor::new(64, LrSchedule::step(0.1, 1.0, 1000), 1, 2, 128);
+        g.observe(stats(1e-12, 1e9));
+        // huge diversity but cap at 128
+        g.observe(stats(1.0, 1e9));
+        assert_eq!(g.batch_for_epoch(0), 128);
+        // zero-signal stats are ignored entirely
+        g.observe(stats(0.0, 5.0));
+        assert_eq!(g.batch_for_epoch(1), 128);
+        assert_eq!(g.ladder(10), vec![64, 128]);
+    }
+
+    #[test]
+    fn governors_are_object_safe() {
+        let mut govs: Vec<Box<dyn BatchGovernor>> = vec![
+            Box::new(IntervalGovernor::new(AdaBatchPolicy::sec41_adaptive(32))),
+            Box::new(VarianceGovernor::new(
+                GradVarianceController::new(32, 1.0, 4, 2, 512),
+                LrSchedule::step(0.01, 1.0, 1000),
+            )),
+            Box::new(DiversityGovernor::new(32, LrSchedule::step(0.01, 1.0, 1000), 4, 2, 512)),
+        ];
+        for g in govs.iter_mut() {
+            assert!(g.batch_for_epoch(0) >= 32);
+            assert!(g.lr_coupling(0, 0, 10) > 0.0);
+            assert!(!g.ladder(20).is_empty());
+        }
+    }
+
+    #[test]
+    fn interval_governor_over_custom_schedule() {
+        let policy = AdaBatchPolicy::new(
+            "pw",
+            BatchSchedule::Piecewise(vec![(0, 32), (3, 128)]),
+            LrSchedule::step(0.1, 0.5, 3),
+        );
+        let mut g = IntervalGovernor::new(policy);
+        assert_eq!(g.ladder(6), vec![32, 128]);
+        assert_eq!(g.batch_for_epoch(4), 128);
+    }
+}

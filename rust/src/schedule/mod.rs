@@ -8,13 +8,18 @@
 //!   experiment arm in §4.
 //! * [`adaptive::GradVarianceController`] — the gradient-variance adaptive
 //!   baseline (Byrd/De/Balles et al.) used by the ablation benches.
+//! * [`governor::BatchGovernor`] — the criterion trait the generic
+//!   training loop is written against, with interval / variance /
+//!   diversity implementations.
 
 pub mod adaptive;
 pub mod batch;
+pub mod governor;
 pub mod lr;
 pub mod policy;
 
 pub use adaptive::{GradStats, GradVarianceController};
 pub use batch::BatchSchedule;
+pub use governor::{BatchGovernor, DiversityGovernor, IntervalGovernor, VarianceGovernor};
 pub use lr::LrSchedule;
 pub use policy::{AdaBatchPolicy, PolicyPoint};

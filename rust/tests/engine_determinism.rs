@@ -1,0 +1,106 @@
+//! Engine determinism & equivalence tests — always runnable: they use the
+//! pure-Rust reference backend, no AOT artifacts or native runtime needed.
+//!
+//! Contract under test (DESIGN.md §4): the worker-pool engine implements
+//! *synchronous* data-parallel SGD, so (a) a run's trajectory is a pure
+//! function of (seed, config) regardless of thread scheduling, and (b)
+//! multi-worker runs reproduce the single-worker trajectory up to f32
+//! summation-order noise in the shard-weighted all-reduce.
+
+use adabatch::coordinator::{train, TrainData, TrainerConfig};
+use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use adabatch::metrics::RunHistory;
+use adabatch::runtime::ModelRuntime;
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
+
+fn data() -> (TrainData, TrainData) {
+    let mut spec = SyntheticSpec::cifar10();
+    spec.n_classes = 4;
+    spec.train_per_class = 64; // 256 train samples
+    spec.test_per_class = 16;
+    let d = generate(&spec);
+    (TrainData::Images(d.train), TrainData::Images(d.test))
+}
+
+fn run(workers: usize, seed: u64, epochs: usize) -> RunHistory {
+    let (train_d, test_d) = data();
+    let rt = ModelRuntime::reference_classifier("ref_linear", IMG_LEN, 4, &[8, 16, 32, 64], 64);
+    let policy = AdaBatchPolicy::new(
+        "det",
+        BatchSchedule::doubling(32, 2),
+        LrSchedule::step(0.05, 0.75, 2),
+    );
+    let cfg = TrainerConfig::new(epochs).with_seed(seed).with_workers(workers);
+    let mut governor = IntervalGovernor::new(policy);
+    let (hist, timers) = train(&rt, &cfg, &mut governor, &train_d, &test_d).unwrap();
+    assert!(!hist.diverged);
+    // the pool's per-worker timers made it into the merged report
+    assert!(timers.count("fwd_bwd") > 0);
+    assert!(timers.count("w0/fwd_bwd") > 0);
+    if workers >= 2 {
+        assert!(timers.count("w1/fwd_bwd") > 0, "worker 1 never executed a step");
+    }
+    hist
+}
+
+/// Same seed + same config ⇒ bitwise-identical trajectory, even with real
+/// threads racing: result merge order is by worker index, not completion.
+#[test]
+fn threaded_pool_is_bitwise_deterministic() {
+    let a = run(4, 9, 3);
+    let b = run(4, 9, 3);
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "epoch {}", x.epoch);
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
+        assert_eq!(x.test_error.to_bits(), y.test_error.to_bits());
+        assert_eq!(x.batch, y.batch);
+    }
+}
+
+/// The parallel pool reproduces the serial single-worker loss trajectory
+/// for the same seed (synchronous SGD: sharding + weighted all-reduce is
+/// the same batch-mean gradient, modulo f32 summation order).
+#[test]
+fn worker_pool_matches_single_worker_trajectory() {
+    let single = run(1, 5, 4);
+    for workers in [2usize, 4] {
+        let multi = run(workers, 5, 4);
+        assert_eq!(single.epochs.len(), multi.epochs.len());
+        for (a, b) in single.epochs.iter().zip(&multi.epochs) {
+            assert_eq!(a.batch, b.batch);
+            assert_eq!(a.iterations, b.iterations);
+            assert!(
+                (a.train_loss - b.train_loss).abs() <= 1e-3 * a.train_loss.abs().max(1.0),
+                "workers={workers} epoch {}: {} vs {}",
+                a.epoch,
+                a.train_loss,
+                b.train_loss
+            );
+            assert!(
+                (a.test_loss - b.test_loss).abs() <= 1e-3 * a.test_loss.abs().max(1.0),
+                "workers={workers} epoch {}: test {} vs {}",
+                a.epoch,
+                a.test_loss,
+                b.test_loss
+            );
+        }
+    }
+}
+
+/// Learning actually happens through the pool (not just determinism).
+#[test]
+fn pool_training_reduces_loss() {
+    let hist = run(2, 1, 4);
+    let first = hist.epochs.first().unwrap();
+    let last = hist.epochs.last().unwrap();
+    assert!(
+        last.train_loss < first.train_loss,
+        "train loss {} -> {}",
+        first.train_loss,
+        last.train_loss
+    );
+    // batch transition happened on schedule
+    assert_eq!(hist.epochs[0].batch, 32);
+    assert_eq!(hist.epochs[2].batch, 64);
+}

@@ -6,7 +6,7 @@ use adabatch::coordinator::{train, TrainData, TrainerConfig};
 use adabatch::data::corpus::LmDataset;
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
-use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
 
 fn runtime(model: &str) -> Option<ModelRuntime> {
     let dir = default_artifacts_dir();
@@ -38,8 +38,9 @@ fn alexnet_learns_under_adabatch_policy() {
         BatchSchedule::doubling(32, 2),
         LrSchedule::step(0.02, 0.75, 2),
     );
-    let cfg = TrainerConfig::new(policy, 4).with_seed(7);
-    let (hist, timers) = train(&rt, &cfg, &train_d, &test_d).unwrap();
+    let cfg = TrainerConfig::new(4).with_seed(7);
+    let mut governor = IntervalGovernor::new(policy);
+    let (hist, timers) = train(&rt, &cfg, &mut governor, &train_d, &test_d).unwrap();
     assert_eq!(hist.epochs.len(), 4);
     assert!(!hist.diverged);
     // batch transition happened
@@ -70,13 +71,15 @@ fn accumulation_matches_native_batch_updates() {
         AdaBatchPolicy::new(name, BatchSchedule::Fixed(64), LrSchedule::step(0.02, 1.0, 100))
     };
     let native = {
-        let cfg = TrainerConfig::new(policy("native"), 2).with_seed(3);
-        train(&rt, &cfg, &train_d, &test_d).unwrap().0
+        let cfg = TrainerConfig::new(2).with_seed(3);
+        let mut gov = IntervalGovernor::new(policy("native"));
+        train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap().0
     };
     let accumulated = {
-        let mut cfg = TrainerConfig::new(policy("accum"), 2).with_seed(3);
+        let mut cfg = TrainerConfig::new(2).with_seed(3);
         cfg.max_microbatch = Some(32); // force 2-step accumulation
-        train(&rt, &cfg, &train_d, &test_d).unwrap().0
+        let mut gov = IntervalGovernor::new(policy("accum"));
+        train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap().0
     };
     for (a, b) in native.epochs.iter().zip(&accumulated.epochs) {
         assert!(
@@ -100,12 +103,14 @@ fn data_parallel_workers_match_single_worker() {
         AdaBatchPolicy::new(name, BatchSchedule::Fixed(64), LrSchedule::step(0.02, 1.0, 100))
     };
     let single = {
-        let cfg = TrainerConfig::new(policy("p1"), 2).with_seed(5);
-        train(&rt, &cfg, &train_d, &test_d).unwrap().0
+        let cfg = TrainerConfig::new(2).with_seed(5);
+        let mut gov = IntervalGovernor::new(policy("p1"));
+        train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap().0
     };
     let dual = {
-        let cfg = TrainerConfig::new(policy("p2"), 2).with_seed(5).with_workers(2);
-        train(&rt, &cfg, &train_d, &test_d).unwrap().0
+        let cfg = TrainerConfig::new(2).with_seed(5).with_workers(2);
+        let mut gov = IntervalGovernor::new(policy("p2"));
+        train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap().0
     };
     for (a, b) in single.epochs.iter().zip(&dual.epochs) {
         assert!(
@@ -128,8 +133,9 @@ fn transformer_trains_on_corpus() {
         BatchSchedule::doubling(4, 2),
         LrSchedule::step(0.05, 0.75, 2),
     );
-    let cfg = TrainerConfig::new(policy, 3).with_seed(1);
-    let (hist, _) = train(&rt, &cfg, &TrainData::Lm(data), &TrainData::Lm(test)).unwrap();
+    let cfg = TrainerConfig::new(3).with_seed(1);
+    let mut governor = IntervalGovernor::new(policy);
+    let (hist, _) = train(&rt, &cfg, &mut governor, &TrainData::Lm(data), &TrainData::Lm(test)).unwrap();
     assert!(!hist.diverged);
     let first = hist.epochs.first().unwrap();
     let last = hist.epochs.last().unwrap();

@@ -1,0 +1,210 @@
+//! API-compatible stub of the `xla` crate (xla_extension 0.5.1 bindings).
+//!
+//! The repository's PJRT runtime (`adabatch::runtime`) is written against
+//! the real bindings, but the native `xla_extension` shared library is not
+//! available in every build environment. This stub reproduces the exact
+//! API surface the coordinator uses so the crate always compiles and the
+//! pure-Rust parts (schedules, governors, the worker-pool engine, the
+//! reference backend, all-reduce, planner, simulator) are fully testable.
+//!
+//! Behavior: client construction and HLO-text parsing succeed (so
+//! pre-flight paths run), but `compile` fails with a clear message — on a
+//! machine with the native runtime, point the `xla` dependency at the real
+//! crate and everything downstream works unchanged. Model execution in
+//! this build goes through `adabatch::runtime::reference` instead.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's (stringly, `std::error::Error`).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-transferable element types (f32 params/pixels, i32 tokens/labels).
+pub trait NativeType: Copy + Default + 'static {
+    const NAME: &'static str;
+}
+
+impl NativeType for f32 {
+    const NAME: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    const NAME: &'static str = "s32";
+}
+
+/// Parsed HLO module (text form only; protos from jax ≥ 0.5 are rejected
+/// by xla_extension 0.5.1, so text is the interchange format anyway).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load an HLO **text** artifact. Mirrors the real binding: the file
+    /// must exist and be readable; syntax is checked lazily at compile.
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading {}: {e}", path.display())))?;
+        if !text.contains("HloModule") {
+            return Err(Error(format!("{} is not HLO text", path.display())));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _module: proto.clone() }
+    }
+}
+
+/// PJRT client handle (CPU platform).
+#[derive(Debug)]
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu-stub" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    /// Host→device transfer. The stub validates the element count against
+    /// the declared dims (the only check the hot path relies on).
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let expect: usize = dims.iter().product();
+        if data.len() != expect {
+            return Err(Error(format!(
+                "host buffer has {} elements, shape {dims:?} implies {expect}",
+                data.len()
+            )));
+        }
+        Ok(PjRtBuffer {})
+    }
+
+    /// Compilation requires the native runtime — always fails in the stub.
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(
+            "compiled execution requires the native xla_extension runtime; \
+             this build links the bundled API stub (use the reference \
+             backend, or point the `xla` dependency at the real crate)"
+                .to_string(),
+        ))
+    }
+}
+
+/// A device buffer. The stub carries no payload: execution is impossible
+/// without a compiled executable, which the stub never produces.
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error("no device runtime in stub build".to_string()))
+    }
+}
+
+/// A loaded executable. Unconstructible in the stub (`compile` fails), so
+/// these methods exist purely to satisfy the call sites' types.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error("no device runtime in stub build".to_string()))
+    }
+}
+
+/// Host-side literal (tuple of tensors downloaded from device).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error("no device runtime in stub build".to_string()))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(Error("no device runtime in stub build".to_string()))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error("no device runtime in stub build".to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_constructs_and_reports_platform() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        assert_eq!(c.device_count(), 1);
+    }
+
+    #[test]
+    fn buffer_shape_check() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(c.buffer_from_host_buffer::<f32>(&[0.0; 6], &[2, 3], None).is_ok());
+        assert!(c.buffer_from_host_buffer::<f32>(&[0.0; 5], &[2, 3], None).is_err());
+    }
+
+    #[test]
+    fn compile_fails_with_clear_message() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = c.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+
+    #[test]
+    fn stub_types_are_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<PjRtClient>();
+        assert_send_sync::<PjRtLoadedExecutable>();
+        assert_send_sync::<PjRtBuffer>();
+        assert_send_sync::<Literal>();
+    }
+}
