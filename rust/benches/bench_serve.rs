@@ -1,0 +1,61 @@
+//! Serving-path microbenches: queue throughput, histogram recording, and
+//! the end-to-end virtual serve bench. The percentile/throughput numbers
+//! that matter across PRs come from `adabatch serve-bench` itself (its
+//! JSON report is the `BENCH_*.json` trajectory); this bench guards the
+//! hot-path primitives underneath it.
+
+use adabatch::config::{ServeConfig, TrafficShape};
+use adabatch::metrics::LatencyHistogram;
+use adabatch::serve::loadgen::{governor_from_name, run_serve_bench, Clock};
+use adabatch::serve::BoundedQueue;
+use adabatch::util::benchkit::{black_box, BenchSuite};
+
+fn main() {
+    let mut suite = BenchSuite::new("serve primitives");
+
+    suite.bench_units("hist_record_1k", Some(1000.0), || {
+        let mut h = LatencyHistogram::new();
+        for i in 0..1000u64 {
+            h.record(i * 997 + 13);
+        }
+        black_box(h.p99());
+    });
+
+    suite.bench_units("hist_merge", Some(1.0), || {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for i in 0..256u64 {
+            a.record(i * 31 + 1);
+            b.record(i * 17 + 5);
+        }
+        a.merge(&b);
+        black_box(a.count());
+    });
+
+    suite.bench_units("queue_push_drain_1k", Some(1000.0), || {
+        let q: BoundedQueue<u64> = BoundedQueue::bounded(2048);
+        for i in 0..1000u64 {
+            q.try_push(i).ok();
+        }
+        while !q.try_drain(64).is_empty() {}
+        black_box(q.len());
+    });
+
+    let scfg = ServeConfig {
+        qps: 2000.0,
+        duration_s: 0.25,
+        shape: TrafficShape::Steady,
+        max_batch: 16,
+        workers: 1,
+        warmup_s: 0.0,
+        ..ServeConfig::default()
+    };
+    suite.bench_units("virtual_bench_500req", Some(500.0), || {
+        let mut gov = governor_from_name("slo", &scfg).unwrap();
+        let (stats, _report) =
+            run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 32, None).unwrap();
+        black_box(stats.completed);
+    });
+
+    suite.print_report();
+}

@@ -87,6 +87,164 @@ impl JobConfig {
     }
 }
 
+/// Traffic shape the serving load generator offers (open loop: arrivals
+/// are exogenous, never slowed by the server under test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficShape {
+    /// homogeneous Poisson at the target QPS
+    Steady,
+    /// alternating 500 ms periods at 1.8× / 0.2× the target (same mean)
+    Bursty,
+    /// rate climbs linearly from 0 to 2× the target over the run
+    Ramp,
+}
+
+impl TrafficShape {
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "steady" => TrafficShape::Steady,
+            "bursty" => TrafficShape::Bursty,
+            "ramp" => TrafficShape::Ramp,
+            other => bail!("unknown traffic shape {other:?} (steady|bursty|ramp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrafficShape::Steady => "steady",
+            TrafficShape::Bursty => "bursty",
+            TrafficShape::Ramp => "ramp",
+        }
+    }
+}
+
+/// A fully-specified `serve-bench` run (the serving twin of [`JobConfig`]).
+/// The governor choice is carried beside it, exactly as the trainer keeps
+/// the policy outside [`TrainerConfig`].
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// offered load, requests/second
+    pub qps: f64,
+    /// arrival window, seconds
+    pub duration_s: f64,
+    pub shape: TrafficShape,
+    /// p99 objective, ms (drives the SLO governor and the report)
+    pub slo_ms: f64,
+    /// initial / minimum micro-batch (power of two)
+    pub min_batch: usize,
+    /// micro-batch cap (power of two)
+    pub max_batch: usize,
+    /// max wait to fill a micro-batch, ms
+    pub max_wait_ms: f64,
+    /// parallel inference servers
+    pub workers: usize,
+    /// SLO-governor decision window, requests
+    pub window: usize,
+    pub seed: u64,
+    /// requests arriving before this many seconds are excluded from the
+    /// reported latency histogram (steady-state tails)
+    pub warmup_s: f64,
+    /// extra serving time after the arrival window before the bench
+    /// horizon cuts off (lets stable arms drain their backlog)
+    pub drain_grace_s: f64,
+    /// admission queue capacity (arrivals beyond it are shed)
+    pub queue_capacity: usize,
+    /// virtual clock: per-batch dispatch overhead, µs
+    pub service_base_us: f64,
+    /// virtual clock: cost per *padded* sample, µs
+    pub service_per_sample_us: f64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            qps: 800.0,
+            duration_s: 3.0,
+            shape: TrafficShape::Steady,
+            slo_ms: 25.0,
+            min_batch: 1,
+            max_batch: 64,
+            max_wait_ms: 5.0,
+            workers: 2,
+            window: 64,
+            seed: 0,
+            warmup_s: 0.3,
+            drain_grace_s: 0.5,
+            queue_capacity: 4096,
+            service_base_us: 300.0,
+            service_per_sample_us: 30.0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Sanity rules shared by the CLI and the bench harness.
+    pub fn validate(&self) -> Result<()> {
+        if !self.qps.is_finite() || self.qps <= 0.0 {
+            bail!("qps must be positive");
+        }
+        if !self.duration_s.is_finite() || self.duration_s <= 0.0 {
+            bail!("duration must be positive");
+        }
+        if self.min_batch == 0 || !self.min_batch.is_power_of_two() {
+            bail!("min batch {} must be a power of two (the eval ladder is)", self.min_batch);
+        }
+        if !self.max_batch.is_power_of_two() || self.max_batch < self.min_batch {
+            bail!(
+                "max batch {} must be a power of two ≥ min batch {}",
+                self.max_batch,
+                self.min_batch
+            );
+        }
+        if self.workers == 0 {
+            bail!("workers must be > 0");
+        }
+        if self.window == 0 {
+            bail!("governor window must be > 0");
+        }
+        if !self.slo_ms.is_finite() || self.slo_ms <= 0.0 {
+            bail!("slo must be positive");
+        }
+        if self.max_wait_ms < 0.0 || self.warmup_s < 0.0 || self.drain_grace_s < 0.0 {
+            bail!("max-wait, warmup and drain-grace must be ≥ 0");
+        }
+        if self.warmup_s >= self.duration_s {
+            bail!(
+                "warmup ({}s) must be shorter than the arrival window ({}s), else the \
+                 tail report measures nothing",
+                self.warmup_s,
+                self.duration_s
+            );
+        }
+        let base_ok = self.service_base_us.is_finite() && self.service_base_us >= 0.0;
+        let per_ok = self.service_per_sample_us.is_finite() && self.service_per_sample_us >= 0.0;
+        if !base_ok || !per_ok {
+            bail!("virtual service-time knobs must be finite and ≥ 0");
+        }
+        if self.queue_capacity < self.max_batch {
+            bail!("queue capacity must hold at least one max batch");
+        }
+        Ok(())
+    }
+
+    pub fn slo_ns(&self) -> u64 {
+        (self.slo_ms * 1e6) as u64
+    }
+
+    pub fn max_wait_ns(&self) -> u64 {
+        (self.max_wait_ms * 1e6) as u64
+    }
+
+    pub fn warmup_ns(&self) -> u64 {
+        (self.warmup_s * 1e9) as u64
+    }
+
+    /// Serving stops here: the arrival window plus the drain grace.
+    pub fn horizon_ns(&self) -> u64 {
+        ((self.duration_s + self.drain_grace_s) * 1e9) as u64
+    }
+}
+
 /// Build a policy from CLI-ish knobs (the `adabatch train` entrypoint).
 #[allow(clippy::too_many_arguments)]
 pub fn build_policy(
@@ -195,5 +353,47 @@ mod tests {
     fn allreduce_names() {
         assert_eq!(allreduce_from_name("ring").unwrap(), Algorithm::Ring);
         assert!(allreduce_from_name("x").is_err());
+    }
+
+    #[test]
+    fn traffic_shape_names_roundtrip() {
+        for shape in [TrafficShape::Steady, TrafficShape::Bursty, TrafficShape::Ramp] {
+            assert_eq!(TrafficShape::from_name(shape.name()).unwrap(), shape);
+        }
+        assert!(TrafficShape::from_name("sawtooth").is_err());
+    }
+
+    #[test]
+    fn serve_config_default_is_valid() {
+        let cfg = ServeConfig::default();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.slo_ns(), 25_000_000);
+        assert_eq!(cfg.max_wait_ns(), 5_000_000);
+        assert!(cfg.horizon_ns() > (cfg.duration_s * 1e9) as u64);
+    }
+
+    #[test]
+    fn serve_config_rejects_bad_knobs() {
+        let mut cfg = ServeConfig::default();
+        cfg.qps = 0.0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.min_batch = 3;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.max_batch = cfg.min_batch / 2;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.queue_capacity = 1;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.warmup_s = cfg.duration_s; // nothing left to measure
+        assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.service_per_sample_us = -1.0;
+        assert!(cfg.validate().is_err());
     }
 }

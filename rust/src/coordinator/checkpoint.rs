@@ -146,7 +146,16 @@ impl Checkpoint {
         let velocity = if has_velocity {
             let mut v = ParamSet::zeros_like(&expect.specs);
             for (spec, buf) in expect.specs.iter().zip(&mut v.bufs) {
-                *buf = fetch(&format!("velocity/{}", spec.name))?;
+                let got = fetch(&format!("velocity/{}", spec.name))?;
+                if got.len() != spec.size() {
+                    bail!(
+                        "tensor velocity/{} has {} elements, expected {} — wrong model/manifest?",
+                        spec.name,
+                        got.len(),
+                        spec.size()
+                    );
+                }
+                *buf = got;
             }
             Some(v)
         } else {
@@ -244,6 +253,29 @@ mod tests {
         specs.push(ParamSpec { name: "extra".into(), shape: vec![2], init: Init::Zeros });
         let other = ParamSet::zeros_like(&specs);
         assert!(Checkpoint::load(&path, &other).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn velocity_shape_mismatch_rejected() {
+        let p = params(7);
+        // same tensor names as the params, wrong sizes: the velocity
+        // table must be validated exactly like the param table
+        let wrong_specs = vec![
+            ParamSpec { name: "w".into(), shape: vec![2, 3], init: Init::Zeros },
+            ParamSpec { name: "b".into(), shape: vec![3], init: Init::Zeros },
+        ];
+        let ck = Checkpoint {
+            model: "m".into(),
+            epoch: 0,
+            batch: 32,
+            params: p.clone(),
+            velocity: Some(ParamSet::zeros_like(&wrong_specs)),
+        };
+        let path = tmpfile("vm");
+        ck.save(&path).unwrap();
+        let err = Checkpoint::load(&path, &p).unwrap_err().to_string();
+        assert!(err.contains("velocity/"), "{err}");
         let _ = std::fs::remove_file(&path);
     }
 

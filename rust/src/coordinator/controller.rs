@@ -16,7 +16,12 @@
 //! Also owns: divergence detection (Fig. 7b) — gradients are checked
 //! *before* the optimizer step so a non-finite update never poisons the
 //! parameters — phase timers (Table 1's fwd+bwd split comes from here,
-//! merged across workers), and the padded-eval cadence.
+//! merged across workers), the padded-eval cadence, and the checkpoint
+//! cadence: `checkpoint_dir`/`checkpoint_every` persist params + momentum
+//! + schedule position via [`super::checkpoint`], and `resume` restores
+//! them, continuing the exact trajectory (epoch-indexed PRNG streams make
+//! resumed runs bitwise equal to uninterrupted ones —
+//! `tests/checkpoint_resume.rs`).
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -51,6 +56,14 @@ pub struct TrainerConfig {
     pub eval_every: usize,
     /// stop early when grads/params go non-finite
     pub divergence_guard: bool,
+    /// save a checkpoint here every `checkpoint_every` epochs (and at the
+    /// final epoch); None disables checkpointing
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// epochs between checkpoints (0 is normalized to 1)
+    pub checkpoint_every: usize,
+    /// restore params/velocity/schedule position from this checkpoint and
+    /// continue at the following epoch
+    pub resume: Option<std::path::PathBuf>,
 }
 
 impl TrainerConfig {
@@ -63,6 +76,9 @@ impl TrainerConfig {
             seed: 0,
             eval_every: 1,
             divergence_guard: true,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume: None,
         }
     }
 
@@ -79,6 +95,19 @@ impl TrainerConfig {
     /// Eval cadence; 0 is normalized to 1 (evaluate every epoch).
     pub fn with_eval_every(mut self, k: usize) -> Self {
         self.eval_every = k.max(1);
+        self
+    }
+
+    /// Save checkpoints under `dir` every `every` epochs (0 → 1).
+    pub fn with_checkpoints(mut self, dir: impl Into<std::path::PathBuf>, every: usize) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self.checkpoint_every = every.max(1);
+        self
+    }
+
+    /// Resume from a checkpoint file written by a prior run.
+    pub fn with_resume(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.resume = Some(path.into());
         self
     }
 }
@@ -136,6 +165,52 @@ pub fn train<G: BatchGovernor + ?Sized>(
 
     let mut params = Arc::new(ParamSet::init(&rt.entry.params, cfg.seed));
     let mut opt = crate::optim::sgd::SgdMomentum::paper_cifar();
+
+    // -- resume: restore params + velocity + schedule position, then
+    // continue at the following epoch. Epoch-indexed PRNG streams (the
+    // planner splits per epoch) make the resumed trajectory bitwise equal
+    // to the uninterrupted one for epoch-driven governors. --
+    let mut start_epoch = 0usize;
+    if let Some(path) = &cfg.resume {
+        let ck = super::checkpoint::Checkpoint::load(path, params.as_ref())
+            .context("loading resume checkpoint")?;
+        if ck.model != rt.entry.name {
+            bail!(
+                "checkpoint {} was written by model {:?}, this runtime is {:?}",
+                path.display(),
+                ck.model,
+                rt.entry.name
+            );
+        }
+        start_epoch = ck.epoch + 1;
+        if start_epoch >= cfg.epochs {
+            bail!(
+                "checkpoint {} already covers epoch {} of {}; nothing to resume \
+                 (raise --epochs to continue training)",
+                path.display(),
+                ck.epoch,
+                cfg.epochs
+            );
+        }
+        params = Arc::new(ck.params);
+        if let Some(v) = ck.velocity {
+            opt.set_velocity(v);
+        }
+        if governor.wants_stats() {
+            log::warn!(
+                "[{}] resuming a data-driven governor: its observation window \
+                 restarts empty (growth decisions may lag the original run)",
+                governor.name()
+            );
+        }
+        log::info!(
+            "resumed from {} (epoch {}, batch {}); continuing at epoch {start_epoch}",
+            path.display(),
+            ck.epoch,
+            ck.batch
+        );
+    }
+
     let planner = BatchPlanner::train(n, cfg.seed ^ 0xDA7A);
     let mut history = RunHistory::new(governor.name());
     let mut timers = PhaseTimers::new();
@@ -145,7 +220,7 @@ pub fn train<G: BatchGovernor + ?Sized>(
         let mut engine = Engine::start(scope, cfg.workers, train_data, &rt.entry.params);
         let mut last_batch = 0usize;
         let mut warned_single_micro = false;
-        'epochs: for epoch in 0..cfg.epochs {
+        'epochs: for epoch in start_epoch..cfg.epochs {
             let t_epoch = Instant::now();
             let r = clamp_batch(governor.batch_for_epoch(epoch), n);
             let plan = crate::runtime::plan(r, cfg.workers, &natives, cfg.max_microbatch)?;
@@ -246,6 +321,28 @@ pub fn train<G: BatchGovernor + ?Sized>(
                 iterations: iters,
                 wall_secs: t_epoch.elapsed().as_secs_f64(),
             });
+
+            // checkpoint on the configured cadence and at the final epoch
+            // (only completed, non-diverged epochs reach this point)
+            if let Some(dir) = &cfg.checkpoint_dir {
+                let every = cfg.checkpoint_every.max(1);
+                if (epoch + 1) % every == 0 || epoch + 1 == cfg.epochs {
+                    let ck = super::checkpoint::Checkpoint {
+                        model: rt.entry.name.clone(),
+                        epoch,
+                        batch: r,
+                        params: params.as_ref().clone(),
+                        velocity: opt.velocity().cloned(),
+                    };
+                    let path = dir.join(format!("epoch{epoch:04}.ckpt"));
+                    timers.time("checkpoint", || ck.save(&path))?;
+                    log::info!(
+                        "[{}] checkpointed epoch {epoch} → {}",
+                        governor.name(),
+                        path.display()
+                    );
+                }
+            }
         }
         Ok(engine.shutdown())
     })?;

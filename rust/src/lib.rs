@@ -9,10 +9,14 @@
 //!   (interval / gradient-variance / gradient-diversity) with the
 //!   effective-learning-rate coupling invariant, gradient accumulation, a
 //!   worker-pool execution engine (one thread per data-parallel replica,
-//!   prefetching, all-reduce), a runtime with a per-batch-size executable
-//!   cache (PJRT artifacts or the pure-Rust reference backend), a
-//!   GPU-cluster performance simulator, and the experiment harnesses that
-//!   regenerate every table and figure of the paper.
+//!   prefetching, all-reduce), checkpoint/resume, a runtime with a
+//!   per-batch-size executable cache (PJRT artifacts or the pure-Rust
+//!   reference backend), a GPU-cluster performance simulator, the
+//!   experiment harnesses that regenerate every table and figure of the
+//!   paper, and [`serve`] — an adaptive micro-batching *inference*
+//!   subsystem (bounded request queue, latency-SLO-driven batch
+//!   governors, open-loop load generation) that applies the same
+//!   batch-size-as-control-variable thesis to the serving path.
 //! * **L2** — JAX model graphs (`python/compile/models/`), AOT-lowered to
 //!   HLO text artifacts consumed by [`runtime`].
 //! * **L1** — Pallas kernels (`python/compile/kernels/`) for the GEMM /
@@ -29,5 +33,6 @@ pub mod metrics;
 pub mod optim;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod simulator;
 pub mod util;

@@ -2,17 +2,29 @@
 //!
 //! Subcommands:
 //! * `train` — run one training job with explicit schedule knobs;
+//!   `--checkpoint-dir DIR` saves params/momentum/schedule position every
+//!   `--checkpoint-every` epochs, `--resume PATH` continues a run from a
+//!   saved checkpoint;
+//! * `serve-bench` — drive the adaptive micro-batching inference
+//!   subsystem under open-loop load (`--governor fixed|queue|slo`,
+//!   `--qps`, `--shape steady|bursty|ramp`, `--slo-ms`) and emit a stable
+//!   JSON report (p50/p95/p99, throughput). The default `--clock virtual`
+//!   run is bit-identical per (seed, config); `--clock wall` measures
+//!   real threaded latencies. `--checkpoint` serves trained parameters;
+//!   `--smoke` is the tiny all-governor CI run;
 //! * `experiment <id>` — regenerate a paper table/figure (fig1..fig7,
 //!   table1, flops);
 //! * `inspect-artifacts` — list models/batches in the artifact manifest;
 //! * `simulate` — query the P100-cluster performance model directly.
 //!
-//! Everything runs from the AOT artifacts (`make artifacts`); no python at
-//! run time.
+//! Everything runs from the AOT artifacts (`make artifacts`) or the
+//! pure-Rust reference backend; no python at run time.
 
 use anyhow::{bail, Result};
 
-use adabatch::config::{allreduce_from_name, build_policy, DatasetChoice, JobConfig};
+use adabatch::config::{
+    allreduce_from_name, build_policy, DatasetChoice, JobConfig, ServeConfig, TrafficShape,
+};
 use adabatch::coordinator::{train, TrainData};
 use adabatch::data::corpus::LmDataset;
 use adabatch::data::synthetic::{generate, SyntheticSpec};
@@ -22,8 +34,10 @@ use adabatch::schedule::{
     BatchGovernor, BatchSchedule, DiversityGovernor, GradVarianceController, IntervalGovernor,
     LrSchedule, VarianceGovernor,
 };
+use adabatch::serve::loadgen::{governor_from_name, run_serve_bench, Clock};
 use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
 use adabatch::util::cli::Command;
+use adabatch::util::json::Json;
 use adabatch::util::logging;
 
 fn main() {
@@ -47,6 +61,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     let rest = &args[1..];
     match sub.as_str() {
         "train" => cmd_train(rest),
+        "serve-bench" => cmd_serve_bench(rest),
         "experiment" => cmd_experiment(rest),
         "inspect-artifacts" => cmd_inspect(rest),
         "simulate" => cmd_simulate(rest),
@@ -63,6 +78,8 @@ fn print_help() {
         "adabatch — AdaBatch: adaptive batch sizes for training deep neural networks\n\n\
          subcommands:\n\
          \x20 train               run a training job (see `adabatch train --help`)\n\
+         \x20 serve-bench         adaptive micro-batching inference bench \
+         (see `adabatch serve-bench --help`)\n\
          \x20 experiment <id>     regenerate a paper table/figure: {ids}\n\
          \x20 inspect-artifacts   list AOT models and native batch sizes\n\
          \x20 simulate            query the P100 cluster performance model\n\
@@ -89,6 +106,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("seed", "0", "PRNG seed")
         .opt("governor", "interval", "criterion: interval|variance|diversity")
         .opt("max-batch", "0", "adaptive-governor batch cap (0 = 16× initial)")
+        .opt("checkpoint-dir", "", "save checkpoints here (\"\" = off)")
+        .opt("checkpoint-every", "1", "epochs between checkpoints")
+        .opt("resume", "", "resume from this checkpoint file (\"\" = fresh run)")
         .flag("help", "show usage");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.usage());
@@ -114,6 +134,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     job.trainer.allreduce = allreduce_from_name(&a.str("allreduce"))?;
     let cap = a.usize("max-microbatch")?;
     job.trainer.max_microbatch = (cap > 0).then_some(cap);
+    let ckpt_dir = a.str("checkpoint-dir");
+    if !ckpt_dir.is_empty() {
+        job.trainer.checkpoint_dir = Some(ckpt_dir.into());
+        job.trainer.checkpoint_every = a.usize("checkpoint-every")?;
+    }
+    let resume = a.str("resume");
+    if !resume.is_empty() {
+        job.trainer.resume = Some(resume.into());
+    }
     job.validate()?;
 
     // batch criterion: the paper's interval policy, or a data-driven
@@ -206,6 +235,107 @@ fn load_dataset(choice: &DatasetChoice) -> (TrainData, TrainData) {
             TrainData::Lm(LmDataset::synthetic(chars / 8, *seq_len, 12)),
         ),
     }
+}
+
+fn cmd_serve_bench(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("serve-bench", "adaptive micro-batching inference benchmark")
+        .opt("governor", "slo", "micro-batch criterion: fixed|queue|slo")
+        .opt("qps", "800", "offered load, requests/second")
+        .opt("duration", "3", "arrival window, seconds")
+        .opt("shape", "steady", "traffic shape: steady|bursty|ramp")
+        .opt("slo-ms", "25", "p99 latency SLO, ms")
+        .opt("batch", "1", "initial/min micro-batch; the fixed governor's size")
+        .opt("max-batch", "64", "micro-batch cap (power of two)")
+        .opt("max-wait-ms", "5", "max wait to fill a micro-batch, ms")
+        .opt("workers", "2", "parallel inference servers")
+        .opt("window", "64", "slo-governor decision window, requests")
+        .opt("warmup", "0.3", "seconds of arrivals excluded from the tail report")
+        .opt("seed", "0", "PRNG seed (arrivals, payloads, params)")
+        .opt("clock", "virtual", "virtual (deterministic) | wall (threaded)")
+        .opt("classes", "10", "reference classifier classes")
+        .opt("pool", "256", "distinct payload samples in the request pool")
+        .opt("service-base-us", "300", "virtual clock: per-batch overhead, µs")
+        .opt("service-per-sample-us", "30", "virtual clock: per padded sample, µs")
+        .opt("queue-capacity", "4096", "admission queue capacity (overflow is shed)")
+        .opt("drain-grace", "0.5", "seconds of serving allowed past the arrival window")
+        .opt("checkpoint", "", "serve params from this training checkpoint")
+        .opt("out", "", "also write the JSON report to this file")
+        .flag("smoke", "tiny CI run: all three governors over ~2s of traffic")
+        .flag("help", "show usage");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+
+    let mut scfg = ServeConfig {
+        qps: a.f64("qps")?,
+        duration_s: a.f64("duration")?,
+        shape: TrafficShape::from_name(&a.str("shape"))?,
+        slo_ms: a.f64("slo-ms")?,
+        min_batch: a.usize("batch")?,
+        max_batch: a.usize("max-batch")?,
+        max_wait_ms: a.f64("max-wait-ms")?,
+        workers: a.usize("workers")?,
+        window: a.usize("window")?,
+        seed: a.u64("seed")?,
+        warmup_s: a.f64("warmup")?,
+        drain_grace_s: a.f64("drain-grace")?,
+        queue_capacity: a.usize("queue-capacity")?,
+        service_base_us: a.f64("service-base-us")?,
+        service_per_sample_us: a.f64("service-per-sample-us")?,
+    };
+    let clock = Clock::from_name(&a.str("clock"))?;
+    let classes = a.usize("classes")?;
+    let mut pool = a.usize("pool")?;
+    let ckpt = a.str("checkpoint");
+    let checkpoint = (!ckpt.is_empty()).then(|| std::path::PathBuf::from(&ckpt));
+    let smoke = a.has_flag("smoke");
+    if smoke {
+        // tiny deterministic CI preset: low QPS, 2s of arrivals, all
+        // three governors through the same stream
+        eprintln!(
+            "--smoke: overriding qps/duration/batch/max-batch/workers/window/warmup/pool \
+             with the CI preset"
+        );
+        scfg.qps = 50.0;
+        scfg.duration_s = 2.0;
+        scfg.min_batch = 1;
+        scfg.max_batch = 8;
+        scfg.workers = 1;
+        scfg.window = 16;
+        scfg.warmup_s = 0.0;
+        pool = 64;
+    }
+    scfg.validate()?;
+
+    let report = if smoke {
+        let mut entries: Vec<(String, Json)> = Vec::new();
+        for name in ["fixed", "queue", "slo"] {
+            let mut gov = governor_from_name(name, &scfg)?;
+            let (stats, rep) =
+                run_serve_bench(&scfg, gov.as_mut(), clock, classes, pool, checkpoint.as_deref())?;
+            if stats.completed == 0 {
+                bail!("smoke run produced an empty report for governor {name:?}");
+            }
+            entries.push((name.to_string(), rep));
+        }
+        Json::Obj(entries.into_iter().collect())
+    } else {
+        let mut gov = governor_from_name(&a.str("governor"), &scfg)?;
+        let (_stats, rep) =
+            run_serve_bench(&scfg, gov.as_mut(), clock, classes, pool, checkpoint.as_deref())?;
+        rep
+    };
+
+    let rendered = report.to_string();
+    println!("{rendered}");
+    let out = a.str("out");
+    if !out.is_empty() {
+        std::fs::write(&out, &rendered)?;
+        eprintln!("report written to {out}");
+    }
+    Ok(())
 }
 
 fn cmd_experiment(argv: &[String]) -> Result<()> {

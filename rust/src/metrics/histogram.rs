@@ -1,0 +1,285 @@
+//! Log-bucketed latency histogram — the serving path's percentile
+//! substrate (HdrHistogram is unavailable offline; DESIGN.md §5).
+//!
+//! Log-linear layout: values below [`LatencyHistogram::SUB`] get exact
+//! unit buckets; above that, each power-of-two octave is split into `SUB`
+//! linear sub-buckets, so quantiles carry a bounded relative error of
+//! `1/SUB` (≈6%) at every magnitude from nanoseconds to hours. The layout
+//! is a compile-time constant, which makes merges across workers exact
+//! bucket-wise additions — associative and commutative, so per-worker
+//! histograms can be folded in any order (mirroring how the engine merges
+//! [`super::PhaseTimers`]).
+//!
+//! Used by `serve::loadgen` for p50/p95/p99 reports and by the
+//! `serve::governor::SloGovernor` decision window; training phase timers
+//! can adopt it wherever a mean hides a tail.
+
+/// Fixed-layout log-bucketed histogram over `u64` values (typically ns).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    min: u64,
+    max: u64,
+    sum: u128,
+}
+
+const SUB_BITS: u32 = 4;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Linear sub-buckets per octave; relative quantile error ≤ 1/SUB.
+    pub const SUB: u64 = 1 << SUB_BITS;
+
+    /// Total buckets: SUB exact unit buckets + SUB per remaining octave.
+    pub const BUCKETS: usize = (Self::SUB as usize) * (65 - SUB_BITS as usize);
+
+    pub fn new() -> Self {
+        LatencyHistogram {
+            counts: vec![0; Self::BUCKETS],
+            count: 0,
+            min: u64::MAX,
+            max: 0,
+            sum: 0,
+        }
+    }
+
+    /// Bucket index for `v`: exact below SUB, log-linear above.
+    pub fn bucket_index(v: u64) -> usize {
+        if v < Self::SUB {
+            return v as usize;
+        }
+        let h = 63 - v.leading_zeros(); // position of the leading one, ≥ SUB_BITS
+        let sub = (v >> (h - SUB_BITS)) - Self::SUB; // next SUB_BITS bits
+        (Self::SUB + (h - SUB_BITS) as u64 * Self::SUB + sub) as usize
+    }
+
+    /// Inclusive upper edge of bucket `idx` (every value in the bucket is
+    /// ≤ this, and it is itself in the bucket).
+    pub fn bucket_upper(idx: usize) -> u64 {
+        let idx = idx as u64;
+        if idx < Self::SUB {
+            return idx;
+        }
+        let rel = idx - Self::SUB;
+        let shift = (rel / Self::SUB) as u32;
+        let sub = rel % Self::SUB;
+        ((Self::SUB + sub + 1) << shift).wrapping_sub(1)
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        self.sum += v as u128;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.max
+        }
+    }
+
+    /// Exact minimum recorded value (0 when empty).
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` ∈ [0, 1]: the upper edge of the bucket where
+    /// the cumulative count first reaches `ceil(q · count)`, capped at the
+    /// exact max so q→1 returns it. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_upper(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> u64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Fold `other` in: exact bucket-wise addition (associative and
+    /// commutative — workers can be merged in any order).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..LatencyHistogram::SUB {
+            let idx = LatencyHistogram::bucket_index(v);
+            assert_eq!(idx, v as usize);
+            assert_eq!(LatencyHistogram::bucket_upper(idx), v);
+        }
+    }
+
+    #[test]
+    fn bucket_boundaries_at_powers_of_two() {
+        // 16 starts the first log-linear octave with unit-wide buckets
+        assert_eq!(LatencyHistogram::bucket_index(16), 16);
+        assert_eq!(LatencyHistogram::bucket_upper(16), 16);
+        assert_eq!(LatencyHistogram::bucket_index(31), 31);
+        assert_eq!(LatencyHistogram::bucket_upper(31), 31);
+        // 32..64: buckets 2 wide — 32 and 33 share a bucket, 34 does not
+        let b32 = LatencyHistogram::bucket_index(32);
+        assert_eq!(b32, LatencyHistogram::bucket_index(33));
+        assert_ne!(b32, LatencyHistogram::bucket_index(34));
+        assert_eq!(LatencyHistogram::bucket_upper(b32), 33);
+        // a huge value still lands in range
+        let top = LatencyHistogram::bucket_index(u64::MAX);
+        assert!(top < LatencyHistogram::BUCKETS);
+        assert_eq!(LatencyHistogram::bucket_upper(top), u64::MAX);
+    }
+
+    #[test]
+    fn bucket_upper_is_in_its_own_bucket() {
+        for idx in 0..LatencyHistogram::BUCKETS {
+            let ub = LatencyHistogram::bucket_upper(idx);
+            assert_eq!(
+                LatencyHistogram::bucket_index(ub),
+                idx,
+                "upper edge {ub} of bucket {idx} maps elsewhere"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_relative_error_is_bounded() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i * 1000); // 1µs .. 10ms
+        }
+        for (q, exact) in [(0.5, 5_000_000u64), (0.95, 9_500_000), (0.99, 9_900_000)] {
+            let got = h.quantile(q) as f64;
+            let rel = (got - exact as f64).abs() / exact as f64;
+            assert!(rel <= 1.0 / LatencyHistogram::SUB as f64, "q={q}: {got} vs {exact}");
+            assert!(got >= exact as f64, "upper-edge quantiles never understate");
+        }
+        assert_eq!(h.quantile(1.0), 10_000_000);
+        assert_eq!(h.max(), 10_000_000);
+        assert_eq!(h.min(), 1000);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_value_all_quantiles() {
+        let mut h = LatencyHistogram::new();
+        h.record(123_456);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 123_456, "q={q} (capped at exact max)");
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let fill = |seed: u64, n: u64| {
+            let mut h = LatencyHistogram::new();
+            let mut x = seed;
+            for _ in 0..n {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                h.record(x >> 40);
+            }
+            h
+        };
+        let (a, b, c) = (fill(1, 500), fill(2, 300), fill(3, 700));
+
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+
+        assert_eq!(left, right, "(a+b)+c == a+(b+c)");
+
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "a+b == b+a");
+        assert_eq!(ab.count(), a.count() + b.count());
+    }
+
+    #[test]
+    fn merge_tracks_extremes_and_mean() {
+        let mut a = LatencyHistogram::new();
+        a.record(10);
+        a.record(20);
+        let mut b = LatencyHistogram::new();
+        b.record(5);
+        b.record(1_000_000);
+        a.merge(&b);
+        assert_eq!(a.min(), 5);
+        assert_eq!(a.max(), 1_000_000);
+        assert_eq!(a.count(), 4);
+        assert!((a.mean() - (10.0 + 20.0 + 5.0 + 1_000_000.0) / 4.0).abs() < 1e-9);
+    }
+}

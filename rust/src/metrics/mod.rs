@@ -1,5 +1,10 @@
 //! Training metrics: phase timers (fwd+bwd vs. marshalling vs. optimizer —
-//! the split Table 1 reports), counters, and loss/error history.
+//! the split Table 1 reports), counters, loss/error history, and the
+//! log-bucketed latency [`histogram`] the serving path reports tails from.
+
+pub mod histogram;
+
+pub use histogram::LatencyHistogram;
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};

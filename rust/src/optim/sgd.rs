@@ -54,6 +54,13 @@ impl SgdMomentum {
     pub fn velocity(&self) -> Option<&ParamSet> {
         self.velocity.as_ref()
     }
+
+    /// Replace the momentum state (checkpoint restore): the next `step`
+    /// continues the restored trajectory instead of starting from zero
+    /// velocity.
+    pub fn set_velocity(&mut self, v: ParamSet) {
+        self.velocity = Some(v);
+    }
 }
 
 impl Optimizer for SgdMomentum {

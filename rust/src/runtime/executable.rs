@@ -211,7 +211,36 @@ impl ModelRuntime {
             n_classes,
             1,
             train_batches,
-            eval_batch,
+            &[eval_batch],
+        );
+        ModelRuntime {
+            entry: Arc::new(entry),
+            backend: Backend::Reference(model),
+            cache: Mutex::new(BTreeMap::new()),
+            compiles: Mutex::new(0),
+        }
+    }
+
+    /// Pure-Rust classifier runtime for the serving path: forward-only,
+    /// with a full eval-executable *ladder* (one rung per servable padded
+    /// micro-batch size) and no train steps at all.
+    pub fn reference_serving(
+        name: &str,
+        in_dim: usize,
+        n_classes: usize,
+        eval_batches: &[usize],
+    ) -> Self {
+        let model = RefModel { kind: RefKind::Linear { in_dim }, n_classes };
+        let entry = reference_entry(
+            name,
+            vec![in_dim],
+            Dtype::F32,
+            vec![],
+            in_dim,
+            n_classes,
+            1,
+            &[],
+            eval_batches,
         );
         ModelRuntime {
             entry: Arc::new(entry),
@@ -239,7 +268,7 @@ impl ModelRuntime {
             vocab,
             seq_len,
             train_batches,
-            eval_batch,
+            &[eval_batch],
         );
         ModelRuntime {
             entry: Arc::new(entry),
@@ -335,7 +364,7 @@ fn reference_entry(
     n_classes: usize,
     labels_per_sample: usize,
     train_batches: &[usize],
-    eval_batch: usize,
+    eval_batches: &[usize],
 ) -> ModelEntry {
     use crate::optim::param::{Init, ParamSpec};
     use crate::runtime::artifact::InputSpec;
@@ -351,7 +380,7 @@ fn reference_entry(
             ParamSpec { name: "b".into(), shape: vec![n_classes], init: Init::Zeros },
         ],
         train: train_batches.iter().map(|&bs| pseudo(bs, "train")).collect(),
-        eval: std::iter::once(pseudo(eval_batch, "eval")).collect(),
+        eval: eval_batches.iter().map(|&bs| pseudo(bs, "eval")).collect(),
     }
 }
 
@@ -450,6 +479,30 @@ mod tests {
 
         // off-ladder request fails loudly, like a missing artifact
         assert!(rt.executable(StepKind::Train, 5).is_err());
+    }
+
+    /// The serving runtime: no train steps, a full eval ladder.
+    #[test]
+    fn reference_serving_has_an_eval_ladder() {
+        let rt = ModelRuntime::reference_serving("srv", 12, 4, &[1, 2, 4, 8]);
+        assert!(rt.is_reference());
+        assert!(rt.entry.train_batches().is_empty());
+        assert_eq!(rt.entry.eval_batches(), vec![1, 2, 4, 8]);
+        assert_eq!(rt.eval_batch().unwrap(), 8);
+
+        let exe = rt.executable(StepKind::Eval, 4).unwrap();
+        let params = ParamSet::init(&rt.entry.params, 1);
+        let x = vec![0.1f32; 4 * 12];
+        let y = vec![0, 1, -1, -1]; // padded tail rows
+        let out = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        assert!(out.grads.is_none());
+        assert!(out.loss.is_finite());
+
+        assert!(
+            rt.executable(StepKind::Train, 4).is_err(),
+            "the serving runtime offers no train steps"
+        );
+        assert!(rt.executable(StepKind::Eval, 3).is_err(), "off-ladder eval fails loudly");
     }
 
     /// The worker-pool engine shares executables across threads — keep

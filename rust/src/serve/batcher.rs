@@ -1,0 +1,154 @@
+//! Micro-batch assembly: drain the request queue into batches sized by
+//! the governor, with a max-wait bound so a lone request never starves.
+//!
+//! Policy (shared by the wall-clock batcher thread and the virtual-time
+//! bench driver, see [`batch_ready`]): a micro-batch *opens* when its
+//! first request is taken and *closes* when either it reaches the
+//! governor's target size or `max_wait` has elapsed since it opened —
+//! whichever comes first. Under heavy load batches close full (throughput
+//! mode); under trickle load they close on timeout with whatever arrived
+//! (latency mode), which upper-bounds the batching delay any request can
+//! be charged at `max_wait` plus one service time.
+
+use std::time::{Duration, Instant};
+
+use super::queue::{BoundedQueue, Pop};
+
+/// Wall-clock micro-batcher over a [`BoundedQueue`].
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub max_wait: Duration,
+}
+
+impl Batcher {
+    pub fn new(max_wait: Duration) -> Self {
+        Batcher { max_wait }
+    }
+
+    /// Block until a micro-batch is ready: `Some(1..=target)` requests;
+    /// `None` once the queue is closed and fully drained; `Some(vec![])`
+    /// if `deadline` passes while the queue is still open and empty (the
+    /// caller's horizon cutoff — without it an idle open queue would
+    /// block forever).
+    pub fn next_batch<T>(
+        &self,
+        queue: &BoundedQueue<T>,
+        target: usize,
+        deadline: Option<Instant>,
+    ) -> Option<Vec<T>> {
+        let target = target.max(1);
+        // wait (in max_wait slices, so a close is noticed promptly) for
+        // the batch-opening request
+        let mut batch: Vec<T> = loop {
+            match queue.pop_up_to(target, self.max_wait.max(Duration::from_millis(1))) {
+                Pop::Items(items) => break items,
+                Pop::TimedOut => {
+                    if deadline.is_some_and(|d| Instant::now() >= d) {
+                        return Some(Vec::new());
+                    }
+                }
+                Pop::Closed => return None,
+            }
+        };
+        let fill_deadline = Instant::now() + self.max_wait;
+        while batch.len() < target {
+            let now = Instant::now();
+            if now >= fill_deadline {
+                break;
+            }
+            match queue.pop_up_to(target - batch.len(), fill_deadline - now) {
+                Pop::Items(mut items) => batch.append(&mut items),
+                // timeout or close: serve what we already hold
+                Pop::TimedOut | Pop::Closed => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+/// The same closing rule in virtual time: should a batch be dispatched
+/// now? (`oldest_wait_ns` is how long the front request has waited;
+/// `closed` means no further arrivals can ever come.)
+pub fn batch_ready(
+    depth: usize,
+    target: usize,
+    oldest_wait_ns: u64,
+    max_wait_ns: u64,
+    closed: bool,
+) -> bool {
+    depth >= target.max(1) || (depth > 0 && (oldest_wait_ns >= max_wait_ns || closed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn full_batch_returns_immediately() {
+        let q = BoundedQueue::bounded(16);
+        for i in 0..8 {
+            q.push(i).unwrap();
+        }
+        let b = Batcher::new(Duration::from_secs(5));
+        let t0 = Instant::now();
+        let batch = b.next_batch(&q, 8, None).unwrap();
+        assert_eq!(batch, (0..8).collect::<Vec<_>>());
+        assert!(t0.elapsed() < Duration::from_secs(1), "no max_wait stall on a full batch");
+    }
+
+    #[test]
+    fn lone_request_released_by_timeout() {
+        let q = BoundedQueue::bounded(16);
+        q.push(42).unwrap();
+        let b = Batcher::new(Duration::from_millis(30));
+        let t0 = Instant::now();
+        let batch = b.next_batch(&q, 64, None).unwrap();
+        assert_eq!(batch, vec![42]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(25), "honors max_wait, waited {waited:?}");
+        assert!(waited < Duration::from_secs(2), "does not starve, waited {waited:?}");
+    }
+
+    #[test]
+    fn closed_and_drained_returns_none() {
+        let q = BoundedQueue::bounded(4);
+        q.push(1).unwrap();
+        q.close();
+        let b = Batcher::new(Duration::from_millis(10));
+        assert_eq!(b.next_batch(&q, 4, None), Some(vec![1]), "leftovers still served after close");
+        assert_eq!(b.next_batch::<i32>(&q, 4, None), None);
+    }
+
+    #[test]
+    fn batch_fills_from_concurrent_producer() {
+        let q = BoundedQueue::bounded(64);
+        let b = Batcher::new(Duration::from_millis(300));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..4 {
+                    q.push(i).unwrap();
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            });
+            let batch = b.next_batch(&q, 4, None).unwrap();
+            assert_eq!(batch, vec![0, 1, 2, 3], "accumulates across pops until target");
+        });
+    }
+
+    #[test]
+    fn virtual_rule_matches_policy() {
+        // full batch: ready regardless of waits
+        assert!(batch_ready(8, 8, 0, 1000, false));
+        // undersized, young: not ready
+        assert!(!batch_ready(3, 8, 10, 1000, false));
+        // undersized but the front request hit max_wait: ready
+        assert!(batch_ready(3, 8, 1000, 1000, false));
+        // undersized leftovers after close: ready
+        assert!(batch_ready(3, 8, 0, 1000, true));
+        // empty: never ready
+        assert!(!batch_ready(0, 8, 0, 0, true));
+        // target 0 normalizes to 1
+        assert!(batch_ready(1, 0, 0, 1000, false));
+    }
+}

@@ -1,0 +1,367 @@
+//! [`ServeGovernor`] — the micro-batch criterion for the inference path,
+//! mirroring [`crate::schedule::BatchGovernor`] on the training side.
+//!
+//! AdaBatch's thesis is that batch size is a control variable, not a
+//! constant; on the serving side the measured signals are **queue depth**
+//! (throughput pressure) and **tail latency** (the user-facing cost of
+//! batching). Three criteria plug into the same batcher/server loop:
+//!
+//! * [`FixedServeGovernor`] — the static baseline every adaptive arm is
+//!   judged against.
+//! * [`QueueDepthGovernor`] — proportional control: serve the smallest
+//!   ladder rung that covers the current backlog.
+//! * [`SloGovernor`] — AdaBatch-style doubling/halving driven by a
+//!   p99-latency SLO: over a fixed decision window it compares measured
+//!   p99 against the SLO and *disambiguates the breach by queue depth* —
+//!   a breach with a deep queue is an overload (double the batch: more
+//!   throughput per dispatch), a breach with a shallow queue is
+//!   over-batching (halve: requests are waiting on fill, not capacity).
+//!   With headroom (p99 < SLO/2) and a standing backlog it also grows.
+//!
+//! Contract notes (mirroring the training trait): `target_batch` is
+//! consulted once per drain; `observe` receives every completed batch's
+//! per-request latencies; `ladder` must enumerate every size the governor
+//! can ever request so the runtime's eval-executable ladder can be built
+//! up front (the serving twin of pre-flight planning).
+
+use crate::metrics::LatencyHistogram;
+
+/// One completed micro-batch's measurements, fed back to the governor.
+#[derive(Debug)]
+pub struct ServeObservation<'a> {
+    /// requests actually in the batch (before padding)
+    pub batch: usize,
+    /// queue depth right after this batch was drained
+    pub queue_depth: usize,
+    /// end-to-end latency of each request in the batch, ns
+    pub latencies_ns: &'a [u64],
+}
+
+/// A micro-batch criterion driving the serving loop.
+pub trait ServeGovernor: Send {
+    /// Display name (report label).
+    fn name(&self) -> &str;
+
+    /// Target size for the next micro-batch, given the current backlog.
+    fn target_batch(&mut self, queue_depth: usize) -> usize;
+
+    /// Feed one completed batch's measurements.
+    fn observe(&mut self, _obs: ServeObservation<'_>) {}
+
+    /// Every batch size this governor may ever request (ascending).
+    fn ladder(&self) -> Vec<usize>;
+
+    /// Size the governor is currently steering toward.
+    fn current_batch(&self) -> usize;
+
+    /// Adaptation decisions taken so far (0 for static criteria).
+    fn decisions(&self) -> usize {
+        0
+    }
+}
+
+/// Geometric ×2 rungs from `min_batch` up to `max_batch` (inclusive when
+/// reachable; always contains `min_batch`).
+pub fn serve_ladder(min_batch: usize, max_batch: usize) -> Vec<usize> {
+    assert!(min_batch >= 1, "min batch must be ≥ 1");
+    let mut out = vec![min_batch];
+    let mut r = min_batch;
+    while r.saturating_mul(2) <= max_batch {
+        r *= 2;
+        out.push(r);
+    }
+    out
+}
+
+/// Smallest rung ≥ `k` from an ascending ladder (the largest rung when
+/// `k` exceeds them all) — the padding target for a drained batch.
+pub fn pad_to_rung(k: usize, ladder: &[usize]) -> usize {
+    assert!(!ladder.is_empty(), "empty batch ladder");
+    for &r in ladder {
+        if r >= k {
+            return r;
+        }
+    }
+    *ladder.last().unwrap()
+}
+
+/// Static micro-batch size — the baseline arm.
+#[derive(Debug, Clone)]
+pub struct FixedServeGovernor {
+    name: String,
+    batch: usize,
+}
+
+impl FixedServeGovernor {
+    pub fn new(batch: usize) -> Self {
+        assert!(batch >= 1);
+        FixedServeGovernor { name: format!("fixed-{batch}"), batch }
+    }
+}
+
+impl ServeGovernor for FixedServeGovernor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn target_batch(&mut self, _queue_depth: usize) -> usize {
+        self.batch
+    }
+
+    fn ladder(&self) -> Vec<usize> {
+        vec![self.batch]
+    }
+
+    fn current_batch(&self) -> usize {
+        self.batch
+    }
+}
+
+/// Backlog-proportional criterion: the smallest ladder rung covering the
+/// current queue depth, clamped to [min, max].
+#[derive(Debug, Clone)]
+pub struct QueueDepthGovernor {
+    name: String,
+    min_batch: usize,
+    max_batch: usize,
+    current: usize,
+    decisions: usize,
+}
+
+impl QueueDepthGovernor {
+    pub fn new(min_batch: usize, max_batch: usize) -> Self {
+        assert!(min_batch >= 1 && max_batch >= min_batch);
+        QueueDepthGovernor {
+            name: "queue-depth".to_string(),
+            min_batch,
+            max_batch,
+            current: min_batch,
+            decisions: 0,
+        }
+    }
+}
+
+impl ServeGovernor for QueueDepthGovernor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn target_batch(&mut self, queue_depth: usize) -> usize {
+        let mut b = self.min_batch;
+        while b < self.max_batch && b < queue_depth {
+            b *= 2;
+        }
+        if b != self.current {
+            self.current = b;
+            self.decisions += 1;
+        }
+        b
+    }
+
+    fn ladder(&self) -> Vec<usize> {
+        serve_ladder(self.min_batch, self.max_batch)
+    }
+
+    fn current_batch(&self) -> usize {
+        self.current
+    }
+
+    fn decisions(&self) -> usize {
+        self.decisions
+    }
+}
+
+/// AdaBatch-style doubling/halving driven by a p99-latency SLO.
+#[derive(Debug, Clone)]
+pub struct SloGovernor {
+    name: String,
+    /// the p99 objective, ns
+    pub slo_ns: u64,
+    pub min_batch: usize,
+    pub max_batch: usize,
+    /// requests aggregated per doubling/halving decision
+    pub window: usize,
+    current: usize,
+    seen: usize,
+    hist: LatencyHistogram,
+    decisions: usize,
+}
+
+impl SloGovernor {
+    pub fn new(slo_ns: u64, min_batch: usize, max_batch: usize, window: usize) -> Self {
+        assert!(slo_ns > 0, "SLO must be positive");
+        assert!(min_batch >= 1 && max_batch >= min_batch);
+        assert!(window >= 1);
+        SloGovernor {
+            name: "slo-adaptive".to_string(),
+            slo_ns,
+            min_batch,
+            max_batch,
+            window,
+            current: min_batch,
+            seen: 0,
+            hist: LatencyHistogram::new(),
+            decisions: 0,
+        }
+    }
+}
+
+impl ServeGovernor for SloGovernor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn target_batch(&mut self, _queue_depth: usize) -> usize {
+        self.current
+    }
+
+    fn observe(&mut self, obs: ServeObservation<'_>) {
+        for &l in obs.latencies_ns {
+            self.hist.record(l);
+        }
+        self.seen += obs.latencies_ns.len();
+        if self.seen < self.window {
+            return;
+        }
+        let p99 = self.hist.p99();
+        let prev = self.current;
+        if p99 > self.slo_ns {
+            if obs.queue_depth > self.current {
+                // breach under backlog: overloaded — buy throughput
+                self.current = (self.current * 2).min(self.max_batch);
+            } else {
+                // breach with an idle queue: over-batching — cut fill wait
+                self.current = (self.current / 2).max(self.min_batch);
+            }
+        } else if p99.saturating_mul(2) < self.slo_ns && obs.queue_depth > self.current {
+            // latency headroom and a standing backlog: grow
+            self.current = (self.current * 2).min(self.max_batch);
+        }
+        if self.current != prev {
+            self.decisions += 1;
+        }
+        self.seen = 0;
+        self.hist = LatencyHistogram::new();
+    }
+
+    fn ladder(&self) -> Vec<usize> {
+        serve_ladder(self.min_batch, self.max_batch)
+    }
+
+    fn current_batch(&self) -> usize {
+        self.current
+    }
+
+    fn decisions(&self) -> usize {
+        self.decisions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(batch: usize, depth: usize, lats: &[u64]) -> ServeObservation<'_> {
+        ServeObservation { batch, queue_depth: depth, latencies_ns: lats }
+    }
+
+    #[test]
+    fn ladder_and_padding() {
+        assert_eq!(serve_ladder(1, 8), vec![1, 2, 4, 8]);
+        assert_eq!(serve_ladder(4, 4), vec![4]);
+        assert_eq!(serve_ladder(2, 7), vec![2, 4]);
+        let l = serve_ladder(1, 16);
+        assert_eq!(pad_to_rung(1, &l), 1);
+        assert_eq!(pad_to_rung(3, &l), 4);
+        assert_eq!(pad_to_rung(16, &l), 16);
+        assert_eq!(pad_to_rung(99, &l), 16);
+    }
+
+    #[test]
+    fn fixed_is_constant() {
+        let mut g = FixedServeGovernor::new(8);
+        assert_eq!(g.name(), "fixed-8");
+        assert_eq!(g.target_batch(0), 8);
+        assert_eq!(g.target_batch(10_000), 8);
+        assert_eq!(g.ladder(), vec![8]);
+        assert_eq!(g.decisions(), 0);
+    }
+
+    #[test]
+    fn queue_depth_tracks_backlog() {
+        let mut g = QueueDepthGovernor::new(1, 16);
+        assert_eq!(g.target_batch(0), 1);
+        assert_eq!(g.target_batch(3), 4);
+        assert_eq!(g.target_batch(16), 16);
+        assert_eq!(g.target_batch(500), 16, "clamped at max");
+        assert_eq!(g.target_batch(0), 1, "shrinks when the backlog clears");
+        assert!(g.decisions() > 0);
+        assert_eq!(g.ladder(), vec![1, 2, 4, 8, 16]);
+    }
+
+    #[test]
+    fn slo_doubles_under_overload_breach() {
+        let mut g = SloGovernor::new(1_000_000, 1, 8, 4);
+        // p99 over the window ≈ 5ms > 1ms SLO, with a deep queue
+        let lats = [5_000_000u64, 5_000_000, 5_000_000, 5_000_000];
+        g.observe(obs(4, 100, &lats));
+        assert_eq!(g.current_batch(), 2);
+        g.observe(obs(4, 100, &lats));
+        g.observe(obs(4, 100, &lats));
+        g.observe(obs(4, 100, &lats));
+        assert_eq!(g.current_batch(), 8, "clamped at max after repeated breaches");
+        assert_eq!(g.decisions(), 3);
+    }
+
+    #[test]
+    fn slo_halves_on_overbatching_breach() {
+        let mut g = SloGovernor::new(1_000_000, 1, 16, 4);
+        // climb to 4 first
+        let slow = [5_000_000u64; 4];
+        g.observe(obs(4, 100, &slow));
+        g.observe(obs(4, 100, &slow));
+        assert_eq!(g.current_batch(), 4);
+        // breach with a *shallow* queue: fill wait dominates — halve
+        g.observe(obs(4, 0, &slow));
+        assert_eq!(g.current_batch(), 2);
+        g.observe(obs(4, 0, &slow));
+        g.observe(obs(4, 0, &slow));
+        assert_eq!(g.current_batch(), 1, "clamped at min");
+    }
+
+    #[test]
+    fn slo_grows_on_headroom_with_backlog_only() {
+        let mut g = SloGovernor::new(10_000_000, 1, 8, 2);
+        let fast = [1_000_000u64, 1_000_000]; // p99 ≈ 1ms ≪ 10ms SLO
+        g.observe(obs(2, 0, &fast));
+        assert_eq!(g.current_batch(), 1, "no backlog: no reason to batch more");
+        g.observe(obs(2, 50, &fast));
+        assert_eq!(g.current_batch(), 2, "headroom + backlog: grow");
+    }
+
+    #[test]
+    fn slo_window_gates_decisions() {
+        let mut g = SloGovernor::new(1_000_000, 1, 8, 10);
+        let slow = [5_000_000u64; 4];
+        g.observe(obs(4, 100, &slow));
+        g.observe(obs(4, 100, &slow));
+        assert_eq!(g.current_batch(), 1, "window (10) not yet full at 8 seen");
+        g.observe(obs(4, 100, &slow));
+        assert_eq!(g.current_batch(), 2, "12 ≥ 10: decision fires");
+    }
+
+    #[test]
+    fn governors_are_object_safe() {
+        let mut govs: Vec<Box<dyn ServeGovernor>> = vec![
+            Box::new(FixedServeGovernor::new(4)),
+            Box::new(QueueDepthGovernor::new(1, 32)),
+            Box::new(SloGovernor::new(25_000_000, 1, 32, 64)),
+        ];
+        for g in govs.iter_mut() {
+            let t = g.target_batch(5);
+            assert!(t >= 1);
+            assert!(g.ladder().contains(&g.current_batch()));
+            g.observe(obs(2, 0, &[1000, 2000]));
+        }
+    }
+}

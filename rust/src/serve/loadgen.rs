@@ -1,0 +1,512 @@
+//! Open-loop load generation and the serve-bench drivers.
+//!
+//! **Open loop**: the arrival schedule is generated up front from
+//! `(seed, qps, shape, duration)` — a pure function, so every arm of a
+//! comparison (fixed vs. adaptive governor) faces the *identical* request
+//! stream, exactly like the trainer's paired-trial methodology. Shapes
+//! are sampled by Poisson thinning (candidates at the peak rate, accepted
+//! with probability `rate(t)/rate_max`), which is exact for steady,
+//! bursty and ramp profiles alike.
+//!
+//! Two drivers run the same queue → governor → batcher → inference
+//! pipeline:
+//!
+//! * [`run_virtual`] — a discrete-event loop on a **virtual clock**: the
+//!   forward pass really executes (reference backend), but time advances
+//!   by a deterministic affine service model `base + per_sample·padded`.
+//!   The whole run — batch compositions, governor decisions, latency
+//!   percentiles, the JSON report — is a pure function of (seed, config):
+//!   the serving twin of the trainer's determinism contract, and what CI
+//!   pins (`tests/serve_determinism.rs`).
+//! * the **wall clock** path ([`super::server::serve_wall`]) — real
+//!   scoped threads, real `Instant` latencies, for actual measurement;
+//!   arrivals are paced by sleeping and shed (never delayed) when the
+//!   admission queue is full.
+//!
+//! [`run_serve_bench`] wraps either into a stable JSON report whose
+//! percentiles feed the cross-PR `BENCH_*.json` trajectory.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::governor::{
+    pad_to_rung, FixedServeGovernor, QueueDepthGovernor, ServeGovernor, ServeObservation,
+    SloGovernor,
+};
+use super::queue::BoundedQueue;
+use super::server::serve_wall;
+use super::{Request, ServeStats};
+use crate::config::{ServeConfig, TrafficShape};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::dataset::{GatherBufs, TrainData};
+use crate::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use crate::optim::param::ParamSet;
+use crate::runtime::ModelRuntime;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Which clock drives the bench.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Clock {
+    /// deterministic discrete-event time (bit-identical reports)
+    Virtual,
+    /// real threads and `Instant` latencies
+    Wall,
+}
+
+impl Clock {
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "virtual" => Clock::Virtual,
+            "wall" => Clock::Wall,
+            other => bail!("unknown clock {other:?} (virtual|wall)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Clock::Virtual => "virtual",
+            Clock::Wall => "wall",
+        }
+    }
+}
+
+/// Construct a serve governor by CLI name over a config's knobs. The
+/// `fixed` baseline serves `min_batch` (the `--batch` knob).
+pub fn governor_from_name(name: &str, scfg: &ServeConfig) -> Result<Box<dyn ServeGovernor>> {
+    Ok(match name {
+        "fixed" => Box::new(FixedServeGovernor::new(scfg.min_batch)),
+        "queue" => Box::new(QueueDepthGovernor::new(scfg.min_batch, scfg.max_batch)),
+        "slo" => Box::new(SloGovernor::new(
+            scfg.slo_ns(),
+            scfg.min_batch,
+            scfg.max_batch,
+            scfg.window,
+        )),
+        other => bail!("unknown serve governor {other:?} (fixed|queue|slo)"),
+    })
+}
+
+/// Deterministic open-loop arrival schedule: ns offsets from bench start,
+/// non-decreasing, all within the duration window.
+pub fn arrival_schedule(qps: f64, duration_s: f64, shape: TrafficShape, seed: u64) -> Vec<u64> {
+    assert!(qps > 0.0 && duration_s > 0.0);
+    let mut rng = Pcg32::new(seed).split(0x4C47);
+    let rate_max = match shape {
+        TrafficShape::Steady => qps,
+        TrafficShape::Bursty => 1.8 * qps,
+        TrafficShape::Ramp => 2.0 * qps,
+    };
+    let rate = |t: f64| -> f64 {
+        match shape {
+            TrafficShape::Steady => qps,
+            // alternating 500 ms high/low periods with mean qps
+            TrafficShape::Bursty => {
+                if (t / 0.5) as u64 % 2 == 0 {
+                    1.8 * qps
+                } else {
+                    0.2 * qps
+                }
+            }
+            TrafficShape::Ramp => 2.0 * qps * t / duration_s,
+        }
+    };
+    // Poisson thinning: exact for any bounded rate profile
+    let mut out = Vec::with_capacity((qps * duration_s) as usize + 16);
+    let mut t = 0.0f64;
+    loop {
+        let u = rng.next_f64();
+        t += -(1.0 - u).ln() / rate_max;
+        if t >= duration_s {
+            break;
+        }
+        if rng.next_f64() * rate_max <= rate(t) {
+            out.push((t * 1e9) as u64);
+        }
+    }
+    out
+}
+
+/// Virtual-clock knobs (all ns).
+#[derive(Debug, Clone)]
+pub struct VirtualCfg {
+    pub workers: usize,
+    pub max_wait_ns: u64,
+    /// per-batch dispatch overhead
+    pub service_base_ns: u64,
+    /// cost per padded sample
+    pub service_per_sample_ns: u64,
+    /// serving stops here; still-queued requests count as unserved
+    pub horizon_ns: u64,
+    /// requests arriving earlier are excluded from the latency histogram
+    pub warmup_ns: u64,
+    /// admission cap, mirroring the wall queue: arrivals beyond it shed
+    pub queue_capacity: usize,
+}
+
+impl VirtualCfg {
+    pub fn from_serve(scfg: &ServeConfig) -> Self {
+        VirtualCfg {
+            workers: scfg.workers,
+            max_wait_ns: scfg.max_wait_ns(),
+            service_base_ns: (scfg.service_base_us * 1e3) as u64,
+            service_per_sample_ns: (scfg.service_per_sample_us * 1e3) as u64,
+            horizon_ns: scfg.horizon_ns(),
+            warmup_ns: scfg.warmup_ns(),
+            queue_capacity: scfg.queue_capacity,
+        }
+    }
+}
+
+/// Discrete-event serving run on the virtual clock. The batcher policy is
+/// [`super::batcher::batch_ready`] evaluated in event time: a batch closes
+/// at the earliest instant it is full, its front request has waited
+/// `max_wait`, or no more arrivals can come. `workers` parallel servers
+/// are modeled as a min-heap of busy-until times; the forward pass runs
+/// for real on the reference backend, the service *time* comes from the
+/// affine model. Everything observable is a pure function of the inputs.
+#[allow(clippy::too_many_arguments)]
+pub fn run_virtual(
+    rt: &ModelRuntime,
+    params: &ParamSet,
+    data: &TrainData,
+    governor: &mut dyn ServeGovernor,
+    arrivals: &[u64],
+    samples: &[usize],
+    ladder: &[usize],
+    cfg: &VirtualCfg,
+) -> Result<ServeStats> {
+    assert!(cfg.workers > 0, "need at least one virtual server");
+    assert_eq!(arrivals.len(), samples.len());
+    let n = arrivals.len();
+    let req = |i: usize| Request { id: i as u64, sample: samples[i], arrival_ns: arrivals[i] };
+
+    let mut pending: VecDeque<Request> = VecDeque::new();
+    let mut workers: BinaryHeap<Reverse<u64>> =
+        (0..cfg.workers).map(|_| Reverse(0u64)).collect();
+    let mut stats = ServeStats::default();
+    let mut bufs = GatherBufs::default();
+    let mut lats: Vec<u64> = Vec::new();
+    let mut i = 0usize;
+    let mut shed = 0u64;
+
+    loop {
+        let Reverse(free_at) = *workers.peek().expect("worker heap is never empty");
+        while i < n && arrivals[i] <= free_at {
+            // mirror the wall queue's admission cap: overflow is shed
+            if pending.len() < cfg.queue_capacity {
+                pending.push_back(req(i));
+            } else {
+                shed += 1;
+            }
+            i += 1;
+        }
+        let closed = i >= n;
+        let target = governor.target_batch(pending.len()).max(1);
+        let mut t = free_at;
+        if pending.len() < target {
+            if closed {
+                // no arrival can ever fill this batch: serve the
+                // leftovers immediately (batch_ready's `closed` arm)
+                if pending.is_empty() {
+                    break; // fully served
+                }
+            } else {
+                // earliest instant the batch can close: it fills, or its
+                // front (or first future) request hits max_wait
+                let t_fill = arrivals.get(i + (target - pending.len()) - 1).copied();
+                let t_timeout = pending
+                    .front()
+                    .map(|r| r.arrival_ns + cfg.max_wait_ns)
+                    .unwrap_or(arrivals[i] + cfg.max_wait_ns);
+                t = match t_fill {
+                    Some(fill) => fill.min(t_timeout),
+                    None => t_timeout,
+                }
+                .max(free_at);
+                while i < n && arrivals[i] <= t {
+                    if pending.len() < cfg.queue_capacity {
+                        pending.push_back(req(i));
+                    } else {
+                        shed += 1;
+                    }
+                    i += 1;
+                }
+            }
+        }
+        // the closing-time candidates all sit at or after the next
+        // arrival, so something is always pending by now
+        assert!(!pending.is_empty(), "virtual batcher closed an empty batch");
+        if t >= cfg.horizon_ns {
+            stats.unserved = (pending.len() + (n - i)) as u64;
+            break;
+        }
+
+        let take = pending.len().min(target);
+        let batch: Vec<Request> = pending.drain(..take).collect();
+        // causality clamp: a batch only exists once its last member has
+        // arrived (pending is FIFO, so the last taken has the max
+        // arrival). Without this, a second worker freeing earlier than
+        // the admission instant could "serve" requests before they
+        // arrive and `done - arrival` would underflow.
+        let t = t.max(batch.last().expect("batch is non-empty").arrival_ns);
+        let depth_after = pending.len();
+        let padded = pad_to_rung(take, ladder);
+
+        // the forward pass really runs; only its *duration* is modeled
+        let out = super::forward_batch(rt, params, data, &batch, padded, &mut bufs)?;
+
+        let service = cfg.service_base_ns + cfg.service_per_sample_ns * padded as u64;
+        let done = t + service;
+        workers.pop();
+        workers.push(Reverse(done));
+
+        lats.clear();
+        for r in &batch {
+            lats.push(done - r.arrival_ns);
+        }
+        for (r, &l) in batch.iter().zip(&lats) {
+            if r.arrival_ns >= cfg.warmup_ns {
+                stats.hist.record(l);
+            }
+        }
+        stats.completed += take as u64;
+        stats.batches += 1;
+        stats.padded_samples += padded as u64;
+        stats.loss_sum += out.loss as f64;
+        stats.correct_sum += out.correct as f64;
+        stats.last_done_ns = stats.last_done_ns.max(done);
+        governor.observe(ServeObservation {
+            batch: take,
+            queue_depth: depth_after,
+            latencies_ns: &lats,
+        });
+    }
+    stats.shed = shed;
+    Ok(stats)
+}
+
+/// End-to-end serve bench: build the sample pool and reference runtime,
+/// generate the arrival schedule, run the pipeline under `governor` on
+/// the chosen clock, and render the stable JSON report. `checkpoint`
+/// optionally serves parameters trained by `adabatch train
+/// --checkpoint-dir` instead of a fresh init.
+pub fn run_serve_bench(
+    scfg: &ServeConfig,
+    governor: &mut dyn ServeGovernor,
+    clock: Clock,
+    classes: usize,
+    pool: usize,
+    checkpoint: Option<&std::path::Path>,
+) -> Result<(ServeStats, Json)> {
+    scfg.validate()?;
+    if classes < 2 || pool == 0 {
+        bail!("serve-bench needs ≥ 2 classes and a non-empty sample pool");
+    }
+    let ladder = governor.ladder();
+    let arrivals = arrival_schedule(scfg.qps, scfg.duration_s, scfg.shape, scfg.seed);
+    let n = arrivals.len();
+
+    // shared sample pool: requests reference it by index
+    let mut spec = SyntheticSpec::cifar10();
+    spec.n_classes = classes;
+    spec.train_per_class = pool.div_ceil(classes).max(1);
+    spec.test_per_class = 1;
+    spec.seed = 0x5E27E ^ scfg.seed;
+    let data = TrainData::Images(generate(&spec).train);
+    let pool_len = data.len();
+    let mut srng = Pcg32::new(scfg.seed).split(0x5A3B);
+    let samples: Vec<usize> = (0..n)
+        .map(|_| srng.gen_range(pool_len as u32) as usize)
+        .collect();
+
+    let rt = ModelRuntime::reference_serving("serve_ref", IMG_LEN, classes, &ladder);
+    let mut params = ParamSet::init(&rt.entry.params, scfg.seed);
+    if let Some(path) = checkpoint {
+        let ck = Checkpoint::load(path, &params)?;
+        log::info!(
+            "serving params from checkpoint {} (model {:?}, epoch {})",
+            path.display(),
+            ck.model,
+            ck.epoch
+        );
+        params = ck.params;
+    }
+
+    let stats = match clock {
+        Clock::Virtual => {
+            let vcfg = VirtualCfg::from_serve(scfg);
+            run_virtual(&rt, &params, &data, governor, &arrivals, &samples, &ladder, &vcfg)?
+        }
+        Clock::Wall => {
+            let queue: BoundedQueue<Request> = BoundedQueue::bounded(scfg.queue_capacity);
+            let max_wait = Duration::from_nanos(scfg.max_wait_ns());
+            let start = Instant::now();
+            let deadline = start + Duration::from_nanos(scfg.horizon_ns());
+            let mut shed = 0u64;
+            let mut stats = std::thread::scope(|s| {
+                let server = s.spawn(|| {
+                    serve_wall(
+                        &rt,
+                        &params,
+                        &data,
+                        governor,
+                        &queue,
+                        scfg.workers,
+                        max_wait,
+                        &ladder,
+                        start,
+                        scfg.warmup_ns(),
+                        deadline,
+                    )
+                });
+                for (i, &t_ns) in arrivals.iter().enumerate() {
+                    let due = Duration::from_nanos(t_ns);
+                    let now = start.elapsed();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                    // stamp the *scheduled* arrival, not the push time:
+                    // if the generator falls behind, the lateness must
+                    // show up as request latency (no coordinated
+                    // omission), matching the virtual clock
+                    let req = Request { id: i as u64, sample: samples[i], arrival_ns: t_ns };
+                    if queue.try_push(req).is_err() {
+                        shed += 1; // open loop: never slow the client
+                    }
+                }
+                queue.close();
+                server
+                    .join()
+                    .unwrap_or_else(|payload| std::panic::resume_unwind(payload))
+            })?;
+            stats.shed = shed;
+            // arrivals admitted after the server hit its horizon cutoff
+            stats.unserved += queue.try_drain(usize::MAX).len() as u64;
+            stats
+        }
+    };
+    let report = report_json(scfg, clock, &*governor, &stats, n);
+    Ok((stats, report))
+}
+
+/// The stable JSON report (keys are emitted sorted — `util::json` objects
+/// are BTreeMaps — so virtual-clock reports are bit-identical per seed).
+pub fn report_json(
+    scfg: &ServeConfig,
+    clock: Clock,
+    governor: &dyn ServeGovernor,
+    stats: &ServeStats,
+    requests: usize,
+) -> Json {
+    let ms = |ns: u64| ns as f64 / 1e6;
+    let p99_ms = ms(stats.hist.p99());
+    let loss_mean = if stats.batches == 0 { 0.0 } else { stats.loss_sum / stats.batches as f64 };
+    Json::obj(vec![
+        ("bench", Json::str("serve-bench")),
+        ("clock", Json::str(clock.name())),
+        ("shape", Json::str(scfg.shape.name())),
+        ("governor", Json::str(governor.name())),
+        ("qps", Json::num(scfg.qps)),
+        ("duration_s", Json::num(scfg.duration_s)),
+        // string, not Json::num: a u64 seed above 2^53 must round-trip
+        // exactly for the reproduce-from-report workflow
+        ("seed", Json::str(scfg.seed.to_string())),
+        ("workers", Json::num(scfg.workers as f64)),
+        ("min_batch", Json::num(scfg.min_batch as f64)),
+        ("max_batch", Json::num(scfg.max_batch as f64)),
+        ("max_wait_ms", Json::num(scfg.max_wait_ms)),
+        ("window", Json::num(scfg.window as f64)),
+        ("warmup_s", Json::num(scfg.warmup_s)),
+        ("slo_ms", Json::num(scfg.slo_ms)),
+        ("requests", Json::num(requests as f64)),
+        ("completed", Json::num(stats.completed as f64)),
+        ("shed", Json::num(stats.shed as f64)),
+        ("unserved", Json::num(stats.unserved as f64)),
+        ("batches", Json::num(stats.batches as f64)),
+        ("mean_batch", Json::num(stats.mean_batch())),
+        ("final_batch", Json::num(governor.current_batch() as f64)),
+        ("decisions", Json::num(governor.decisions() as f64)),
+        ("throughput_rps", Json::num(stats.throughput_rps())),
+        ("p50_ms", Json::num(ms(stats.hist.p50()))),
+        ("p95_ms", Json::num(ms(stats.hist.p95()))),
+        ("p99_ms", Json::num(p99_ms)),
+        ("max_ms", Json::num(ms(stats.hist.max()))),
+        ("mean_ms", Json::num(stats.hist.mean() / 1e6)),
+        ("slo_met", Json::Bool(p99_ms <= scfg.slo_ms)),
+        ("last_done_ms", Json::num(stats.last_done_ns as f64 / 1e6)),
+        ("loss_mean", Json::num(loss_mean)),
+        ("correct", Json::num(stats.correct_sum)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_monotone() {
+        for shape in [TrafficShape::Steady, TrafficShape::Bursty, TrafficShape::Ramp] {
+            let a = arrival_schedule(500.0, 2.0, shape, 42);
+            let b = arrival_schedule(500.0, 2.0, shape, 42);
+            assert_eq!(a, b, "{shape:?}: same seed ⇒ same schedule");
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "{shape:?}: non-decreasing");
+            assert!(a.iter().all(|&t| t < 2_000_000_000), "{shape:?}: inside the window");
+            // mean rate lands near the target (±25%)
+            let n = a.len() as f64;
+            assert!((n - 1000.0).abs() < 250.0, "{shape:?}: {n} arrivals for 1000 expected");
+            let c = arrival_schedule(500.0, 2.0, shape, 43);
+            assert_ne!(a, c, "{shape:?}: different seed ⇒ different schedule");
+        }
+    }
+
+    #[test]
+    fn bursty_is_actually_bursty() {
+        let a = arrival_schedule(1000.0, 1.0, TrafficShape::Bursty, 7);
+        let first_half = a.iter().filter(|&&t| t < 500_000_000).count();
+        let second_half = a.len() - first_half;
+        assert!(
+            first_half > 3 * second_half,
+            "high period {first_half} vs low period {second_half}"
+        );
+    }
+
+    #[test]
+    fn governor_names_resolve() {
+        let scfg = ServeConfig::default();
+        for name in ["fixed", "queue", "slo"] {
+            let g = governor_from_name(name, &scfg).unwrap();
+            assert!(!g.ladder().is_empty());
+        }
+        assert!(governor_from_name("psychic", &scfg).is_err());
+        assert!(Clock::from_name("virtual").is_ok());
+        assert!(Clock::from_name("sundial").is_err());
+    }
+
+    #[test]
+    fn virtual_bench_serves_everything_under_light_load() {
+        let scfg = ServeConfig {
+            qps: 400.0,
+            duration_s: 0.5,
+            max_batch: 8,
+            workers: 1,
+            warmup_s: 0.0,
+            ..ServeConfig::default()
+        };
+        scfg.validate().unwrap();
+        let mut gov = governor_from_name("queue", &scfg).unwrap();
+        let (stats, report) =
+            run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 32, None).unwrap();
+        assert!(stats.completed > 0);
+        assert_eq!(stats.unserved, 0, "capacity far exceeds offered load");
+        assert_eq!(stats.completed, stats.hist.count(), "warmup 0: all recorded");
+        assert!(stats.hist.p99() > 0);
+        assert!(stats.loss_sum > 0.0, "the model really ran");
+        let s = report.to_string();
+        assert!(s.contains("\"p99_ms\":"));
+        assert!(s.contains("\"governor\":\"queue-depth\""));
+    }
+}

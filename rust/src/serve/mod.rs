@@ -1,0 +1,120 @@
+//! `serve` — the adaptive micro-batching inference subsystem (DESIGN.md
+//! §7): AdaBatch's "batch size is a control variable" thesis transplanted
+//! to the request-serving path, where the measured signals are queue
+//! depth and tail latency instead of gradient statistics.
+//!
+//! Pipeline: an open-loop load generator ([`loadgen`]) pushes requests
+//! into a bounded condvar queue ([`queue`]); a batcher ([`batcher`])
+//! drains them into micro-batches sized by a [`governor::ServeGovernor`]
+//! (fixed / queue-depth-proportional / p99-SLO doubling-halving) and
+//! padded to an eval-executable ladder rung; a worker pool ([`server`])
+//! runs forward-only inference through the same
+//! [`crate::runtime::ModelRuntime`] contract training uses. Per-request
+//! latencies land in a log-bucketed [`crate::metrics::LatencyHistogram`]
+//! and come out as a stable JSON report (`adabatch serve-bench`).
+//!
+//! Two clocks drive the same pipeline: **virtual** (a discrete-event
+//! driver with a deterministic service-time model — bit-identical reports
+//! given (seed, config), the serving twin of the trainer's determinism
+//! contract) and **wall** (real scoped threads, real latencies, for
+//! actual measurement).
+
+pub mod batcher;
+pub mod governor;
+pub mod loadgen;
+pub mod queue;
+pub mod server;
+
+pub use batcher::{batch_ready, Batcher};
+pub use governor::{
+    pad_to_rung, serve_ladder, FixedServeGovernor, QueueDepthGovernor, ServeGovernor,
+    ServeObservation, SloGovernor,
+};
+pub use loadgen::{arrival_schedule, run_serve_bench, run_virtual, Clock, VirtualCfg};
+pub use queue::{BoundedQueue, Pop, Reject};
+pub use server::serve_wall;
+
+use anyhow::Result;
+
+use crate::coordinator::dataset::{GatherBufs, TrainData};
+use crate::metrics::LatencyHistogram;
+use crate::optim::param::ParamSet;
+use crate::runtime::{Dtype, HostBatch, ModelRuntime, StepKind, StepOutputs};
+
+/// One inference request. The payload is an index into a shared sample
+/// pool (requests reference data, they don't carry copies — the queue
+/// stays cheap at any feature width).
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// index into the bench's sample pool
+    pub sample: usize,
+    /// arrival time on the bench clock, ns since bench start
+    pub arrival_ns: u64,
+}
+
+/// Aggregated outcome of one serving run, identical in shape for the
+/// virtual and wall clocks.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServeStats {
+    /// end-to-end request latencies (requests arriving during warmup are
+    /// excluded, so reported tails are steady-state)
+    pub hist: LatencyHistogram,
+    /// requests served (warmup included)
+    pub completed: u64,
+    /// micro-batches dispatched
+    pub batches: u64,
+    /// Σ padded batch sizes actually executed
+    pub padded_samples: u64,
+    /// requests rejected at admission — the queue (or its virtual-clock
+    /// mirror) was at capacity; open-loop arrivals are never delayed
+    pub shed: u64,
+    /// requests never served before the bench horizon (virtual clock)
+    pub unserved: u64,
+    /// Σ per-batch loss (inference checksum: proves the model really ran)
+    pub loss_sum: f64,
+    /// Σ per-batch correct-prediction counts
+    pub correct_sum: f64,
+    /// completion time of the last served batch, ns on the bench clock
+    pub last_done_ns: u64,
+}
+
+/// The inference hot path both clocks share: gather `batch`'s samples
+/// padded to `padded`, and run the forward-only eval executable.
+pub(crate) fn forward_batch(
+    rt: &ModelRuntime,
+    params: &ParamSet,
+    data: &TrainData,
+    batch: &[Request],
+    padded: usize,
+    bufs: &mut GatherBufs,
+) -> Result<StepOutputs> {
+    let idx: Vec<usize> = batch.iter().map(|r| r.sample).collect();
+    data.gather(&idx, padded, bufs);
+    let exe = rt.executable(StepKind::Eval, padded)?;
+    let x = match data.x_dtype() {
+        Dtype::F32 => HostBatch::F32(&bufs.x_f32),
+        Dtype::I32 => HostBatch::I32(&bufs.x_i32),
+    };
+    exe.run(params, x, &bufs.y)
+}
+
+impl ServeStats {
+    /// Mean unpadded micro-batch size.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.batches as f64
+        }
+    }
+
+    /// Completed requests per second of serving makespan.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.last_done_ns == 0 {
+            0.0
+        } else {
+            self.completed as f64 * 1e9 / self.last_done_ns as f64
+        }
+    }
+}

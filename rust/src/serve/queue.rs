@@ -1,0 +1,239 @@
+//! Bounded MPMC request queue — the admission edge of the serving path.
+//!
+//! A `Mutex<VecDeque>` guarded by two condvars: `not_empty` wakes
+//! consumers when work arrives, `not_full` wakes producers when capacity
+//! frees up, so a blocking [`BoundedQueue::push`] is real backpressure
+//! (the producer's thread parks until a drain makes room). The load
+//! generator instead uses [`BoundedQueue::try_push`] and counts rejects as
+//! *shed* load — an open-loop client must never be slowed by the server it
+//! is measuring.
+//!
+//! Ordering contract: global FIFO. Every push is serialized through the
+//! mutex, so per-producer program order is preserved, and drains take from
+//! the front — `tests/serve_queue.rs` property-checks exactly-once
+//! delivery and per-producer FIFO under N producers × M consumers.
+//!
+//! Shutdown: [`BoundedQueue::close`] wakes every waiter; pushes fail fast
+//! (returning the item), while pops keep draining whatever is already
+//! queued and only then report [`Pop::Closed`] — a close never drops an
+//! accepted request.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded FIFO queue with blocking push/pop and clean shutdown.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+/// Outcome of a blocking drain.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Pop<T> {
+    /// 1..=max items, in FIFO order.
+    Items(Vec<T>),
+    /// Nothing arrived within the timeout (queue still open).
+    TimedOut,
+    /// Queue closed and fully drained.
+    Closed,
+}
+
+/// Why a [`BoundedQueue::try_push`] was rejected (the item comes back).
+#[derive(Debug, PartialEq, Eq)]
+pub enum Reject<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn bounded(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be > 0");
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Blocking push: parks until capacity frees (backpressure) or the
+    /// queue closes (`Err(item)` — the caller keeps the item).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Non-blocking push; a full or closed queue rejects with the item.
+    pub fn try_push(&self, item: T) -> Result<(), Reject<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Reject::Closed(item));
+        }
+        if g.items.len() >= self.capacity {
+            return Err(Reject::Full(item));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Drain up to `max` immediately-available items without blocking.
+    pub fn try_drain(&self, max: usize) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        let n = max.min(g.items.len());
+        let out: Vec<T> = g.items.drain(..n).collect();
+        drop(g);
+        if !out.is_empty() {
+            self.not_full.notify_all();
+        }
+        out
+    }
+
+    /// Block until at least one item is available (then take up to `max`),
+    /// the queue closes empty, or `timeout` elapses.
+    pub fn pop_up_to(&self, max: usize, timeout: Duration) -> Pop<T> {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if !g.items.is_empty() {
+                let n = max.max(1).min(g.items.len());
+                let out: Vec<T> = g.items.drain(..n).collect();
+                drop(g);
+                self.not_full.notify_all();
+                return Pop::Items(out);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            let (guard, _res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Close the queue: pushes fail from now on, pops drain the remainder.
+    /// Wakes every blocked producer and consumer.
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_and_len() {
+        let q = BoundedQueue::bounded(8);
+        for i in 0..5 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(q.len(), 5);
+        assert_eq!(q.try_drain(3), vec![0, 1, 2]);
+        match q.pop_up_to(10, Duration::from_millis(10)) {
+            Pop::Items(v) => assert_eq!(v, vec![3, 4]),
+            other => panic!("expected items, got {other:?}"),
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_times_out_when_empty() {
+        let q: BoundedQueue<u32> = BoundedQueue::bounded(4);
+        assert_eq!(q.pop_up_to(1, Duration::from_millis(5)), Pop::TimedOut);
+    }
+
+    #[test]
+    fn try_push_full_and_closed() {
+        let q = BoundedQueue::bounded(1);
+        q.try_push(1).unwrap();
+        assert_eq!(q.try_push(2), Err(Reject::Full(2)));
+        q.close();
+        assert_eq!(q.try_push(3), Err(Reject::Closed(3)));
+        // close never drops accepted items
+        assert_eq!(q.try_drain(8), vec![1]);
+        assert_eq!(q.pop_up_to(1, Duration::from_millis(1)), Pop::Closed);
+    }
+
+    #[test]
+    fn blocking_push_applies_backpressure() {
+        let q = BoundedQueue::bounded(1);
+        q.push(0u32).unwrap();
+        std::thread::scope(|s| {
+            let t = s.spawn(|| q.push(1).is_ok());
+            // the producer is parked on not_full until we drain
+            std::thread::sleep(Duration::from_millis(20));
+            assert_eq!(q.try_drain(1), vec![0]);
+            assert!(t.join().unwrap());
+        });
+        assert_eq!(q.try_drain(1), vec![1]);
+    }
+
+    #[test]
+    fn close_wakes_blocked_producer() {
+        let q = BoundedQueue::bounded(1);
+        q.push(7u32).unwrap();
+        std::thread::scope(|s| {
+            let producer = s.spawn(|| q.push(8)); // blocks: full
+            std::thread::sleep(Duration::from_millis(20));
+            q.close();
+            assert_eq!(producer.join().unwrap(), Err(8));
+        });
+        // the accepted item survives the close
+        assert_eq!(q.try_drain(8), vec![7]);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumer() {
+        let q: BoundedQueue<u32> = BoundedQueue::bounded(1);
+        std::thread::scope(|s| {
+            let consumer = s.spawn(|| q.pop_up_to(1, Duration::from_secs(30)));
+            std::thread::sleep(Duration::from_millis(20));
+            q.close();
+            assert_eq!(consumer.join().unwrap(), Pop::Closed);
+        });
+    }
+}

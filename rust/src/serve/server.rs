@@ -1,0 +1,338 @@
+//! The wall-clock serving pipeline: batcher/dispatcher + a scoped-thread
+//! worker pool running forward-only inference.
+//!
+//! Reuses the [`crate::coordinator::engine`] idioms: persistent workers
+//! fed jobs over per-worker channels, worker-indexed results, and panic
+//! liveness — if a worker dies mid-batch the dispatcher surfaces an
+//! error instead of hanging (a finished worker owing a reply is a panic;
+//! a finished worker with nothing in flight just processed its
+//! `Finish`). Unlike the training engine there is **no barrier**: the
+//! dispatcher streams batches to the least-loaded worker and folds
+//! completions back in whenever they arrive, because serving cares about
+//! per-request latency, not synchronous updates.
+//!
+//! The dispatcher owns the [`ServeGovernor`]: it consults
+//! `target_batch(queue depth)` before each drain and feeds every
+//! completed batch's latencies back via `observe`, closing the control
+//! loop that makes the micro-batch size adaptive.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::Batcher;
+use super::governor::{pad_to_rung, ServeGovernor, ServeObservation};
+use super::queue::BoundedQueue;
+use super::{Request, ServeStats};
+use crate::coordinator::dataset::{GatherBufs, TrainData};
+use crate::optim::param::ParamSet;
+use crate::runtime::ModelRuntime;
+
+enum Job {
+    Run {
+        /// queue depth right after this batch was drained
+        depth: usize,
+        batch: Vec<Request>,
+        padded: usize,
+    },
+    Finish,
+}
+
+struct BatchDone {
+    depth: usize,
+    unpadded: usize,
+    padded: usize,
+    latencies_ns: Vec<u64>,
+    /// per-request arrival times, aligned with `latencies_ns` (warmup
+    /// filtering is per request, not per batch)
+    arrivals_ns: Vec<u64>,
+    loss: f64,
+    correct: f64,
+    done_ns: u64,
+}
+
+/// Run the serving pipeline against `queue` until it is closed and
+/// drained, or the bench `deadline` (the horizon) passes — whichever
+/// comes first; at the deadline, still-queued requests are counted as
+/// `unserved`, mirroring the virtual clock's horizon cutoff. Blocks the
+/// calling thread (run it under `std::thread::scope` beside the load
+/// generator). `start` anchors the bench clock that request `arrival_ns`
+/// values were stamped against; requests arriving before `warmup_ns` are
+/// served but excluded from the latency histogram.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_wall(
+    rt: &ModelRuntime,
+    params: &ParamSet,
+    data: &TrainData,
+    governor: &mut dyn ServeGovernor,
+    queue: &BoundedQueue<Request>,
+    workers: usize,
+    max_wait: Duration,
+    ladder: &[usize],
+    start: Instant,
+    warmup_ns: u64,
+    deadline: Instant,
+) -> Result<ServeStats> {
+    assert!(workers > 0, "server needs at least one worker");
+    std::thread::scope(|scope| {
+        let (res_tx, res_rx) = channel::<(usize, Result<BatchDone>)>();
+        let mut job_txs: Vec<Sender<Job>> = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let res_tx = res_tx.clone();
+            handles.push(scope.spawn(move || worker_loop(w, rx, res_tx, rt, params, data, start)));
+            job_txs.push(tx);
+        }
+        drop(res_tx);
+
+        let batcher = Batcher::new(max_wait);
+        let mut stats = ServeStats::default();
+        let mut in_flight = vec![0usize; workers];
+
+        let outcome = (|| -> Result<()> {
+            loop {
+                // fold in any completions that have landed (non-blocking)
+                while let Ok((w, res)) = res_rx.try_recv() {
+                    in_flight[w] -= 1;
+                    absorb(&mut stats, &mut *governor, res?, warmup_ns);
+                }
+                if Instant::now() >= deadline {
+                    // horizon: stop serving; the backlog is unserved
+                    stats.unserved += queue.try_drain(usize::MAX).len() as u64;
+                    break;
+                }
+                let target = governor.target_batch(queue.len());
+                let Some(batch) = batcher.next_batch(queue, target, Some(deadline)) else {
+                    break; // closed and drained
+                };
+                if batch.is_empty() {
+                    continue; // deadline slice expired with nothing queued
+                }
+                let padded = pad_to_rung(batch.len(), ladder);
+                let depth = queue.len();
+                // least-loaded dispatch (first minimum ⇒ deterministic
+                // tie-break), mirroring the virtual clock's
+                // earliest-free-worker model
+                let worker = in_flight
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &n)| n)
+                    .map(|(w, _)| w)
+                    .expect("workers > 0");
+                job_txs[worker]
+                    .send(Job::Run { depth, batch, padded })
+                    .map_err(|_| anyhow!("serve worker pool shut down"))?;
+                in_flight[worker] += 1;
+            }
+            for tx in &job_txs {
+                let _ = tx.send(Job::Finish);
+            }
+            // drain the stragglers, with the engine's panic-liveness poll
+            while in_flight.iter().sum::<usize>() > 0 {
+                match res_rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok((w, res)) => {
+                        in_flight[w] -= 1;
+                        absorb(&mut stats, &mut *governor, res?, warmup_ns);
+                    }
+                    Err(RecvTimeoutError::Timeout) => {
+                        let dead = in_flight
+                            .iter()
+                            .enumerate()
+                            .any(|(w, &n)| n > 0 && handles[w].is_finished());
+                        if dead {
+                            return Err(anyhow!(
+                                "a serve worker exited owing a reply (panicked?)"
+                            ));
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        return Err(anyhow!("serve worker pool died mid-batch"));
+                    }
+                }
+            }
+            Ok(())
+        })();
+
+        // make sure workers wind down even on the error path
+        for tx in &job_txs {
+            let _ = tx.send(Job::Finish);
+        }
+        for handle in handles {
+            if let Err(payload) = handle.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+        outcome.map(|()| stats)
+    })
+}
+
+/// Fold one completed batch into the run stats and the governor.
+fn absorb(
+    stats: &mut ServeStats,
+    governor: &mut dyn ServeGovernor,
+    done: BatchDone,
+    warmup_ns: u64,
+) {
+    for (&l, &arrival) in done.latencies_ns.iter().zip(&done.arrivals_ns) {
+        if arrival >= warmup_ns {
+            stats.hist.record(l);
+        }
+    }
+    stats.completed += done.unpadded as u64;
+    stats.batches += 1;
+    stats.padded_samples += done.padded as u64;
+    stats.loss_sum += done.loss;
+    stats.correct_sum += done.correct;
+    stats.last_done_ns = stats.last_done_ns.max(done.done_ns);
+    governor.observe(ServeObservation {
+        batch: done.unpadded,
+        queue_depth: done.depth,
+        latencies_ns: &done.latencies_ns,
+    });
+}
+
+fn worker_loop(
+    index: usize,
+    jobs: Receiver<Job>,
+    results: Sender<(usize, Result<BatchDone>)>,
+    rt: &ModelRuntime,
+    params: &ParamSet,
+    data: &TrainData,
+    start: Instant,
+) {
+    let mut bufs = GatherBufs::default();
+    while let Ok(job) = jobs.recv() {
+        match job {
+            Job::Finish => break,
+            Job::Run { depth, batch, padded } => {
+                let res = super::forward_batch(rt, params, data, &batch, padded, &mut bufs)
+                    .map(|out| {
+                        let done_ns = start.elapsed().as_nanos() as u64;
+                        BatchDone {
+                            depth,
+                            unpadded: batch.len(),
+                            padded,
+                            latencies_ns: batch
+                                .iter()
+                                .map(|r| done_ns.saturating_sub(r.arrival_ns))
+                                .collect(),
+                            arrivals_ns: batch.iter().map(|r| r.arrival_ns).collect(),
+                            loss: out.loss as f64,
+                            correct: out.correct as f64,
+                            done_ns,
+                        }
+                    });
+                if results.send((index, res)).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+    use crate::serve::governor::{serve_ladder, QueueDepthGovernor};
+
+    fn tiny_pool() -> TrainData {
+        let mut spec = SyntheticSpec::cifar10();
+        spec.n_classes = 4;
+        spec.train_per_class = 8;
+        spec.test_per_class = 4;
+        TrainData::Images(generate(&spec).train)
+    }
+
+    #[test]
+    fn serves_every_request_exactly_once() {
+        let data = tiny_pool();
+        let ladder = serve_ladder(1, 8);
+        let rt = ModelRuntime::reference_serving("serve_ref", IMG_LEN, 4, &ladder);
+        let params = ParamSet::init(&rt.entry.params, 3);
+        let queue: BoundedQueue<Request> = BoundedQueue::bounded(64);
+        let mut gov = QueueDepthGovernor::new(1, 8);
+        let start = Instant::now();
+
+        let n = 40u64;
+        let stats = std::thread::scope(|s| {
+            let server = s.spawn(|| {
+                serve_wall(
+                    &rt,
+                    &params,
+                    &data,
+                    &mut gov,
+                    &queue,
+                    2,
+                    Duration::from_millis(2),
+                    &ladder,
+                    start,
+                    0,
+                    start + Duration::from_secs(60),
+                )
+            });
+            for id in 0..n {
+                let req = Request {
+                    id,
+                    sample: (id as usize) % data.len(),
+                    arrival_ns: start.elapsed().as_nanos() as u64,
+                };
+                queue.push(req).unwrap();
+            }
+            queue.close();
+            server.join().unwrap()
+        })
+        .unwrap();
+
+        assert_eq!(stats.completed, n);
+        assert!(stats.padded_samples >= n, "padding never shrinks a batch");
+        assert!(stats.batches >= 1 && stats.batches <= n);
+        assert_eq!(stats.hist.count(), n, "warmup 0: every latency recorded");
+        assert!(stats.hist.p99() >= stats.hist.p50());
+        assert!(stats.loss_sum.is_finite() && stats.loss_sum > 0.0);
+        assert!(stats.last_done_ns > 0);
+        assert!(stats.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn warmup_filters_histogram_but_not_throughput() {
+        let data = tiny_pool();
+        let ladder = serve_ladder(1, 4);
+        let rt = ModelRuntime::reference_serving("serve_ref", IMG_LEN, 4, &ladder);
+        let params = ParamSet::init(&rt.entry.params, 3);
+        let queue: BoundedQueue<Request> = BoundedQueue::bounded(64);
+        let mut gov = QueueDepthGovernor::new(1, 4);
+        let start = Instant::now();
+
+        let stats = std::thread::scope(|s| {
+            let server = s.spawn(|| {
+                serve_wall(
+                    &rt,
+                    &params,
+                    &data,
+                    &mut gov,
+                    &queue,
+                    1,
+                    Duration::from_millis(1),
+                    &ladder,
+                    start,
+                    u64::MAX, // everything counts as warmup
+                    start + Duration::from_secs(60),
+                )
+            });
+            for id in 0..10u64 {
+                queue
+                    .push(Request { id, sample: id as usize, arrival_ns: 0 })
+                    .unwrap();
+            }
+            queue.close();
+            server.join().unwrap()
+        })
+        .unwrap();
+
+        assert_eq!(stats.completed, 10);
+        assert_eq!(stats.hist.count(), 0, "warmup excludes all latencies");
+    }
+}

@@ -1,0 +1,157 @@
+//! Checkpoint/resume round-trip (ISSUE 2 satellite): a run interrupted at
+//! epoch k and resumed from its checkpoint must land on the *bitwise*
+//! same parameters and momentum as the uninterrupted run — the
+//! epoch-indexed PRNG streams (planner splits per epoch) plus restored
+//! velocity make the trajectory a pure function of (seed, config), with
+//! or without the interruption.
+
+use adabatch::coordinator::checkpoint::Checkpoint;
+use adabatch::coordinator::{train, TrainData, TrainerConfig};
+use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use adabatch::optim::param::ParamSet;
+use adabatch::runtime::ModelRuntime;
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
+
+fn small_images() -> (TrainData, TrainData) {
+    let mut spec = SyntheticSpec::cifar10();
+    spec.n_classes = 4;
+    spec.train_per_class = 32;
+    spec.test_per_class = 8;
+    let d = generate(&spec);
+    (TrainData::Images(d.train), TrainData::Images(d.test))
+}
+
+fn ref_rt() -> ModelRuntime {
+    ModelRuntime::reference_classifier("ref_linear", IMG_LEN, 4, &[8, 16, 32, 64], 64)
+}
+
+fn doubling_gov() -> IntervalGovernor {
+    IntervalGovernor::new(AdaBatchPolicy::new(
+        "ckpt-ada",
+        BatchSchedule::doubling(16, 2),
+        LrSchedule::step(0.05, 0.75, 2),
+    ))
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("adabatch_resume_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn resumed_run_matches_uninterrupted_run_bitwise() {
+    let (train_d, test_d) = small_images();
+    let rt = ref_rt();
+    let epochs = 4;
+    let (dir_full, dir_resumed) = (tmpdir("full"), tmpdir("resumed"));
+
+    // uninterrupted: checkpoints at epochs 1 and 3 (every 2 + final)
+    let cfg = TrainerConfig::new(epochs)
+        .with_seed(9)
+        .with_checkpoints(&dir_full, 2);
+    let mut gov = doubling_gov();
+    let (hist_full, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert_eq!(hist_full.epochs.len(), epochs);
+    assert!(dir_full.join("epoch0001.ckpt").exists());
+    assert!(dir_full.join("epoch0003.ckpt").exists());
+
+    // resumed: restart from the epoch-1 checkpoint, train epochs 2..4
+    let cfg = TrainerConfig::new(epochs)
+        .with_seed(9)
+        .with_checkpoints(&dir_resumed, 2)
+        .with_resume(dir_full.join("epoch0001.ckpt"));
+    let mut gov = doubling_gov();
+    let (hist_res, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert_eq!(hist_res.epochs.len(), epochs - 2, "resume skips completed epochs");
+    assert_eq!(hist_res.epochs[0].epoch, 2);
+    assert_eq!(hist_res.epochs[0].batch, 32, "schedule position survives the restart");
+
+    // the final checkpoints must agree bitwise: params AND momentum
+    let template = ParamSet::init(&rt.entry.params, 0);
+    let full = Checkpoint::load(&dir_full.join("epoch0003.ckpt"), &template).unwrap();
+    let resumed = Checkpoint::load(&dir_resumed.join("epoch0003.ckpt"), &template).unwrap();
+    assert_eq!(full.epoch, resumed.epoch);
+    assert_eq!(full.batch, resumed.batch);
+    assert_eq!(full.params.bufs, resumed.params.bufs, "params must match bitwise");
+    let (vf, vr) = (full.velocity.unwrap(), resumed.velocity.unwrap());
+    assert_eq!(vf.bufs, vr.bufs, "momentum must match bitwise");
+
+    // and the logged trajectory agrees where the runs overlap
+    for (a, b) in hist_full.epochs[2..].iter().zip(&hist_res.epochs) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.train_loss, b.train_loss, "epoch {} losses must be bitwise equal", a.epoch);
+        assert_eq!(a.test_error, b.test_error);
+    }
+
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_resumed);
+}
+
+#[test]
+fn resume_rejects_a_checkpoint_from_another_model() {
+    let (train_d, test_d) = small_images();
+    let rt = ref_rt();
+    let dir = tmpdir("wrongmodel");
+
+    let cfg = TrainerConfig::new(2).with_seed(3).with_checkpoints(&dir, 1);
+    let mut gov = doubling_gov();
+    train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    let ckpt = dir.join("epoch0001.ckpt");
+    assert!(ckpt.exists());
+
+    // same shapes, different model name: must fail loudly, not silently
+    // serve the wrong weights
+    let other = ModelRuntime::reference_classifier("other_model", IMG_LEN, 4, &[8, 16, 32, 64], 64);
+    let cfg = TrainerConfig::new(3).with_seed(3).with_resume(&ckpt);
+    let mut gov = doubling_gov();
+    let err = train(&other, &cfg, &mut gov, &train_d, &test_d).unwrap_err();
+    assert!(format!("{err:#}").contains("model"), "unexpected error: {err:#}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_past_the_final_epoch_is_an_error_not_a_noop() {
+    let (train_d, test_d) = small_images();
+    let rt = ref_rt();
+    let dir = tmpdir("pastend");
+
+    let cfg = TrainerConfig::new(2).with_seed(4).with_checkpoints(&dir, 1);
+    let mut gov = doubling_gov();
+    train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+
+    // resuming the finished run with the same --epochs has nothing to do:
+    // fail loudly instead of printing an empty success
+    let cfg = TrainerConfig::new(2)
+        .with_seed(4)
+        .with_resume(dir.join("epoch0001.ckpt"));
+    let mut gov = doubling_gov();
+    let err = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap_err();
+    assert!(format!("{err:#}").contains("nothing to resume"), "{err:#}");
+
+    // but extending the run with more epochs is fine
+    let cfg = TrainerConfig::new(3)
+        .with_seed(4)
+        .with_resume(dir.join("epoch0001.ckpt"));
+    let mut gov = doubling_gov();
+    let (hist, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert_eq!(hist.epochs.len(), 1);
+    assert_eq!(hist.epochs[0].epoch, 2);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn checkpoint_timer_is_recorded() {
+    let (train_d, test_d) = small_images();
+    let rt = ref_rt();
+    let dir = tmpdir("timer");
+    let cfg = TrainerConfig::new(2).with_seed(5).with_checkpoints(&dir, 1);
+    let mut gov = doubling_gov();
+    let (_hist, timers) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert_eq!(timers.count("checkpoint"), 2, "every epoch checkpoints at cadence 1");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,81 @@
+//! Determinism contract for the serving path (ISSUE 2 satellite): same
+//! seed + same config ⇒ identical arrival schedule and a bit-identical
+//! JSON report on the reference backend — the serving twin of
+//! `tests/engine_determinism.rs`. The virtual clock makes every
+//! observable (batch compositions, governor decisions, percentiles) a
+//! pure function of (seed, config).
+
+use adabatch::config::{ServeConfig, TrafficShape};
+use adabatch::serve::loadgen::{arrival_schedule, governor_from_name, run_serve_bench, Clock};
+
+fn bench_cfg() -> ServeConfig {
+    ServeConfig {
+        qps: 600.0,
+        duration_s: 1.0,
+        shape: TrafficShape::Bursty,
+        slo_ms: 30.0,
+        min_batch: 1,
+        max_batch: 16,
+        max_wait_ms: 4.0,
+        workers: 2,
+        window: 32,
+        seed: 1234,
+        warmup_s: 0.1,
+        ..ServeConfig::default()
+    }
+}
+
+#[test]
+fn arrival_schedules_replay_exactly() {
+    for shape in [TrafficShape::Steady, TrafficShape::Bursty, TrafficShape::Ramp] {
+        for seed in [0u64, 7, 0xDEAD] {
+            let a = arrival_schedule(350.0, 1.5, shape, seed);
+            let b = arrival_schedule(350.0, 1.5, shape, seed);
+            assert_eq!(a, b, "{shape:?}/{seed}: schedule must replay exactly");
+            assert!(!a.is_empty());
+        }
+    }
+}
+
+#[test]
+fn virtual_reports_are_bit_identical_for_all_governors() {
+    let scfg = bench_cfg();
+    for name in ["fixed", "queue", "slo"] {
+        let mut rendered = Vec::new();
+        for _ in 0..2 {
+            let mut gov = governor_from_name(name, &scfg).unwrap();
+            let (stats, report) =
+                run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 64, None).unwrap();
+            assert!(stats.completed > 0, "{name}: empty run");
+            assert!(stats.loss_sum > 0.0, "{name}: inference never executed");
+            rendered.push(report.to_string());
+        }
+        assert_eq!(
+            rendered[0], rendered[1],
+            "{name}: same (seed, config) must render a bit-identical report"
+        );
+        assert!(rendered[0].contains("\"bench\":\"serve-bench\""));
+        assert!(rendered[0].contains("\"clock\":\"virtual\""));
+        assert!(rendered[0].contains("\"p99_ms\":"));
+    }
+}
+
+#[test]
+fn different_seed_changes_the_report() {
+    let scfg = bench_cfg();
+    let mut gov = governor_from_name("slo", &scfg).unwrap();
+    let (_stats, base) =
+        run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 64, None).unwrap();
+
+    let mut other = bench_cfg();
+    other.seed = 4321;
+    let mut gov = governor_from_name("slo", &other).unwrap();
+    let (_stats, changed) =
+        run_serve_bench(&other, gov.as_mut(), Clock::Virtual, 4, 64, None).unwrap();
+
+    assert_ne!(
+        base.to_string(),
+        changed.to_string(),
+        "a different seed must change the arrival stream and hence the report"
+    );
+}
