@@ -1,0 +1,146 @@
+//! Kernel-layer microbenches: blocked vs naive GEMM, and the
+//! batch-efficiency curve the paper is about — per-sample ns of the MLP
+//! forward pass across batch sizes {32..4096} (AdaBatch §4: larger
+//! adaptive batches buy computational efficiency, because per-dispatch
+//! fixed costs — weight packing, scratch setup — amortize over the
+//! batch).
+//!
+//! `--smoke` is the CI mode: fast benchkit budget, curve capped at batch
+//! 1024, and a hard check that per-sample cost does not *increase* from
+//! batch 32 to 1024 (within a small noise allowance). The curve is also
+//! emitted as one stable JSON line (`{"bench":"kernels",...}`) so the
+//! cross-PR BENCH trajectory captures it.
+
+use adabatch::optim::param::ParamSet;
+use adabatch::runtime::kernels;
+use adabatch::runtime::{HostBatch, RefKind, RefModel};
+use adabatch::util::benchkit::{black_box, fmt_time, BenchSuite};
+use adabatch::util::json::Json;
+use adabatch::util::rng::Pcg32;
+
+const IN_DIM: usize = 256;
+const HIDDEN: usize = 128;
+const CLASSES: usize = 10;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    if smoke {
+        std::env::set_var("ADABATCH_BENCH_FAST", "1");
+    }
+    let mut suite = BenchSuite::new(if smoke { "kernels (smoke)" } else { "kernels" });
+
+    // --- blocked vs naive GEMM at one fixed shape ---------------------
+    let (m, n, k) = (128usize, 64usize, 512usize);
+    let mut rng = Pcg32::new(0xBE9C);
+    let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+    let flops = (2 * m * n * k) as f64;
+    suite.bench_units(&format!("gemm_naive_{m}x{k}x{n}"), Some(flops), || {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for p in 0..k {
+                    s += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] = s;
+            }
+        }
+        black_box(c[0]);
+    });
+    suite.bench_units(&format!("gemm_blocked_{m}x{k}x{n}"), Some(flops), || {
+        let mut bt = Vec::new();
+        kernels::pack_transpose(&b, k, n, &mut bt);
+        let mut c = vec![0.0f32; m * n];
+        kernels::gemm_abt(&a, &bt, &mut c, m, n, k);
+        black_box(c[0]);
+    });
+
+    // --- the batch-efficiency curve: MLP forward per-sample ns --------
+    let model = RefModel {
+        kind: RefKind::Mlp { in_dim: IN_DIM, hidden: HIDDEN },
+        n_classes: CLASSES,
+    };
+    let params = ParamSet::init(&model.param_specs(), 7);
+    let max_batch = if smoke { 1024 } else { 4096 };
+    let batches: Vec<usize> = (5..=12).map(|p| 1usize << p).filter(|bs| *bs <= max_batch).collect();
+    let x: Vec<f32> = (0..max_batch * IN_DIM).map(|_| rng.normal()).collect();
+    let y: Vec<i32> = (0..max_batch as i32).map(|i| i % CLASSES as i32).collect();
+
+    let mut curve: Vec<(usize, f64)> = Vec::new();
+    for &bs in &batches {
+        let xb = &x[..bs * IN_DIM];
+        let yb = &y[..bs];
+        let r = suite.bench_units(&format!("mlp_fwd_b{bs}"), Some(bs as f64), || {
+            let out = model.run(&params, HostBatch::F32(xb), yb, bs, false).unwrap();
+            black_box(out.loss);
+        });
+        // min is the most noise-robust per-sample estimate
+        curve.push((bs, r.min() / bs as f64));
+    }
+
+    // a train-step (fwd+bwd) pair for context
+    for &bs in &[32usize, 512] {
+        let xb = &x[..bs * IN_DIM];
+        let yb = &y[..bs];
+        suite.bench_units(&format!("mlp_train_b{bs}"), Some(bs as f64), || {
+            let out = model.run(&params, HostBatch::F32(xb), yb, bs, true).unwrap();
+            black_box(out.loss);
+        });
+    }
+
+    suite.print_report();
+
+    println!("### mlp forward: per-sample cost vs batch (in={IN_DIM}, hidden={HIDDEN})\n");
+    println!("| batch | ns/sample | vs batch {} |", batches[0]);
+    println!("|---|---|---|");
+    let base = curve[0].1;
+    for &(bs, per) in &curve {
+        println!("| {bs} | {} | {:.3}x |", fmt_time(per), per / base);
+    }
+
+    // stable JSON line for the cross-PR BENCH trajectory
+    let json = Json::obj(vec![
+        ("bench", Json::str("kernels")),
+        ("in_dim", Json::num(IN_DIM as f64)),
+        ("hidden", Json::num(HIDDEN as f64)),
+        ("classes", Json::num(CLASSES as f64)),
+        (
+            "mlp_fwd_ns_per_sample",
+            Json::Obj(
+                curve
+                    .iter()
+                    .map(|&(bs, per)| (bs.to_string(), Json::num(per * 1e9)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    println!("\n{json}");
+
+    // the load-bearing claim: per-sample cost decreases (within noise)
+    // as the batch grows — fixed per-call costs amortize
+    let (first_bs, first) = curve[0];
+    let (last_bs, last) = *curve.last().unwrap();
+    let monotone_within_noise = curve
+        .windows(2)
+        .all(|w| w[1].1 <= w[0].1 * 1.05);
+    println!(
+        "\nbatch-efficiency: {}/sample @ b{first_bs} -> {}/sample @ b{last_bs} \
+         ({:.1}% change), monotone within 5% noise: {monotone_within_noise}",
+        fmt_time(first),
+        fmt_time(last),
+        (last / first - 1.0) * 100.0,
+    );
+    // a flat curve (last ≈ first) is exactly the naive-scalar-loop
+    // regression this layer exists to fix, so smoke demands a real net
+    // decrease (≥ 0.5%, far under the ~1/batch amortization effect but
+    // above min-of-samples timing noise) AND no mid-curve spike
+    if smoke && (last >= first * 0.995 || !monotone_within_noise) {
+        eprintln!(
+            "FAIL: batch-efficiency curve regressed — per-sample cost went \
+             {first:e}s @ b{first_bs} -> {last:e}s @ b{last_bs} \
+             (net decrease required), monotone within 5% noise: {monotone_within_noise}"
+        );
+        std::process::exit(1);
+    }
+}

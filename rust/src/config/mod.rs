@@ -7,6 +7,9 @@ use anyhow::{bail, Result};
 
 use crate::coordinator::allreduce::Algorithm;
 use crate::coordinator::controller::TrainerConfig;
+use crate::data::corpus::VOCAB;
+use crate::data::synthetic::IMG_LEN;
+use crate::runtime::{ModelRuntime, REF_EVAL_BATCH, REF_TRAIN_LADDER};
 use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
 
 /// Which dataset family a job trains on.
@@ -32,6 +35,87 @@ impl DatasetChoice {
             other => bail!("unknown dataset {other:?} (cifar10|cifar100|imagenet-sim|corpus)"),
         })
     }
+
+    /// Output classes a model trained on this dataset must emit (the
+    /// vocabulary size for token data).
+    pub fn n_classes(&self) -> usize {
+        match self {
+            DatasetChoice::Cifar10 => 10,
+            DatasetChoice::Cifar100 => 100,
+            DatasetChoice::ImagenetSim { .. } => 1000,
+            DatasetChoice::Corpus { .. } => VOCAB,
+        }
+    }
+}
+
+/// Reference-backend architecture selection: `serve-bench --model`, and
+/// the second half of a `ref_*` training-model name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelArch {
+    /// single linear softmax layer
+    Linear,
+    /// linear → ReLU → linear through the blocked-GEMM kernel layer
+    Mlp { hidden: usize },
+}
+
+impl ModelArch {
+    pub fn from_name(name: &str, hidden: usize) -> Result<Self> {
+        Ok(match name {
+            "linear" => ModelArch::Linear,
+            "mlp" => ModelArch::Mlp { hidden },
+            other => bail!("unknown model {other:?} (linear|mlp)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelArch::Linear => "linear",
+            ModelArch::Mlp { .. } => "mlp",
+        }
+    }
+}
+
+/// Resolve a `ref_*` model name to a reference-backend training runtime
+/// (`ref_linear`, `ref_mlp`, `ref_bigram` — no artifacts needed); `None`
+/// means the name belongs to the artifact manifest.
+pub fn reference_runtime(
+    model: &str,
+    dataset: &DatasetChoice,
+    hidden: usize,
+) -> Result<Option<ModelRuntime>> {
+    let classes = dataset.n_classes();
+    Ok(match model {
+        "ref_linear" => Some(ModelRuntime::reference_classifier(
+            model,
+            IMG_LEN,
+            classes,
+            REF_TRAIN_LADDER,
+            REF_EVAL_BATCH,
+        )),
+        "ref_mlp" => {
+            if hidden == 0 {
+                bail!("ref_mlp needs --hidden > 0");
+            }
+            Some(ModelRuntime::reference_mlp(
+                model,
+                IMG_LEN,
+                hidden,
+                classes,
+                REF_TRAIN_LADDER,
+                REF_EVAL_BATCH,
+            ))
+        }
+        "ref_bigram" => {
+            let DatasetChoice::Corpus { seq_len, .. } = dataset else {
+                bail!("ref_bigram trains on token windows; pass --dataset corpus");
+            };
+            Some(ModelRuntime::reference_lm(model, VOCAB, *seq_len, REF_TRAIN_LADDER, 64))
+        }
+        m if m.starts_with("ref_") => {
+            bail!("unknown reference model {m:?} (ref_linear|ref_mlp|ref_bigram)")
+        }
+        _ => None,
+    })
 }
 
 /// A fully-specified training job. The policy is carried beside the
@@ -74,7 +158,7 @@ impl JobConfig {
         if self.policy.lr.base <= 0.0 {
             bail!("base lr must be positive");
         }
-        let lm_model = self.model.starts_with("transformer");
+        let lm_model = self.model.starts_with("transformer") || self.model == "ref_bigram";
         let lm_data = matches!(self.dataset, DatasetChoice::Corpus { .. });
         if lm_model != lm_data {
             bail!(
@@ -153,6 +237,8 @@ pub struct ServeConfig {
     pub service_base_us: f64,
     /// virtual clock: cost per *padded* sample, µs
     pub service_per_sample_us: f64,
+    /// served reference architecture (linear | mlp)
+    pub arch: ModelArch,
 }
 
 impl Default for ServeConfig {
@@ -173,6 +259,7 @@ impl Default for ServeConfig {
             queue_capacity: 4096,
             service_base_us: 300.0,
             service_per_sample_us: 30.0,
+            arch: ModelArch::Linear,
         }
     }
 }
@@ -223,6 +310,11 @@ impl ServeConfig {
         }
         if self.queue_capacity < self.max_batch {
             bail!("queue capacity must hold at least one max batch");
+        }
+        if let ModelArch::Mlp { hidden } = self.arch {
+            if hidden == 0 {
+                bail!("mlp serving needs a hidden width > 0");
+            }
         }
         Ok(())
     }
@@ -339,6 +431,60 @@ mod tests {
     fn dataset_names_parse() {
         assert_eq!(DatasetChoice::from_name("cifar10").unwrap(), DatasetChoice::Cifar10);
         assert!(DatasetChoice::from_name("mnist").is_err());
+        assert_eq!(DatasetChoice::Cifar10.n_classes(), 10);
+        assert_eq!(DatasetChoice::Cifar100.n_classes(), 100);
+        assert_eq!(DatasetChoice::Corpus { chars: 10, seq_len: 4 }.n_classes(), VOCAB);
+    }
+
+    #[test]
+    fn model_arch_names_roundtrip() {
+        assert_eq!(ModelArch::from_name("linear", 0).unwrap(), ModelArch::Linear);
+        assert_eq!(ModelArch::from_name("mlp", 64).unwrap(), ModelArch::Mlp { hidden: 64 });
+        assert_eq!(ModelArch::Mlp { hidden: 64 }.name(), "mlp");
+        assert!(ModelArch::from_name("cnn", 8).is_err());
+    }
+
+    #[test]
+    fn reference_models_resolve_without_artifacts() {
+        let rt = reference_runtime("ref_linear", &DatasetChoice::Cifar10, 0).unwrap().unwrap();
+        assert!(rt.is_reference());
+        assert_eq!(rt.entry.input.n_classes, 10);
+
+        let rt = reference_runtime("ref_mlp", &DatasetChoice::Cifar100, 32).unwrap().unwrap();
+        assert_eq!(rt.entry.params.len(), 4);
+        assert_eq!(rt.entry.input.n_classes, 100);
+        assert!(reference_runtime("ref_mlp", &DatasetChoice::Cifar10, 0).is_err());
+
+        let corpus = DatasetChoice::Corpus { chars: 1000, seq_len: 32 };
+        let rt = reference_runtime("ref_bigram", &corpus, 0).unwrap().unwrap();
+        assert_eq!(rt.entry.input.labels_per_sample, 32);
+        assert!(
+            reference_runtime("ref_bigram", &DatasetChoice::Cifar10, 0).is_err(),
+            "token model on image data must fail loudly"
+        );
+
+        assert!(reference_runtime("resnet_lite_c10", &DatasetChoice::Cifar10, 0)
+            .unwrap()
+            .is_none());
+        assert!(reference_runtime("ref_transformer", &DatasetChoice::Cifar10, 0).is_err());
+    }
+
+    #[test]
+    fn ref_bigram_is_an_lm_model_in_validation() {
+        let j = JobConfig::new(
+            "ref_bigram",
+            DatasetChoice::Cifar10,
+            AdaBatchPolicy::sec41_adaptive(4),
+            2,
+        );
+        assert!(j.validate().is_err());
+        let j = JobConfig::new(
+            "ref_bigram",
+            DatasetChoice::Corpus { chars: 1000, seq_len: 64 },
+            AdaBatchPolicy::sec41_adaptive(4),
+            2,
+        );
+        j.validate().unwrap();
     }
 
     #[test]
@@ -395,5 +541,10 @@ mod tests {
         let mut cfg = ServeConfig::default();
         cfg.service_per_sample_us = -1.0;
         assert!(cfg.validate().is_err());
+        let mut cfg = ServeConfig::default();
+        cfg.arch = ModelArch::Mlp { hidden: 0 };
+        assert!(cfg.validate().is_err());
+        cfg.arch = ModelArch::Mlp { hidden: 64 };
+        cfg.validate().unwrap();
     }
 }

@@ -409,6 +409,29 @@ mod tests {
         assert!(timers.count("gather") > 0);
     }
 
+    /// The four-tensor MLP family flows through the whole training stack
+    /// — accumulation, all-reduce, SGD, eval — with no special cases, and
+    /// its non-convex loss still falls under the doubling schedule.
+    #[test]
+    fn mlp_trains_end_to_end_on_reference_backend() {
+        let (train_d, test_d) = small_images(4);
+        let rt = ModelRuntime::reference_mlp("ref_mlp", IMG_LEN, 16, 4, &[8, 16, 32, 64], 64);
+        let cfg = TrainerConfig::new(4).with_seed(11);
+        let mut gov = doubling_gov(16, 2);
+        let (hist, timers) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+        assert_eq!(hist.epochs.len(), 4);
+        assert!(!hist.diverged);
+        assert_eq!(hist.epochs[2].batch, 32, "doubling schedule engaged");
+        let (first, last) = (hist.epochs.first().unwrap(), hist.epochs.last().unwrap());
+        assert!(
+            last.train_loss < first.train_loss,
+            "mlp loss {} -> {}",
+            first.train_loss,
+            last.train_loss
+        );
+        assert!(timers.count("fwd_bwd") > 0);
+    }
+
     #[test]
     fn eval_every_zero_is_normalized_not_a_panic() {
         let (train_d, test_d) = small_images(4);

@@ -28,7 +28,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         &["model", "r", "flops/iter", "flops/epoch (n=2000)"],
     );
     for model in ["alexnet_lite_c100", "vgg_lite_c100", "resnet_lite_c100"] {
-        let entry = ctx.manifest.model(model)?;
+        let entry = ctx.artifact_manifest()?.model(model)?;
         let f = entry.flops_per_sample as f64;
         for r in [32usize, 128, 512, 2048] {
             let iters = 2000 / r.max(1);

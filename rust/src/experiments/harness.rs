@@ -9,8 +9,9 @@
 
 use std::path::PathBuf;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use crate::config::{reference_runtime, DatasetChoice};
 use crate::coordinator::{train, TrainData, TrainerConfig};
 use crate::data::synthetic::{generate, SyntheticSpec};
 use crate::metrics::{PhaseTimers, RunHistory};
@@ -22,7 +23,9 @@ use crate::util::table::{write_series_csv, Series};
 /// Shared context for one experiment invocation.
 pub struct ExpCtx {
     pub client: Client,
-    pub manifest: Manifest,
+    /// `None` on artifact-less machines: `ref_*` models still run there,
+    /// manifest-backed models fail loudly via [`ExpCtx::artifact_manifest`].
+    pub manifest: Option<Manifest>,
     pub outdir: PathBuf,
     /// epochs per run (scaled default; CLI-overridable)
     pub epochs: usize,
@@ -34,9 +37,14 @@ pub struct ExpCtx {
 impl ExpCtx {
     pub fn new(epochs: usize, trials: usize) -> Result<ExpCtx> {
         let dir = default_artifacts_dir();
+        let manifest = if dir.join("manifest.json").exists() {
+            Some(Manifest::load(&dir)?)
+        } else {
+            None
+        };
         Ok(ExpCtx {
             client: Client::cpu()?,
-            manifest: Manifest::load(&dir)?,
+            manifest,
             outdir: PathBuf::from("results"),
             epochs,
             trials,
@@ -44,10 +52,28 @@ impl ExpCtx {
         })
     }
 
+    /// The artifact manifest, or a clear error on artifact-less machines.
+    pub fn artifact_manifest(&self) -> Result<&Manifest> {
+        self.manifest.as_ref().ok_or_else(|| {
+            anyhow!("artifacts not built (run `make artifacts`); only ref_* models are available")
+        })
+    }
+
+    /// Resolve a model name: `ref_linear` / `ref_mlp` / `ref_bigram` map
+    /// to the always-available reference backend (default widths),
+    /// everything else to the AOT artifact manifest.
     pub fn runtime(&self, model: &str) -> Result<ModelRuntime> {
+        let dataset = if model == "ref_bigram" {
+            DatasetChoice::Corpus { chars: 0, seq_len: 128 }
+        } else {
+            DatasetChoice::Cifar10
+        };
+        if let Some(rt) = reference_runtime(model, &dataset, 128)? {
+            return Ok(rt);
+        }
         Ok(ModelRuntime::new(
             self.client.clone(),
-            self.manifest.model(model)?.clone(),
+            self.artifact_manifest()?.model(model)?.clone(),
         ))
     }
 

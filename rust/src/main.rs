@@ -23,7 +23,8 @@
 use anyhow::{bail, Result};
 
 use adabatch::config::{
-    allreduce_from_name, build_policy, DatasetChoice, JobConfig, ServeConfig, TrafficShape,
+    allreduce_from_name, build_policy, reference_runtime, DatasetChoice, JobConfig, ModelArch,
+    ServeConfig, TrafficShape,
 };
 use adabatch::coordinator::{train, TrainData};
 use adabatch::data::corpus::LmDataset;
@@ -90,7 +91,12 @@ fn print_help() {
 
 fn cmd_train(argv: &[String]) -> Result<()> {
     let cmd = Command::new("train", "run one AdaBatch training job")
-        .opt("model", "resnet_lite_c10", "model name from the artifact manifest")
+        .opt(
+            "model",
+            "resnet_lite_c10",
+            "artifact-manifest model, or ref_linear|ref_mlp|ref_bigram (reference backend)",
+        )
+        .opt("hidden", "128", "hidden width for --model ref_mlp")
         .opt("dataset", "cifar10", "cifar10|cifar100|imagenet-sim|corpus")
         .opt("epochs", "12", "training epochs")
         .opt("batch", "32", "initial effective batch size (power of two)")
@@ -178,8 +184,15 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         }
         other => bail!("unknown governor {other:?} (interval|variance|diversity)"),
     };
-    let manifest = Manifest::load(default_artifacts_dir())?;
-    let rt = ModelRuntime::new(Client::cpu()?, manifest.model(&job.model)?.clone());
+    // `ref_*` models run on the pure-Rust reference backend (no artifacts
+    // needed); anything else resolves through the AOT manifest.
+    let rt = match reference_runtime(&job.model, &dataset, a.usize("hidden")?)? {
+        Some(rt) => rt,
+        None => {
+            let manifest = Manifest::load(default_artifacts_dir())?;
+            ModelRuntime::new(Client::cpu()?, manifest.model(&job.model)?.clone())
+        }
+    };
 
     // Variance/diversity statistics come from per-microbatch gradients, so
     // an update realized as ONE microbatch carries no signal. Default the
@@ -240,6 +253,8 @@ fn load_dataset(choice: &DatasetChoice) -> (TrainData, TrainData) {
 fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     let cmd = Command::new("serve-bench", "adaptive micro-batching inference benchmark")
         .opt("governor", "slo", "micro-batch criterion: fixed|queue|slo")
+        .opt("model", "linear", "served reference architecture: linear|mlp")
+        .opt("hidden", "128", "mlp hidden width")
         .opt("qps", "800", "offered load, requests/second")
         .opt("duration", "3", "arrival window, seconds")
         .opt("shape", "steady", "traffic shape: steady|bursty|ramp")
@@ -284,6 +299,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         queue_capacity: a.usize("queue-capacity")?,
         service_base_us: a.f64("service-base-us")?,
         service_per_sample_us: a.f64("service-per-sample-us")?,
+        arch: ModelArch::from_name(&a.str("model"), a.usize("hidden")?)?,
     };
     let clock = Clock::from_name(&a.str("clock"))?;
     let classes = a.usize("classes")?;

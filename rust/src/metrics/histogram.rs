@@ -160,6 +160,7 @@ impl LatencyHistogram {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::propcheck::{self, Pair, VecU64};
 
     #[test]
     fn small_values_are_exact() {
@@ -266,6 +267,59 @@ mod tests {
         ab.merge(&b);
         assert_eq!(ab, ba, "a+b == b+a");
         assert_eq!(ab.count(), a.count() + b.count());
+    }
+
+    fn hist_of(samples: &[u64]) -> LatencyHistogram {
+        let mut h = LatencyHistogram::new();
+        for &v in samples {
+            h.record(v);
+        }
+        h
+    }
+
+    /// Property (ISSUE 3 satellite): `merge(a, b)` is observation-order
+    /// invariant and equals the histogram of the concatenated samples —
+    /// for random workloads spanning every octave, not just hand-picked
+    /// values.
+    #[test]
+    fn prop_merge_equals_concatenation_in_any_order() {
+        let gen = Pair(
+            VecU64 { min_len: 0, max_len: 200, max_bits: 48 },
+            VecU64 { min_len: 0, max_len: 200, max_bits: 48 },
+        );
+        propcheck::check("merge == histogram of concatenation", gen, |(a, b)| {
+            let concat: Vec<u64> = a.iter().chain(b.iter()).copied().collect();
+            let reversed: Vec<u64> = b.iter().chain(a.iter()).copied().collect();
+
+            let mut ab = hist_of(a);
+            ab.merge(&hist_of(b));
+            let mut ba = hist_of(b);
+            ba.merge(&hist_of(a));
+
+            ab == hist_of(&concat) && ba == hist_of(&reversed) && ab == ba
+        });
+    }
+
+    /// Property (ISSUE 3 satellite): p50/p95/p99 land within one
+    /// log-bucket of the exact quantiles on random workloads, and never
+    /// understate them (quantiles report bucket upper edges).
+    #[test]
+    fn prop_quantiles_within_one_log_bucket_of_exact() {
+        let gen = VecU64 { min_len: 1, max_len: 400, max_bits: 44 };
+        propcheck::check("quantiles within one log-bucket", gen, |v| {
+            let h = hist_of(v);
+            let mut sorted = v.clone();
+            sorted.sort_unstable();
+            let n = sorted.len() as f64;
+            [0.50f64, 0.95, 0.99].iter().all(|&q| {
+                let rank = ((q * n).ceil() as usize).clamp(1, sorted.len());
+                let exact = sorted[rank - 1];
+                let got = h.quantile(q);
+                let db = LatencyHistogram::bucket_index(got)
+                    .abs_diff(LatencyHistogram::bucket_index(exact));
+                db <= 1 && got >= exact
+            })
+        });
     }
 
     #[test]

@@ -171,6 +171,13 @@ enum Backend {
     Reference(RefModel),
 }
 
+/// Default train-executable ladder for reference-backend runtimes (the
+/// analogue of the aot.py build matrix).
+pub const REF_TRAIN_LADDER: &[usize] = &[8, 16, 32, 64, 128, 256, 512, 1024];
+
+/// Default eval batch for reference-backend training runtimes.
+pub const REF_EVAL_BATCH: usize = 256;
+
 /// Lazily-resolved executable cache for one model.
 pub struct ModelRuntime {
     pub entry: Arc<ModelEntry>,
@@ -202,23 +209,24 @@ impl ModelRuntime {
         eval_batch: usize,
     ) -> Self {
         let model = RefModel { kind: RefKind::Linear { in_dim }, n_classes };
-        let entry = reference_entry(
-            name,
-            vec![in_dim],
-            Dtype::F32,
-            vec![],
-            in_dim,
-            n_classes,
-            1,
-            train_batches,
-            &[eval_batch],
-        );
-        ModelRuntime {
-            entry: Arc::new(entry),
-            backend: Backend::Reference(model),
-            cache: Mutex::new(BTreeMap::new()),
-            compiles: Mutex::new(0),
-        }
+        Self::reference(name, model, train_batches, &[eval_batch])
+    }
+
+    /// Pure-Rust hidden-layer MLP runtime (linear → ReLU → linear, params
+    /// `[w1, b1, w2, b2]`): the family whose loss is non-convex, so
+    /// gradient-statistic governors genuinely differ from interval
+    /// doubling, and whose blocked-GEMM cost makes the batch-efficiency
+    /// curve measurable (`bench_kernels`).
+    pub fn reference_mlp(
+        name: &str,
+        in_dim: usize,
+        hidden: usize,
+        n_classes: usize,
+        train_batches: &[usize],
+        eval_batch: usize,
+    ) -> Self {
+        let model = RefModel { kind: RefKind::Mlp { in_dim, hidden }, n_classes };
+        Self::reference(name, model, train_batches, &[eval_batch])
     }
 
     /// Pure-Rust classifier runtime for the serving path: forward-only,
@@ -231,23 +239,19 @@ impl ModelRuntime {
         eval_batches: &[usize],
     ) -> Self {
         let model = RefModel { kind: RefKind::Linear { in_dim }, n_classes };
-        let entry = reference_entry(
-            name,
-            vec![in_dim],
-            Dtype::F32,
-            vec![],
-            in_dim,
-            n_classes,
-            1,
-            &[],
-            eval_batches,
-        );
-        ModelRuntime {
-            entry: Arc::new(entry),
-            backend: Backend::Reference(model),
-            cache: Mutex::new(BTreeMap::new()),
-            compiles: Mutex::new(0),
-        }
+        Self::reference(name, model, &[], eval_batches)
+    }
+
+    /// Serving twin of [`Self::reference_mlp`]: eval-only ladder.
+    pub fn reference_serving_mlp(
+        name: &str,
+        in_dim: usize,
+        hidden: usize,
+        n_classes: usize,
+        eval_batches: &[usize],
+    ) -> Self {
+        let model = RefModel { kind: RefKind::Mlp { in_dim, hidden }, n_classes };
+        Self::reference(name, model, &[], eval_batches)
     }
 
     /// Pure-Rust bigram LM runtime over token windows of `seq_len`.
@@ -259,17 +263,18 @@ impl ModelRuntime {
         eval_batch: usize,
     ) -> Self {
         let model = RefModel { kind: RefKind::Bigram { vocab, seq_len }, n_classes: vocab };
-        let entry = reference_entry(
-            name,
-            vec![seq_len],
-            Dtype::I32,
-            vec![seq_len],
-            vocab,
-            vocab,
-            seq_len,
-            train_batches,
-            &[eval_batch],
-        );
+        Self::reference(name, model, train_batches, &[eval_batch])
+    }
+
+    /// Shared reference-backend constructor: fabricate the entry from the
+    /// model's own specs and wrap it with a fresh executable cache.
+    fn reference(
+        name: &str,
+        model: RefModel,
+        train_batches: &[usize],
+        eval_batches: &[usize],
+    ) -> Self {
+        let entry = reference_entry(name, &model, train_batches, eval_batches);
         ModelRuntime {
             entry: Arc::new(entry),
             backend: Backend::Reference(model),
@@ -351,34 +356,43 @@ impl ModelRuntime {
     }
 }
 
-/// Fabricate a [`ModelEntry`] for a reference-backend model. The artifact
-/// maps carry `reference://` pseudo-paths purely so the (kind, batch)
-/// ladder lookups work; nothing ever reads them from disk.
-#[allow(clippy::too_many_arguments)]
+/// Fabricate a [`ModelEntry`] for a reference-backend model: the input
+/// spec follows the model kind (flat f32 features for Linear/Mlp, i32
+/// token windows for Bigram) and the parameter specs come from
+/// [`RefModel::param_specs`]. The artifact maps carry `reference://`
+/// pseudo-paths purely so the (kind, batch) ladder lookups work; nothing
+/// ever reads them from disk.
 fn reference_entry(
     name: &str,
-    x_shape: Vec<usize>,
-    x_dtype: Dtype,
-    y_shape: Vec<usize>,
-    w_rows: usize,
-    n_classes: usize,
-    labels_per_sample: usize,
+    model: &RefModel,
     train_batches: &[usize],
     eval_batches: &[usize],
 ) -> ModelEntry {
-    use crate::optim::param::{Init, ParamSpec};
     use crate::runtime::artifact::InputSpec;
     let pseudo = |bs: usize, kind: &str| {
         (bs, std::path::PathBuf::from(format!("reference://{name}/{kind}_bs{bs}")))
     };
+    let input = match model.kind {
+        RefKind::Linear { in_dim } | RefKind::Mlp { in_dim, .. } => InputSpec {
+            x_shape: vec![in_dim],
+            x_dtype: Dtype::F32,
+            y_shape: vec![],
+            n_classes: model.n_classes,
+            labels_per_sample: 1,
+        },
+        RefKind::Bigram { seq_len, .. } => InputSpec {
+            x_shape: vec![seq_len],
+            x_dtype: Dtype::I32,
+            y_shape: vec![seq_len],
+            n_classes: model.n_classes,
+            labels_per_sample: seq_len,
+        },
+    };
     ModelEntry {
         name: name.to_string(),
-        input: InputSpec { x_shape, x_dtype, y_shape, n_classes, labels_per_sample },
-        flops_per_sample: (2 * w_rows * n_classes) as u64,
-        params: vec![
-            ParamSpec { name: "w".into(), shape: vec![w_rows, n_classes], init: Init::Normal(0.01) },
-            ParamSpec { name: "b".into(), shape: vec![n_classes], init: Init::Zeros },
-        ],
+        input,
+        flops_per_sample: model.flops_per_sample(),
+        params: model.param_specs(),
         train: train_batches.iter().map(|&bs| pseudo(bs, "train")).collect(),
         eval: eval_batches.iter().map(|&bs| pseudo(bs, "eval")).collect(),
     }
@@ -479,6 +493,38 @@ mod tests {
 
         // off-ladder request fails loudly, like a missing artifact
         assert!(rt.executable(StepKind::Train, 5).is_err());
+    }
+
+    /// The MLP family honors the same ladder/cache/step contract, with
+    /// four parameter tensors flowing through untouched plumbing.
+    #[test]
+    fn reference_mlp_roundtrip() {
+        let rt = ModelRuntime::reference_mlp("ref_mlp", 12, 6, 4, &[4, 8], 16);
+        assert!(rt.is_reference());
+        assert_eq!(rt.entry.params.len(), 4);
+        assert_eq!(rt.entry.flops_per_sample, 2 * (12 * 6 + 6 * 4));
+
+        let exe = rt.executable(StepKind::Train, 8).unwrap();
+        let params = ParamSet::init(&rt.entry.params, 2);
+        let x = vec![0.25f32; 8 * 12];
+        let y: Vec<i32> = (0..8).map(|i| i % 4).collect();
+        let out = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        assert!(out.loss.is_finite() && out.loss > 0.0);
+        let g = out.grads.unwrap();
+        assert_eq!(g.num_tensors(), 4);
+        assert!(g.all_finite());
+        assert!(g.sq_norm() > 0.0);
+
+        let out2 = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        assert_eq!(out.loss.to_bits(), out2.loss.to_bits(), "deterministic kernels");
+
+        // the serving twin exposes an eval-only ladder
+        let srv = ModelRuntime::reference_serving_mlp("srv_mlp", 12, 6, 4, &[1, 2, 4]);
+        assert!(srv.entry.train_batches().is_empty());
+        assert_eq!(srv.entry.eval_batches(), vec![1, 2, 4]);
+        assert_eq!(srv.entry.params.len(), 4);
+        assert!(srv.executable(StepKind::Train, 4).is_err());
+        assert!(srv.executable(StepKind::Eval, 2).is_ok());
     }
 
     /// The serving runtime: no train steps, a full eval ladder.

@@ -1,0 +1,495 @@
+//! Dense-kernel library for the reference backend: cache-blocked GEMM
+//! over a transposed/packed weight layout, a fused numerically-stable
+//! softmax–cross-entropy forward/backward, and ReLU forward/backward.
+//!
+//! Why this exists: the original `RefModel` was a scalar triple loop, so
+//! per-sample cost was *flat* in batch size and the paper's central
+//! efficiency claim (AdaBatch §4: larger adaptive batches buy
+//! computational efficiency) was invisible in our benches. These kernels
+//! make batch-vs-throughput a real trade-off — per-call fixed costs
+//! (weight packing, scratch setup) amortize over the batch, and blocked
+//! loops keep the packed weight panel hot in cache across rows — while
+//! preserving the reference backend's determinism contract.
+//!
+//! **Determinism contract** (DESIGN.md §8): every kernel sums in a fixed
+//! order that depends only on operand *shapes*, never on data. Blocking
+//! and unroll-by-4 change the association (`(s0+s1)+(s2+s3)` per 4-chunk,
+//! depth blocks ascending) but the schedule is a pure function of the
+//! dimensions, so the same inputs always produce bitwise-identical
+//! outputs — which is what keeps the engine-determinism and
+//! checkpoint-resume bitwise tests honest. Zero padding rows contribute
+//! exact zeros to every accumulation.
+//!
+//! Layout conventions: all matrices are row-major `&[f32]`. GEMM operands
+//! named `bt` are stored *transposed* (`[n × k]` for a logical `[k × n]`
+//! factor) so every inner product runs over two unit-stride slices — use
+//! [`pack_transpose`] to build them from a natural-layout weight.
+
+use anyhow::{bail, Result};
+
+/// Unroll factor of the inner accumulations (4 independent partial sums).
+pub const UNROLL: usize = 4;
+
+/// Row-block size: C/A rows processed per block of [`gemm_abt`].
+const MC: usize = 64;
+/// Depth-block size: the k-extent sliced per pass (keeps the packed
+/// weight panel resident in L1/L2 while a row block streams through).
+const KC: usize = 256;
+/// Column-block size of [`gemm_abt`] (bounds the bt panel at NC×KC).
+const NC: usize = 64;
+/// Row-block size of the Aᵀ·B (weight-gradient) kernel: bounds the C
+/// panel kept hot while the batch dimension streams through.
+const MCT: usize = 256;
+/// Tile edge of the blocked transpose in [`pack_transpose`].
+const TB: usize = 32;
+
+/// Inner product of two equal-length slices with 4 independent
+/// accumulators; fixed association `((s0+s1)+(s2+s3)) + tail`.
+#[inline]
+pub fn dot_unroll4(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut ca = a.chunks_exact(UNROLL);
+    let mut cb = b.chunks_exact(UNROLL);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for (qa, qb) in (&mut ca).zip(&mut cb) {
+        s0 += qa[0] * qb[0];
+        s1 += qa[1] * qb[1];
+        s2 += qa[2] * qb[2];
+        s3 += qa[3] * qb[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
+/// Pack `src` (`[rows × cols]`, row-major) into its transpose
+/// (`[cols × rows]`, row-major), tiled for cache locality. The packed
+/// form is the `bt` operand of [`gemm_abt`]; packing is a per-call cost
+/// (parameters change every optimizer step, so the pack can never be
+/// cached) that amortizes over the batch — one source of the
+/// batch-efficiency curve `bench_kernels` measures.
+pub fn pack_transpose(src: &[f32], rows: usize, cols: usize, dst: &mut Vec<f32>) {
+    assert_eq!(src.len(), rows * cols, "pack_transpose: src is not rows×cols");
+    dst.clear();
+    dst.resize(rows * cols, 0.0);
+    for r0 in (0..rows).step_by(TB) {
+        let r1 = (r0 + TB).min(rows);
+        for c0 in (0..cols).step_by(TB) {
+            let c1 = (c0 + TB).min(cols);
+            for r in r0..r1 {
+                for c in c0..c1 {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
+        }
+    }
+}
+
+/// Tile `bias` (`[n]`) into `out` as `rows` identical rows (`[rows × n]`)
+/// — the C initialization of a `x·W + b` layer before [`gemm_abt`]
+/// accumulates into it.
+pub fn broadcast_rows(bias: &[f32], rows: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.reserve(rows * bias.len());
+    for _ in 0..rows {
+        out.extend_from_slice(bias);
+    }
+}
+
+/// `C += A · Bᵀ` — the forward-GEMM: `a` is `[m × k]`, `bt` is the packed
+/// transpose `[n × k]`, `c` is `[m × n]`.
+///
+/// Blocked `j → p → i` with the inner product unrolled by 4; for each
+/// C cell the depth blocks accumulate in ascending `p` order, so the
+/// summation schedule is a pure function of `(m, n, k)`.
+pub fn gemm_abt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "gemm_abt: A is not m×k");
+    assert_eq!(bt.len(), n * k, "gemm_abt: Bᵀ is not n×k");
+    assert_eq!(c.len(), m * n, "gemm_abt: C is not m×n");
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            for i0 in (0..m).step_by(MC) {
+                let i1 = (i0 + MC).min(m);
+                for i in i0..i1 {
+                    let ar = &a[i * k + p0..i * k + p1];
+                    let crow = &mut c[i * n + j0..i * n + j1];
+                    for (jj, cj) in crow.iter_mut().enumerate() {
+                        let j = j0 + jj;
+                        *cj += dot_unroll4(ar, &bt[j * k + p0..j * k + p1]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C += Aᵀ · B` — the weight-gradient GEMM: `a` is `[rows × m]` (the
+/// activations), `b` is `[rows × n]` (the upstream gradient), `c` is
+/// `[m × n]` (the gradient, in the weight's natural layout).
+///
+/// The summation dimension is the batch: rows accumulate in ascending
+/// order, fused in groups of [`UNROLL`] (`(x0·b0+x1·b1)+(x2·b2+x3·b3)`),
+/// with the C panel blocked to stay cache-resident while the batch
+/// streams through. Zero rows (padding) contribute exact zeros.
+pub fn gemm_atb(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), rows * m, "gemm_atb: A is not rows×m");
+    assert_eq!(b.len(), rows * n, "gemm_atb: B is not rows×n");
+    assert_eq!(c.len(), m * n, "gemm_atb: C is not m×n");
+    let full = rows - rows % UNROLL;
+    for i0 in (0..m).step_by(MCT) {
+        let i1 = (i0 + MCT).min(m);
+        let mut r = 0;
+        while r < full {
+            let a0 = &a[r * m..(r + 1) * m];
+            let a1 = &a[(r + 1) * m..(r + 2) * m];
+            let a2 = &a[(r + 2) * m..(r + 3) * m];
+            let a3 = &a[(r + 3) * m..(r + 4) * m];
+            let b0 = &b[r * n..(r + 1) * n];
+            let b1 = &b[(r + 1) * n..(r + 2) * n];
+            let b2 = &b[(r + 2) * n..(r + 3) * n];
+            let b3 = &b[(r + 3) * n..(r + 4) * n];
+            for i in i0..i1 {
+                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    *cj += (x0 * b0[j] + x1 * b1[j]) + (x2 * b2[j] + x3 * b3[j]);
+                }
+            }
+            r += UNROLL;
+        }
+        while r < rows {
+            let arow = &a[r * m..(r + 1) * m];
+            let brow = &b[r * n..(r + 1) * n];
+            for i in i0..i1 {
+                let x = arow[i];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for (cj, bj) in crow.iter_mut().zip(brow) {
+                    *cj += x * bj;
+                }
+            }
+            r += 1;
+        }
+    }
+}
+
+/// `out += column sums of b` (`[rows × n]` → `[n]`) — the bias gradient.
+/// Rows accumulate ascending, fused in groups of [`UNROLL`].
+pub fn col_sum(b: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), rows * n, "col_sum: b is not rows×n");
+    assert_eq!(out.len(), n, "col_sum: out is not n");
+    let full = rows - rows % UNROLL;
+    let mut r = 0;
+    while r < full {
+        let b0 = &b[r * n..(r + 1) * n];
+        let b1 = &b[(r + 1) * n..(r + 2) * n];
+        let b2 = &b[(r + 2) * n..(r + 3) * n];
+        let b3 = &b[(r + 3) * n..(r + 4) * n];
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += (b0[j] + b1[j]) + (b2[j] + b3[j]);
+        }
+        r += UNROLL;
+    }
+    while r < rows {
+        for (o, x) in out.iter_mut().zip(&b[r * n..(r + 1) * n]) {
+            *o += x;
+        }
+        r += 1;
+    }
+}
+
+/// ReLU forward, in place: `x = max(x, 0)`.
+pub fn relu_fwd(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// ReLU backward, in place: zero `g` wherever the forward output `act`
+/// was not strictly positive (the subgradient at 0 is taken as 0, so the
+/// mask from the *post*-activation equals the mask from the
+/// pre-activation).
+pub fn relu_bwd(act: &[f32], g: &mut [f32]) {
+    assert_eq!(act.len(), g.len(), "relu_bwd: shape mismatch");
+    for (v, a) in g.iter_mut().zip(act) {
+        if *a <= 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Aggregates of one fused softmax–cross-entropy pass.
+#[derive(Debug, Clone, Copy)]
+pub struct XentOut {
+    /// Σ per-row loss, already scaled by `inv` (f64 accumulator so row
+    /// order and count don't erode the mean at large batches).
+    pub loss_sum: f64,
+    /// rows whose argmax equals the label
+    pub correct: f32,
+}
+
+/// Fused numerically-stable softmax–cross-entropy over `labels.len()`
+/// rows of width `c`, in place on `logits`.
+///
+/// * rows with `label < 0` are padding: zero loss, not counted correct,
+///   and (when `backward`) their gradient row is zeroed — callers may
+///   leave arbitrary values in padded logit rows;
+/// * `label ≥ c` is an error (the kernels never clamp);
+/// * per-row loss is `(ln Σ e^{l−max} − (l_y − max)) · inv` — the
+///   batch-mean `1/r` lives here, so gradients come out batch-mean
+///   scaled exactly as the AOT loss kernels promise;
+/// * when `backward`, `logits` is overwritten with
+///   `(softmax − onehot) · inv`;
+/// * ties in the argmax resolve to the *last* maximal class (the
+///   historical reference-backend behavior eval depends on).
+pub fn softmax_xent_rows(
+    logits: &mut [f32],
+    labels: &[i32],
+    c: usize,
+    inv: f32,
+    backward: bool,
+) -> Result<XentOut> {
+    assert!(c > 0, "softmax over zero classes");
+    assert_eq!(logits.len(), labels.len() * c, "softmax_xent_rows: logits are not rows×c");
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f32;
+    for (row, &label) in labels.iter().enumerate() {
+        let rowbuf = &mut logits[row * c..(row + 1) * c];
+        if label < 0 {
+            if backward {
+                rowbuf.fill(0.0);
+            }
+            continue;
+        }
+        let label = label as usize;
+        if label >= c {
+            bail!("label {label} out of range for {c} classes");
+        }
+        let max = rowbuf.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f32;
+        for &l in rowbuf.iter() {
+            denom += (l - max).exp();
+        }
+        let log_denom = denom.ln();
+        loss_sum += f64::from((log_denom - (rowbuf[label] - max)) * inv);
+        let mut argmax = 0usize;
+        let mut best = f32::NEG_INFINITY;
+        for (kk, &l) in rowbuf.iter().enumerate() {
+            if l >= best {
+                best = l;
+                argmax = kk;
+            }
+        }
+        if argmax == label {
+            correct += 1.0;
+        }
+        if backward {
+            for (kk, l) in rowbuf.iter_mut().enumerate() {
+                let onehot = if kk == label { 1.0 } else { 0.0 };
+                *l = (((*l - max).exp() / denom) - onehot) * inv;
+            }
+        }
+    }
+    Ok(XentOut { loss_sum, correct })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, Triple, UsizeRange};
+    use crate::util::rng::Pcg32;
+
+    fn randvec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Scalar oracle: C += A·B with B in natural [k × n] layout.
+    fn naive_gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f32;
+                for p in 0..k {
+                    s += a[i * k + p] * b[p * n + j];
+                }
+                c[i * n + j] += s;
+            }
+        }
+    }
+
+    #[test]
+    fn pack_transpose_roundtrip() {
+        let mut rng = Pcg32::new(1);
+        let (rows, cols) = (37, 53); // off-tile sizes
+        let src = randvec(&mut rng, rows * cols);
+        let mut t = Vec::new();
+        pack_transpose(&src, rows, cols, &mut t);
+        for r in 0..rows {
+            for c in 0..cols {
+                assert_eq!(t[c * rows + r], src[r * cols + c]);
+            }
+        }
+        let mut back = Vec::new();
+        pack_transpose(&t, cols, rows, &mut back);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn broadcast_rows_tiles_the_bias() {
+        let mut out = Vec::new();
+        broadcast_rows(&[1.0, 2.0, 3.0], 2, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        broadcast_rows(&[5.0], 0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn gemm_abt_matches_naive_across_block_boundaries() {
+        // dims straddle MC/NC/KC and the unroll-4 boundary
+        propcheck::check_cases(
+            "gemm_abt == naive",
+            Triple(UsizeRange(1, 70), UsizeRange(1, 70), UsizeRange(1, 300)),
+            24,
+            |&(m, n, k)| {
+                let mut rng = Pcg32::new((m * 1000 + n * 100 + k) as u64);
+                let a = randvec(&mut rng, m * k);
+                let b = randvec(&mut rng, k * n);
+                let mut bt = Vec::new();
+                pack_transpose(&b, k, n, &mut bt);
+                let mut c = vec![0.0f32; m * n];
+                gemm_abt(&a, &bt, &mut c, m, n, k);
+                let mut want = vec![0.0f32; m * n];
+                naive_gemm(&a, &b, &mut want, m, n, k);
+                c.iter()
+                    .zip(&want)
+                    .all(|(g, w)| (g - w).abs() <= 1e-4 * w.abs().max(1.0))
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_atb_matches_naive() {
+        propcheck::check_cases(
+            "gemm_atb == naive(Aᵀ·B)",
+            Triple(UsizeRange(1, 40), UsizeRange(1, 40), UsizeRange(1, 90)),
+            24,
+            |&(m, n, rows)| {
+                let mut rng = Pcg32::new((m * 997 + n * 31 + rows) as u64);
+                let a = randvec(&mut rng, rows * m);
+                let b = randvec(&mut rng, rows * n);
+                let mut c = vec![0.0f32; m * n];
+                gemm_atb(&a, &b, &mut c, rows, m, n);
+                // oracle: transpose a, then naive (aᵀ)·b
+                let mut at = Vec::new();
+                pack_transpose(&a, rows, m, &mut at);
+                let mut want = vec![0.0f32; m * n];
+                naive_gemm(&at, &b, &mut want, m, n, rows);
+                c.iter()
+                    .zip(&want)
+                    .all(|(g, w)| (g - w).abs() <= 1e-4 * w.abs().max(1.0))
+            },
+        );
+    }
+
+    #[test]
+    fn gemms_are_bitwise_deterministic() {
+        let mut rng = Pcg32::new(7);
+        let (m, n, k) = (33, 17, 129);
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let mut bt = Vec::new();
+        pack_transpose(&b, k, n, &mut bt);
+        let run = || {
+            let mut c = vec![0.0f32; m * n];
+            gemm_abt(&a, &bt, &mut c, m, n, k);
+            let mut g = vec![0.0f32; k * n];
+            gemm_atb(&a, &c, &mut g, m, k, n);
+            (c, g)
+        };
+        let (c1, g1) = run();
+        let (c2, g2) = run();
+        assert!(c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(g1.iter().zip(&g2).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+
+    #[test]
+    fn col_sum_matches_scalar() {
+        let mut rng = Pcg32::new(3);
+        for rows in [1usize, 4, 7, 64] {
+            let n = 13;
+            let b = randvec(&mut rng, rows * n);
+            let mut got = vec![0.0f32; n];
+            col_sum(&b, rows, n, &mut got);
+            for (j, g) in got.iter().enumerate() {
+                let want: f32 = (0..rows).map(|r| b[r * n + j]).sum();
+                assert!((g - want).abs() <= 1e-5 * want.abs().max(1.0), "rows={rows} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_fwd_bwd_mask_agrees() {
+        let mut h = vec![-1.5, 0.0, 2.0, -0.0, 0.25];
+        relu_fwd(&mut h);
+        assert_eq!(h, vec![0.0, 0.0, 2.0, -0.0, 0.25]);
+        let mut g = vec![1.0; 5];
+        relu_bwd(&h, &mut g);
+        assert_eq!(g, vec![0.0, 0.0, 1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn softmax_zero_logits_give_ln_c() {
+        let mut logits = vec![0.0f32; 2 * 3];
+        let out = softmax_xent_rows(&mut logits, &[0, 2], 3, 0.5, false).unwrap();
+        assert!((out.loss_sum as f32 - (3.0f32).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_backward_rows_sum_to_zero_and_padding_is_zeroed() {
+        let mut rng = Pcg32::new(11);
+        let c = 5;
+        let mut logits = randvec(&mut rng, 4 * c);
+        let labels = [1, -1, 4, 0];
+        let inv = 0.25f32;
+        let out = softmax_xent_rows(&mut logits, &labels, c, inv, true).unwrap();
+        assert!(out.loss_sum > 0.0);
+        // padding row exactly zero
+        assert!(logits[c..2 * c].iter().all(|&v| v == 0.0));
+        // softmax-grad rows sum to ~0 (Σp − 1 = 0)
+        for row in [0usize, 2, 3] {
+            let s: f32 = logits[row * c..(row + 1) * c].iter().sum();
+            assert!(s.abs() < 1e-6, "row {row} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn softmax_rejects_out_of_range_label() {
+        let mut logits = vec![0.0f32; 3];
+        let err = softmax_xent_rows(&mut logits, &[3], 3, 1.0, false).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn softmax_is_stable_under_large_logits() {
+        let mut logits = vec![1000.0f32, 1001.0, 999.0];
+        let out = softmax_xent_rows(&mut logits, &[1], 3, 1.0, true).unwrap();
+        assert!(out.loss_sum.is_finite());
+        assert!((out.correct - 1.0).abs() < 1e-9);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn argmax_ties_resolve_to_last_class() {
+        let mut logits = vec![1.0f32, 1.0, 0.0];
+        // argmax is class 1 (last maximal), so label 1 counts correct
+        let out = softmax_xent_rows(&mut logits, &[1], 3, 1.0, false).unwrap();
+        assert_eq!(out.correct, 1.0);
+        let mut logits = vec![1.0f32, 1.0, 0.0];
+        let out = softmax_xent_rows(&mut logits, &[0], 3, 1.0, false).unwrap();
+        assert_eq!(out.correct, 0.0);
+    }
+}

@@ -5,12 +5,16 @@
 pub mod artifact;
 pub mod client;
 pub mod executable;
+pub mod kernels;
 pub mod plan;
 pub mod reference;
 pub mod validate;
 
 pub use artifact::{default_artifacts_dir, Dtype, InputSpec, Manifest, ModelEntry};
 pub use client::Client;
-pub use executable::{HostBatch, ModelRuntime, StepExecutable, StepKind, StepOutputs};
+pub use executable::{
+    HostBatch, ModelRuntime, StepExecutable, StepKind, StepOutputs, REF_EVAL_BATCH,
+    REF_TRAIN_LADDER,
+};
 pub use plan::{plan, plan_schedule, ExecutionPlan};
 pub use reference::{RefKind, RefModel};

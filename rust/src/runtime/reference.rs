@@ -1,6 +1,6 @@
-//! Reference execution backend: a pure-Rust differentiable model behind
+//! Reference execution backend: pure-Rust differentiable models behind
 //! the same [`StepExecutable`](super::StepExecutable) contract as the PJRT
-//! artifacts.
+//! artifacts, built on the blocked dense kernels of [`super::kernels`].
 //!
 //! Purpose: the coordinator, worker-pool engine, governors, accumulation
 //! and all-reduce are all *runtime-agnostic* — this backend lets the whole
@@ -14,16 +14,22 @@
 //! * train-step gradients are **batch-mean scaled** (the 1/r of Eq. 2
 //!   lives in the loss), so accumulation/all-reduce reproduce large-batch
 //!   updates without further scaling;
-//! * execution is deterministic: fixed summation order, no threading.
+//! * execution is deterministic: the kernels sum in a fixed, shape-only
+//!   schedule (DESIGN.md §8), no threading;
+//! * out-of-range labels **and tokens** are errors, never clamps.
 //!
-//! Two model families cover both dataset shapes the coordinator feeds:
-//! a linear softmax classifier for image data (f32 x, one label/sample)
-//! and a bigram LM for token data (i32 x, one label per position).
+//! Three model families cover the dataset shapes the coordinator feeds:
+//! a linear softmax classifier and a hidden-layer MLP
+//! (linear → ReLU → linear) for image data (f32 x, one label/sample), and
+//! a bigram LM for token data (i32 x, one label per position). The MLP is
+//! the family whose loss is non-convex, so gradient-statistic governors
+//! (variance/diversity) actually diverge from interval doubling on it.
 
 use anyhow::{bail, Result};
 
 use super::executable::{HostBatch, StepOutputs};
-use crate::optim::param::ParamSet;
+use super::kernels;
+use crate::optim::param::{Init, ParamSet, ParamSpec};
 
 /// Which differentiable reference model to run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,10 +38,14 @@ pub enum RefKind {
     Linear { in_dim: usize },
     /// logits\[t\] = W\[token_t\] + b per position (token windows).
     Bigram { vocab: usize, seq_len: usize },
+    /// logits = relu(x · W1 + b1) · W2 + b2 (images, non-convex loss).
+    Mlp { in_dim: usize, hidden: usize },
 }
 
-/// A reference model instance: parameter layout is `[w, b]` with
-/// `w: [rows, n_classes]` (rows = in_dim or vocab) and `b: [n_classes]`.
+/// A reference model instance. Parameter layout is `[w, b]` for Linear
+/// and Bigram (`w: [rows, n_classes]`, `b: [n_classes]`) and
+/// `[w1, b1, w2, b2]` for Mlp (`w1: [in_dim, hidden]`, `b1: [hidden]`,
+/// `w2: [hidden, n_classes]`, `b2: [n_classes]`).
 #[derive(Debug, Clone, Copy)]
 pub struct RefModel {
     pub kind: RefKind,
@@ -46,8 +56,56 @@ impl RefModel {
     /// Label rows each sample contributes (1 for images, seq_len for LM).
     pub fn rows_per_sample(&self) -> usize {
         match self.kind {
-            RefKind::Linear { .. } => 1,
+            RefKind::Linear { .. } | RefKind::Mlp { .. } => 1,
             RefKind::Bigram { seq_len, .. } => seq_len,
+        }
+    }
+
+    /// Parameter tensors this kind carries.
+    pub fn expected_params(&self) -> usize {
+        match self.kind {
+            RefKind::Mlp { .. } => 4,
+            RefKind::Linear { .. } | RefKind::Bigram { .. } => 2,
+        }
+    }
+
+    /// Manifest-style parameter specs (shapes + init recipes) in the
+    /// order [`run`](Self::run) consumes them.
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let c = self.n_classes;
+        match self.kind {
+            RefKind::Linear { in_dim } => vec![
+                ParamSpec { name: "w".into(), shape: vec![in_dim, c], init: Init::Normal(0.01) },
+                ParamSpec { name: "b".into(), shape: vec![c], init: Init::Zeros },
+            ],
+            RefKind::Bigram { vocab, .. } => vec![
+                ParamSpec { name: "w".into(), shape: vec![vocab, c], init: Init::Normal(0.01) },
+                ParamSpec { name: "b".into(), shape: vec![c], init: Init::Zeros },
+            ],
+            RefKind::Mlp { in_dim, hidden } => vec![
+                ParamSpec {
+                    name: "w1".into(),
+                    shape: vec![in_dim, hidden],
+                    init: Init::Normal((2.0 / in_dim as f32).sqrt()),
+                },
+                ParamSpec { name: "b1".into(), shape: vec![hidden], init: Init::Zeros },
+                ParamSpec {
+                    name: "w2".into(),
+                    shape: vec![hidden, c],
+                    init: Init::Normal((2.0 / hidden as f32).sqrt()),
+                },
+                ParamSpec { name: "b2".into(), shape: vec![c], init: Init::Zeros },
+            ],
+        }
+    }
+
+    /// Forward flops per sample (the manifest headline number).
+    pub fn flops_per_sample(&self) -> u64 {
+        let c = self.n_classes;
+        match self.kind {
+            RefKind::Linear { in_dim } => (2 * in_dim * c) as u64,
+            RefKind::Bigram { vocab, .. } => (2 * vocab * c) as u64,
+            RefKind::Mlp { in_dim, hidden } => (2 * (in_dim * hidden + hidden * c)) as u64,
         }
     }
 
@@ -61,186 +119,332 @@ impl RefModel {
         batch: usize,
         want_grads: bool,
     ) -> Result<StepOutputs> {
-        if params.num_tensors() != 2 {
-            bail!("reference model expects [w, b] params, got {}", params.num_tensors());
+        let want = self.expected_params();
+        if params.num_tensors() != want {
+            bail!("reference model expects {want} params, got {}", params.num_tensors());
         }
-        let c = self.n_classes;
-        let w = &params.bufs[0];
-        let b = &params.bufs[1];
         let rows = batch * self.rows_per_sample();
         if y.len() != rows {
             bail!("reference model: {} labels for {rows} rows", y.len());
         }
         let inv = 1.0 / rows as f32;
-
         let mut grads = want_grads.then(|| ParamSet::zeros_like(&params.specs));
-        let mut logits = vec![0.0f32; c];
-        let mut loss_sum = 0.0f64;
-        let mut correct = 0.0f32;
+        let out = match (self.kind, x) {
+            (RefKind::Linear { in_dim }, HostBatch::F32(data)) => {
+                self.run_linear(params, data, y, rows, in_dim, inv, grads.as_mut())?
+            }
+            (RefKind::Mlp { in_dim, hidden }, HostBatch::F32(data)) => {
+                self.run_mlp(params, data, y, rows, in_dim, hidden, inv, grads.as_mut())?
+            }
+            (RefKind::Bigram { vocab, .. }, HostBatch::I32(data)) => {
+                self.run_bigram(params, data, y, rows, vocab, inv, grads.as_mut())?
+            }
+            _ => bail!("x dtype does not match reference model kind"),
+        };
+        Ok(StepOutputs { loss: out.loss_sum as f32, correct: out.correct, grads })
+    }
 
-        for row in 0..rows {
-            let label = y[row];
+    /// x·W + b → fused softmax-xent; backward is two GEMMs.
+    #[allow(clippy::too_many_arguments)]
+    fn run_linear(
+        &self,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        in_dim: usize,
+        inv: f32,
+        grads: Option<&mut ParamSet>,
+    ) -> Result<kernels::XentOut> {
+        let c = self.n_classes;
+        if x.len() != rows * in_dim {
+            bail!("linear model: x carries {} values for {rows}×{in_dim}", x.len());
+        }
+        let (w, b) = (&params.bufs[0], &params.bufs[1]);
+        if w.len() != in_dim * c || b.len() != c {
+            bail!("linear model: param shapes don't match [{in_dim}×{c}] + [{c}]");
+        }
+        let mut wt = Vec::new();
+        kernels::pack_transpose(w, in_dim, c, &mut wt);
+        let mut logits = Vec::new();
+        kernels::broadcast_rows(b, rows, &mut logits);
+        kernels::gemm_abt(x, &wt, &mut logits, rows, c, in_dim);
+        let out = kernels::softmax_xent_rows(&mut logits, y, c, inv, grads.is_some())?;
+        if let Some(g) = grads {
+            // logits now holds the batch-mean-scaled dlogits
+            kernels::gemm_atb(x, &logits, &mut g.bufs[0], rows, in_dim, c);
+            kernels::col_sum(&logits, rows, c, &mut g.bufs[1]);
+        }
+        Ok(out)
+    }
+
+    /// relu(x·W1 + b1)·W2 + b2 → fused softmax-xent; backward chains
+    /// through the ReLU mask.
+    #[allow(clippy::too_many_arguments)]
+    fn run_mlp(
+        &self,
+        params: &ParamSet,
+        x: &[f32],
+        y: &[i32],
+        rows: usize,
+        in_dim: usize,
+        hidden: usize,
+        inv: f32,
+        grads: Option<&mut ParamSet>,
+    ) -> Result<kernels::XentOut> {
+        let c = self.n_classes;
+        if x.len() != rows * in_dim {
+            bail!("mlp model: x carries {} values for {rows}×{in_dim}", x.len());
+        }
+        let (w1, b1) = (&params.bufs[0], &params.bufs[1]);
+        let (w2, b2) = (&params.bufs[2], &params.bufs[3]);
+        let shapes_ok = w1.len() == in_dim * hidden
+            && b1.len() == hidden
+            && w2.len() == hidden * c
+            && b2.len() == c;
+        if !shapes_ok {
+            bail!("mlp model: param shapes don't match [{in_dim}×{hidden}] → [{hidden}×{c}]");
+        }
+        let mut w1t = Vec::new();
+        kernels::pack_transpose(w1, in_dim, hidden, &mut w1t);
+        let mut h = Vec::new();
+        kernels::broadcast_rows(b1, rows, &mut h);
+        kernels::gemm_abt(x, &w1t, &mut h, rows, hidden, in_dim);
+        kernels::relu_fwd(&mut h);
+
+        let mut w2t = Vec::new();
+        kernels::pack_transpose(w2, hidden, c, &mut w2t);
+        let mut logits = Vec::new();
+        kernels::broadcast_rows(b2, rows, &mut logits);
+        kernels::gemm_abt(&h, &w2t, &mut logits, rows, c, hidden);
+
+        let out = kernels::softmax_xent_rows(&mut logits, y, c, inv, grads.is_some())?;
+        if let Some(g) = grads {
+            let d = &logits; // batch-mean-scaled dlogits (padding rows zero)
+            kernels::gemm_atb(&h, d, &mut g.bufs[2], rows, hidden, c);
+            kernels::col_sum(d, rows, c, &mut g.bufs[3]);
+            // dh = d · W2ᵀ — w2's natural [hidden × c] layout *is* the
+            // packed-transposed operand of this product
+            let mut dh = vec![0.0f32; rows * hidden];
+            kernels::gemm_abt(d, w2, &mut dh, rows, hidden, c);
+            kernels::relu_bwd(&h, &mut dh);
+            kernels::gemm_atb(x, &dh, &mut g.bufs[0], rows, in_dim, hidden);
+            kernels::col_sum(&dh, rows, hidden, &mut g.bufs[1]);
+        }
+        Ok(out)
+    }
+
+    /// Embedding-row gather (a GEMM against one-hot rows degenerates to a
+    /// lookup) → fused softmax-xent; backward scatter-adds into the
+    /// visited rows.
+    #[allow(clippy::too_many_arguments)]
+    fn run_bigram(
+        &self,
+        params: &ParamSet,
+        x: &[i32],
+        y: &[i32],
+        rows: usize,
+        vocab: usize,
+        inv: f32,
+        grads: Option<&mut ParamSet>,
+    ) -> Result<kernels::XentOut> {
+        let c = self.n_classes;
+        if x.len() != rows {
+            bail!("bigram model: {} tokens for {rows} rows", x.len());
+        }
+        let (w, b) = (&params.bufs[0], &params.bufs[1]);
+        if w.len() != vocab * c || b.len() != c {
+            bail!("bigram model: param shapes don't match [{vocab}×{c}] + [{c}]");
+        }
+        let mut logits = vec![0.0f32; rows * c];
+        for (row, (&tok, &label)) in x.iter().zip(y).enumerate() {
             if label < 0 {
-                continue; // padding row: zero loss, zero grads
+                continue; // padding row: its tokens are never read
             }
-            let label = label as usize;
-            if label >= c {
-                bail!("label {label} out of range for {c} classes");
+            let tok = token_index(tok, vocab)?;
+            let dst = &mut logits[row * c..(row + 1) * c];
+            for ((l, &bk), &wk) in dst.iter_mut().zip(b).zip(&w[tok * c..(tok + 1) * c]) {
+                *l = bk + wk;
             }
-            // which w-row(s) produce this logit row
-            let w_row = match (self.kind, x) {
-                (RefKind::Linear { in_dim }, HostBatch::F32(data)) => {
-                    let xs = &data[row * in_dim..(row + 1) * in_dim];
-                    for (k, l) in logits.iter_mut().enumerate() {
-                        let mut acc = b[k];
-                        for (i, &xi) in xs.iter().enumerate() {
-                            acc += xi * w[i * c + k];
-                        }
-                        *l = acc;
-                    }
-                    usize::MAX // full dense grad, no single row
+        }
+        let out = kernels::softmax_xent_rows(&mut logits, y, c, inv, grads.is_some())?;
+        if let Some(g) = grads {
+            for (row, (&tok, &label)) in x.iter().zip(y).enumerate() {
+                if label < 0 {
+                    continue;
                 }
-                (RefKind::Bigram { vocab, .. }, HostBatch::I32(data)) => {
-                    let tok = data[row].clamp(0, vocab as i32 - 1) as usize;
-                    for (k, l) in logits.iter_mut().enumerate() {
-                        *l = b[k] + w[tok * c + k];
-                    }
-                    tok
+                let tok = tok as usize; // validated in the forward pass
+                let d = &logits[row * c..(row + 1) * c];
+                for (gw, &dk) in g.bufs[0][tok * c..(tok + 1) * c].iter_mut().zip(d) {
+                    *gw += dk;
                 }
-                _ => bail!("x dtype does not match reference model kind"),
-            };
-
-            // numerically-stable softmax cross-entropy
-            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-            let mut denom = 0.0f32;
-            for &l in &logits {
-                denom += (l - max).exp();
-            }
-            let log_denom = denom.ln();
-            loss_sum += f64::from((log_denom - (logits[label] - max)) * inv);
-            let argmax = logits
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-                .map(|(i, _)| i)
-                .unwrap_or(0);
-            if argmax == label {
-                correct += 1.0;
-            }
-
-            if let Some(g) = grads.as_mut() {
-                for k in 0..c {
-                    let onehot = if k == label { 1.0 } else { 0.0 };
-                    let p = ((logits[k] - max).exp() / denom) - onehot;
-                    let d = p * inv;
-                    g.bufs[1][k] += d;
-                    match (self.kind, x) {
-                        (RefKind::Linear { in_dim }, HostBatch::F32(data)) => {
-                            let xs = &data[row * in_dim..(row + 1) * in_dim];
-                            for (i, &xi) in xs.iter().enumerate() {
-                                g.bufs[0][i * c + k] += xi * d;
-                            }
-                        }
-                        (RefKind::Bigram { .. }, _) => {
-                            g.bufs[0][w_row * c + k] += d;
-                        }
-                        _ => unreachable!("dtype checked above"),
-                    }
+                for (gb, &dk) in g.bufs[1].iter_mut().zip(d) {
+                    *gb += dk;
                 }
             }
         }
-
-        Ok(StepOutputs { loss: loss_sum as f32, correct, grads })
+        Ok(out)
     }
+}
+
+/// Out-of-range tokens are an error, matching the label path — the old
+/// backend silently clamped them, which hid corrupt token streams.
+fn token_index(tok: i32, vocab: usize) -> Result<usize> {
+    if tok < 0 || tok as usize >= vocab {
+        bail!("token {tok} out of range for vocab {vocab}");
+    }
+    Ok(tok as usize)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::param::{Init, ParamSpec};
+    use crate::util::propcheck;
 
-    fn linear_model(in_dim: usize, c: usize) -> (RefModel, ParamSet) {
-        let specs = vec![
-            ParamSpec { name: "w".into(), shape: vec![in_dim, c], init: Init::Normal(0.1) },
-            ParamSpec { name: "b".into(), shape: vec![c], init: Init::Zeros },
-        ];
-        (RefModel { kind: RefKind::Linear { in_dim }, n_classes: c }, ParamSet::init(&specs, 3))
+    fn model(kind: RefKind, c: usize, seed: u64) -> (RefModel, ParamSet) {
+        let m = RefModel { kind, n_classes: c };
+        let params = ParamSet::init(&m.param_specs(), seed);
+        (m, params)
+    }
+
+    /// Finite-difference check of every parameter coordinate, through the
+    /// shared `util::propcheck::grad_check` helper.
+    fn check_grads(m: &RefModel, params: &mut ParamSet, x: HostBatch<'_>, y: &[i32], batch: usize) {
+        let g = m.run(params, x, y, batch, true).unwrap().grads.unwrap();
+        propcheck::grad_check(params, &g, 2e-3, 1.5e-3, |p| {
+            m.run(p, x, y, batch, false).unwrap().loss
+        });
+    }
+
+    fn ramp(n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|i| ((i % 13) as f32 - 6.0) * scale).collect()
     }
 
     #[test]
     fn uniform_logits_give_ln_c_loss() {
-        let (m, params) = {
-            let specs = vec![
-                ParamSpec { name: "w".into(), shape: vec![4, 3], init: Init::Zeros },
-                ParamSpec { name: "b".into(), shape: vec![3], init: Init::Zeros },
-            ];
-            let model = RefModel { kind: RefKind::Linear { in_dim: 4 }, n_classes: 3 };
-            (model, ParamSet::init(&specs, 0))
-        };
-        let x = vec![0.5f32; 2 * 4];
-        let out = m.run(&params, HostBatch::F32(&x), &[0, 2], 2, true).unwrap();
-        assert!((out.loss - (3.0f32).ln()).abs() < 1e-6, "loss {}", out.loss);
-        let g = out.grads.unwrap();
-        assert!(g.all_finite());
-        assert!(g.sq_norm() > 0.0);
+        for kind in [RefKind::Linear { in_dim: 4 }, RefKind::Mlp { in_dim: 4, hidden: 3 }] {
+            let m = RefModel { kind, n_classes: 3 };
+            // zeroed params ⇒ uniform logits ⇒ loss = ln C
+            let params = ParamSet::zeros_like(&m.param_specs());
+            let x = vec![0.5f32; 2 * 4];
+            let out = m.run(&params, HostBatch::F32(&x), &[0, 2], 2, true).unwrap();
+            assert!((out.loss - (3.0f32).ln()).abs() < 1e-6, "{kind:?}: loss {}", out.loss);
+            let g = out.grads.unwrap();
+            assert!(g.all_finite());
+        }
     }
 
     #[test]
     fn padding_rows_contribute_nothing() {
-        let (m, params) = linear_model(4, 3);
-        let x2 = vec![0.3f32; 2 * 4];
-        let full = m.run(&params, HostBatch::F32(&x2), &[1, 2], 2, true).unwrap();
-        // same two samples padded to batch 4: loss scales by 2/4, grads too
-        let x4 = {
-            let mut v = x2.clone();
-            v.extend_from_slice(&[0.0; 2 * 4]);
-            v
-        };
-        let padded = m.run(&params, HostBatch::F32(&x4), &[1, 2, -1, -1], 4, true).unwrap();
-        assert!((padded.loss - full.loss / 2.0).abs() < 1e-6);
-        assert_eq!(padded.correct, full.correct);
-        let (gf, gp) = (full.grads.unwrap(), padded.grads.unwrap());
-        for (a, b) in gf.bufs.iter().zip(&gp.bufs) {
-            for (x, y) in a.iter().zip(b) {
-                assert!((x / 2.0 - y).abs() < 1e-6);
+        for kind in [RefKind::Linear { in_dim: 4 }, RefKind::Mlp { in_dim: 4, hidden: 5 }] {
+            let (m, params) = model(kind, 3, 3);
+            let x2 = ramp(2 * 4, 0.15);
+            let full = m.run(&params, HostBatch::F32(&x2), &[1, 2], 2, true).unwrap();
+            // same two samples padded to batch 4: loss scales by 2/4, grads too
+            let x4 = {
+                let mut v = x2.clone();
+                v.extend_from_slice(&[0.0; 2 * 4]);
+                v
+            };
+            let padded = m.run(&params, HostBatch::F32(&x4), &[1, 2, -1, -1], 4, true).unwrap();
+            assert!((padded.loss - full.loss / 2.0).abs() < 1e-6, "{kind:?}");
+            assert_eq!(padded.correct, full.correct, "{kind:?}");
+            let (gf, gp) = (full.grads.unwrap(), padded.grads.unwrap());
+            for (a, b) in gf.bufs.iter().zip(&gp.bufs) {
+                for (x, y) in a.iter().zip(b) {
+                    assert!((x / 2.0 - y).abs() < 1e-6, "{kind:?}");
+                }
             }
         }
     }
 
     #[test]
-    fn gradient_matches_finite_difference() {
-        let (m, mut params) = linear_model(3, 2);
-        let x = vec![0.7f32, -0.2, 0.4];
-        let y = [1i32];
-        let g = m.run(&params, HostBatch::F32(&x), &y, 1, true).unwrap().grads.unwrap();
-        let eps = 1e-3f32;
-        for t in 0..2 {
-            for i in 0..params.bufs[t].len() {
-                let orig = params.bufs[t][i];
-                params.bufs[t][i] = orig + eps;
-                let up = m.run(&params, HostBatch::F32(&x), &y, 1, false).unwrap().loss;
-                params.bufs[t][i] = orig - eps;
-                let dn = m.run(&params, HostBatch::F32(&x), &y, 1, false).unwrap().loss;
-                params.bufs[t][i] = orig;
-                let fd = (up - dn) / (2.0 * eps);
-                assert!(
-                    (fd - g.bufs[t][i]).abs() < 1e-3,
-                    "tensor {t} idx {i}: fd {fd} vs analytic {}",
-                    g.bufs[t][i]
-                );
-            }
+    fn linear_matches_scalar_oracle() {
+        // anchor the GEMM path to a from-scratch scalar computation
+        let (m, params) = model(RefKind::Linear { in_dim: 5 }, 4, 9);
+        let x = ramp(3 * 5, 0.2);
+        let y = [2i32, 0, 3];
+        let out = m.run(&params, HostBatch::F32(&x), &y, 3, false).unwrap();
+        let (w, b) = (&params.bufs[0], &params.bufs[1]);
+        let mut want = 0.0f64;
+        for (row, &label) in y.iter().enumerate() {
+            let xs = &x[row * 5..(row + 1) * 5];
+            let logits: Vec<f32> = (0..4)
+                .map(|k| b[k] + xs.iter().enumerate().map(|(i, &v)| v * w[i * 4 + k]).sum::<f32>())
+                .collect();
+            let max = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let denom: f32 = logits.iter().map(|&l| (l - max).exp()).sum();
+            want += f64::from((denom.ln() - (logits[label as usize] - max)) / 3.0);
+        }
+        assert!((out.loss - want as f32).abs() < 1e-5, "{} vs {want}", out.loss);
+    }
+
+    #[test]
+    fn grad_check_linear_across_batch_and_padding() {
+        let (m, mut params) = model(RefKind::Linear { in_dim: 3 }, 2, 1);
+        let x1 = ramp(3, 0.3);
+        check_grads(&m, &mut params, HostBatch::F32(&x1), &[1], 1);
+        let x4 = ramp(4 * 3, 0.25);
+        check_grads(&m, &mut params, HostBatch::F32(&x4), &[1, 0, -1, -1], 4);
+    }
+
+    #[test]
+    fn grad_check_mlp_across_batch_and_padding() {
+        let (m, mut params) = model(RefKind::Mlp { in_dim: 4, hidden: 3 }, 3, 5);
+        let x2 = ramp(2 * 4, 0.3);
+        check_grads(&m, &mut params, HostBatch::F32(&x2), &[2, 0], 2);
+        let x5 = ramp(5 * 4, 0.2);
+        check_grads(&m, &mut params, HostBatch::F32(&x5), &[0, 1, 2, -1, -1], 5);
+    }
+
+    #[test]
+    fn grad_check_bigram_with_padded_window() {
+        let vocab = 6;
+        let (m, mut params) = model(RefKind::Bigram { vocab, seq_len: 3 }, vocab, 7);
+        let x: Vec<i32> = vec![0, 1, 2, 3, 4, 5];
+        let y: Vec<i32> = vec![1, 2, 3, 4, -1, -1];
+        check_grads(&m, &mut params, HostBatch::I32(&x), &y, 2);
+    }
+
+    #[test]
+    fn all_padding_batch_is_exactly_zero_for_every_kind() {
+        let cases: Vec<(RefModel, ParamSet, usize)> = vec![
+            {
+                let (m, p) = model(RefKind::Linear { in_dim: 3 }, 2, 2);
+                (m, p, 2)
+            },
+            {
+                let (m, p) = model(RefKind::Mlp { in_dim: 3, hidden: 4 }, 2, 3);
+                (m, p, 2)
+            },
+            {
+                let (m, p) = model(RefKind::Bigram { vocab: 5, seq_len: 2 }, 5, 4);
+                (m, p, 2)
+            },
+        ];
+        for (m, mut params, batch) in cases {
+            let rows = batch * m.rows_per_sample();
+            let y = vec![-1i32; rows];
+            let xf = vec![0.0f32; rows * 3];
+            let xi = vec![0i32; rows];
+            let x = match m.kind {
+                RefKind::Bigram { .. } => HostBatch::I32(&xi),
+                _ => HostBatch::F32(&xf),
+            };
+            let out = m.run(&params, x, &y, batch, true).unwrap();
+            assert_eq!(out.loss, 0.0, "{:?}", m.kind);
+            assert_eq!(out.correct, 0.0, "{:?}", m.kind);
+            let g = out.grads.unwrap();
+            assert_eq!(g.sq_norm(), 0.0, "{:?}: all-padding grads must be exact zeros", m.kind);
+            // the finite-difference helper agrees: 0 ≡ 0 everywhere
+            check_grads(&m, &mut params, x, &y, batch);
         }
     }
 
     #[test]
     fn bigram_runs_on_token_windows() {
         let vocab = 8;
-        let specs = vec![
-            ParamSpec { name: "w".into(), shape: vec![vocab, vocab], init: Init::Normal(0.2) },
-            ParamSpec { name: "b".into(), shape: vec![vocab], init: Init::Zeros },
-        ];
-        let params = ParamSet::init(&specs, 1);
-        let m = RefModel { kind: RefKind::Bigram { vocab, seq_len: 4 }, n_classes: vocab };
+        let (m, params) = model(RefKind::Bigram { vocab, seq_len: 4 }, vocab, 1);
         let x: Vec<i32> = vec![0, 1, 2, 3, 4, 5, 6, 7];
         let y: Vec<i32> = vec![1, 2, 3, 4, 5, 6, 7, -1];
         let out = m.run(&params, HostBatch::I32(&x), &y, 2, true).unwrap();
@@ -248,14 +452,88 @@ mod tests {
         let g = out.grads.unwrap();
         assert!(g.all_finite());
         // only visited token rows have gradient mass in w
-        let wg = &g.bufs[0];
-        assert!(wg.iter().any(|&v| v != 0.0));
+        assert!(g.bufs[0].iter().any(|&v| v != 0.0));
+    }
+
+    /// Regression (ISSUE 3 satellite): Bigram used to silently clamp
+    /// out-of-range tokens; now both directions are loud errors, matching
+    /// the label path.
+    #[test]
+    fn bigram_rejects_out_of_range_tokens() {
+        let vocab = 8;
+        let (m, params) = model(RefKind::Bigram { vocab, seq_len: 2 }, vocab, 1);
+        let y = [1i32, 2];
+        for bad in [vocab as i32, vocab as i32 + 100, -1, i32::MIN] {
+            let x = [0i32, bad];
+            let err = m.run(&params, HostBatch::I32(&x), &y, 1, false).unwrap_err();
+            assert!(
+                err.to_string().contains("out of range"),
+                "token {bad} should be rejected, got: {err}"
+            );
+        }
+        // …but padding rows never read their tokens, so garbage there is
+        // fine (the gather layer pads x with zeros and y with −1)
+        let x = [0i32, 999];
+        let out = m.run(&params, HostBatch::I32(&x), &[1, -1], 1, false);
+        assert!(out.is_ok(), "padding-row tokens must stay unread");
+    }
+
+    #[test]
+    fn out_of_range_label_rejected() {
+        let (m, params) = model(RefKind::Linear { in_dim: 4 }, 3, 1);
+        let x = vec![0.1f32; 4];
+        let err = m.run(&params, HostBatch::F32(&x), &[3], 1, false).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
     }
 
     #[test]
     fn dtype_mismatch_rejected() {
-        let (m, params) = linear_model(4, 3);
+        let (m, params) = model(RefKind::Linear { in_dim: 4 }, 3, 1);
         let x = vec![0i32; 4];
         assert!(m.run(&params, HostBatch::I32(&x), &[0], 1, true).is_err());
+        let (m, params) = model(RefKind::Mlp { in_dim: 4, hidden: 2 }, 3, 1);
+        assert!(m.run(&params, HostBatch::I32(&x), &[0], 1, true).is_err());
+        let (m, params) = model(RefKind::Bigram { vocab: 4, seq_len: 1 }, 4, 1);
+        let xf = vec![0.0f32; 4];
+        assert!(m.run(&params, HostBatch::F32(&xf), &[0], 1, true).is_err());
+    }
+
+    #[test]
+    fn wrong_param_arity_rejected() {
+        let (m, params) = model(RefKind::Linear { in_dim: 4 }, 3, 1);
+        let mlp = RefModel { kind: RefKind::Mlp { in_dim: 4, hidden: 2 }, n_classes: 3 };
+        let x = vec![0.1f32; 4];
+        // linear params (2 tensors) into the 4-tensor mlp: loud error
+        let err = mlp.run(&params, HostBatch::F32(&x), &[0], 1, false).unwrap_err();
+        assert!(err.to_string().contains("expects 4 params"), "{err}");
+        assert_eq!(m.expected_params(), 2);
+    }
+
+    #[test]
+    fn runs_are_bitwise_deterministic() {
+        let (m, params) = model(RefKind::Mlp { in_dim: 6, hidden: 4 }, 3, 11);
+        let x = ramp(8 * 6, 0.2);
+        let y: Vec<i32> = (0..8).map(|i| i % 3).collect();
+        let a = m.run(&params, HostBatch::F32(&x), &y, 8, true).unwrap();
+        let b = m.run(&params, HostBatch::F32(&x), &y, 8, true).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        let (ga, gb) = (a.grads.unwrap(), b.grads.unwrap());
+        for (ta, tb) in ga.bufs.iter().zip(&gb.bufs) {
+            for (va, vb) in ta.iter().zip(tb) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_specs_describe_four_tensors() {
+        let m = RefModel { kind: RefKind::Mlp { in_dim: 10, hidden: 7 }, n_classes: 4 };
+        let specs = m.param_specs();
+        let names: Vec<&str> = specs.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["w1", "b1", "w2", "b2"]);
+        assert_eq!(specs[0].shape, vec![10, 7]);
+        assert_eq!(specs[2].shape, vec![7, 4]);
+        assert_eq!(m.flops_per_sample(), 2 * (10 * 7 + 7 * 4));
+        assert_eq!(m.rows_per_sample(), 1);
     }
 }

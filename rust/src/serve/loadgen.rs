@@ -39,7 +39,7 @@ use super::governor::{
 use super::queue::BoundedQueue;
 use super::server::serve_wall;
 use super::{Request, ServeStats};
-use crate::config::{ServeConfig, TrafficShape};
+use crate::config::{ModelArch, ServeConfig, TrafficShape};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::dataset::{GatherBufs, TrainData};
 use crate::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
@@ -323,7 +323,14 @@ pub fn run_serve_bench(
         .map(|_| srng.gen_range(pool_len as u32) as usize)
         .collect();
 
-    let rt = ModelRuntime::reference_serving("serve_ref", IMG_LEN, classes, &ladder);
+    let rt = match scfg.arch {
+        ModelArch::Linear => {
+            ModelRuntime::reference_serving("serve_ref", IMG_LEN, classes, &ladder)
+        }
+        ModelArch::Mlp { hidden } => {
+            ModelRuntime::reference_serving_mlp("serve_ref_mlp", IMG_LEN, hidden, classes, &ladder)
+        }
+    };
     let mut params = ParamSet::init(&rt.entry.params, scfg.seed);
     if let Some(path) = checkpoint {
         let ck = Checkpoint::load(path, &params)?;
@@ -408,6 +415,7 @@ pub fn report_json(
     Json::obj(vec![
         ("bench", Json::str("serve-bench")),
         ("clock", Json::str(clock.name())),
+        ("model", Json::str(scfg.arch.name())),
         ("shape", Json::str(scfg.shape.name())),
         ("governor", Json::str(governor.name())),
         ("qps", Json::num(scfg.qps)),
@@ -484,6 +492,66 @@ mod tests {
         assert!(governor_from_name("psychic", &scfg).is_err());
         assert!(Clock::from_name("virtual").is_ok());
         assert!(Clock::from_name("sundial").is_err());
+    }
+
+    /// Statistical check (ISSUE 3 satellite): the thinning sampler's
+    /// empirical arrival rate matches the configured rate across seeds,
+    /// for every shape (they all share mean qps by construction).
+    #[test]
+    fn thinning_rate_matches_configured_rate_across_seeds() {
+        // 2.0 s = a whole number of bursty high/low periods, so all three
+        // shapes share the same mean rate by construction
+        let (qps, dur) = (800.0, 2.0);
+        let expect = qps * dur; // 1600 per seed
+        for shape in [TrafficShape::Steady, TrafficShape::Bursty, TrafficShape::Ramp] {
+            let seeds = 24u64;
+            let total: usize = (0..seeds)
+                .map(|s| arrival_schedule(qps, dur, shape, 1000 + s).len())
+                .sum();
+            let mean = total as f64 / seeds as f64;
+            // Poisson σ per seed is √1600 = 40, so the 24-seed mean has
+            // σ ≈ 8.2; a ±4% band (±64) is a ~7.8σ acceptance region
+            let rel = (mean - expect).abs() / expect;
+            assert!(rel < 0.04, "{shape:?}: mean arrivals {mean} vs configured {expect}");
+        }
+    }
+
+    /// The ramp profile really ramps: rate(t) ∝ t puts ~1/4 of the mass
+    /// in the first half-window and ~3/4 in the second.
+    #[test]
+    fn ramp_mass_is_linear_in_time() {
+        let a = arrival_schedule(1000.0, 2.0, TrafficShape::Ramp, 17);
+        let first = a.iter().filter(|&&t| t < 1_000_000_000).count() as f64;
+        let frac = first / a.len() as f64;
+        assert!((frac - 0.25).abs() < 0.05, "first-half fraction {frac}, expected ≈ 0.25");
+    }
+
+    /// The MLP serving arch keeps the virtual-clock determinism contract:
+    /// a fixed (seed, config) renders a bit-identical report, and the
+    /// report names the model family.
+    #[test]
+    fn mlp_serving_report_is_bit_identical_per_seed() {
+        let scfg = ServeConfig {
+            qps: 300.0,
+            duration_s: 0.5,
+            max_batch: 8,
+            workers: 1,
+            warmup_s: 0.0,
+            arch: ModelArch::Mlp { hidden: 16 },
+            ..ServeConfig::default()
+        };
+        scfg.validate().unwrap();
+        let mut rendered = Vec::new();
+        for _ in 0..2 {
+            let mut gov = governor_from_name("slo", &scfg).unwrap();
+            let (stats, rep) =
+                run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 32, None).unwrap();
+            assert!(stats.completed > 0);
+            assert!(stats.loss_sum > 0.0, "the MLP really ran");
+            rendered.push(rep.to_string());
+        }
+        assert_eq!(rendered[0], rendered[1]);
+        assert!(rendered[0].contains("\"model\":\"mlp\""));
     }
 
     #[test]

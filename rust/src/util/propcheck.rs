@@ -6,6 +6,7 @@
 //! overrides the default seed so failures replay exactly.
 
 use super::rng::Pcg32;
+use crate::optim::param::ParamSet;
 
 /// Number of random cases per property (override: ADABATCH_PROPTEST_CASES).
 pub fn default_cases() -> usize {
@@ -106,6 +107,44 @@ impl Gen for VecF32 {
     }
 }
 
+/// Vec of u64 drawn log-uniformly over the octaves of [0, 2^max_bits)
+/// (so log-bucketed consumers see every magnitude), length in
+/// [min_len, max_len].
+pub struct VecU64 {
+    pub min_len: usize,
+    pub max_len: usize,
+    /// values span [0, 2^max_bits)
+    pub max_bits: u32,
+}
+
+impl Gen for VecU64 {
+    type Value = Vec<u64>;
+
+    fn generate(&self, rng: &mut Pcg32) -> Vec<u64> {
+        assert!(self.max_bits >= 1 && self.max_bits <= 64);
+        let len = UsizeRange(self.min_len, self.max_len).generate(rng);
+        (0..len)
+            .map(|_| {
+                let bits = 1 + rng.gen_range(self.max_bits) as u64; // 1..=max_bits
+                rng.next_u64() >> (64 - bits)
+            })
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<u64>) -> Vec<Vec<u64>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            let keep = (v.len() / 2).max(self.min_len);
+            out.push(v[..keep].to_vec());
+        }
+        if v.iter().any(|&x| x != 0) {
+            out.push(vec![0; v.len()]);
+            out.push(v.iter().map(|&x| x / 2).collect());
+        }
+        out
+    }
+}
+
 /// Pair combinator.
 pub struct Pair<A, B>(pub A, pub B);
 
@@ -183,6 +222,48 @@ pub fn check_cases<G: Gen>(name: &str, gen: G, cases: usize, prop: impl Fn(&G::V
     }
 }
 
+/// Central-difference gradient check: verify `analytic` against the
+/// scalar `loss` at `params`, coordinate by coordinate. Promoted from the
+/// ad-hoc finite-difference loop in the reference backend's tests so
+/// every differentiable model family ([`crate::runtime::RefKind`]) reuses
+/// one implementation. `params` is restored exactly after each probe.
+///
+/// Tolerance: `|fd − analytic| ≤ tol · max(1, |fd|)` — an absolute floor
+/// of `tol` for near-zero gradients (all-padding batches must come out
+/// exactly zero-vs-zero) widening to a relative band for large ones.
+/// Panics with the offending tensor/coordinate on mismatch.
+pub fn grad_check(
+    params: &mut ParamSet,
+    analytic: &ParamSet,
+    eps: f32,
+    tol: f32,
+    mut loss: impl FnMut(&ParamSet) -> f32,
+) {
+    assert_eq!(
+        params.num_tensors(),
+        analytic.num_tensors(),
+        "analytic gradient arity must match params"
+    );
+    for t in 0..params.num_tensors() {
+        assert_eq!(params.bufs[t].len(), analytic.bufs[t].len());
+        for i in 0..params.bufs[t].len() {
+            let orig = params.bufs[t][i];
+            params.bufs[t][i] = orig + eps;
+            let up = loss(params);
+            params.bufs[t][i] = orig - eps;
+            let dn = loss(params);
+            params.bufs[t][i] = orig;
+            let fd = (up - dn) / (2.0 * eps);
+            let a = analytic.bufs[t][i];
+            assert!(
+                (fd - a).abs() <= tol * fd.abs().max(1.0),
+                "gradient mismatch: tensor {t} ({}) idx {i}: finite-difference {fd} vs analytic {a}",
+                params.specs[t].name
+            );
+        }
+    }
+}
+
 fn hash_name(name: &str) -> u64 {
     // FNV-1a
     let mut h: u64 = 0xcbf29ce484222325;
@@ -244,6 +325,54 @@ mod tests {
             VecF32 { min_len: 3, max_len: 9, scale: 1.0 },
             |v| (3..=9).contains(&v.len()),
         );
+    }
+
+    #[test]
+    fn vec_u64_spans_octaves() {
+        let gen = VecU64 { min_len: 64, max_len: 128, max_bits: 40 };
+        let mut rng = Pcg32::new(seed() ^ hash_name("octaves"));
+        let v = gen.generate(&mut rng);
+        assert!((64..=128).contains(&v.len()));
+        assert!(v.iter().all(|&x| x < 1u64 << 40));
+        // log-uniform: both small and large magnitudes appear
+        assert!(v.iter().any(|&x| x < 1u64 << 8));
+        assert!(v.iter().any(|&x| x >= 1u64 << 24));
+    }
+
+    #[test]
+    fn grad_check_accepts_a_correct_gradient() {
+        use crate::optim::param::{Init, ParamSpec};
+        // loss = Σ (x_i − i)², gradient 2(x_i − i)
+        let specs = vec![ParamSpec { name: "x".into(), shape: vec![4], init: Init::Zeros }];
+        let mut params = ParamSet::init(&specs, 0);
+        params.bufs[0] = vec![0.5, -1.0, 2.0, 3.5];
+        let mut analytic = ParamSet::zeros_like(&specs);
+        for (i, (g, &x)) in analytic.bufs[0].iter_mut().zip(&params.bufs[0]).enumerate() {
+            *g = 2.0 * (x - i as f32);
+        }
+        let before = params.bufs[0].clone();
+        grad_check(&mut params, &analytic, 1e-3, 1e-3, |p| {
+            p.bufs[0]
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| (x - i as f32) * (x - i as f32))
+                .sum()
+        });
+        assert_eq!(params.bufs[0], before, "probes must restore params exactly");
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient mismatch")]
+    fn grad_check_rejects_a_wrong_gradient() {
+        use crate::optim::param::{Init, ParamSpec};
+        let specs = vec![ParamSpec { name: "x".into(), shape: vec![2], init: Init::Zeros }];
+        let mut params = ParamSet::init(&specs, 0);
+        params.bufs[0] = vec![1.0, 2.0];
+        let mut analytic = ParamSet::zeros_like(&specs);
+        analytic.bufs[0] = vec![0.0, 0.0]; // claims zero gradient — wrong
+        grad_check(&mut params, &analytic, 1e-3, 1e-3, |p| {
+            p.bufs[0].iter().map(|&x| x * x).sum()
+        });
     }
 
     #[test]

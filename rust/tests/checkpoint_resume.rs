@@ -90,6 +90,45 @@ fn resumed_run_matches_uninterrupted_run_bitwise() {
     let _ = std::fs::remove_dir_all(&dir_resumed);
 }
 
+/// The blocked-GEMM MLP keeps the bitwise resume contract: its four
+/// parameter tensors (and their momentum) round-trip through a checkpoint
+/// and land exactly where the uninterrupted run lands.
+#[test]
+fn mlp_resume_matches_uninterrupted_run_bitwise() {
+    let (train_d, test_d) = small_images();
+    let rt = ModelRuntime::reference_mlp("ref_mlp", IMG_LEN, 12, 4, &[8, 16, 32, 64], 64);
+    let (dir_full, dir_resumed) = (tmpdir("mlp_full"), tmpdir("mlp_resumed"));
+
+    let cfg = TrainerConfig::new(3)
+        .with_seed(13)
+        .with_checkpoints(&dir_full, 1);
+    let mut gov = doubling_gov();
+    let (hist_full, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert!(!hist_full.diverged);
+
+    let cfg = TrainerConfig::new(3)
+        .with_seed(13)
+        .with_checkpoints(&dir_resumed, 1)
+        .with_resume(dir_full.join("epoch0000.ckpt"));
+    let mut gov = doubling_gov();
+    let (hist_res, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert_eq!(hist_res.epochs.len(), 2);
+
+    let template = ParamSet::init(&rt.entry.params, 0);
+    assert_eq!(template.num_tensors(), 4, "mlp checkpoints carry [w1, b1, w2, b2]");
+    let full = Checkpoint::load(&dir_full.join("epoch0002.ckpt"), &template).unwrap();
+    let resumed = Checkpoint::load(&dir_resumed.join("epoch0002.ckpt"), &template).unwrap();
+    assert_eq!(full.params.bufs, resumed.params.bufs, "mlp params must match bitwise");
+    assert_eq!(
+        full.velocity.unwrap().bufs,
+        resumed.velocity.unwrap().bufs,
+        "mlp momentum must match bitwise"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_resumed);
+}
+
 #[test]
 fn resume_rejects_a_checkpoint_from_another_model() {
     let (train_d, test_d) = small_images();
