@@ -7,7 +7,9 @@ use adabatch::coordinator::{GatherBufs, TrainData};
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::optim::param::ParamSet;
 use adabatch::optim::sgd::{Optimizer, SgdMomentum};
-use adabatch::runtime::{default_artifacts_dir, Client, HostBatch, Manifest, ModelRuntime, StepKind};
+use adabatch::runtime::{
+    default_artifacts_dir, Client, HostBatch, Manifest, ModelRuntime, StepKind, Workspace,
+};
 use adabatch::util::benchkit::{black_box, BenchSuite};
 
 fn main() -> anyhow::Result<()> {
@@ -36,12 +38,13 @@ fn main() -> anyhow::Result<()> {
     data.gather(&idx, mb, &mut bufs);
     let x = bufs.x_f32.clone();
     let y = bufs.y.clone();
+    let mut ws = Workspace::new();
     suite.bench_units("execute (upload+fwd+bwd+download)", Some(mb as f64), || {
-        let _ = exe.run(&params, HostBatch::F32(&x), &y).expect("step");
+        let _ = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).expect("step");
     });
 
     // optimizer over the real parameter set
-    let grads = exe.run(&params, HostBatch::F32(&x), &y)?.grads.unwrap();
+    let grads = exe.run(&params, HostBatch::F32(&x), &y, &mut ws)?.grads.unwrap();
     let mut p2 = params.clone();
     let mut opt = SgdMomentum::paper_cifar();
     suite.bench_units(
@@ -60,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     data.gather(&eidx, eb, &mut ebufs);
     let (ex, ey) = (ebufs.x_f32.clone(), ebufs.y.clone());
     suite.bench_units("eval execute", Some(eb as f64), || {
-        let _ = eexe.run(&params, HostBatch::F32(&ex), &ey).expect("eval");
+        let _ = eexe.run(&params, HostBatch::F32(&ex), &ey, &mut ws).expect("eval");
     });
 
     suite.print_report();

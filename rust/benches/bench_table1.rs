@@ -6,7 +6,9 @@
 use adabatch::coordinator::{GatherBufs, TrainData};
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::optim::param::ParamSet;
-use adabatch::runtime::{default_artifacts_dir, Client, Dtype, HostBatch, Manifest, ModelRuntime, StepKind};
+use adabatch::runtime::{
+    default_artifacts_dir, Client, Dtype, HostBatch, Manifest, ModelRuntime, StepKind, Workspace,
+};
 use adabatch::util::benchkit::BenchSuite;
 
 fn main() -> anyhow::Result<()> {
@@ -25,6 +27,7 @@ fn main() -> anyhow::Result<()> {
         let rt = ModelRuntime::new(client.clone(), manifest.model(model)?.clone());
         let params = ParamSet::init(&rt.entry.params, 0);
         let mut bufs = GatherBufs::default();
+        let mut ws = Workspace::new();
         for &mb in &rt.entry.train_batches() {
             let exe = rt.executable(StepKind::Train, mb)?;
             let idx: Vec<usize> = (0..mb).collect();
@@ -33,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             let y = bufs.y.clone();
             suite.bench_units(&format!("{model}/µbatch{mb}"), Some(mb as f64), || {
                 let _ = exe
-                    .run(&params, HostBatch::F32(&x), &y)
+                    .run(&params, HostBatch::F32(&x), &y, &mut ws)
                     .expect("step failed");
             });
         }

@@ -38,10 +38,12 @@ impl GradAccumulator {
     }
 
     /// Add one microbatch result (microbatch-mean gradient + its loss).
-    pub fn add(&mut self, grads: &ParamSet, loss: f32, correct: f32) {
+    /// The loss arrives and stays f64 — the step kernel's f64 accumulator
+    /// is never narrowed to f32 on its way to the controller.
+    pub fn add(&mut self, grads: &ParamSet, loss: f64, correct: f32) {
         self.acc.add_assign(grads);
         self.count += 1;
-        self.loss_sum += loss as f64;
+        self.loss_sum += loss;
         self.correct_sum += correct as f64;
         self.micro_sq_norms.push(grads.sq_norm());
     }
@@ -56,10 +58,10 @@ impl GradAccumulator {
         assert!(self.count > 0, "finish() with no accumulated microbatches");
         let inv = 1.0 / self.count as f32;
         self.acc.scale(inv);
-        let grads = ParamSet {
-            specs: self.acc.specs.clone(),
-            bufs: std::mem::take(&mut self.acc.bufs),
-        };
+        let grads = ParamSet::from_parts(
+            self.acc.specs.clone(),
+            std::mem::take(&mut self.acc.bufs),
+        );
         // re-arm with fresh zero buffers of the right shapes
         self.acc = ParamSet::zeros_like(&grads.specs);
         let loss = self.loss_sum / self.count as f64;

@@ -36,7 +36,7 @@ use crate::data::shard::{shard_batch, shard_weights};
 use crate::metrics::{EpochRecord, PhaseTimers, RunHistory};
 use crate::optim::param::ParamSet;
 use crate::optim::sgd::Optimizer;
-use crate::runtime::{plan_schedule, ModelRuntime, StepKind};
+use crate::runtime::{plan_schedule, ModelRuntime, StepKind, Workspace, WorkspaceStats};
 use crate::schedule::{BatchGovernor, GradVarianceController};
 
 /// Training-run configuration (everything but the batch criterion — that
@@ -216,8 +216,11 @@ pub fn train<G: BatchGovernor + ?Sized>(
     let mut timers = PhaseTimers::new();
     let mut eval_bufs = GatherBufs::default();
 
-    let worker_timers = std::thread::scope(|scope| -> Result<PhaseTimers> {
+    let scope_out = std::thread::scope(|scope| -> Result<(PhaseTimers, WorkspaceStats)> {
         let mut engine = Engine::start(scope, cfg.workers, train_data, &rt.entry.params);
+        // the controller's own long-lived arena for the eval loop (the
+        // serial fallback of DESIGN.md §9's ownership map)
+        let mut eval_ws = Workspace::new();
         let mut last_batch = 0usize;
         let mut warned_single_micro = false;
         'epochs: for epoch in start_epoch..cfg.epochs {
@@ -301,8 +304,9 @@ pub fn train<G: BatchGovernor + ?Sized>(
 
             let mean_train_loss = loss_sum / iters.max(1) as f64;
             let (test_loss, test_error) = if epoch % eval_every == 0 || epoch + 1 == cfg.epochs {
-                let ev =
-                    timers.time("eval", || evaluate(rt, &params, test_data, &mut eval_bufs))?;
+                let ev = timers.time("eval", || {
+                    evaluate(rt, &params, test_data, &mut eval_bufs, &mut eval_ws)
+                })?;
                 (ev.loss, ev.error)
             } else {
                 let prev = history.epochs.last();
@@ -344,9 +348,15 @@ pub fn train<G: BatchGovernor + ?Sized>(
                 }
             }
         }
-        Ok(engine.shutdown())
+        let (worker_timers, mut stats) = engine.shutdown();
+        stats.merge(&eval_ws.stats());
+        Ok((worker_timers, stats))
     })?;
+    let (worker_timers, ws_stats) = scope_out;
     timers.merge(&worker_timers);
+    // workspace accounting rides on the history so `adabatch train` can
+    // report alloc_bytes_steady_state / pack_count without new plumbing
+    history.workspace = ws_stats;
     Ok((history, timers))
 }
 

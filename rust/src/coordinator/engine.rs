@@ -23,6 +23,15 @@
 //! Worker phase timers ("gather" = prefetch wait, "fwd_bwd" = step
 //! execution) are merged into the run's [`PhaseTimers`] at shutdown, both
 //! flat and under a `w{i}/` prefix for per-worker attribution.
+//!
+//! Each worker additionally owns one persistent [`Workspace`] for its
+//! whole lifetime (DESIGN.md §9): step scratch and packed-transposed
+//! weights live across dispatches, gradient sets recycle through the
+//! arena after each accumulation, and the packed cache — keyed on the
+//! param snapshot's version, which the optimizer bumps once per update —
+//! repacks once per weight update instead of once per microbatch. The
+//! merged [`WorkspaceStats`] come back from [`Engine::shutdown`] for the
+//! train report.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -36,7 +45,7 @@ use super::dataset::TrainData;
 use crate::data::loader::Prefetcher;
 use crate::metrics::PhaseTimers;
 use crate::optim::param::{ParamSet, ParamSpec};
-use crate::runtime::{Dtype, HostBatch, StepExecutable};
+use crate::runtime::{Dtype, HostBatch, StepExecutable, Workspace, WorkspaceStats};
 
 /// One worker's contribution to one weight update.
 #[derive(Debug)]
@@ -68,7 +77,7 @@ enum Job {
 pub struct Engine<'scope> {
     job_txs: Vec<Sender<Job>>,
     res_rx: Receiver<(usize, u64, Result<WorkerOut>)>,
-    handles: Vec<ScopedJoinHandle<'scope, PhaseTimers>>,
+    handles: Vec<ScopedJoinHandle<'scope, (PhaseTimers, WorkspaceStats)>>,
     seq: u64,
 }
 
@@ -165,23 +174,26 @@ impl<'scope> Engine<'scope> {
             .collect())
     }
 
-    /// Stop all workers and return their merged phase timers. A worker
-    /// that panicked is re-raised here rather than silently dropped.
-    pub fn shutdown(self) -> PhaseTimers {
+    /// Stop all workers and return their merged phase timers and
+    /// workspace accounting. A worker that panicked is re-raised here
+    /// rather than silently dropped.
+    pub fn shutdown(self) -> (PhaseTimers, WorkspaceStats) {
         for tx in &self.job_txs {
             let _ = tx.send(Job::Finish);
         }
         let mut merged = PhaseTimers::new();
+        let mut ws_stats = WorkspaceStats::default();
         for (w, handle) in self.handles.into_iter().enumerate() {
             match handle.join() {
-                Ok(timers) => {
+                Ok((timers, ws)) => {
                     merged.merge(&timers);
                     merged.merge_prefixed(&format!("w{w}/"), &timers);
+                    ws_stats.merge(&ws);
                 }
                 Err(payload) => std::panic::resume_unwind(payload),
             }
         }
-        merged
+        (merged, ws_stats)
     }
 }
 
@@ -192,10 +204,13 @@ fn worker_loop<'scope, 'env: 'scope>(
     results: Sender<(usize, u64, Result<WorkerOut>)>,
     data: &'env TrainData,
     specs: &'env [ParamSpec],
-) -> PhaseTimers {
+) -> (PhaseTimers, WorkspaceStats) {
     let prefetcher = Prefetcher::spawn(scope, data);
     let mut acc = GradAccumulator::new(specs);
     let mut timers = PhaseTimers::new();
+    // one arena for the worker's lifetime: scratch, packed weights and
+    // recycled grad sets persist across every dispatch
+    let mut ws = Workspace::new();
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Finish => break,
@@ -204,6 +219,7 @@ fn worker_loop<'scope, 'env: 'scope>(
                     &prefetcher,
                     &mut acc,
                     &mut timers,
+                    &mut ws,
                     data,
                     &exe,
                     &params,
@@ -221,7 +237,7 @@ fn worker_loop<'scope, 'env: 'scope>(
             }
         }
     }
-    timers
+    (timers, ws.stats())
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -229,6 +245,7 @@ fn run_shard(
     prefetcher: &Prefetcher,
     acc: &mut GradAccumulator,
     timers: &mut PhaseTimers,
+    ws: &mut Workspace,
     data: &TrainData,
     exe: &StepExecutable,
     params: &ParamSet,
@@ -261,12 +278,14 @@ fn run_shard(
                 Dtype::F32 => HostBatch::F32(&bufs.x_f32),
                 Dtype::I32 => HostBatch::I32(&bufs.x_i32),
             };
-            match timers.time("fwd_bwd", || exe.run(params, x, &bufs.y)) {
-                Ok(out) => acc.add(
-                    out.grads.as_ref().expect("train step must emit grads"),
-                    out.loss,
-                    out.correct,
-                ),
+            match timers.time("fwd_bwd", || exe.run(params, x, &bufs.y, ws)) {
+                Ok(mut out) => {
+                    let g = out.grads.take().expect("train step must emit grads");
+                    acc.add(&g, out.loss, out.correct);
+                    // hand the grad set back to the arena: the next
+                    // microbatch's step reuses it instead of allocating
+                    ws.recycle_grads(g);
+                }
                 Err(e) => failure = Some(e),
             }
         }
@@ -306,15 +325,18 @@ mod tests {
         let shards = crate::data::shard::shard_batch(&batch, 2);
 
         // serial reference: run each shard inline through the same exe
+        // (with its own long-lived workspace, like a real worker)
         let mut serial: Vec<WorkerOut> = Vec::new();
         std::thread::scope(|s| {
             let pf = Prefetcher::spawn(s, &data);
             let mut acc = GradAccumulator::new(&rt.entry.params);
             let mut timers = PhaseTimers::new();
+            let mut ws = Workspace::new();
             for shard in &shards {
                 let specs = &rt.entry.params;
-                let out =
-                    run_shard(&pf, &mut acc, &mut timers, &data, &exe, &params, shard, 4, specs);
+                let out = run_shard(
+                    &pf, &mut acc, &mut timers, &mut ws, &data, &exe, &params, shard, 4, specs,
+                );
                 serial.push(out.unwrap());
             }
         });
@@ -353,9 +375,10 @@ mod tests {
             let outs = engine.dispatch(&exe, &params, shards, 4).unwrap();
             assert_eq!(outs[1].micro_sq_norms.len(), 0);
             assert_eq!(outs[2].loss, 0.0);
-            let timers = engine.shutdown();
+            let (timers, ws_stats) = engine.shutdown();
             assert!(timers.count("fwd_bwd") > 0);
             assert!(timers.count("w0/fwd_bwd") > 0);
+            assert!(ws_stats.pack_count > 0, "workers must report workspace stats");
         });
     }
 
@@ -365,7 +388,7 @@ mod tests {
         let rt = ModelRuntime::reference_classifier("ref", IMG_LEN, 4, &[8], 16);
         let exe = rt.executable(StepKind::Train, 8).unwrap();
         let params = Arc::new(ParamSet::init(&rt.entry.params, 1));
-        let timers = std::thread::scope(|s| {
+        let (timers, ws_stats) = std::thread::scope(|s| {
             let mut engine = Engine::start(s, 2, &data, &rt.entry.params);
             let batch: Vec<usize> = (0..16).collect();
             for _ in 0..3 {
@@ -378,5 +401,10 @@ mod tests {
         assert_eq!(timers.count("w0/fwd_bwd"), 3);
         assert_eq!(timers.count("w1/fwd_bwd"), 3);
         assert!(timers.count("gather") >= 6);
+        // params never changed across the 3 dispatches, so each worker
+        // packed once and hit its cache for the other steps
+        assert_eq!(ws_stats.pack_count, 2, "one pack per worker for a frozen ParamSet");
+        assert!(ws_stats.pack_hits >= 4);
+        assert!(ws_stats.alloc_bytes > 0);
     }
 }

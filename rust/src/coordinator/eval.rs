@@ -8,7 +8,7 @@ use anyhow::Result;
 use super::dataset::{GatherBufs, TrainData};
 use crate::data::loader::BatchPlanner;
 use crate::optim::param::ParamSet;
-use crate::runtime::{Dtype, HostBatch, ModelRuntime, StepKind};
+use crate::runtime::{Dtype, HostBatch, ModelRuntime, StepKind, Workspace};
 
 /// Aggregated evaluation result.
 #[derive(Debug, Clone, Copy)]
@@ -22,11 +22,15 @@ pub struct EvalResult {
 }
 
 /// Evaluate `params` on `data` using the model's (largest) eval artifact.
+/// `ws` is the caller's long-lived arena: since `params` is frozen for
+/// the whole walk, the packed-weight cache packs once and every batch of
+/// the eval epoch reuses it (and the scratch slots) allocation-free.
 pub fn evaluate(
     rt: &ModelRuntime,
     params: &ParamSet,
     data: &TrainData,
     bufs: &mut GatherBufs,
+    ws: &mut Workspace,
 ) -> Result<EvalResult> {
     let batch = rt.eval_batch()?;
     let exe = rt.executable(StepKind::Eval, batch)?;
@@ -42,10 +46,10 @@ pub fn evaluate(
             Dtype::F32 => HostBatch::F32(&bufs.x_f32),
             Dtype::I32 => HostBatch::I32(&bufs.x_i32),
         };
-        let out = exe.run(params, x, &bufs.y)?;
+        let out = exe.run(params, x, &bufs.y, ws)?;
         // kernel mean divides by batch*rows_per_sample (padding included);
-        // undo to a sum over valid rows
-        loss_sum += out.loss as f64 * (batch * rows_per_sample) as f64;
+        // undo to a sum over valid rows (f64 end to end)
+        loss_sum += out.loss * (batch * rows_per_sample) as f64;
         correct += out.correct as f64;
         total_labels += b.indices.len() * rows_per_sample;
     }
@@ -83,7 +87,8 @@ mod tests {
         let data = generate(&spec);
         let params = ParamSet::init(&rt.entry.params, 3);
         let mut bufs = GatherBufs::default();
-        let r = evaluate(&rt, &params, &TrainData::Images(data.test), &mut bufs).unwrap();
+        let mut ws = Workspace::new();
+        let r = evaluate(&rt, &params, &TrainData::Images(data.test), &mut bufs, &mut ws).unwrap();
         assert_eq!(r.total_labels, 130);
         assert!(r.loss.is_finite() && r.loss > 0.0);
         // chance is 0.9; fresh random init should be within a wide band

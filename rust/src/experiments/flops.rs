@@ -18,7 +18,7 @@ use std::time::Instant;
 use super::harness::ExpCtx;
 use crate::coordinator::{GatherBufs, TrainData};
 use crate::optim::param::ParamSet;
-use crate::runtime::{Dtype, HostBatch, StepKind};
+use crate::runtime::{Dtype, HostBatch, StepKind, Workspace};
 use crate::util::table::Table;
 
 pub fn run(ctx: &ExpCtx) -> Result<()> {
@@ -53,6 +53,7 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
         let rt = ctx.runtime(model)?;
         let params = ParamSet::init(&rt.entry.params, 0);
         let mut bufs = GatherBufs::default();
+        let mut ws = Workspace::new();
         for &mb in rt.entry.train_batches().iter() {
             let exe = rt.executable(StepKind::Train, mb)?;
             let idx: Vec<usize> = (0..mb).collect();
@@ -62,11 +63,11 @@ pub fn run(ctx: &ExpCtx) -> Result<()> {
                 Dtype::I32 => HostBatch::I32(&bufs.x_i32),
             };
             // warmup + timed reps
-            exe.run(&params, x, &bufs.y)?;
+            exe.run(&params, x, &bufs.y, &mut ws)?;
             let reps = 3;
             let t0 = Instant::now();
             for _ in 0..reps {
-                exe.run(&params, x, &bufs.y)?;
+                exe.run(&params, x, &bufs.y, &mut ws)?;
             }
             let per_step = t0.elapsed().as_secs_f64() / reps as f64;
             measured.row(vec![

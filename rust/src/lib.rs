@@ -25,6 +25,14 @@
 //! Python never runs at training time: `make artifacts` is the only python
 //! step, after which the `adabatch` binary is self-contained.
 
+// Unit tests run under the counting allocator so the zero-allocation
+// steady-state contract of the reference hot path (ISSUE 4) is enforced
+// in CI; it delegates straight to the system allocator and counts into
+// thread-locals, so every other test is unaffected.
+#[cfg(test)]
+#[global_allocator]
+static TEST_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;
+
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -226,6 +226,26 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         hist.diverged
     );
     println!("\n{}", timers.report());
+
+    // stable JSON report line (the serve-bench twin) so the cross-PR
+    // trajectory can track the hot path's steady-state footprint
+    let wstats = &hist.workspace;
+    // no completed epoch ⇒ best_test_error() is +inf, which is not JSON
+    let best = hist.best_test_error();
+    let best_json = if best.is_finite() { Json::num(best) } else { Json::Null };
+    let report = Json::obj(vec![
+        ("report", Json::str("train")),
+        ("model", Json::str(&job.model)),
+        ("governor", Json::str(governor.name())),
+        ("workers", Json::num(job.trainer.workers as f64)),
+        ("epochs", Json::num(hist.epochs.len() as f64)),
+        ("best_test_error", best_json),
+        ("diverged", Json::Bool(hist.diverged)),
+        ("pack_count", Json::num(wstats.pack_count as f64)),
+        ("pack_hit_rate", Json::num(wstats.hit_rate())),
+        ("alloc_bytes_steady_state", Json::num(wstats.alloc_bytes as f64)),
+    ]);
+    println!("{report}");
     Ok(())
 }
 

@@ -114,11 +114,20 @@ pub struct RunHistory {
     /// training hit non-finite params/loss and stopped early (the Fig. 7b
     /// "8× at 16384 diverges" phenomenon)
     pub diverged: bool,
+    /// merged per-worker + eval workspace accounting (packed-cache
+    /// activity, steady-state arena bytes) — feeds the train report's
+    /// `alloc_bytes_steady_state`/`pack_count` fields
+    pub workspace: crate::runtime::WorkspaceStats,
 }
 
 impl RunHistory {
     pub fn new(name: &str) -> Self {
-        RunHistory { name: name.to_string(), epochs: Vec::new(), diverged: false }
+        RunHistory {
+            name: name.to_string(),
+            epochs: Vec::new(),
+            diverged: false,
+            workspace: Default::default(),
+        }
     }
 
     pub fn push(&mut self, rec: EpochRecord) {

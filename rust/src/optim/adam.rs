@@ -52,6 +52,9 @@ impl Optimizer for Adam {
                 p[i] -= lr * mhat / (vhat.sqrt() + self.eps);
             }
         }
+        // same contract as SGD: a step bumps the content version so
+        // packed-weight caches invalidate once per update
+        params.touch();
     }
 
     fn name(&self) -> &'static str {
@@ -91,7 +94,7 @@ mod tests {
         let mut opt = Adam::default_params();
         let mut p = one_tensor(&[5.0, -3.0, 2.0]);
         for _ in 0..2000 {
-            let g = ParamSet { specs: p.specs.clone(), bufs: p.bufs.clone() };
+            let g = ParamSet::from_parts(p.specs.clone(), p.bufs.clone());
             opt.step(&mut p, &g, 0.05);
         }
         assert!(p.sq_norm() < 1e-4, "{:?}", p.bufs[0]);

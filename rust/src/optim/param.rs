@@ -7,8 +7,27 @@
 //! norms) with the deterministic [`Pcg32`], so every experiment arm can
 //! start from bit-identical weights given a seed — the paper's paired-trial
 //! methodology.
+//!
+//! Every set also carries a **version token**: a process-unique counter
+//! value reassigned by every constructor, [`Clone`], mutator method, and
+//! optimizer step. Version-keyed caches (the packed-transpose cache in
+//! [`crate::runtime::workspace`]) use it to rebuild derived state once per
+//! weight update instead of once per microbatch. Two live `ParamSet`s
+//! never share a version, so a version match is proof of unchanged
+//! contents — *provided* direct writers of `bufs` call [`ParamSet::touch`]
+//! afterward (the finite-difference prober in `util::propcheck` does).
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::util::rng::Pcg32;
+
+/// Process-global version source; 0 is never issued, so `Some(0)` can't
+/// collide with a cache's "never built" state.
+static NEXT_VERSION: AtomicU64 = AtomicU64::new(1);
+
+fn next_version() -> u64 {
+    NEXT_VERSION.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Initialization recipe, mirrored from the manifest.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,13 +53,34 @@ impl ParamSpec {
 }
 
 /// The full parameter (or gradient / optimizer-state) set of one model.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct ParamSet {
     pub specs: Vec<ParamSpec>,
     pub bufs: Vec<Vec<f32>>,
+    /// cache-invalidation token; see the module docs
+    version: u64,
+}
+
+impl Clone for ParamSet {
+    fn clone(&self) -> Self {
+        // a clone may be mutated independently of the original, so it
+        // gets its own version: version-keyed caches treat it as new
+        // content (one extra repack, never a stale one)
+        ParamSet {
+            specs: self.specs.clone(),
+            bufs: self.bufs.clone(),
+            version: next_version(),
+        }
+    }
 }
 
 impl ParamSet {
+    /// Assemble a set from parts (tests, accumulators). The new set gets
+    /// a fresh version token.
+    pub fn from_parts(specs: Vec<ParamSpec>, bufs: Vec<Vec<f32>>) -> Self {
+        ParamSet { specs, bufs, version: next_version() }
+    }
+
     /// Initialize per the manifest recipes, deterministically from `seed`.
     pub fn init(specs: &[ParamSpec], seed: u64) -> Self {
         let root = Pcg32::new(seed);
@@ -58,14 +98,28 @@ impl ParamSet {
                 }
             })
             .collect();
-        ParamSet { specs: specs.to_vec(), bufs }
+        Self::from_parts(specs.to_vec(), bufs)
     }
 
     /// All-zeros set with the same shapes (gradient accumulators,
     /// momentum state).
     pub fn zeros_like(specs: &[ParamSpec]) -> Self {
         let bufs = specs.iter().map(|s| vec![0.0; s.size()]).collect();
-        ParamSet { specs: specs.to_vec(), bufs }
+        Self::from_parts(specs.to_vec(), bufs)
+    }
+
+    /// The current content-version token (process-unique; changes on
+    /// every mutation through a method, clone, or [`Self::touch`]).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Declare the contents changed. Any code that writes `bufs` directly
+    /// (rather than through a mutator method or an optimizer) must call
+    /// this before the set is next used for a step, or version-keyed
+    /// caches will serve stale derived state.
+    pub fn touch(&mut self) {
+        self.version = next_version();
     }
 
     pub fn num_tensors(&self) -> usize {
@@ -95,6 +149,7 @@ impl ParamSet {
                 *x += *y;
             }
         }
+        self.touch();
     }
 
     /// self *= k (rescaling accumulated gradients by 1/β, Eq. 5).
@@ -104,6 +159,7 @@ impl ParamSet {
                 *x *= k;
             }
         }
+        self.touch();
     }
 
     /// Reset to zero in place (reusing allocations — hot path of the
@@ -112,6 +168,7 @@ impl ParamSet {
         for b in &mut self.bufs {
             b.iter_mut().for_each(|x| *x = 0.0);
         }
+        self.touch();
     }
 
     /// Max |x| across all tensors (divergence guard in the controller).
@@ -189,5 +246,25 @@ mod tests {
         assert!(p.all_finite());
         p.bufs[0][0] = f32::NAN;
         assert!(!p.all_finite());
+    }
+
+    #[test]
+    fn versions_are_unique_and_move_on_mutation() {
+        let s = specs();
+        let a = ParamSet::init(&s, 1);
+        let b = ParamSet::init(&s, 1);
+        assert_ne!(a.version(), b.version(), "same contents, distinct identity");
+        let c = a.clone();
+        assert_ne!(c.version(), a.version(), "clones get their own version");
+        let mut d = ParamSet::zeros_like(&s);
+        let v0 = d.version();
+        d.zero();
+        let v1 = d.version();
+        assert_ne!(v0, v1);
+        d.scale(2.0);
+        assert_ne!(d.version(), v1);
+        d.touch();
+        assert_ne!(d.version(), v1);
+        assert_ne!(d.version(), 0, "version 0 is never issued");
     }
 }

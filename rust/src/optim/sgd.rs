@@ -78,6 +78,10 @@ impl Optimizer for SgdMomentum {
                 p[i] -= lr * vel[i];
             }
         }
+        // one weight update = one new content version: this is what lets
+        // per-worker packed caches rebuild once per update, not per
+        // microbatch (runtime::workspace)
+        params.touch();
     }
 
     fn name(&self) -> &'static str {
@@ -182,7 +186,7 @@ mod tests {
                 let mut p = one_tensor(vals);
                 let mut prev = p.sq_norm();
                 for _ in 0..5 {
-                    let g = ParamSet { specs: p.specs.clone(), bufs: p.bufs.clone() };
+                    let g = ParamSet::from_parts(p.specs.clone(), p.bufs.clone());
                     opt.step(&mut p, &g, *lr);
                     let cur = p.sq_norm();
                     if cur > prev + 1e-9 {

@@ -31,6 +31,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::artifact::{Dtype, ModelEntry};
 use super::client::Client;
 use super::reference::{RefKind, RefModel};
+use super::workspace::Workspace;
 use crate::optim::param::ParamSet;
 
 /// Train or eval step.
@@ -49,10 +50,13 @@ pub enum HostBatch<'a> {
 
 /// Outputs of one executed step. `grads` is populated for train steps, in
 /// manifest parameter order, already batch-mean scaled (the 1/r lives in
-/// the loss kernel).
+/// the loss kernel). `loss` is f64 end to end: the reference kernels
+/// accumulate in f64 and the coordinator re-averages across
+/// microbatches/workers in f64, so the per-shard value is never truncated
+/// to f32 in between (ISSUE 4 satellite).
 #[derive(Debug)]
 pub struct StepOutputs {
-    pub loss: f32,
+    pub loss: f64,
     pub correct: f32,
     pub grads: Option<ParamSet>,
 }
@@ -73,10 +77,19 @@ pub struct StepExecutable {
 
 impl StepExecutable {
     /// Execute on a full (padded) batch of exactly `self.batch` samples.
-    pub fn run(&self, params: &ParamSet, x: HostBatch<'_>, y: &[i32]) -> Result<StepOutputs> {
+    /// `ws` is the calling thread's scratch arena (engine worker, serve
+    /// worker, eval loop, bench): the reference backend draws all scratch
+    /// and packed weights from it; the PJRT backend ignores it.
+    pub fn run(
+        &self,
+        params: &ParamSet,
+        x: HostBatch<'_>,
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<StepOutputs> {
         match &self.imp {
             ExecImpl::Reference(model) => {
-                model.run(params, x, y, self.batch, self.kind == StepKind::Train)
+                model.run(params, x, y, self.batch, self.kind == StepKind::Train, ws)
             }
             ExecImpl::Pjrt { exe, client } => self.run_pjrt(exe, client, params, x, y),
         }
@@ -141,7 +154,7 @@ impl StepExecutable {
                 parts.len()
             );
         }
-        let loss = parts[0].get_first_element::<f32>()?;
+        let loss = parts[0].get_first_element::<f32>()? as f64;
         let correct = parts[1].get_first_element::<f32>()?;
         let grads = if self.kind == StepKind::Train {
             let mut g = ParamSet::zeros_like(&self.entry.params);
@@ -435,9 +448,10 @@ mod tests {
         let bs = rt.largest_train_microbatch(8).unwrap();
         let exe = rt.executable(StepKind::Train, bs).unwrap();
         let params = ParamSet::init(&rt.entry.params, 0);
+        let mut ws = Workspace::new();
         let x = vec![0.1f32; bs * rt.entry.input.x_len()];
         let y: Vec<i32> = (0..bs as i32).map(|i| i % 10).collect();
-        let out = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        let out = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).unwrap();
         assert!(out.loss.is_finite());
         assert!((0.0..=bs as f32).contains(&out.correct));
         let grads = out.grads.unwrap();
@@ -446,7 +460,7 @@ mod tests {
         assert!(grads.sq_norm() > 0.0);
 
         // same batch twice -> identical results (deterministic CPU path)
-        let out2 = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        let out2 = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).unwrap();
         assert_eq!(out.loss, out2.loss);
 
         // eval path
@@ -454,7 +468,7 @@ mod tests {
         let eexe = rt.executable(StepKind::Eval, eb).unwrap();
         let x = vec![0.0f32; eb * rt.entry.input.x_len()];
         let y = vec![-1i32; eb]; // all padding: zero correct
-        let out = eexe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        let out = eexe.run(&params, HostBatch::F32(&x), &y, &mut ws).unwrap();
         assert!(out.grads.is_none());
         assert_eq!(out.correct, 0.0);
 
@@ -476,16 +490,17 @@ mod tests {
 
         let exe = rt.executable(StepKind::Train, 8).unwrap();
         let params = ParamSet::init(&rt.entry.params, 1);
+        let mut ws = Workspace::new();
         let x = vec![0.25f32; 8 * 12];
         let y: Vec<i32> = (0..8).map(|i| i % 4).collect();
-        let out = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        let out = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).unwrap();
         assert!(out.loss.is_finite() && out.loss > 0.0);
         let g = out.grads.unwrap();
         assert_eq!(g.num_tensors(), 2);
         assert!(g.all_finite());
 
         // determinism + cache behavior, no artifacts required
-        let out2 = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        let out2 = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).unwrap();
         assert_eq!(out.loss, out2.loss);
         assert_eq!(rt.compiles(), 1);
         let _ = rt.executable(StepKind::Train, 8).unwrap();
@@ -506,16 +521,17 @@ mod tests {
 
         let exe = rt.executable(StepKind::Train, 8).unwrap();
         let params = ParamSet::init(&rt.entry.params, 2);
+        let mut ws = Workspace::new();
         let x = vec![0.25f32; 8 * 12];
         let y: Vec<i32> = (0..8).map(|i| i % 4).collect();
-        let out = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        let out = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).unwrap();
         assert!(out.loss.is_finite() && out.loss > 0.0);
         let g = out.grads.unwrap();
         assert_eq!(g.num_tensors(), 4);
         assert!(g.all_finite());
         assert!(g.sq_norm() > 0.0);
 
-        let out2 = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        let out2 = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).unwrap();
         assert_eq!(out.loss.to_bits(), out2.loss.to_bits(), "deterministic kernels");
 
         // the serving twin exposes an eval-only ladder
@@ -538,9 +554,10 @@ mod tests {
 
         let exe = rt.executable(StepKind::Eval, 4).unwrap();
         let params = ParamSet::init(&rt.entry.params, 1);
+        let mut ws = Workspace::new();
         let x = vec![0.1f32; 4 * 12];
         let y = vec![0, 1, -1, -1]; // padded tail rows
-        let out = exe.run(&params, HostBatch::F32(&x), &y).unwrap();
+        let out = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).unwrap();
         assert!(out.grads.is_none());
         assert!(out.loss.is_finite());
 

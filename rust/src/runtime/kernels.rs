@@ -98,6 +98,20 @@ pub fn broadcast_rows(bias: &[f32], rows: usize, out: &mut Vec<f32>) {
     }
 }
 
+/// Slice-borrowing twin of [`broadcast_rows`] for workspace-arena callers
+/// (`runtime::workspace::Slot` hands out exact-sized slices): tile `bias`
+/// into `out`, which must be exactly `rows × bias.len()`. Every element
+/// is overwritten, so reused scratch may hold stale data on entry.
+pub fn broadcast_rows_into(bias: &[f32], rows: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), rows * bias.len(), "broadcast_rows_into: out is not rows×n");
+    if bias.is_empty() {
+        return;
+    }
+    for row in out.chunks_exact_mut(bias.len()) {
+        row.copy_from_slice(bias);
+    }
+}
+
 /// `C += A · Bᵀ` — the forward-GEMM: `a` is `[m × k]`, `bt` is the packed
 /// transpose `[n × k]`, `c` is `[m × n]`.
 ///
@@ -345,6 +359,96 @@ mod tests {
         assert_eq!(out, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
         broadcast_rows(&[5.0], 0, &mut out);
         assert!(out.is_empty());
+    }
+
+    /// Regression (ISSUE 4 satellite): the arena variant fully overwrites
+    /// reused scratch across grow→shrink→grow sequences — a shrunk borrow
+    /// after a larger one never exposes stale tail data, and the result
+    /// is bitwise equal to the fresh-Vec path at every shape.
+    #[test]
+    fn broadcast_rows_into_overwrites_reused_scratch_across_shapes() {
+        use crate::runtime::workspace::Slot;
+        let bias = [1.5f32, -2.0, 0.25];
+        let mut slot = Slot::default();
+        // poison the arena at its largest shape, then walk shapes down/up
+        slot.take(4096, 3).fill(f32::NAN);
+        for &rows in &[4096usize, 3, 17, 0, 4096] {
+            let dst = slot.take(rows, bias.len());
+            broadcast_rows_into(&bias, rows, dst);
+            let mut fresh = Vec::new();
+            broadcast_rows(&bias, rows, &mut fresh);
+            assert_eq!(dst.len(), fresh.len(), "rows={rows}");
+            assert!(
+                dst.iter().zip(&fresh).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "rows={rows}: arena and fresh broadcasts must match bitwise"
+            );
+        }
+        // empty bias round-trips (an all-zero-width layer is degenerate
+        // but must not panic)
+        broadcast_rows_into(&[], 5, slot.take(5, 0));
+    }
+
+    /// The GEMM pair over arena slots at grow→shrink→grow shapes matches
+    /// the fresh-buffer result bitwise, including an all-zero (padding)
+    /// activation block after a larger real one.
+    #[test]
+    fn gemm_pair_over_reused_arena_matches_fresh_bitwise() {
+        use crate::runtime::workspace::Slot;
+        let mut rng = Pcg32::new(23);
+        let (n, k) = (5usize, 33usize);
+        let b = randvec(&mut rng, k * n);
+        let mut bt = Vec::new();
+        pack_transpose(&b, k, n, &mut bt);
+        let mut c_slot = Slot::default();
+        let mut g_slot = Slot::default();
+        // m sequence straddles the unroll boundary; the middle 0-row and
+        // the final all-padding (zero) block exercise shrink reuse
+        let big_a = randvec(&mut rng, 64 * k);
+        let zeros = vec![0.0f32; 64 * k];
+        for &(m, zero_a) in &[(64usize, false), (3, false), (0, false), (7, true), (64, false)] {
+            let a: &[f32] = if zero_a { &zeros[..m * k] } else { &big_a[..m * k] };
+            let c = c_slot.take_zeroed(m, n);
+            gemm_abt(a, &bt, c, m, n, k);
+            let mut c_fresh = vec![0.0f32; m * n];
+            gemm_abt(a, &bt, &mut c_fresh, m, n, k);
+            assert!(
+                c.iter().zip(&c_fresh).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gemm_abt m={m}: arena result diverged from fresh buffers"
+            );
+            let g = g_slot.take_zeroed(k, n);
+            gemm_atb(a, c, g, m, k, n);
+            let mut g_fresh = vec![0.0f32; k * n];
+            gemm_atb(a, &c_fresh, &mut g_fresh, m, k, n);
+            assert!(
+                g.iter().zip(&g_fresh).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gemm_atb m={m}: arena result diverged from fresh buffers"
+            );
+            if zero_a {
+                assert!(g.iter().all(|&v| v == 0.0), "all-padding block must zero the grad");
+            }
+        }
+    }
+
+    /// Regression (ISSUE 4 satellite): the fused loss's f64 accumulator
+    /// is observable — on a large enough batch the f64 row-sum is not
+    /// f32-representable, which is exactly what the old
+    /// `StepOutputs.loss: f32` truncated away.
+    #[test]
+    fn xent_f64_loss_sum_resolves_below_f32_precision() {
+        let mut rng = Pcg32::new(31);
+        let c = 7;
+        let observable = [48usize, 64, 96].iter().any(|&rows| {
+            let mut logits = randvec(&mut rng, rows * c);
+            let labels: Vec<i32> = (0..rows as i32).map(|i| i % c as i32).collect();
+            let inv = 1.0 / rows as f32;
+            let out = softmax_xent_rows(&mut logits, &labels, c, inv, false).unwrap();
+            ((out.loss_sum as f32) as f64) != out.loss_sum
+        });
+        assert!(
+            observable,
+            "every probe batch produced an f32-exact loss sum — the f64 \
+             carry would be unobservable (astronomically unlikely)"
+        );
     }
 
     #[test]

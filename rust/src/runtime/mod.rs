@@ -9,6 +9,7 @@ pub mod kernels;
 pub mod plan;
 pub mod reference;
 pub mod validate;
+pub mod workspace;
 
 pub use artifact::{default_artifacts_dir, Dtype, InputSpec, Manifest, ModelEntry};
 pub use client::Client;
@@ -18,3 +19,4 @@ pub use executable::{
 };
 pub use plan::{plan, plan_schedule, ExecutionPlan};
 pub use reference::{RefKind, RefModel};
+pub use workspace::{PackedParams, Slot, Workspace, WorkspaceStats};

@@ -1,0 +1,348 @@
+//! Per-worker scratch arenas and the versioned packed-weight cache — the
+//! zero-allocation substrate under the reference backend's hot path.
+//!
+//! Why this exists: AdaBatch's wall-clock win (paper §4) depends on
+//! per-step *fixed* overheads amortizing over the batch, and the schedule
+//! starts at small batches — exactly where overheads dominate. Before this
+//! layer, every `RefModel::run` re-ran `pack_transpose` over all weight
+//! matrices and heap-allocated its logits/hidden/gradient scratch from
+//! scratch, on every microbatch, in every engine worker and every serve
+//! worker, so the small-batch phases the paper cares about were
+//! allocation-bound. A [`Workspace`] makes the steady-state step
+//! allocation-free (enforced by the counting-allocator test in
+//! `runtime::reference`), and a [`PackedParams`] cache keyed on
+//! [`ParamSet::version`](crate::optim::param::ParamSet::version) rebuilds
+//! transposed weights once per *weight update* instead of once per
+//! microbatch.
+//!
+//! **Ownership map** (DESIGN.md §9): one `Workspace` per execution thread,
+//! living as long as the thread — each `coordinator::engine` worker, each
+//! `serve::server` worker, the controller's eval loop, the virtual-clock
+//! serve driver, and each bench loop own exactly one. Workspaces are never
+//! shared: they are plain `&mut` state, so the engine's determinism story
+//! (worker-indexed merge, shape-only summation order) is untouched.
+//!
+//! **Determinism** (DESIGN.md §8): buffer identity never changes summation
+//! order — [`Slot::take`] returns *exactly*-sized slices, so data from an
+//! earlier, larger borrow is unreachable, and every kernel's schedule is a
+//! pure function of shapes. Reused-arena and fresh-arena runs are
+//! therefore bitwise identical (`tests/engine_determinism.rs`).
+//!
+//! **Invalidation rule**: `PackedParams` trusts `ParamSet::version`, a
+//! process-unique token reassigned by every constructor, `clone`, mutator
+//! method, and optimizer `step`. Code that writes `params.bufs` directly
+//! (tests, finite-difference probes) must call `ParamSet::touch` before
+//! the next step, or the cache will serve a stale pack.
+
+use crate::optim::param::{ParamSet, ParamSpec};
+
+use super::kernels;
+
+/// Grad-set pool depth: more than one in flight per thread never happens
+/// in practice (take → accumulate → recycle), but a small headroom keeps
+/// recycling O(1) even if a caller batches a few.
+const GRAD_POOL_CAP: usize = 4;
+
+/// One named scratch buffer: grows monotonically to its high-water mark
+/// and never shrinks its allocation. [`Slot::take`] hands out an
+/// *exactly*-sized `&mut [f32]`, so a borrow after a larger one can never
+/// read the stale tail — shrink-safety by construction, not by zeroing.
+#[derive(Debug, Default)]
+pub struct Slot {
+    buf: Vec<f32>,
+}
+
+impl Slot {
+    /// Borrow exactly `rows × cols` elements. Contents are unspecified
+    /// (they may hold data from an earlier borrow): callers must fully
+    /// overwrite every element they later read — the broadcast/pack
+    /// kernels do, and the bigram gather skips exactly the rows the loss
+    /// kernel skips.
+    pub fn take(&mut self, rows: usize, cols: usize) -> &mut [f32] {
+        let len = rows
+            .checked_mul(cols)
+            .expect("workspace slot shape overflows usize");
+        if self.buf.len() < len {
+            self.buf.resize(len, 0.0);
+        }
+        &mut self.buf[..len]
+    }
+
+    /// Like [`Self::take`] but zero-filled — for `+=` accumulation
+    /// targets (e.g. the MLP's `dh`).
+    pub fn take_zeroed(&mut self, rows: usize, cols: usize) -> &mut [f32] {
+        let s = self.take(rows, cols);
+        s.fill(0.0);
+        s
+    }
+
+    /// Allocated capacity in elements (high-water mark).
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+}
+
+#[derive(Debug, Default)]
+struct PackedEntry {
+    /// `ParamSet::version` this pack was built from (None = never built).
+    version: Option<u64>,
+    /// the `[rows × cols]` view the pack was built for — part of the key:
+    /// two views of equal product (e.g. 4×6 vs 6×4) pack differently
+    shape: (usize, usize),
+    buf: Vec<f32>,
+}
+
+/// Versioned cache of `pack_transpose`d weight tensors, indexed by tensor
+/// position in the [`ParamSet`]. A pack is rebuilt only when the param
+/// set's version token changes (the optimizer bumps it once per weight
+/// update) or the requested shape differs, so β accumulation microbatches
+/// and a whole eval epoch share one pack.
+#[derive(Debug, Default)]
+pub struct PackedParams {
+    entries: Vec<PackedEntry>,
+    packs: u64,
+    hits: u64,
+}
+
+impl PackedParams {
+    /// The packed transpose of `params.bufs[idx]` viewed as
+    /// `[rows × cols]`, rebuilt on version or shape change.
+    pub fn get(&mut self, params: &ParamSet, idx: usize, rows: usize, cols: usize) -> &[f32] {
+        if self.entries.len() <= idx {
+            self.entries.resize_with(idx + 1, PackedEntry::default);
+        }
+        let e = &mut self.entries[idx];
+        if e.version == Some(params.version()) && e.shape == (rows, cols) {
+            self.hits += 1;
+        } else {
+            kernels::pack_transpose(&params.bufs[idx], rows, cols, &mut e.buf);
+            e.version = Some(params.version());
+            e.shape = (rows, cols);
+            self.packs += 1;
+        }
+        &e.buf
+    }
+
+    /// Packs performed (cache misses) since construction.
+    pub fn pack_count(&self) -> u64 {
+        self.packs
+    }
+
+    /// Cache hits since construction.
+    pub fn hit_count(&self) -> u64 {
+        self.hits
+    }
+
+    fn capacity_elems(&self) -> usize {
+        self.entries.iter().map(|e| e.buf.capacity()).sum()
+    }
+}
+
+/// Aggregated workspace accounting for reports: how often weights were
+/// (re)packed vs served from cache, and the steady-state bytes the arena
+/// holds. Merged across workers by the engine and the serve pool.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkspaceStats {
+    /// `pack_transpose` executions (packed-cache misses)
+    pub pack_count: u64,
+    /// packed-cache hits
+    pub pack_hits: u64,
+    /// bytes held by arena buffers at their high-water mark
+    pub alloc_bytes: u64,
+}
+
+impl WorkspaceStats {
+    pub fn merge(&mut self, other: &WorkspaceStats) {
+        self.pack_count += other.pack_count;
+        self.pack_hits += other.pack_hits;
+        self.alloc_bytes += other.alloc_bytes;
+    }
+
+    /// Fraction of packed-weight lookups served from cache.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.pack_count + self.pack_hits;
+        if total == 0 {
+            0.0
+        } else {
+            self.pack_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Per-thread scratch arena for the reference backend's step: named,
+/// shape-checked f32 slots for activations/gradients, the versioned
+/// packed-weight cache, and a gradient-set pool so train steps emit their
+/// `StepOutputs::grads` without allocating once warm.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// output logits / in-place dlogits
+    pub logits: Slot,
+    /// MLP hidden activations
+    pub h: Slot,
+    /// MLP hidden-gradient scratch
+    pub dh: Slot,
+    /// versioned packed-transpose weight cache
+    pub packed: PackedParams,
+    grad_pool: Vec<ParamSet>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace {
+            grad_pool: Vec::with_capacity(GRAD_POOL_CAP),
+            ..Workspace::default()
+        }
+    }
+
+    /// A zeroed gradient set shaped like `specs`, reusing a recycled set
+    /// when one fits (the steady state). Callers hand the set back via
+    /// [`Self::recycle_grads`] once accumulated.
+    pub fn take_grads(&mut self, specs: &[ParamSpec]) -> ParamSet {
+        if let Some(mut g) = self.grad_pool.pop() {
+            let fits = g.num_tensors() == specs.len()
+                && g.bufs.iter().zip(specs).all(|(b, s)| b.len() == s.size());
+            if fits {
+                g.zero();
+                return g;
+            }
+            // a different model flowed through this workspace: drop the
+            // stale shapes and warm up again below
+        }
+        ParamSet::zeros_like(specs)
+    }
+
+    /// Return a gradient set to the pool for the next step.
+    pub fn recycle_grads(&mut self, grads: ParamSet) {
+        if self.grad_pool.len() < GRAD_POOL_CAP {
+            self.grad_pool.push(grads);
+        }
+    }
+
+    /// Steady-state bytes held by every arena buffer (slots, packed
+    /// cache, recycled grad sets) — the `alloc_bytes_steady_state` the
+    /// train/serve reports track.
+    pub fn alloc_bytes(&self) -> u64 {
+        let elems = self.logits.capacity()
+            + self.h.capacity()
+            + self.dh.capacity()
+            + self.packed.capacity_elems()
+            + self
+                .grad_pool
+                .iter()
+                .map(|g| g.bufs.iter().map(|b| b.capacity()).sum::<usize>())
+                .sum::<usize>();
+        (elems * std::mem::size_of::<f32>()) as u64
+    }
+
+    pub fn stats(&self) -> WorkspaceStats {
+        WorkspaceStats {
+            pack_count: self.packed.pack_count(),
+            pack_hits: self.packed.hit_count(),
+            alloc_bytes: self.alloc_bytes(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::param::Init;
+
+    #[test]
+    fn slot_grows_monotonically_and_hands_out_exact_shapes() {
+        let mut s = Slot::default();
+        s.take(4, 8).fill(7.0);
+        assert!(s.capacity() >= 32);
+        let cap = s.capacity();
+        // shrink: the borrow is exactly 6 long — the stale 7.0 tail is
+        // out of reach
+        let small = s.take(2, 3);
+        assert_eq!(small.len(), 6);
+        small.fill(1.0);
+        // grow back within capacity: no reallocation
+        let big = s.take(4, 8);
+        assert_eq!(big.len(), 32);
+        assert_eq!(s.capacity(), cap, "regrow within high-water must not realloc");
+        // zeroed variant really zeroes
+        assert!(s.take_zeroed(4, 8).iter().all(|&v| v == 0.0));
+        // zero-sized borrow is fine
+        assert!(s.take(0, 5).is_empty());
+    }
+
+    #[test]
+    fn packed_cache_hits_until_params_change() {
+        let specs = vec![
+            ParamSpec { name: "w".into(), shape: vec![6, 4], init: Init::Normal(0.1) },
+            ParamSpec { name: "b".into(), shape: vec![4], init: Init::Zeros },
+        ];
+        let mut params = ParamSet::init(&specs, 3);
+        let mut ws = Workspace::new();
+        let first = ws.packed.get(&params, 0, 6, 4).to_vec();
+        assert_eq!(ws.packed.pack_count(), 1);
+        // same version: served from cache, bitwise identical
+        let again = ws.packed.get(&params, 0, 6, 4).to_vec();
+        assert_eq!(ws.packed.pack_count(), 1);
+        assert_eq!(ws.packed.hit_count(), 1);
+        assert_eq!(first, again);
+        // transpose really is the transpose
+        for r in 0..6 {
+            for c in 0..4 {
+                assert_eq!(first[c * 6 + r], params.bufs[0][r * 4 + c]);
+            }
+        }
+        // mutate + touch: the next get repacks the new contents
+        params.bufs[0][5] += 1.0;
+        params.touch();
+        let repacked = ws.packed.get(&params, 0, 6, 4).to_vec();
+        assert_eq!(ws.packed.pack_count(), 2);
+        assert_ne!(repacked, first);
+        // same version + same total length but a transposed VIEW (4×6 vs
+        // 6×4) is a different pack: the shape is part of the cache key
+        let other_view = ws.packed.get(&params, 0, 4, 6).to_vec();
+        assert_eq!(ws.packed.pack_count(), 3, "equal-product view must miss");
+        assert_ne!(other_view, repacked);
+        // and flipping back misses again rather than serving the 4×6 pack
+        let back = ws.packed.get(&params, 0, 6, 4);
+        assert_eq!(ws.packed.pack_count(), 4);
+        assert_eq!(back, repacked.as_slice());
+    }
+
+    #[test]
+    fn grad_pool_recycles_matching_shapes_and_rebuilds_mismatches() {
+        let specs = vec![ParamSpec { name: "w".into(), shape: vec![5], init: Init::Zeros }];
+        let mut ws = Workspace::new();
+        let mut g = ws.take_grads(&specs);
+        g.bufs[0].iter_mut().for_each(|x| *x = 3.0);
+        let ptr = g.bufs[0].as_ptr();
+        ws.recycle_grads(g);
+        // steady state: same allocation comes back, zeroed
+        let g2 = ws.take_grads(&specs);
+        assert_eq!(g2.bufs[0].as_ptr(), ptr);
+        assert!(g2.bufs[0].iter().all(|&x| x == 0.0));
+        ws.recycle_grads(g2);
+        // a different shape through the same workspace rebuilds cleanly
+        let other = vec![ParamSpec { name: "w".into(), shape: vec![9], init: Init::Zeros }];
+        let g3 = ws.take_grads(&other);
+        assert_eq!(g3.bufs[0].len(), 9);
+    }
+
+    #[test]
+    fn stats_account_packs_hits_and_bytes() {
+        let specs = vec![ParamSpec { name: "w".into(), shape: vec![4, 4], init: Init::Ones }];
+        let params = ParamSet::init(&specs, 0);
+        let mut ws = Workspace::new();
+        ws.logits.take(8, 4);
+        ws.packed.get(&params, 0, 4, 4);
+        ws.packed.get(&params, 0, 4, 4);
+        let st = ws.stats();
+        assert_eq!(st.pack_count, 1);
+        assert_eq!(st.pack_hits, 1);
+        assert!((st.hit_rate() - 0.5).abs() < 1e-12);
+        assert!(st.alloc_bytes >= ((8 * 4 + 4 * 4) * 4) as u64);
+        let mut merged = WorkspaceStats::default();
+        merged.merge(&st);
+        merged.merge(&st);
+        assert_eq!(merged.pack_count, 2);
+        assert_eq!(merged.alloc_bytes, 2 * st.alloc_bytes);
+    }
+}

@@ -44,7 +44,7 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::dataset::{GatherBufs, TrainData};
 use crate::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
 use crate::optim::param::ParamSet;
-use crate::runtime::ModelRuntime;
+use crate::runtime::{ModelRuntime, Workspace};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 
@@ -189,6 +189,8 @@ pub fn run_virtual(
         (0..cfg.workers).map(|_| Reverse(0u64)).collect();
     let mut stats = ServeStats::default();
     let mut bufs = GatherBufs::default();
+    // the virtual driver serves every batch on one thread: one arena
+    let mut ws = Workspace::new();
     let mut lats: Vec<u64> = Vec::new();
     let mut i = 0usize;
     let mut shed = 0u64;
@@ -257,7 +259,7 @@ pub fn run_virtual(
         let padded = pad_to_rung(take, ladder);
 
         // the forward pass really runs; only its *duration* is modeled
-        let out = super::forward_batch(rt, params, data, &batch, padded, &mut bufs)?;
+        let out = super::forward_batch(rt, params, data, &batch, padded, &mut bufs, &mut ws)?;
 
         let service = cfg.service_base_ns + cfg.service_per_sample_ns * padded as u64;
         let done = t + service;
@@ -276,7 +278,7 @@ pub fn run_virtual(
         stats.completed += take as u64;
         stats.batches += 1;
         stats.padded_samples += padded as u64;
-        stats.loss_sum += out.loss as f64;
+        stats.loss_sum += out.loss;
         stats.correct_sum += out.correct as f64;
         stats.last_done_ns = stats.last_done_ns.max(done);
         governor.observe(ServeObservation {
@@ -286,6 +288,8 @@ pub fn run_virtual(
         });
     }
     stats.shed = shed;
+    stats.pack_count = ws.stats().pack_count;
+    stats.alloc_bytes = ws.alloc_bytes();
     Ok(stats)
 }
 
@@ -448,6 +452,11 @@ pub fn report_json(
         ("last_done_ms", Json::num(stats.last_done_ns as f64 / 1e6)),
         ("loss_mean", Json::num(loss_mean)),
         ("correct", Json::num(stats.correct_sum)),
+        // workspace accounting (ISSUE 4): packs stay at one per tensor
+        // per worker while serving, and the arena footprint is the
+        // steady-state allocation the whole run holds
+        ("pack_count", Json::num(stats.pack_count as f64)),
+        ("alloc_bytes_steady_state", Json::num(stats.alloc_bytes as f64)),
     ])
 }
 

@@ -39,7 +39,7 @@ use anyhow::Result;
 use crate::coordinator::dataset::{GatherBufs, TrainData};
 use crate::metrics::LatencyHistogram;
 use crate::optim::param::ParamSet;
-use crate::runtime::{Dtype, HostBatch, ModelRuntime, StepKind, StepOutputs};
+use crate::runtime::{Dtype, HostBatch, ModelRuntime, StepKind, StepOutputs, Workspace};
 
 /// One inference request. The payload is an index into a shared sample
 /// pool (requests reference data, they don't carry copies — the queue
@@ -77,10 +77,18 @@ pub struct ServeStats {
     pub correct_sum: f64,
     /// completion time of the last served batch, ns on the bench clock
     pub last_done_ns: u64,
+    /// packed-weight rebuilds across all serve workers (params are frozen
+    /// while serving, so this should stay at one per packed tensor per
+    /// worker)
+    pub pack_count: u64,
+    /// steady-state bytes held by the workers' arenas
+    pub alloc_bytes: u64,
 }
 
 /// The inference hot path both clocks share: gather `batch`'s samples
-/// padded to `padded`, and run the forward-only eval executable.
+/// padded to `padded`, and run the forward-only eval executable through
+/// the calling worker's long-lived arena (serve params are frozen, so
+/// the packed-weight cache packs once per worker for the whole run).
 pub(crate) fn forward_batch(
     rt: &ModelRuntime,
     params: &ParamSet,
@@ -88,6 +96,7 @@ pub(crate) fn forward_batch(
     batch: &[Request],
     padded: usize,
     bufs: &mut GatherBufs,
+    ws: &mut Workspace,
 ) -> Result<StepOutputs> {
     let idx: Vec<usize> = batch.iter().map(|r| r.sample).collect();
     data.gather(&idx, padded, bufs);
@@ -96,7 +105,7 @@ pub(crate) fn forward_batch(
         Dtype::F32 => HostBatch::F32(&bufs.x_f32),
         Dtype::I32 => HostBatch::I32(&bufs.x_i32),
     };
-    exe.run(params, x, &bufs.y)
+    exe.run(params, x, &bufs.y, ws)
 }
 
 impl ServeStats {

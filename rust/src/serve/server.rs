@@ -27,7 +27,7 @@ use super::queue::BoundedQueue;
 use super::{Request, ServeStats};
 use crate::coordinator::dataset::{GatherBufs, TrainData};
 use crate::optim::param::ParamSet;
-use crate::runtime::ModelRuntime;
+use crate::runtime::{ModelRuntime, Workspace, WorkspaceStats};
 
 enum Job {
     Run {
@@ -159,11 +159,15 @@ pub fn serve_wall(
         for tx in &job_txs {
             let _ = tx.send(Job::Finish);
         }
+        let mut ws_total = WorkspaceStats::default();
         for handle in handles {
-            if let Err(payload) = handle.join() {
-                std::panic::resume_unwind(payload);
+            match handle.join() {
+                Ok(ws) => ws_total.merge(&ws),
+                Err(payload) => std::panic::resume_unwind(payload),
             }
         }
+        stats.pack_count = ws_total.pack_count;
+        stats.alloc_bytes = ws_total.alloc_bytes;
         outcome.map(|()| stats)
     })
 }
@@ -201,35 +205,40 @@ fn worker_loop(
     params: &ParamSet,
     data: &TrainData,
     start: Instant,
-) {
+) -> WorkspaceStats {
     let mut bufs = GatherBufs::default();
+    // one arena per serve worker for the run's lifetime: params are
+    // frozen, so weights pack once and every batch reuses the scratch
+    let mut ws = Workspace::new();
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Finish => break,
             Job::Run { depth, batch, padded } => {
-                let res = super::forward_batch(rt, params, data, &batch, padded, &mut bufs)
-                    .map(|out| {
-                        let done_ns = start.elapsed().as_nanos() as u64;
-                        BatchDone {
-                            depth,
-                            unpadded: batch.len(),
-                            padded,
-                            latencies_ns: batch
-                                .iter()
-                                .map(|r| done_ns.saturating_sub(r.arrival_ns))
-                                .collect(),
-                            arrivals_ns: batch.iter().map(|r| r.arrival_ns).collect(),
-                            loss: out.loss as f64,
-                            correct: out.correct as f64,
-                            done_ns,
-                        }
-                    });
+                let res =
+                    super::forward_batch(rt, params, data, &batch, padded, &mut bufs, &mut ws)
+                        .map(|out| {
+                            let done_ns = start.elapsed().as_nanos() as u64;
+                            BatchDone {
+                                depth,
+                                unpadded: batch.len(),
+                                padded,
+                                latencies_ns: batch
+                                    .iter()
+                                    .map(|r| done_ns.saturating_sub(r.arrival_ns))
+                                    .collect(),
+                                arrivals_ns: batch.iter().map(|r| r.arrival_ns).collect(),
+                                loss: out.loss,
+                                correct: out.correct as f64,
+                                done_ns,
+                            }
+                        });
                 if results.send((index, res)).is_err() {
                     break;
                 }
             }
         }
     }
+    ws.stats()
 }
 
 #[cfg(test)]
@@ -294,6 +303,10 @@ mod tests {
         assert!(stats.loss_sum.is_finite() && stats.loss_sum > 0.0);
         assert!(stats.last_done_ns > 0);
         assert!(stats.mean_batch() >= 1.0);
+        // serve params are frozen: each worker packs the weight once and
+        // serves every batch from its arena afterwards
+        assert!(stats.pack_count >= 1, "workers must report packed-cache activity");
+        assert!(stats.alloc_bytes > 0);
     }
 
     #[test]

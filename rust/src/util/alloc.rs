@@ -1,0 +1,121 @@
+//! Thread-local allocation counting (ISSUE 4 satellite): a
+//! [`GlobalAlloc`] wrapper that delegates to the system allocator while
+//! counting each thread's allocation requests, so tests can assert a hot
+//! path performs **zero** heap allocations in its steady state.
+//!
+//! The counters are thread-local (const-initialized `Cell`s — no lazy
+//! init, no destructor, so touching them inside the allocator can never
+//! recurse or allocate), which keeps the measurement immune to `cargo
+//! test`'s parallel threads allocating concurrently.
+//!
+//! Installed as the `#[global_allocator]` only for this crate's unit-test
+//! binary (see lib.rs); in every other build the counters simply stay at
+//! zero. Zero-alloc assertions must therefore first prove the counter is
+//! live (allocate something, observe the count move) — the steady-state
+//! test in `runtime::reference` does.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+    static BYTES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// System-delegating allocator that counts per-thread allocation requests
+/// (`alloc`, `alloc_zeroed`, and growth via `realloc`; frees are not
+/// counted — a zero-allocation claim is about acquiring memory).
+pub struct CountingAlloc;
+
+#[inline]
+fn record(bytes: usize) {
+    ALLOCS.with(|c| c.set(c.get() + 1));
+    BYTES.with(|c| c.set(c.get() + bytes as u64));
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        record(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        record(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// (allocation requests, bytes requested) by the calling thread so far.
+/// Monotonic; meaningful only when [`CountingAlloc`] is installed.
+pub fn thread_alloc_counts() -> (u64, u64) {
+    (ALLOCS.with(Cell::get), BYTES.with(Cell::get))
+}
+
+/// Run `f` and return `(result, allocations, bytes)` attributed to the
+/// calling thread during the call.
+pub fn count_allocs<T>(f: impl FnOnce() -> T) -> (T, u64, u64) {
+    let (a0, b0) = thread_alloc_counts();
+    let out = f();
+    let (a1, b1) = thread_alloc_counts();
+    (out, a1 - a0, b1 - b0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_own_thread_allocations() {
+        let ((), allocs, bytes) = count_allocs(|| {
+            let v = std::hint::black_box(vec![0u8; 4096]);
+            drop(v);
+        });
+        assert!(allocs >= 1, "a fresh Vec must register at least one allocation");
+        assert!(bytes >= 4096, "bytes requested must cover the Vec ({bytes})");
+    }
+
+    #[test]
+    fn allocation_free_code_counts_zero() {
+        let mut buf = vec![0u64; 64];
+        let (sum, allocs, _) = count_allocs(|| {
+            // in-place arithmetic over a pre-sized buffer: no heap traffic
+            for (i, x) in buf.iter_mut().enumerate() {
+                *x = std::hint::black_box(i as u64 * 3);
+            }
+            buf.iter().sum::<u64>()
+        });
+        assert_eq!(sum, (0..64).map(|i| i * 3).sum::<u64>());
+        assert_eq!(allocs, 0, "pure in-place work must not allocate");
+    }
+
+    #[test]
+    fn other_threads_do_not_leak_into_this_counter() {
+        // spawning a scoped thread allocates a little on this thread
+        // (handle bookkeeping), but the 100-Vec storm on the OTHER thread
+        // must not be attributed here
+        let (_, allocs, _) = count_allocs(|| {
+            std::thread::scope(|s| {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        std::hint::black_box(vec![1u8; 1024]);
+                    }
+                })
+                .join()
+                .unwrap();
+            });
+        });
+        assert!(
+            allocs < 100,
+            "cross-thread allocations leaked into the thread-local counter ({allocs})"
+        );
+    }
+}

@@ -1,7 +1,9 @@
 //! Substrate utilities built from scratch for the offline environment
 //! (DESIGN.md §3 "Offline-environment substitutions"): PRNG, JSON, CLI,
-//! logging, property testing, micro-benchmarking, tables/CSV, statistics.
+//! logging, property testing, micro-benchmarking, tables/CSV, statistics,
+//! and a counting allocator for zero-allocation assertions.
 
+pub mod alloc;
 pub mod benchkit;
 pub mod cli;
 pub mod json;

@@ -232,6 +232,14 @@ pub fn check_cases<G: Gen>(name: &str, gen: G, cases: usize, prop: impl Fn(&G::V
 /// of `tol` for near-zero gradients (all-padding batches must come out
 /// exactly zero-vs-zero) widening to a relative band for large ones.
 /// Panics with the offending tensor/coordinate on mismatch.
+///
+/// Each probe writes `params.bufs` directly, so it must
+/// [`touch`](ParamSet::touch) the set before evaluating `loss`: the loss
+/// closure typically runs a model through a version-keyed packed-weight
+/// cache (`runtime::workspace::PackedParams`), and an un-bumped version
+/// would serve the *unperturbed* pack — silently zeroing every
+/// finite difference. This doubles as the stress test of that
+/// invalidation rule: thousands of single-coordinate bumps per model.
 pub fn grad_check(
     params: &mut ParamSet,
     analytic: &ParamSet,
@@ -249,10 +257,13 @@ pub fn grad_check(
         for i in 0..params.bufs[t].len() {
             let orig = params.bufs[t][i];
             params.bufs[t][i] = orig + eps;
+            params.touch();
             let up = loss(params);
             params.bufs[t][i] = orig - eps;
+            params.touch();
             let dn = loss(params);
             params.bufs[t][i] = orig;
+            params.touch();
             let fd = (up - dn) / (2.0 * eps);
             let a = analytic.bufs[t][i];
             assert!(

@@ -183,6 +183,60 @@ fn resume_past_the_final_epoch_is_an_error_not_a_noop() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// ISSUE 4: the workspace refactor's strongest end-to-end statement. The
+/// uninterrupted run's 2 workers carry *long-lived* arenas (warm packed
+/// caches, recycled grad sets, high-water scratch) across every epoch and
+/// every batch-size transition (16 → 32 mid-run, so the arenas cross
+/// executable rungs); the resumed run restarts mid-trajectory with
+/// *fresh* arenas. The trajectories must agree bitwise, because buffer
+/// identity and cache state never enter the summation schedule.
+#[test]
+fn resume_with_fresh_workspaces_matches_long_lived_run_bitwise() {
+    let (train_d, test_d) = small_images();
+    let rt = ref_rt();
+    let epochs = 4;
+    let (dir_full, dir_resumed) = (tmpdir("ws_full"), tmpdir("ws_resumed"));
+
+    // uninterrupted, 2 data-parallel workers
+    let cfg = TrainerConfig::new(epochs)
+        .with_seed(23)
+        .with_workers(2)
+        .with_checkpoints(&dir_full, 1);
+    let mut gov = doubling_gov();
+    let (hist_full, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert!(!hist_full.diverged);
+    assert!(
+        hist_full.workspace.pack_count > 0,
+        "the run must report its workers' workspace accounting"
+    );
+
+    // resumed from epoch 1 with the SAME worker count: cold arenas, same
+    // trajectory
+    let cfg = TrainerConfig::new(epochs)
+        .with_seed(23)
+        .with_workers(2)
+        .with_checkpoints(&dir_resumed, 1)
+        .with_resume(dir_full.join("epoch0001.ckpt"));
+    let mut gov = doubling_gov();
+    let (hist_res, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    for (a, b) in hist_full.epochs[2..].iter().zip(&hist_res.epochs) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.test_error.to_bits(), b.test_error.to_bits(), "epoch {}", a.epoch);
+    }
+    let template = ParamSet::init(&rt.entry.params, 0);
+    let full = Checkpoint::load(&dir_full.join("epoch0003.ckpt"), &template).unwrap();
+    let resumed = Checkpoint::load(&dir_resumed.join("epoch0003.ckpt"), &template).unwrap();
+    assert_eq!(full.params.bufs, resumed.params.bufs, "params must match bitwise");
+    assert_eq!(
+        full.velocity.unwrap().bufs,
+        resumed.velocity.unwrap().bufs,
+        "momentum must match bitwise"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_resumed);
+}
+
 #[test]
 fn checkpoint_timer_is_recorded() {
     let (train_d, test_d) = small_images();

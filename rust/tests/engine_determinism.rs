@@ -10,7 +10,9 @@
 use adabatch::coordinator::{train, TrainData, TrainerConfig};
 use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
 use adabatch::metrics::RunHistory;
-use adabatch::runtime::ModelRuntime;
+use adabatch::optim::param::ParamSet;
+use adabatch::optim::sgd::{Optimizer, SgdMomentum};
+use adabatch::runtime::{HostBatch, ModelRuntime, StepKind, Workspace};
 use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
 
 fn data() -> (TrainData, TrainData) {
@@ -103,4 +105,55 @@ fn pool_training_reduces_loss() {
     // batch transition happened on schedule
     assert_eq!(hist.epochs[0].batch, 32);
     assert_eq!(hist.epochs[2].batch, 64);
+}
+
+/// ISSUE 4: a long-lived workspace threaded through an optimizer-driven
+/// step sequence — executable ladder transitions (32 → 8, ragged padding,
+/// back to 32) interleaved with weight updates — is bitwise identical to
+/// running every step with a fresh workspace. This is the engine-level
+/// statement of the DESIGN.md §8 note: buffer identity and the packed
+/// cache never enter the summation schedule; the optimizer's version bump
+/// invalidates exactly as often as repacking from scratch would.
+#[test]
+fn long_lived_workspace_trajectory_matches_fresh_workspaces_bitwise() {
+    let rt = ModelRuntime::reference_mlp("ref_mlp", IMG_LEN, 8, 4, &[8, 32], 64);
+    // (microbatch, real samples): grow → shrink ragged → all-padding → grow
+    let steps = [(32usize, 32usize), (8, 3), (8, 0), (32, 32), (32, 32)];
+
+    let run = |reuse: bool| -> Vec<(u64, Vec<u32>)> {
+        let mut params = ParamSet::init(&rt.entry.params, 77);
+        let mut opt = SgdMomentum::paper_cifar();
+        let mut shared_ws = Workspace::new();
+        let mut trace = Vec::new();
+        for &(mb, real) in &steps {
+            let exe = rt.executable(StepKind::Train, mb).unwrap();
+            let x: Vec<f32> = (0..mb * IMG_LEN)
+                .map(|i| ((i % 23) as f32 - 11.0) * 0.01)
+                .collect();
+            let y: Vec<i32> = (0..mb).map(|s| if s < real { (s % 4) as i32 } else { -1 }).collect();
+            let mut fresh_ws = Workspace::new();
+            let ws = if reuse { &mut shared_ws } else { &mut fresh_ws };
+            let out = exe.run(&params, HostBatch::F32(&x), &y, ws).unwrap();
+            let grads = out.grads.unwrap();
+            trace.push((
+                out.loss.to_bits(),
+                grads.bufs.iter().flatten().map(|v| v.to_bits()).collect(),
+            ));
+            if real > 0 {
+                // a real weight update between steps: the reused arena's
+                // packed cache must invalidate via the version bump
+                opt.step(&mut params, &grads, 0.05);
+            }
+            ws.recycle_grads(grads);
+        }
+        trace
+    };
+
+    let reused = run(true);
+    let fresh = run(false);
+    assert_eq!(reused.len(), fresh.len());
+    for (i, (a, b)) in reused.iter().zip(&fresh).enumerate() {
+        assert_eq!(a.0, b.0, "step {i}: loss must not see workspace reuse");
+        assert_eq!(a.1, b.1, "step {i}: grads must not see workspace reuse");
+    }
 }
