@@ -1,77 +1,146 @@
-//! Bench: runtime hot-path decomposition — where an update's wall time
-//! goes (gather / upload+execute / grad download / optimizer). The perf
-//! pass (EXPERIMENTS.md §Perf) drives its L3 iterations from this bench:
-//! coordination overhead must stay a small fraction of execute time.
+//! Bench: elastic worker scaling — per-epoch wall time and worker
+//! occupancy as a doubling governor walks the batch ladder 32 → 4096
+//! (ISSUE 5). Three arms over the same reference MLP and dataset:
+//!
+//! * `fixed-1` — a 1-worker pool (the paper's single-device baseline);
+//! * `fixed-4` — a fully-active 4-worker pool (PR-4 behavior);
+//! * `elastic` — a 4-slot pool whose active count ratchets with the
+//!   batch (`ElasticPolicy`, samples_per_worker = 256).
+//!
+//! Each row also shows the simulator's *predicted* elastic-over-fixed-1
+//! speedup next to the measured one (`ClusterModel::epoch_cost_active`),
+//! the predicted-vs-measured loop DESIGN.md §10 describes. Acceptance
+//! (checked when run with `--check`): at batch ≥ 1024 the elastic arm's
+//! per-epoch wall time beats the fixed-1-worker baseline.
+//!
+//! Runs entirely on the reference backend — no artifacts needed.
 
-use adabatch::coordinator::{GatherBufs, TrainData};
-use adabatch::data::synthetic::{generate, SyntheticSpec};
+use std::sync::Arc;
+use std::time::Instant;
+
+use adabatch::coordinator::{ElasticConfig, ElasticPolicy, Engine, TrainData};
+use adabatch::data::shard::shard_batch;
+use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
 use adabatch::optim::param::ParamSet;
-use adabatch::optim::sgd::{Optimizer, SgdMomentum};
-use adabatch::runtime::{
-    default_artifacts_dir, Client, HostBatch, Manifest, ModelRuntime, StepKind, Workspace,
-};
-use adabatch::util::benchkit::{black_box, BenchSuite};
+use adabatch::runtime::{plan, ModelRuntime, StepKind};
+use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
+use adabatch::util::json::Json;
+
+const NATIVES: &[usize] = &[8, 16, 32, 64];
+const MAX_WORKERS: usize = 4;
+const SAMPLES_PER_WORKER: usize = 256;
+const LADDER: &[usize] = &[32, 128, 512, 1024, 2048, 4096];
+
+/// Measured seconds per epoch at batch `r` on an `n_slots`-slot pool with
+/// `active` workers: time a few dispatches, scale by updates-per-epoch.
+fn epoch_secs(
+    data: &TrainData,
+    rt: &ModelRuntime,
+    params: &Arc<ParamSet>,
+    r: usize,
+    n_slots: usize,
+    active: usize,
+) -> anyhow::Result<f64> {
+    let n = data.len();
+    let p = plan(r, n_slots, NATIVES, None)?;
+    let exe = rt.executable(StepKind::Train, p.microbatch)?;
+    let updates_per_epoch = (n / r).max(1);
+    let timed = updates_per_epoch.min(3);
+    let batch: Vec<usize> = (0..r).collect();
+    let secs = std::thread::scope(|s| -> anyhow::Result<f64> {
+        let mut engine = Engine::start(s, n_slots, data, &rt.entry.params);
+        // warmup: packs weights, faults in the arenas
+        engine.dispatch(&exe, params, shard_batch(&batch, n_slots), p.microbatch, active)?;
+        let t0 = Instant::now();
+        for _ in 0..timed {
+            engine.dispatch(&exe, params, shard_batch(&batch, n_slots), p.microbatch, active)?;
+        }
+        let per_update = t0.elapsed().as_secs_f64() / timed as f64;
+        engine.shutdown();
+        Ok(per_update * updates_per_epoch as f64)
+    })?;
+    Ok(secs)
+}
 
 fn main() -> anyhow::Result<()> {
-    let dir = default_artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("bench_runtime: artifacts not built; skipping");
-        return Ok(());
-    }
-    let manifest = Manifest::load(dir)?;
-    let client = Client::cpu()?;
-    let rt = ModelRuntime::new(client, manifest.model("resnet_lite_c100")?.clone());
-    let d = generate(&SyntheticSpec::cifar100());
-    let data = TrainData::Images(d.train);
-    let params = ParamSet::init(&rt.entry.params, 0);
-    let mb = *rt.entry.train_batches().last().unwrap();
-    let exe = rt.executable(StepKind::Train, mb)?;
-    let idx: Vec<usize> = (0..mb).collect();
+    let check = std::env::args().any(|a| a == "--check");
+    let mut spec = SyntheticSpec::cifar10();
+    spec.train_per_class = 512; // 5120 samples: covers batch 4096
+    spec.test_per_class = 1;
+    let data = TrainData::Images(generate(&spec).train);
+    let n = data.len();
+    let rt = ModelRuntime::reference_mlp("ref_mlp", IMG_LEN, 32, 10, NATIVES, 64);
+    let params = Arc::new(ParamSet::init(&rt.entry.params, 0));
 
-    let mut suite = BenchSuite::new(&format!("runtime hot path (resnet_lite_c100, µbatch {mb})"));
+    // the simulator's predicted side of every row
+    let cluster = ClusterModel::new(GpuModel::p100(), Interconnect::nvlink_p100(), MAX_WORKERS);
+    let workload = Workload {
+        flops_per_sample: rt.entry.flops_per_sample as f64,
+        n_samples: n,
+        param_bytes: params.total_len() * 4,
+    };
 
-    let mut bufs = GatherBufs::default();
-    suite.bench_units("gather", Some(mb as f64), || {
-        data.gather(black_box(&idx), mb, &mut bufs);
-    });
-
-    data.gather(&idx, mb, &mut bufs);
-    let x = bufs.x_f32.clone();
-    let y = bufs.y.clone();
-    let mut ws = Workspace::new();
-    suite.bench_units("execute (upload+fwd+bwd+download)", Some(mb as f64), || {
-        let _ = exe.run(&params, HostBatch::F32(&x), &y, &mut ws).expect("step");
-    });
-
-    // optimizer over the real parameter set
-    let grads = exe.run(&params, HostBatch::F32(&x), &y, &mut ws)?.grads.unwrap();
-    let mut p2 = params.clone();
-    let mut opt = SgdMomentum::paper_cifar();
-    suite.bench_units(
-        &format!("sgd step ({} params)", p2.total_len()),
-        Some(p2.total_len() as f64),
-        || {
-            opt.step(&mut p2, &grads, 0.01);
-        },
-    );
-
-    // eval path
-    let eb = rt.eval_batch()?;
-    let eexe = rt.executable(StepKind::Eval, eb)?;
-    let eidx: Vec<usize> = (0..eb.min(data.len())).collect();
-    let mut ebufs = GatherBufs::default();
-    data.gather(&eidx, eb, &mut ebufs);
-    let (ex, ey) = (ebufs.x_f32.clone(), ebufs.y.clone());
-    suite.bench_units("eval execute", Some(eb as f64), || {
-        let _ = eexe.run(&params, HostBatch::F32(&ex), &ey, &mut ws).expect("eval");
-    });
-
-    suite.print_report();
-    let exec = suite.results[1].mean();
-    let over = suite.results[0].mean() + suite.results[2].mean();
     println!(
-        "coordination overhead (gather+sgd) = {:.2}% of execute time",
-        100.0 * over / exec
+        "elastic worker scaling — ref_mlp(hidden 32), {n} samples, pool {MAX_WORKERS}, \
+         samples/worker {SAMPLES_PER_WORKER}\n"
     );
+    println!(
+        "{:>6} {:>4} {:>9} {:>11} {:>11} {:>11} {:>9} {:>9}",
+        "batch", "act", "occupancy", "fixed-1 s", "fixed-4 s", "elastic s", "meas spd", "pred spd"
+    );
+
+    let mut policy = ElasticPolicy::new(ElasticConfig {
+        max_workers: MAX_WORKERS,
+        samples_per_worker: SAMPLES_PER_WORKER,
+    });
+    let mut rows: Vec<Json> = Vec::new();
+    let mut check_failures = Vec::new();
+    for &r in LADDER {
+        let active = policy.decide(r); // the governor's walk ratchets this
+        let fixed1 = epoch_secs(&data, &rt, &params, r, 1, 1)?;
+        let fixed4 = epoch_secs(&data, &rt, &params, r, MAX_WORKERS, MAX_WORKERS)?;
+        let elastic = epoch_secs(&data, &rt, &params, r, MAX_WORKERS, active)?;
+        let occupancy = active as f64 / MAX_WORKERS as f64;
+        let measured = fixed1 / elastic;
+        let predicted = cluster.epoch_cost_active(&workload, r, 1).total()
+            / cluster.epoch_cost_active(&workload, r, active).total();
+        println!(
+            "{r:>6} {active:>4} {occupancy:>9.2} {fixed1:>11.3} {fixed4:>11.3} {elastic:>11.3} \
+             {measured:>8.2}x {predicted:>8.2}x"
+        );
+        if r >= 1024 && elastic >= fixed1 {
+            check_failures.push(format!(
+                "batch {r}: elastic {elastic:.3}s did not beat fixed-1 {fixed1:.3}s"
+            ));
+        }
+        rows.push(Json::obj(vec![
+            ("batch", Json::num(r as f64)),
+            ("active", Json::num(active as f64)),
+            ("occupancy", Json::num(occupancy)),
+            ("fixed1_epoch_s", Json::num(fixed1)),
+            ("fixed4_epoch_s", Json::num(fixed4)),
+            ("elastic_epoch_s", Json::num(elastic)),
+            ("measured_speedup", Json::num(measured)),
+            ("predicted_speedup", Json::num(predicted)),
+        ]));
+    }
+    let report = Json::obj(vec![
+        ("report", Json::str("bench_runtime_elastic")),
+        ("pool", Json::num(MAX_WORKERS as f64)),
+        ("samples_per_worker", Json::num(SAMPLES_PER_WORKER as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    println!("\n{report}");
+
+    if check_failures.is_empty() {
+        println!("\ncheck: elastic beats fixed-1 at every batch >= 1024");
+    } else {
+        for f in &check_failures {
+            eprintln!("check failed: {f}");
+        }
+        if check {
+            anyhow::bail!("elastic did not beat the fixed-1-worker baseline at batch >= 1024");
+        }
+    }
     Ok(())
 }

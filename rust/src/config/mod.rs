@@ -148,6 +148,9 @@ impl JobConfig {
         if self.trainer.workers == 0 {
             bail!("workers must be > 0");
         }
+        if let Some(e) = &self.trainer.elastic {
+            e.validate()?;
+        }
         let r0 = self.policy.batch.initial();
         if r0 == 0 {
             bail!("initial batch must be > 0");
@@ -400,6 +403,19 @@ mod tests {
         let mut j = job();
         j.trainer.epochs = 0;
         assert!(j.validate().is_err());
+    }
+
+    #[test]
+    fn bad_elastic_config_rejected() {
+        let mut j = job();
+        j.trainer = j.trainer.with_elastic(0, 256);
+        assert!(j.validate().is_err(), "max_workers 0 must fail");
+        let mut j = job();
+        j.trainer = j.trainer.with_elastic(4, 0);
+        assert!(j.validate().is_err(), "samples_per_worker 0 must fail");
+        let mut j = job();
+        j.trainer = j.trainer.with_elastic(4, 256);
+        j.validate().unwrap();
     }
 
     #[test]

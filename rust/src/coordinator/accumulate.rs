@@ -11,6 +11,14 @@
 //!
 //! The accumulator also tracks per-microbatch gradient norms, feeding the
 //! variance-based adaptive controller (`schedule::adaptive`) for free.
+//!
+//! **Slot granularity under elasticity (DESIGN.md §10).** Accumulation is
+//! per *slot*, not per worker: an elastic worker covering several
+//! canonical slots runs one `add…add/finish` lifecycle per slot through
+//! the same accumulator. `finish` resets completely (fresh zero buffers,
+//! cleared sums), so back-to-back slot lifecycles are bitwise equivalent
+//! to independent accumulators — which is what makes a slot's gradient
+//! independent of which worker computed it.
 
 use crate::optim::param::{ParamSet, ParamSpec};
 
@@ -128,6 +136,54 @@ mod tests {
     #[should_panic(expected = "no accumulated")]
     fn finish_empty_panics() {
         GradAccumulator::new(&specs()).finish();
+    }
+
+    /// The elastic contract at accumulator level: sequential slot
+    /// lifecycles through ONE accumulator are bitwise identical to
+    /// independent accumulators — no residue (sums, counts, buffers)
+    /// crosses a `finish()` boundary.
+    #[test]
+    fn prop_sequential_slot_reuse_matches_fresh_accumulators_bitwise() {
+        propcheck::check(
+            "one accumulator over k slots == k fresh accumulators",
+            Pair(UsizeRange(1, 5), UsizeRange(1, 6)),
+            |&(slots, per_slot)| {
+                let specs = specs();
+                let mut rng = Pcg32::new((slots * 131 + per_slot) as u64);
+                let micro: Vec<Vec<[f32; 4]>> = (0..slots)
+                    .map(|_| {
+                        (0..per_slot)
+                            .map(|_| {
+                                [rng.normal(), rng.normal(), rng.normal(), rng.normal()]
+                            })
+                            .collect()
+                    })
+                    .collect();
+                let mut shared = GradAccumulator::new(&specs);
+                for (s, slot) in micro.iter().enumerate() {
+                    for (j, m) in slot.iter().enumerate() {
+                        shared.add(&grad(*m), j as f64 * 0.25, 1.0);
+                    }
+                    let (g_shared, loss_shared, _, norms_shared) = shared.finish();
+                    let mut fresh = GradAccumulator::new(&specs);
+                    for (j, m) in slot.iter().enumerate() {
+                        fresh.add(&grad(*m), j as f64 * 0.25, 1.0);
+                    }
+                    let (g_fresh, loss_fresh, _, norms_fresh) = fresh.finish();
+                    let bits = |p: &ParamSet| -> Vec<u32> {
+                        p.bufs[0].iter().map(|v| v.to_bits()).collect()
+                    };
+                    if bits(&g_shared) != bits(&g_fresh)
+                        || loss_shared.to_bits() != loss_fresh.to_bits()
+                        || norms_shared != norms_fresh
+                    {
+                        eprintln!("slot {s} diverged");
+                        return false;
+                    }
+                }
+                true
+            },
+        );
     }
 
     #[test]

@@ -14,6 +14,17 @@
 //!
 //! All three must agree bit-for-bit-ish (f32 summation order differs, so
 //! tolerance is 1e-6 relative) — that agreement is a property test.
+//!
+//! **Fixed-shape reduction under elasticity (DESIGN.md §10).** Every
+//! algorithm's summation order is a pure function of (slot count, payload
+//! length, zero-weight pattern) — never of which worker produced a slot.
+//! The elastic engine therefore always reduces over the full
+//! `max_workers`-length slot vector, with zero weight (and exactly-zero
+//! gradients) for slots an undersized batch left empty: the weights are
+//! fixed by `(batch, max_workers)`, so the reduced gradient is bitwise
+//! identical however many workers were active. Do **not** shorten the
+//! slot vector to the active count — ring/tree chunk boundaries move with
+//! the slot count, which would re-associate the f32 sums.
 
 use crate::optim::param::ParamSet;
 
@@ -241,6 +252,39 @@ mod tests {
         allreduce_mean(&mut got, &weights, Algorithm::Naive);
         assert_eq!(got[0][0], 1.0);
         assert_eq!(got[1][0], 1.0);
+    }
+
+    /// The elastic engine's fixed-slot contract: for a given slot vector
+    /// and weight pattern the reduction is bitwise deterministic across
+    /// repeated runs (every algorithm), and empty slots — exactly-zero
+    /// gradients at exactly-zero weight, as an undersized batch produces —
+    /// leave the reduced value bitwise equal to the dense sub-reduction
+    /// for the `naive` schedule (which skips zero weights outright).
+    #[test]
+    fn fixed_slot_reduction_is_bitwise_deterministic_with_empty_slots() {
+        let n = 37;
+        let mut rng = Pcg32::new(99);
+        // 2 real slots + 2 empty ones: batch of 2 samples on a 4-slot pool
+        let real: Vec<Vec<f32>> = (0..2).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let slots = vec![real[0].clone(), real[1].clone(), vec![0.0; n], vec![0.0; n]];
+        let weights = vec![0.5, 0.5, 0.0, 0.0];
+        for algo in [Algorithm::Naive, Algorithm::Ring, Algorithm::Tree] {
+            let mut a = slots.clone();
+            let mut b = slots.clone();
+            allreduce_mean(&mut a, &weights, algo);
+            allreduce_mean(&mut b, &weights, algo);
+            for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{algo:?} not run-to-run deterministic");
+            }
+        }
+        // naive skips zero weights, so padding slots are bitwise inert
+        let mut dense = vec![real[0].clone(), real[1].clone()];
+        allreduce_mean(&mut dense, &[0.5, 0.5], Algorithm::Naive);
+        let mut padded = slots.clone();
+        allreduce_mean(&mut padded, &weights, Algorithm::Naive);
+        for (x, y) in dense[0].iter().zip(padded[0].iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "zero-weight slots perturbed naive");
+        }
     }
 
     #[test]

@@ -22,6 +22,16 @@
 //! them, continuing the exact trajectory (epoch-indexed PRNG streams make
 //! resumed runs bitwise equal to uninterrupted ones —
 //! `tests/checkpoint_resume.rs`).
+//!
+//! With [`TrainerConfig::elastic`] set, the loop also threads the
+//! elasticity decision between governor and dispatch (DESIGN.md §10): the
+//! engine spawns `max_workers` threads, the batch is always cut into
+//! `max_workers` canonical slots, and after each epoch's batch decision an
+//! [`ElasticPolicy`] ratchet picks how many workers the dispatches
+//! activate. The per-epoch `active_workers` count is recorded in the run
+//! history. Numerics are untouched — the fixed-slot reduction makes the
+//! trajectory bitwise identical to a fixed `max_workers` pool
+//! (`tests/engine_determinism.rs`).
 
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
@@ -29,6 +39,7 @@ use std::time::Instant;
 
 use super::allreduce::{allreduce_params, Algorithm};
 use super::dataset::{GatherBufs, TrainData};
+use super::elastic::{ElasticConfig, ElasticPolicy};
 use super::engine::Engine;
 use super::eval::evaluate;
 use crate::data::loader::BatchPlanner;
@@ -64,6 +75,10 @@ pub struct TrainerConfig {
     /// restore params/velocity/schedule position from this checkpoint and
     /// continue at the following epoch
     pub resume: Option<std::path::PathBuf>,
+    /// elastic worker scaling: spawn `max_workers` threads but activate
+    /// only enough for the governed batch. When set, `workers` is ignored
+    /// and the engine's slot count is `max_workers` (DESIGN.md §10).
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl TrainerConfig {
@@ -79,6 +94,7 @@ impl TrainerConfig {
             checkpoint_dir: None,
             checkpoint_every: 1,
             resume: None,
+            elastic: None,
         }
     }
 
@@ -108,6 +124,14 @@ impl TrainerConfig {
     /// Resume from a checkpoint file written by a prior run.
     pub fn with_resume(mut self, path: impl Into<std::path::PathBuf>) -> Self {
         self.resume = Some(path.into());
+        self
+    }
+
+    /// Scale active workers with the governed batch: spawn `max_workers`
+    /// threads, activate `ceil(batch / samples_per_worker)` of them
+    /// (ratcheting; see [`ElasticPolicy`]).
+    pub fn with_elastic(mut self, max_workers: usize, samples_per_worker: usize) -> Self {
+        self.elastic = Some(ElasticConfig { max_workers, samples_per_worker });
         self
     }
 }
@@ -143,6 +167,16 @@ pub fn train<G: BatchGovernor + ?Sized>(
     let eval_every = cfg.eval_every.max(1);
     let natives = rt.entry.train_batches();
 
+    // -- elasticity: the engine's slot count is the activation cap when
+    // elastic, the fixed worker count otherwise. Everything downstream
+    // (pre-flight, planning, sharding) is in terms of slots, so the
+    // numerics are identical whichever mode is on. --
+    if let Some(e) = &cfg.elastic {
+        e.validate().context("elastic config")?;
+    }
+    let n_slots = cfg.elastic.as_ref().map(|e| e.max_workers).unwrap_or(cfg.workers);
+    let mut elastic = cfg.elastic.map(ElasticPolicy::new);
+
     // -- pre-flight: artifacts must match the manifest (stale-artifact
     // guard; cheap header parse, no compilation). Reference runtimes have
     // no files to validate. --
@@ -160,7 +194,7 @@ pub fn train<G: BatchGovernor + ?Sized>(
         .collect();
     distinct.sort_unstable();
     distinct.dedup();
-    plan_schedule(&distinct, cfg.workers, &natives, cfg.max_microbatch)
+    plan_schedule(&distinct, n_slots, &natives, cfg.max_microbatch)
         .context("schedule pre-flight failed")?;
 
     let mut params = Arc::new(ParamSet::init(&rt.entry.params, cfg.seed));
@@ -217,7 +251,7 @@ pub fn train<G: BatchGovernor + ?Sized>(
     let mut eval_bufs = GatherBufs::default();
 
     let scope_out = std::thread::scope(|scope| -> Result<(PhaseTimers, WorkspaceStats)> {
-        let mut engine = Engine::start(scope, cfg.workers, train_data, &rt.entry.params);
+        let mut engine = Engine::start(scope, n_slots, train_data, &rt.entry.params);
         // the controller's own long-lived arena for the eval loop (the
         // serial fallback of DESIGN.md §9's ownership map)
         let mut eval_ws = Workspace::new();
@@ -226,11 +260,19 @@ pub fn train<G: BatchGovernor + ?Sized>(
         'epochs: for epoch in start_epoch..cfg.epochs {
             let t_epoch = Instant::now();
             let r = clamp_batch(governor.batch_for_epoch(epoch), n);
-            let plan = crate::runtime::plan(r, cfg.workers, &natives, cfg.max_microbatch)?;
+            let plan = crate::runtime::plan(r, n_slots, &natives, cfg.max_microbatch)?;
+            // elasticity decision sits between the governor's (post-clamp)
+            // batch and dispatch: how many of the spawned workers the
+            // epoch's updates activate
+            let active = match elastic.as_mut() {
+                Some(p) => p.decide(r),
+                None => n_slots,
+            };
             let epoch_lr = governor.lr_coupling(epoch, 0, planner.iters_per_epoch(r).max(1));
             if r != last_batch {
                 log::info!(
-                    "[{}] epoch {epoch}: batch {r} = {} workers × {} µbatch × {} accum, lr {:.5}",
+                    "[{}] epoch {epoch}: batch {r} = {} slots × {} µbatch × {} accum, \
+                     {active}/{n_slots} workers active, lr {:.5}",
                     governor.name(),
                     plan.workers,
                     plan.microbatch,
@@ -246,10 +288,11 @@ pub fn train<G: BatchGovernor + ?Sized>(
 
             for (it, batch) in epoch_plan.batches.iter().enumerate() {
                 let lr = governor.lr_coupling(epoch, it, iters);
-                let shards = shard_batch(&batch.indices, cfg.workers);
+                let shards = shard_batch(&batch.indices, n_slots);
                 let weights = shard_weights(&shards);
-                // per-replica gradient production on the worker pool
-                let mut outs = engine.dispatch(&exe, &params, shards, plan.microbatch)?;
+                // per-slot gradient production on the worker pool (the
+                // active subset covers all n_slots canonical shards)
+                let mut outs = engine.dispatch(&exe, &params, shards, plan.microbatch, active)?;
                 for (w, out) in outs.iter().enumerate() {
                     loss_sum += out.loss * weights[w];
                 }
@@ -323,6 +366,7 @@ pub fn train<G: BatchGovernor + ?Sized>(
                 test_loss,
                 test_error,
                 iterations: iters,
+                active_workers: active,
                 wall_secs: t_epoch.elapsed().as_secs_f64(),
             });
 
@@ -478,6 +522,44 @@ mod tests {
         assert!(hist.diverged, "NaN gradient must trip the guard");
         // the guard fired on the very first update, so nothing was logged
         assert!(hist.epochs.is_empty());
+    }
+
+    #[test]
+    fn elastic_mode_records_ratcheting_active_workers() {
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        // batches 32,32,64,64 over 4 slots (shards 8..16 fit the native
+        // ladder); samples_per_worker 16 → targets 2,2,4,4
+        let cfg = TrainerConfig::new(4).with_seed(11).with_elastic(4, 16);
+        let mut gov = doubling_gov(32, 2);
+        let (hist, timers) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+        assert!(!hist.diverged);
+        let actives: Vec<usize> = hist.epochs.iter().map(|e| e.active_workers).collect();
+        assert_eq!(actives, vec![2, 2, 4, 4], "active count must ratchet with the batch");
+        // parked workers contribute no fwd_bwd before their activation
+        assert!(timers.count("w0/fwd_bwd") > 0);
+        assert!(timers.count("w3/fwd_bwd") > 0, "worker 3 activates at epoch 2");
+    }
+
+    #[test]
+    fn fixed_mode_reports_full_activation() {
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        let cfg = TrainerConfig::new(2).with_seed(7).with_workers(2);
+        let mut gov = doubling_gov(16, 4);
+        let (hist, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+        assert!(hist.epochs.iter().all(|e| e.active_workers == 2));
+    }
+
+    #[test]
+    fn invalid_elastic_config_fails_before_training() {
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        let mut cfg = TrainerConfig::new(2).with_seed(1);
+        cfg.elastic = Some(ElasticConfig { max_workers: 2, samples_per_worker: 0 });
+        let mut gov = doubling_gov(16, 4);
+        let err = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap_err();
+        assert!(format!("{err:#}").contains("samples_per_worker"), "{err:#}");
     }
 
     #[test]

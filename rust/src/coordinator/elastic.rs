@@ -1,0 +1,178 @@
+//! Elastic worker scaling — wiring the governor's batch decision into the
+//! engine's degree of parallelism.
+//!
+//! AdaBatch's multi-GPU result (§4.2, up to 6.25× on 4 P100s) rests on
+//! adaptively grown batches buying *parallel efficiency*; a fixed worker
+//! count wastes that growth by merely thickening each worker's shard.
+//! [`ElasticPolicy`] closes the loop: the engine spawns `max_workers`
+//! threads up front, but every dispatch activates only
+//! `ceil(batch / samples_per_worker)` of them (clamped to
+//! `[1, max_workers]`), so a doubling governor recruits parallelism as it
+//! grows the batch. Idle workers stay parked on their job-channel condvar
+//! with warm [`Workspace`](crate::runtime::Workspace) arenas and running
+//! prefetchers, so reactivation is free.
+//!
+//! **Hysteresis.** The active count *ratchets*: it only moves when the
+//! governor's batch decision demands more workers, and it never shrinks.
+//! Data-driven governors can hold a batch across epochs or (in principle)
+//! present a clamped, non-monotone sequence; without the ratchet that
+//! would thrash workers between parked and active, discarding warm packed
+//! caches for no throughput gain. With it, worker count changes exactly
+//! when the governor ratchets the batch past the next
+//! `samples_per_worker` boundary.
+//!
+//! **Determinism (DESIGN.md §10).** Elasticity is a *scheduling* choice,
+//! never a numerical one. The batch is always cut into `max_workers`
+//! canonical slots; an active worker processes whole slots, each through
+//! its own accumulator lifecycle, and the coordinator reduces the fixed
+//! `max_workers`-length slot vector (zero-weight for empty slots). Since
+//! slot contents and per-slot summation order are independent of which
+//! worker computed them, train-step results are **bitwise identical for
+//! every active count** — `tests/elastic_invariance.rs` pins this for
+//! every count in `1..=max_workers` against the fixed-pool engine.
+
+use anyhow::{bail, Result};
+
+/// Elasticity knobs carried by
+/// [`TrainerConfig`](super::controller::TrainerConfig).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElasticConfig {
+    /// worker threads spawned (the engine's slot count and activation cap)
+    pub max_workers: usize,
+    /// target per-worker share of the effective batch: the policy aims
+    /// for `active ≈ batch / samples_per_worker`
+    pub samples_per_worker: usize,
+}
+
+impl ElasticConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_workers == 0 {
+            bail!("elastic max_workers must be > 0");
+        }
+        if self.samples_per_worker == 0 {
+            bail!("elastic samples_per_worker must be > 0");
+        }
+        Ok(())
+    }
+}
+
+/// Ratcheting activation policy: decides, per epoch, how many of the
+/// engine's `max_workers` threads the next dispatches should activate.
+#[derive(Debug, Clone)]
+pub struct ElasticPolicy {
+    cfg: ElasticConfig,
+    current: usize,
+}
+
+impl ElasticPolicy {
+    /// Panics on an invalid config — Result-returning callers (the
+    /// training loop) gate on [`ElasticConfig::validate`] first; the one
+    /// definition of the invariants lives there.
+    pub fn new(cfg: ElasticConfig) -> Self {
+        cfg.validate().expect("invalid ElasticConfig");
+        ElasticPolicy { cfg, current: 1 }
+    }
+
+    pub fn config(&self) -> ElasticConfig {
+        self.cfg
+    }
+
+    /// The stateless target for `batch`: enough workers for every active
+    /// one to carry at most `samples_per_worker` samples.
+    pub fn target(&self, batch: usize) -> usize {
+        batch
+            .div_ceil(self.cfg.samples_per_worker)
+            .clamp(1, self.cfg.max_workers)
+    }
+
+    /// Ratcheting decision (called once per epoch, after the governor's
+    /// batch decision and before dispatch): grows to the target, never
+    /// shrinks below a level already reached.
+    pub fn decide(&mut self, batch: usize) -> usize {
+        let t = self.target(batch);
+        if t > self.current {
+            self.current = t;
+        }
+        self.current
+    }
+
+    /// The count currently in force (last `decide` result; 1 before any).
+    pub fn active(&self) -> usize {
+        self.current
+    }
+}
+
+/// Assign `n_slots` canonical batch slots to `active` workers as
+/// contiguous near-equal groups (the first `n_slots % active` workers get
+/// one extra — the same front-loaded rule as
+/// [`shard_batch`](crate::data::shard::shard_batch)). Every active worker
+/// receives at least one slot when `active <= n_slots`.
+pub fn assign_slots(n_slots: usize, active: usize) -> Vec<Vec<usize>> {
+    assert!(active > 0, "at least one worker must be active");
+    let slot_ids: Vec<usize> = (0..n_slots).collect();
+    crate::data::shard::shard_batch(&slot_ids, active)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy(max: usize, spw: usize) -> ElasticPolicy {
+        ElasticPolicy::new(ElasticConfig { max_workers: max, samples_per_worker: spw })
+    }
+
+    #[test]
+    fn target_scales_with_batch_and_clamps() {
+        let p = policy(4, 256);
+        assert_eq!(p.target(1), 1);
+        assert_eq!(p.target(256), 1);
+        assert_eq!(p.target(257), 2);
+        assert_eq!(p.target(512), 2);
+        assert_eq!(p.target(1024), 4);
+        assert_eq!(p.target(1 << 20), 4, "clamped at max_workers");
+    }
+
+    #[test]
+    fn decide_ratchets_up_and_never_back_down() {
+        let mut p = policy(4, 128);
+        assert_eq!(p.decide(128), 1);
+        assert_eq!(p.decide(256), 2);
+        // the governor holding (or a clamp shrinking) the batch must not
+        // park a worker that was already recruited
+        assert_eq!(p.decide(128), 2, "hysteresis: no shrink on a batch dip");
+        assert_eq!(p.decide(512), 4);
+        assert_eq!(p.decide(512), 4);
+        assert_eq!(p.active(), 4);
+    }
+
+    #[test]
+    fn decide_jumps_straight_to_a_large_target() {
+        // a resumed run re-derives the ratchet from the resumed epoch's
+        // batch in one step — no warm-up walk needed
+        let mut p = policy(8, 64);
+        assert_eq!(p.decide(4096), 8);
+    }
+
+    #[test]
+    fn assignment_is_a_front_loaded_partition() {
+        assert_eq!(assign_slots(4, 4), vec![vec![0], vec![1], vec![2], vec![3]]);
+        assert_eq!(assign_slots(4, 2), vec![vec![0, 1], vec![2, 3]]);
+        assert_eq!(assign_slots(4, 3), vec![vec![0, 1], vec![2], vec![3]]);
+        assert_eq!(assign_slots(4, 1), vec![vec![0, 1, 2, 3]]);
+        // every slot appears exactly once, in order
+        for active in 1..=6 {
+            let a = assign_slots(6, active);
+            assert_eq!(a.len(), active);
+            let flat: Vec<usize> = a.iter().flatten().copied().collect();
+            assert_eq!(flat, (0..6).collect::<Vec<_>>());
+            assert!(a.iter().all(|g| !g.is_empty()), "active={active}: no idle active worker");
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_zeros() {
+        assert!(ElasticConfig { max_workers: 0, samples_per_worker: 8 }.validate().is_err());
+        assert!(ElasticConfig { max_workers: 2, samples_per_worker: 0 }.validate().is_err());
+        assert!(ElasticConfig { max_workers: 2, samples_per_worker: 8 }.validate().is_ok());
+    }
+}

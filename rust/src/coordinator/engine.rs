@@ -1,37 +1,52 @@
-//! The worker-pool execution engine — real data-parallel replicas.
+//! The worker-pool execution engine — real data-parallel replicas, with
+//! elastic activation.
 //!
 //! The paper's headline systems claim is parallel efficiency: adaptive
 //! batches keep devices busy as the batch grows (up to 6.25× on 4 GPUs,
 //! §4.2). The original coordinator walked its replicas in a serial `for`
 //! loop; this module gives each logical replica a **persistent OS thread**
 //! that owns its own [`GradAccumulator`] and gather buffers, fed
-//! per-iteration shards over channels. Each worker additionally runs a
+//! per-iteration work over channels. Each worker additionally runs a
 //! [`Prefetcher`] gather thread, so host-side batch assembly overlaps the
 //! fwd/bwd execution of the previous microbatch (double buffering).
 //!
+//! **Slots vs. workers (DESIGN.md §10).** A dispatch always carries one
+//! canonical *slot* shard per spawned worker — `n_slots == workers()` —
+//! but only the first `active` workers receive jobs; the rest stay parked
+//! on their job-channel recv with warm arenas and running prefetchers.
+//! Active workers cover the slots in contiguous near-equal groups
+//! ([`super::elastic::assign_slots`]), computing each slot through its
+//! own accumulator lifecycle, so a slot's gradient is a pure function of
+//! (params, slot contents, microbatch) — *independent of which worker ran
+//! it or how many were active*. Results come back slot-indexed; the
+//! coordinator's fixed-shape reduction over the full slot vector then
+//! makes the train step bitwise identical for every active count
+//! (`tests/elastic_invariance.rs`).
+//!
 //! Determinism model (DESIGN.md §4): synchronous data-parallel SGD. One
-//! `dispatch` = one weight update's gradient production. Each worker's
-//! shard computation is sequential and self-contained; results are
-//! re-ordered by worker index before the (deterministic, coordinator-side)
-//! all-reduce, so a run's trajectory is a pure function of (seed, config)
-//! regardless of thread scheduling. Parameters are shared by `Arc`
-//! snapshot: workers hold a clone only while computing, so the
-//! coordinator's `Arc::make_mut` update after the barrier mutates in
-//! place — copy-on-write cost only ever appears under a scheduling race,
-//! never wrong results.
+//! `dispatch` = one weight update's gradient production. Each slot's
+//! computation is sequential and self-contained; results are re-ordered
+//! by slot index before the (deterministic, coordinator-side) all-reduce,
+//! so a run's trajectory is a pure function of (seed, config) regardless
+//! of thread scheduling. Parameters are shared by `Arc` snapshot: workers
+//! hold a clone only while computing, so the coordinator's `Arc::make_mut`
+//! update after the barrier mutates in place — copy-on-write cost only
+//! ever appears under a scheduling race, never wrong results.
 //!
 //! Worker phase timers ("gather" = prefetch wait, "fwd_bwd" = step
 //! execution) are merged into the run's [`PhaseTimers`] at shutdown, both
-//! flat and under a `w{i}/` prefix for per-worker attribution.
+//! flat and under a `w{i}/` prefix for per-worker attribution; a worker
+//! that sat out the whole run contributes empty timers, which merge to
+//! nothing.
 //!
 //! Each worker additionally owns one persistent [`Workspace`] for its
 //! whole lifetime (DESIGN.md §9): step scratch and packed-transposed
-//! weights live across dispatches, gradient sets recycle through the
-//! arena after each accumulation, and the packed cache — keyed on the
-//! param snapshot's version, which the optimizer bumps once per update —
-//! repacks once per weight update instead of once per microbatch. The
-//! merged [`WorkspaceStats`] come back from [`Engine::shutdown`] for the
-//! train report.
+//! weights live across dispatches (including parked stretches), gradient
+//! sets recycle through the arena after each accumulation, and the packed
+//! cache — keyed on the param snapshot's version, which the optimizer
+//! bumps once per update — repacks once per weight update instead of once
+//! per microbatch. The merged [`WorkspaceStats`] come back from
+//! [`Engine::shutdown`] for the train report.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -47,12 +62,12 @@ use crate::metrics::PhaseTimers;
 use crate::optim::param::{ParamSet, ParamSpec};
 use crate::runtime::{Dtype, HostBatch, StepExecutable, Workspace, WorkspaceStats};
 
-/// One worker's contribution to one weight update.
+/// One slot's contribution to one weight update.
 #[derive(Debug)]
 pub struct WorkerOut {
-    /// shard-mean gradient (microbatch-mean accumulated over accum steps)
+    /// slot-mean gradient (microbatch-mean accumulated over accum steps)
     pub grads: ParamSet,
-    /// shard-mean loss
+    /// slot-mean loss
     pub loss: f64,
     pub correct: f64,
     /// per-microbatch ‖g‖² (feeds data-driven governors)
@@ -67,23 +82,30 @@ enum Job {
         seq: u64,
         exe: Arc<StepExecutable>,
         params: Arc<ParamSet>,
-        shard: Vec<usize>,
+        /// (slot index, canonical shard) pairs this worker covers
+        slots: Vec<(usize, Vec<usize>)>,
         microbatch: usize,
     },
+    /// Test-only fault injection: panic on the next activation. A parked
+    /// poisoned worker shuts down cleanly — the fault fires only if a
+    /// dispatch actually activates the worker.
+    Poison,
     Finish,
 }
 
 /// A pool of persistent replica workers bound to one training run's scope.
 pub struct Engine<'scope> {
     job_txs: Vec<Sender<Job>>,
-    res_rx: Receiver<(usize, u64, Result<WorkerOut>)>,
+    res_rx: Receiver<(usize, u64, Result<Vec<(usize, WorkerOut)>>)>,
     handles: Vec<ScopedJoinHandle<'scope, (PhaseTimers, WorkspaceStats)>>,
     seq: u64,
 }
 
 impl<'scope> Engine<'scope> {
     /// Spawn `workers` replica threads (plus one prefetch thread each)
-    /// inside `scope`, all reading from the borrowed `data`.
+    /// inside `scope`, all reading from the borrowed `data`. `workers` is
+    /// also the engine's slot count: every dispatch carries exactly this
+    /// many canonical shards, however many workers it activates.
     pub fn start<'env: 'scope>(
         scope: &'scope Scope<'scope, 'env>,
         workers: usize,
@@ -103,47 +125,73 @@ impl<'scope> Engine<'scope> {
         Engine { job_txs, res_rx, handles, seq: 0 }
     }
 
+    /// Spawned worker threads == canonical slots per dispatch.
     pub fn workers(&self) -> usize {
         self.job_txs.len()
     }
 
-    /// Run one synchronous update's gradient production: one shard per
-    /// worker, results returned in worker order. Barrier semantics — all
-    /// workers finish before this returns (synchronous SGD).
+    /// Test-only fault injection: arm worker `w` to panic the next time a
+    /// dispatch activates it. The panic surfaces as a dispatch error and
+    /// is re-raised at [`Engine::shutdown`]; a poisoned worker that is
+    /// never activated shuts down cleanly.
+    pub fn poison_worker(&self, w: usize) -> Result<()> {
+        self.job_txs[w]
+            .send(Job::Poison)
+            .map_err(|_| anyhow!("worker {w} already shut down"))
+    }
+
+    /// Run one synchronous update's gradient production: one canonical
+    /// shard per slot (`shards.len() == self.workers()`), executed by the
+    /// first `active` workers, results returned in slot order. Barrier
+    /// semantics — all activated workers finish before this returns
+    /// (synchronous SGD). The returned vector covers every slot whatever
+    /// `active` is, and its contents are bitwise independent of `active`.
     pub fn dispatch(
         &mut self,
         exe: &Arc<StepExecutable>,
         params: &Arc<ParamSet>,
         shards: Vec<Vec<usize>>,
         microbatch: usize,
+        active: usize,
     ) -> Result<Vec<WorkerOut>> {
-        assert_eq!(shards.len(), self.job_txs.len(), "one shard per worker");
+        let n_slots = self.job_txs.len();
+        assert_eq!(shards.len(), n_slots, "one canonical shard per slot");
+        assert!(
+            (1..=n_slots).contains(&active),
+            "active workers {active} must be in 1..={n_slots}"
+        );
         self.seq += 1;
         let seq = self.seq;
-        let p = shards.len();
-        for (tx, shard) in self.job_txs.iter().zip(shards) {
-            tx.send(Job::Run {
-                seq,
-                exe: exe.clone(),
-                params: params.clone(),
-                shard,
-                microbatch,
-            })
-            .map_err(|_| anyhow!("worker pool shut down"))?;
+        let assignment = super::elastic::assign_slots(n_slots, active);
+        let mut shards: Vec<Option<Vec<usize>>> = shards.into_iter().map(Some).collect();
+        for (w, slot_ids) in assignment.iter().enumerate() {
+            let slots: Vec<(usize, Vec<usize>)> = slot_ids
+                .iter()
+                .map(|&s| (s, shards[s].take().expect("each slot assigned exactly once")))
+                .collect();
+            self.job_txs[w]
+                .send(Job::Run {
+                    seq,
+                    exe: exe.clone(),
+                    params: params.clone(),
+                    slots,
+                    microbatch,
+                })
+                .map_err(|_| anyhow!("worker pool shut down"))?;
         }
-        let mut outs: Vec<Option<WorkerOut>> = (0..p).map(|_| None).collect();
+        let mut outs: Vec<Option<WorkerOut>> = (0..n_slots).map(|_| None).collect();
         let mut first_err: Option<anyhow::Error> = None;
-        for _ in 0..p {
+        for _ in 0..active {
             // discard stragglers from an earlier update that errored out
             // mid-dispatch — only this update's seq counts. Poll with a
             // timeout so a panicked worker (which will never reply, while
             // its siblings keep the channel open) surfaces as an error
             // instead of a permanent hang.
-            let (w, res) = loop {
+            let res = loop {
                 match self.res_rx.recv_timeout(Duration::from_millis(100)) {
-                    Ok((w, s, res)) => {
+                    Ok((_, s, res)) => {
                         if s == seq {
-                            break (w, res);
+                            break res;
                         }
                     }
                     Err(RecvTimeoutError::Timeout) => {
@@ -159,7 +207,11 @@ impl<'scope> Engine<'scope> {
                 }
             };
             match res {
-                Ok(out) => outs[w] = Some(out),
+                Ok(slot_outs) => {
+                    for (slot, out) in slot_outs {
+                        outs[slot] = Some(out);
+                    }
+                }
                 Err(e) => {
                     first_err.get_or_insert(e);
                 }
@@ -170,7 +222,7 @@ impl<'scope> Engine<'scope> {
         }
         Ok(outs
             .into_iter()
-            .map(|o| o.expect("every worker replies exactly once"))
+            .map(|o| o.expect("every slot is produced exactly once"))
             .collect())
     }
 
@@ -201,7 +253,7 @@ fn worker_loop<'scope, 'env: 'scope>(
     index: usize,
     scope: &'scope Scope<'scope, 'env>,
     jobs: Receiver<Job>,
-    results: Sender<(usize, u64, Result<WorkerOut>)>,
+    results: Sender<(usize, u64, Result<Vec<(usize, WorkerOut)>>)>,
     data: &'env TrainData,
     specs: &'env [ParamSpec],
 ) -> (PhaseTimers, WorkspaceStats) {
@@ -209,28 +261,51 @@ fn worker_loop<'scope, 'env: 'scope>(
     let mut acc = GradAccumulator::new(specs);
     let mut timers = PhaseTimers::new();
     // one arena for the worker's lifetime: scratch, packed weights and
-    // recycled grad sets persist across every dispatch
+    // recycled grad sets persist across every dispatch — and across
+    // parked stretches, so a reactivated worker's caches are still warm
     let mut ws = Workspace::new();
+    let mut poisoned = false;
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Finish => break,
-            Job::Run { seq, exe, params, shard, microbatch } => {
-                let out = run_shard(
-                    &prefetcher,
-                    &mut acc,
-                    &mut timers,
-                    &mut ws,
-                    data,
-                    &exe,
-                    &params,
-                    &shard,
-                    microbatch,
-                    specs,
-                );
+            Job::Poison => poisoned = true,
+            Job::Run { seq, exe, params, slots, microbatch } => {
+                if poisoned {
+                    panic!("injected fault: worker {index} activated while poisoned");
+                }
+                let mut slot_outs = Vec::with_capacity(slots.len());
+                let mut failure: Option<anyhow::Error> = None;
+                for (slot, shard) in &slots {
+                    // each slot runs its own accumulator lifecycle, so a
+                    // slot's gradient never depends on which worker (or
+                    // how many siblings) computed the others
+                    match run_shard(
+                        &prefetcher,
+                        &mut acc,
+                        &mut timers,
+                        &mut ws,
+                        data,
+                        &exe,
+                        &params,
+                        shard,
+                        microbatch,
+                        specs,
+                    ) {
+                        Ok(out) => slot_outs.push((*slot, out)),
+                        Err(e) => {
+                            failure = Some(e);
+                            break;
+                        }
+                    }
+                }
                 // release the params snapshot *before* replying so the
                 // coordinator's post-barrier make_mut stays copy-free
                 drop(params);
                 drop(exe);
+                let out = match failure {
+                    Some(e) => Err(e),
+                    None => Ok(slot_outs),
+                };
                 if results.send((index, seq, out)).is_err() {
                     break;
                 }
@@ -254,7 +329,7 @@ fn run_shard(
     specs: &[ParamSpec],
 ) -> Result<WorkerOut> {
     if shard.is_empty() {
-        // idle worker this step (more workers than samples): zero-weight
+        // empty slot this step (more slots than samples): zero-weight
         // contribution, all-reduce ignores it
         return Ok(WorkerOut {
             grads: ParamSet::zeros_like(specs),
@@ -344,7 +419,7 @@ mod tests {
         // pool: same shards through two real threads
         let pooled: Vec<WorkerOut> = std::thread::scope(|s| {
             let mut engine = Engine::start(s, 2, &data, &rt.entry.params);
-            let outs = engine.dispatch(&exe, &params, shards.clone(), 4).unwrap();
+            let outs = engine.dispatch(&exe, &params, shards.clone(), 4, 2).unwrap();
             engine.shutdown();
             outs
         });
@@ -366,13 +441,13 @@ mod tests {
         let params = Arc::new(ParamSet::init(&rt.entry.params, 0));
         std::thread::scope(|s| {
             let mut engine = Engine::start(s, 3, &data, &rt.entry.params);
-            // 4 samples over 3 workers: last worker idles? (4 = 2+1+1)
+            // 4 samples over 3 slots: last slot idles? (4 = 2+1+1)
             let shards = crate::data::shard::shard_batch(&[0, 1, 2, 3], 3);
-            let outs = engine.dispatch(&exe, &params, shards, 4).unwrap();
+            let outs = engine.dispatch(&exe, &params, shards, 4, 3).unwrap();
             assert_eq!(outs.len(), 3);
             // a second dispatch with an all-empty tail still works
             let shards = crate::data::shard::shard_batch(&[0], 3);
-            let outs = engine.dispatch(&exe, &params, shards, 4).unwrap();
+            let outs = engine.dispatch(&exe, &params, shards, 4, 3).unwrap();
             assert_eq!(outs[1].micro_sq_norms.len(), 0);
             assert_eq!(outs[2].loss, 0.0);
             let (timers, ws_stats) = engine.shutdown();
@@ -393,7 +468,7 @@ mod tests {
             let batch: Vec<usize> = (0..16).collect();
             for _ in 0..3 {
                 let shards = crate::data::shard::shard_batch(&batch, 2);
-                engine.dispatch(&exe, &params, shards, 8).unwrap();
+                engine.dispatch(&exe, &params, shards, 8, 2).unwrap();
             }
             engine.shutdown()
         });
@@ -406,5 +481,72 @@ mod tests {
         assert_eq!(ws_stats.pack_count, 2, "one pack per worker for a frozen ParamSet");
         assert!(ws_stats.pack_hits >= 4);
         assert!(ws_stats.alloc_bytes > 0);
+    }
+
+    /// The elastic core claim, at engine granularity: slot outputs are a
+    /// pure function of (params, slot contents, microbatch) — bitwise
+    /// identical for every active count, including counts that make one
+    /// worker compute several slots.
+    #[test]
+    fn slot_outputs_are_bitwise_independent_of_active_count() {
+        let data = tiny_data();
+        let rt = ModelRuntime::reference_classifier("ref", IMG_LEN, 4, &[4, 8], 16);
+        let exe = rt.executable(StepKind::Train, 4).unwrap();
+        let params = Arc::new(ParamSet::init(&rt.entry.params, 3));
+        let batch: Vec<usize> = (0..16).collect();
+        let shards = crate::data::shard::shard_batch(&batch, 4);
+
+        let run = |active: usize| -> Vec<(u64, Vec<u32>)> {
+            std::thread::scope(|s| {
+                let mut engine = Engine::start(s, 4, &data, &rt.entry.params);
+                let outs = engine
+                    .dispatch(&exe, &params, shards.clone(), 4, active)
+                    .unwrap();
+                engine.shutdown();
+                outs.iter()
+                    .map(|o| {
+                        (
+                            o.loss.to_bits(),
+                            o.grads.bufs.iter().flatten().map(|v| v.to_bits()).collect(),
+                        )
+                    })
+                    .collect()
+            })
+        };
+
+        let fixed_pool = run(4); // the PR-4 behavior: every worker active
+        for active in 1..4 {
+            assert_eq!(run(active), fixed_pool, "active={active} must match the fixed pool");
+        }
+    }
+
+    /// Parked workers keep their prefetchers and arenas; reactivating one
+    /// after idle steps must not surface a stale shard.
+    #[test]
+    fn reactivated_worker_consumes_fresh_shards() {
+        let data = tiny_data();
+        let rt = ModelRuntime::reference_classifier("ref", IMG_LEN, 4, &[4, 8], 16);
+        let exe = rt.executable(StepKind::Train, 4).unwrap();
+        let params = Arc::new(ParamSet::init(&rt.entry.params, 5));
+        let batch: Vec<usize> = (0..16).collect();
+        let shards = crate::data::shard::shard_batch(&batch, 4);
+
+        std::thread::scope(|s| {
+            let mut engine = Engine::start(s, 4, &data, &rt.entry.params);
+            // all workers warm
+            let all = engine.dispatch(&exe, &params, shards.clone(), 4, 4).unwrap();
+            // park workers 1..4 for three steps
+            for _ in 0..3 {
+                engine.dispatch(&exe, &params, shards.clone(), 4, 1).unwrap();
+            }
+            // reactivate: worker 3's slot output must be bitwise the same
+            // as when it was warm (params unchanged)
+            let back = engine.dispatch(&exe, &params, shards.clone(), 4, 4).unwrap();
+            for (a, b) in all.iter().zip(&back) {
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+                assert_eq!(a.grads.bufs, b.grads.bufs, "reactivated slot grads went stale");
+            }
+            engine.shutdown();
+        });
     }
 }

@@ -7,6 +7,7 @@
 //!   per data-parallel replica, with prefetching).
 //! * [`accumulate`] — gradient accumulation (Eq. 5 / §4.3).
 //! * [`allreduce`] — naive/ring/tree replica gradient reduction.
+//! * [`elastic`] — batch-driven worker activation (slots, ratchet policy).
 //! * [`dataset`] — unified image/LM gather interface.
 //! * [`eval`] — padded test-set evaluation.
 
@@ -15,6 +16,7 @@ pub mod allreduce;
 pub mod checkpoint;
 pub mod controller;
 pub mod dataset;
+pub mod elastic;
 pub mod engine;
 pub mod eval;
 
@@ -22,5 +24,6 @@ pub use accumulate::GradAccumulator;
 pub use allreduce::{allreduce_mean, allreduce_params, Algorithm};
 pub use controller::{clamp_batch, train, TrainerConfig};
 pub use dataset::{GatherBufs, TrainData};
+pub use elastic::{assign_slots, ElasticConfig, ElasticPolicy};
 pub use engine::{Engine, WorkerOut};
 pub use eval::{evaluate, EvalResult};

@@ -324,6 +324,50 @@ mod tests {
         });
     }
 
+    /// Elastic-idle regression (ISSUE 5): a worker's prefetcher sits idle
+    /// for k steps while the worker is parked, then serves again on
+    /// reactivation. Every delivered buffer must reflect exactly the
+    /// request that produced it — the recycled buffers from before the
+    /// gap (smaller pad, different indices) must never leak stale tails
+    /// or stale shards into the post-gap deliveries.
+    #[test]
+    fn prefetcher_serves_fresh_data_after_an_idle_gap() {
+        std::thread::scope(|s| {
+            let pf = Prefetcher::spawn(s, &ScalarData);
+            // pre-gap burst at pad 2, fully drained (engine workers always
+            // drain what they request before parking)
+            for k in 0..3usize {
+                pf.request(vec![k], 2);
+            }
+            for k in 0..3usize {
+                let b = pf.next();
+                assert_eq!(b.x_f32, vec![k as f32, -1.0]);
+                pf.recycle(b);
+            }
+            // ...idle gap: no requests in flight, both buffers recycled...
+            // reactivation burst: new indices, larger pad
+            for k in 10..13usize {
+                pf.request(vec![k, k + 1], 4);
+            }
+            for k in 10..13usize {
+                let b = pf.next();
+                assert_eq!(
+                    b.x_f32,
+                    vec![k as f32, (k + 1) as f32, -1.0, -1.0],
+                    "stale pre-gap shard leaked through the idle gap"
+                );
+                assert_eq!(b.y, vec![k as i32, (k + 1) as i32, -1, -1]);
+                pf.recycle(b);
+            }
+            // and shrinking again is just as clean
+            pf.request(vec![7], 1);
+            let b = pf.next();
+            assert_eq!(b.x_f32, vec![7.0]);
+            assert_eq!(b.y, vec![7]);
+            pf.recycle(b);
+        });
+    }
+
     #[test]
     fn prefetcher_shuts_down_cleanly_on_drop() {
         std::thread::scope(|s| {

@@ -165,6 +165,7 @@ mod tests {
                 test_loss: 1.0,
                 test_error: e,
                 iterations: 1,
+                active_workers: 1,
                 wall_secs: 0.0,
             });
         }

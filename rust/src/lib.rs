@@ -9,7 +9,9 @@
 //!   (interval / gradient-variance / gradient-diversity) with the
 //!   effective-learning-rate coupling invariant, gradient accumulation, a
 //!   worker-pool execution engine (one thread per data-parallel replica,
-//!   prefetching, all-reduce), checkpoint/resume, a runtime with a
+//!   prefetching, all-reduce, and elastic activation that recruits
+//!   workers as the governed batch grows — bitwise identical at every
+//!   active count), checkpoint/resume, a runtime with a
 //!   per-batch-size executable cache (PJRT artifacts or the pure-Rust
 //!   reference backend), a GPU-cluster performance simulator, the
 //!   experiment harnesses that regenerate every table and figure of the

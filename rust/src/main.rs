@@ -106,7 +106,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("lr-decay", "0.75", "LR decay per interval")
         .opt("warmup", "0", "LR warmup epochs (Goyal et al.)")
         .opt("warmup-scale", "1.0", "warmup target scale (batch/base-batch)")
-        .opt("workers", "1", "data-parallel replica threads")
+        .opt("workers", "1", "data-parallel replica threads (fixed pool)")
+        .flag("elastic", "scale active workers with the governed batch (DESIGN.md §10)")
+        .opt("max-workers", "4", "elastic: worker threads spawned (activation cap)")
+        .opt("samples-per-worker", "256", "elastic: target per-worker share of the batch")
         .opt("allreduce", "ring", "naive|ring|tree")
         .opt("max-microbatch", "0", "device memory cap (0 = none)")
         .opt("seed", "0", "PRNG seed")
@@ -115,6 +118,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("checkpoint-dir", "", "save checkpoints here (\"\" = off)")
         .opt("checkpoint-every", "1", "epochs between checkpoints")
         .opt("resume", "", "resume from this checkpoint file (\"\" = fresh run)")
+        .opt("report-out", "", "also write the JSON report line to this file")
         .flag("help", "show usage");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.usage());
@@ -136,6 +140,18 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let dataset = DatasetChoice::from_name(&a.str("dataset"))?;
     let mut job = JobConfig::new(&a.str("model"), dataset.clone(), policy, a.usize("epochs")?);
     job.trainer.workers = a.usize("workers")?;
+    if a.has_flag("elastic") {
+        if job.trainer.workers != 1 {
+            eprintln!(
+                "--elastic: ignoring --workers {} — the elastic pool is sized by \
+                 --max-workers",
+                job.trainer.workers
+            );
+        }
+        job.trainer = job
+            .trainer
+            .with_elastic(a.usize("max-workers")?, a.usize("samples-per-worker")?);
+    }
     job.trainer.seed = a.u64("seed")?;
     job.trainer.allreduce = allreduce_from_name(&a.str("allreduce"))?;
     let cap = a.usize("max-microbatch")?;
@@ -212,11 +228,19 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let (train_data, test_data) = load_dataset(&dataset);
     let (hist, timers) = train(&rt, &job.trainer, governor.as_mut(), &train_data, &test_data)?;
 
-    println!("\nepoch  batch    lr        train-loss  test-loss  test-err  iters  secs");
+    println!("\nepoch  batch  act    lr        train-loss  test-loss  test-err  iters  secs");
     for e in &hist.epochs {
         println!(
-            "{:>5}  {:>6}  {:<8.5} {:>10.4}  {:>9.4}  {:>8.4}  {:>5}  {:>5.1}",
-            e.epoch, e.batch, e.lr, e.train_loss, e.test_loss, e.test_error, e.iterations, e.wall_secs
+            "{:>5}  {:>6}  {:>3}  {:<8.5} {:>10.4}  {:>9.4}  {:>8.4}  {:>5}  {:>5.1}",
+            e.epoch,
+            e.batch,
+            e.active_workers,
+            e.lr,
+            e.train_loss,
+            e.test_loss,
+            e.test_error,
+            e.iterations,
+            e.wall_secs
         );
     }
     println!(
@@ -233,11 +257,36 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     // no completed epoch ⇒ best_test_error() is +inf, which is not JSON
     let best = hist.best_test_error();
     let best_json = if best.is_finite() { Json::num(best) } else { Json::Null };
+    // elasticity accounting: the spawned pool, the per-epoch activation
+    // trace, and mean occupancy (active/spawned averaged over epochs)
+    let pool = job
+        .trainer
+        .elastic
+        .as_ref()
+        .map(|e| e.max_workers)
+        .unwrap_or(job.trainer.workers);
+    let actives: Vec<usize> = hist.epochs.iter().map(|e| e.active_workers).collect();
+    let occupancy = if hist.epochs.is_empty() || pool == 0 {
+        0.0
+    } else {
+        hist.epochs
+            .iter()
+            .map(|e| e.active_workers as f64 / pool as f64)
+            .sum::<f64>()
+            / hist.epochs.len() as f64
+    };
     let report = Json::obj(vec![
         ("report", Json::str("train")),
         ("model", Json::str(&job.model)),
         ("governor", Json::str(governor.name())),
-        ("workers", Json::num(job.trainer.workers as f64)),
+        ("workers", Json::num(pool as f64)),
+        ("elastic", Json::Bool(job.trainer.elastic.is_some())),
+        ("active_workers", Json::arr_usize(&actives)),
+        ("worker_occupancy", Json::num(occupancy)),
+        // the batch actually trained last (post-clamp); the governor's own
+        // (pre-clamp) view is decided_batch(), which can exceed it on
+        // datasets smaller than the schedule's tail
+        ("final_batch", Json::num(hist.epochs.last().map(|e| e.batch).unwrap_or(0) as f64)),
         ("epochs", Json::num(hist.epochs.len() as f64)),
         ("best_test_error", best_json),
         ("diverged", Json::Bool(hist.diverged)),
@@ -245,7 +294,13 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         ("pack_hit_rate", Json::num(wstats.hit_rate())),
         ("alloc_bytes_steady_state", Json::num(wstats.alloc_bytes as f64)),
     ]);
-    println!("{report}");
+    let rendered = report.to_string();
+    println!("{rendered}");
+    let report_out = a.str("report-out");
+    if !report_out.is_empty() {
+        std::fs::write(&report_out, &rendered)?;
+        eprintln!("train report written to {report_out}");
+    }
     Ok(())
 }
 

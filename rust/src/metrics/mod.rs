@@ -103,6 +103,9 @@ pub struct EpochRecord {
     pub test_loss: f64,
     pub test_error: f64,
     pub iterations: usize,
+    /// engine workers activated for this epoch's updates (== the pool
+    /// size for fixed runs; ratchets with the batch for elastic runs)
+    pub active_workers: usize,
     pub wall_secs: f64,
 }
 
@@ -210,6 +213,40 @@ mod tests {
         assert_eq!(run.count("w0/fwd_bwd"), 1);
     }
 
+    /// The elastic engine merges timers from workers that sat out whole
+    /// epochs (or the whole run): empty per-worker timers must merge to
+    /// nothing — no phantom `w{i}/` keys, no total drift — and the
+    /// report's BTreeMap ordering must not depend on merge order.
+    #[test]
+    fn merge_prefixed_is_stable_for_idle_workers() {
+        let mut active = PhaseTimers::new();
+        active.add("fwd_bwd", Duration::from_millis(8));
+        let idle = PhaseTimers::new();
+
+        let mut run_a = PhaseTimers::new();
+        run_a.merge(&active);
+        run_a.merge_prefixed("w0/", &active);
+        run_a.merge(&idle);
+        run_a.merge_prefixed("w1/", &idle);
+
+        // idle merged first — same result either way
+        let mut run_b = PhaseTimers::new();
+        run_b.merge(&idle);
+        run_b.merge_prefixed("w1/", &idle);
+        run_b.merge(&active);
+        run_b.merge_prefixed("w0/", &active);
+
+        assert_eq!(run_a.total("fwd_bwd"), Duration::from_millis(8));
+        assert_eq!(run_a.count("w1/fwd_bwd"), 0, "idle worker adds no keys");
+        assert_eq!(run_a.report(), run_b.report(), "merge order must not leak into the report");
+        assert_eq!(
+            run_a.phases().count(),
+            2,
+            "only flat + w0/ entries exist: {:?}",
+            run_a.phases().map(|(k, _, _)| k.to_string()).collect::<Vec<_>>()
+        );
+    }
+
     #[test]
     fn time_closure_returns_value() {
         let mut t = PhaseTimers::new();
@@ -230,6 +267,7 @@ mod tests {
                 test_loss: 1.0,
                 test_error: err,
                 iterations: 10,
+                active_workers: 1,
                 wall_secs: 1.0,
             });
         }

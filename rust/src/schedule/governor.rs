@@ -36,6 +36,17 @@ pub trait BatchGovernor {
     /// Effective batch size in force for `epoch`.
     fn batch_for_epoch(&mut self, epoch: usize) -> usize;
 
+    /// The governor's current post-decision batch, readable without
+    /// advancing its state — the pre-dispatch seam reports and tooling
+    /// consult. For schedule-driven governors this is the last
+    /// [`BatchGovernor::batch_for_epoch`] decision (0 before the first);
+    /// for data-driven governors it is the live controller batch, which
+    /// [`BatchGovernor::observe`] may advance mid-epoch ahead of the next
+    /// epoch's `batch_for_epoch`. Note the training loop clamps decisions
+    /// to the dataset (`coordinator::controller::clamp_batch`), so the
+    /// batch actually dispatched can be smaller.
+    fn decided_batch(&self) -> usize;
+
     /// Learning rate at (epoch, iter) — the coupling half of the paper's
     /// effective-LR contract. Data-driven governors typically return a
     /// flat (or warmup-only) schedule: batch growth *is* the decay (§3.1).
@@ -65,11 +76,13 @@ pub trait BatchGovernor {
 #[derive(Debug, Clone)]
 pub struct IntervalGovernor {
     pub policy: AdaBatchPolicy,
+    /// last `batch_for_epoch` decision (0 before the first)
+    decided: usize,
 }
 
 impl IntervalGovernor {
     pub fn new(policy: AdaBatchPolicy) -> Self {
-        IntervalGovernor { policy }
+        IntervalGovernor { policy, decided: 0 }
     }
 }
 
@@ -79,7 +92,12 @@ impl BatchGovernor for IntervalGovernor {
     }
 
     fn batch_for_epoch(&mut self, epoch: usize) -> usize {
-        self.policy.batch.batch_at(epoch)
+        self.decided = self.policy.batch.batch_at(epoch);
+        self.decided
+    }
+
+    fn decided_batch(&self) -> usize {
+        self.decided
     }
 
     fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
@@ -126,6 +144,10 @@ impl BatchGovernor for VarianceGovernor {
     }
 
     fn batch_for_epoch(&mut self, _epoch: usize) -> usize {
+        self.controller.current_batch()
+    }
+
+    fn decided_batch(&self) -> usize {
         self.controller.current_batch()
     }
 
@@ -216,6 +238,10 @@ impl BatchGovernor for DiversityGovernor {
         self.current
     }
 
+    fn decided_batch(&self) -> usize {
+        self.current
+    }
+
     fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
         self.lr.lr_at(epoch, iter, iters_per_epoch)
     }
@@ -286,8 +312,10 @@ mod tests {
         let mut g = IntervalGovernor::new(policy.clone());
         assert_eq!(g.name(), "adabatch");
         assert!(!g.wants_stats());
+        assert_eq!(g.decided_batch(), 0, "no decision taken yet");
         for e in [0usize, 19, 20, 40, 99] {
             assert_eq!(g.batch_for_epoch(e), policy.batch.batch_at(e));
+            assert_eq!(g.decided_batch(), policy.batch.batch_at(e), "post-decision batch exposed");
             assert_eq!(g.lr_coupling(e, 0, 100), policy.at(e, 0, 100).lr);
         }
         assert_eq!(g.ladder(100), vec![128, 256, 512, 1024, 2048]);
@@ -310,6 +338,9 @@ mod tests {
         // noise floor reached: SNR far below threshold for a full window
         g.observe(stats(1e-6, 10.0));
         g.observe(stats(1e-6, 10.0));
+        // data-driven governors expose the LIVE batch: observe() already
+        // grew it, before the next epoch's batch_for_epoch consults it
+        assert_eq!(g.decided_batch(), 64, "data-driven growth is visible pre-dispatch");
         assert_eq!(g.batch_for_epoch(1), 64);
         assert_eq!(g.decisions(), 1);
         // ladder enumerates everything reachable up to the cap

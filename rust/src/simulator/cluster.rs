@@ -50,7 +50,15 @@ impl ClusterModel {
     /// Microbatches smaller than the fleet leave GPUs idle — exactly the
     /// small-batch scaling pathology the paper motivates with (§3.2).
     pub fn epoch_cost(&self, w: &Workload, r: usize) -> EpochCost {
-        let active = self.gpus.min(r.max(1));
+        self.epoch_cost_active(w, r, self.gpus)
+    }
+
+    /// Cost of one epoch at batch `r` with an explicit `active` device
+    /// count — the elastic engine's model: parked devices contribute no
+    /// compute and sit out the all-reduce (fewer participants, smaller
+    /// latency term), while active ones carry `r / active` samples each.
+    pub fn epoch_cost_active(&self, w: &Workload, r: usize, active: usize) -> EpochCost {
+        let active = active.clamp(1, self.gpus).min(r.max(1));
         let per_gpu = r.div_ceil(active);
         let updates = (w.n_samples / r.max(1)).max(1) as f64;
         let fwd = updates * self.gpu.fwd_time(w.flops_per_sample, per_gpu);
@@ -69,6 +77,51 @@ impl ClusterModel {
             acc.comm += c.comm;
         }
         acc
+    }
+
+    /// Total cost of `epochs` epochs under a batch schedule with
+    /// **elastic** worker scaling, driven by the *real*
+    /// [`ElasticPolicy`](crate::coordinator::elastic::ElasticPolicy) (one
+    /// definition of the ratchet — the engine's rule and this prediction
+    /// cannot drift apart) — the predicted side of the `bench_runtime`
+    /// predicted-vs-measured comparison.
+    pub fn elastic_schedule_cost(
+        &self,
+        w: &Workload,
+        schedule: &BatchSchedule,
+        samples_per_worker: usize,
+        epochs: usize,
+    ) -> EpochCost {
+        let mut policy = crate::coordinator::elastic::ElasticPolicy::new(
+            crate::coordinator::elastic::ElasticConfig {
+                max_workers: self.gpus,
+                samples_per_worker,
+            },
+        );
+        let mut acc = EpochCost::default();
+        for e in 0..epochs {
+            let r = schedule.batch_at(e);
+            let c = self.epoch_cost_active(w, r, policy.decide(r));
+            acc.fwd += c.fwd;
+            acc.bwd += c.bwd;
+            acc.comm += c.comm;
+        }
+        acc
+    }
+
+    /// Predicted speedup of an elastic run over a single always-active
+    /// device walking the same schedule — the bench_runtime acceptance
+    /// quantity (elastic must beat fixed-1 once batches are large).
+    pub fn elastic_speedup(
+        &self,
+        w: &Workload,
+        schedule: &BatchSchedule,
+        samples_per_worker: usize,
+        epochs: usize,
+    ) -> f64 {
+        let fixed1 = ClusterModel::new(self.gpu.clone(), self.interconnect.clone(), 1)
+            .schedule_cost(w, schedule, epochs);
+        fixed1.total() / self.elastic_schedule_cost(w, schedule, samples_per_worker, epochs).total()
     }
 
     /// Speedup of `schedule` over `baseline` across `epochs` (the Fig. 3
@@ -151,6 +204,52 @@ mod tests {
         // batch 2 on 4 GPUs: only 2 active; per-GPU microbatch 1
         let cost = c.epoch_cost(&w, 2);
         assert!(cost.total() > c.epoch_cost(&w, 128).total());
+    }
+
+    #[test]
+    fn full_activation_matches_legacy_epoch_cost() {
+        let c = cluster(4);
+        let w = workload();
+        for r in [2usize, 128, 1024, 4096] {
+            let a = c.epoch_cost(&w, r);
+            let b = c.epoch_cost_active(&w, r, 4);
+            assert_eq!(a.total(), b.total(), "epoch_cost must be the active=gpus case");
+        }
+    }
+
+    #[test]
+    fn elastic_tracks_fixed_extremes() {
+        let c = cluster(4);
+        let w = workload();
+        let schedule = BatchSchedule::doubling(128, 20);
+        // samples_per_worker so large the policy never recruits a second
+        // GPU: elastic degenerates to the 1-GPU cluster exactly
+        let one = cluster(1).schedule_cost(&w, &schedule, 100);
+        let never = c.elastic_schedule_cost(&w, &schedule, usize::MAX, 100);
+        assert_eq!(one.total(), never.total());
+        // samples_per_worker 1: everything runs fully activated
+        let all = c.schedule_cost(&w, &schedule, 100);
+        let always = c.elastic_schedule_cost(&w, &schedule, 1, 100);
+        assert_eq!(all.total(), always.total());
+    }
+
+    #[test]
+    fn elastic_speedup_beats_fixed_one_on_a_doubling_schedule() {
+        // the governor walks 128 → large; once batches pass
+        // samples_per_worker the extra GPUs kick in and the elastic run
+        // pulls ahead of the single always-active device
+        let c = cluster(4);
+        let w = workload();
+        let schedule = BatchSchedule::doubling(128, 20);
+        let s = c.elastic_speedup(&w, &schedule, 256, 100);
+        assert!(s > 1.2, "predicted elastic speedup {s} too small");
+        // and it can never beat the impossible: fully-active from epoch 0
+        let all = c.schedule_cost(&w, &schedule, 100);
+        let elastic = c.elastic_schedule_cost(&w, &schedule, 256, 100);
+        assert!(
+            elastic.fwd + elastic.bwd >= all.fwd + all.bwd,
+            "compute time with fewer active GPUs cannot be lower"
+        );
     }
 
     #[test]

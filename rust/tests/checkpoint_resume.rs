@@ -237,6 +237,73 @@ fn resume_with_fresh_workspaces_matches_long_lived_run_bitwise() {
     let _ = std::fs::remove_dir_all(&dir_resumed);
 }
 
+/// ISSUE 5: checkpoint/resume across an elasticity change. The
+/// uninterrupted elastic run checkpoints at epoch 1 while only 2 of its
+/// 4 workers are active; the resumed run restarts from that checkpoint
+/// with the same `max_workers = 4` elastic config and immediately
+/// ratchets to 4 active workers (the resumed epoch's batch demands
+/// them). Because the reduction is over fixed canonical slots, the
+/// worker-count change is invisible to the numerics: trajectory and
+/// final checkpoint are bitwise equal to the uninterrupted run.
+#[test]
+fn elastic_resume_across_worker_count_change_matches_uninterrupted_bitwise() {
+    let (train_d, test_d) = small_images();
+    // native 4 so the epoch-0 batch of 16 shards across 4 slots
+    let rt = ModelRuntime::reference_classifier(
+        "ref_linear",
+        IMG_LEN,
+        4,
+        &[4, 8, 16, 32, 64],
+        64,
+    );
+    let epochs = 4;
+    let (dir_full, dir_resumed) = (tmpdir("elastic_full"), tmpdir("elastic_resumed"));
+
+    // doubling 16 → 32 with samples_per_worker 8: active walks 2 → 4
+    let cfg = TrainerConfig::new(epochs)
+        .with_seed(31)
+        .with_elastic(4, 8)
+        .with_checkpoints(&dir_full, 1);
+    let mut gov = doubling_gov();
+    let (hist_full, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert!(!hist_full.diverged);
+    let actives: Vec<usize> = hist_full.epochs.iter().map(|e| e.active_workers).collect();
+    assert_eq!(actives, vec![2, 2, 4, 4], "the elastic walk this test depends on");
+
+    let cfg = TrainerConfig::new(epochs)
+        .with_seed(31)
+        .with_elastic(4, 8)
+        .with_checkpoints(&dir_resumed, 1)
+        .with_resume(dir_full.join("epoch0001.ckpt"));
+    let mut gov = doubling_gov();
+    let (hist_res, _) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+    assert_eq!(hist_res.epochs.len(), 2);
+    assert_eq!(
+        hist_res.epochs[0].active_workers, 4,
+        "the resumed policy must ratchet straight to the resumed batch's target"
+    );
+
+    for (a, b) in hist_full.epochs[2..].iter().zip(&hist_res.epochs) {
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.active_workers, b.active_workers);
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "epoch {}", a.epoch);
+        assert_eq!(a.test_error.to_bits(), b.test_error.to_bits(), "epoch {}", a.epoch);
+    }
+    let template = ParamSet::init(&rt.entry.params, 0);
+    let full = Checkpoint::load(&dir_full.join("epoch0003.ckpt"), &template).unwrap();
+    let resumed = Checkpoint::load(&dir_resumed.join("epoch0003.ckpt"), &template).unwrap();
+    assert_eq!(full.params.bufs, resumed.params.bufs, "params must match bitwise");
+    assert_eq!(
+        full.velocity.unwrap().bufs,
+        resumed.velocity.unwrap().bufs,
+        "momentum must match bitwise"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir_full);
+    let _ = std::fs::remove_dir_all(&dir_resumed);
+}
+
 #[test]
 fn checkpoint_timer_is_recorded() {
     let (train_d, test_d) = small_images();

@@ -1,0 +1,207 @@
+//! The elasticity determinism contract (ISSUE 5, DESIGN.md §10).
+//!
+//! The engine always cuts a batch into `max_workers` canonical slots and
+//! reduces the fixed-length slot vector, so *how many* workers execute
+//! the slots is a scheduling choice with zero numerical footprint. These
+//! tests pin that claim at full strength: for random batch/padding
+//! shapes and **every** active count in `1..=max_workers`, one train
+//! step's results — per-slot losses and gradients, the reduced gradient,
+//! and the post-SGD parameters — are bitwise identical across active
+//! counts and identical to the fixed-pool engine (every worker active,
+//! the PR-4 behavior). Runs on the reference backend; no artifacts
+//! needed.
+
+use std::sync::Arc;
+
+use adabatch::coordinator::{allreduce_params, Algorithm, Engine, TrainData};
+use adabatch::data::corpus::LmDataset;
+use adabatch::data::shard::{shard_batch, shard_weights};
+use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use adabatch::optim::param::ParamSet;
+use adabatch::optim::sgd::{Optimizer, SgdMomentum};
+use adabatch::runtime::{ModelRuntime, StepExecutable, StepKind};
+use adabatch::util::propcheck::{self, Triple, UsizeRange};
+
+const MAX_WORKERS: usize = 4;
+const NATIVES: &[usize] = &[4, 8, 16];
+
+fn image_data() -> TrainData {
+    let mut spec = SyntheticSpec::cifar10();
+    spec.n_classes = 4;
+    spec.train_per_class = 16; // 64 samples
+    spec.test_per_class = 2;
+    TrainData::Images(generate(&spec).train)
+}
+
+fn image_rt(kind: usize) -> ModelRuntime {
+    match kind {
+        0 => ModelRuntime::reference_classifier("ref_linear", IMG_LEN, 4, NATIVES, 16),
+        _ => ModelRuntime::reference_mlp("ref_mlp", IMG_LEN, 8, 4, NATIVES, 16),
+    }
+}
+
+/// Everything one train step produces, as bits: per-slot (loss, grads,
+/// micro norms), the slot-weighted reduced gradient, and the parameters
+/// after one SGD step on it.
+type Fingerprint = (Vec<u64>, Vec<Vec<u32>>, Vec<Vec<u64>>, Vec<u32>, Vec<u32>);
+
+fn param_bits(p: &ParamSet) -> Vec<u32> {
+    p.bufs.iter().flatten().map(|v| v.to_bits()).collect()
+}
+
+fn step_fingerprint(
+    rt: &ModelRuntime,
+    data: &TrainData,
+    r: usize,
+    microbatch: usize,
+    active: usize,
+) -> Fingerprint {
+    let exe = rt.executable(StepKind::Train, microbatch).unwrap();
+    let params = Arc::new(ParamSet::init(&rt.entry.params, 42));
+    let batch: Vec<usize> = (0..r).collect();
+    let shards = shard_batch(&batch, MAX_WORKERS);
+    let weights = shard_weights(&shards);
+    let outs = std::thread::scope(|s| {
+        let mut engine = Engine::start(s, MAX_WORKERS, data, &rt.entry.params);
+        let outs = engine
+            .dispatch(&exe, &params, shards.clone(), microbatch, active)
+            .unwrap();
+        engine.shutdown();
+        outs
+    });
+    let losses: Vec<u64> = outs.iter().map(|o| o.loss.to_bits()).collect();
+    let grads: Vec<Vec<u32>> = outs.iter().map(|o| param_bits(&o.grads)).collect();
+    let norms: Vec<Vec<u64>> = outs
+        .iter()
+        .map(|o| o.micro_sq_norms.iter().map(|v| v.to_bits()).collect())
+        .collect();
+    let mut replicas: Vec<ParamSet> = outs.into_iter().map(|o| o.grads).collect();
+    allreduce_params(&mut replicas, &weights, Algorithm::Ring);
+    let reduced = param_bits(&replicas[0]);
+    let mut p = params.as_ref().clone();
+    let mut opt = SgdMomentum::paper_cifar();
+    opt.step(&mut p, &replicas[0], 0.05);
+    (losses, grads, norms, reduced, param_bits(&p))
+}
+
+/// The headline property: random (batch, microbatch, model family) — so
+/// slot sizes are ragged, last microbatches padded, and some slots empty
+/// — and every active count gives the exact fixed-pool bits.
+#[test]
+fn train_step_is_bitwise_invariant_across_active_counts() {
+    let data = image_data();
+    propcheck::check_cases(
+        "elastic train step: active 1..=4 all bitwise equal to the fixed pool",
+        Triple(UsizeRange(1, 48), UsizeRange(0, 2), UsizeRange(0, 1)),
+        16,
+        |&(r, mb_idx, kind)| {
+            let microbatch = NATIVES[mb_idx];
+            let rt = image_rt(kind);
+            let fixed_pool = step_fingerprint(&rt, &data, r, microbatch, MAX_WORKERS);
+            (1..MAX_WORKERS).all(|active| {
+                let fp = step_fingerprint(&rt, &data, r, microbatch, active);
+                if fp != fixed_pool {
+                    eprintln!(
+                        "mismatch at r={r} microbatch={microbatch} kind={kind} active={active}"
+                    );
+                    return false;
+                }
+                true
+            })
+        },
+    );
+}
+
+/// The same contract holds for the token-window (bigram LM) data path —
+/// multi-label samples, i32 inputs.
+#[test]
+fn lm_train_step_is_bitwise_invariant_across_active_counts() {
+    let data = TrainData::Lm(LmDataset::synthetic(3000, 16, 9));
+    assert!(data.len() >= 24, "need enough windows for the shapes below");
+    let rt =
+        ModelRuntime::reference_lm("ref_bigram", adabatch::data::corpus::VOCAB, 16, NATIVES, 16);
+    for (r, mb) in [(24usize, 4usize), (7, 4), (18, 8)] {
+        let fixed_pool = step_fingerprint(&rt, &data, r, mb, MAX_WORKERS);
+        for active in 1..MAX_WORKERS {
+            assert_eq!(
+                step_fingerprint(&rt, &data, r, mb, active),
+                fixed_pool,
+                "lm r={r} mb={mb} active={active}"
+            );
+        }
+    }
+}
+
+/// Elasticity changes mid-run leave the whole trajectory bitwise
+/// unchanged: one long-lived 4-slot engine driven through an
+/// activity walk (park, reactivate, partial activation) with a real
+/// optimizer step after every update produces exactly the parameters of
+/// a fresh fully-active engine per step. This is the engine-level
+/// reactivation check: a worker idled for k steps must come back with
+/// coherent prefetch and workspace state.
+#[test]
+fn activity_walk_with_optimizer_steps_matches_fresh_full_pools_bitwise() {
+    let data = image_data();
+    let rt = image_rt(1);
+    // (active, batch): park down to 1, partially reactivate, full, odd
+    let walk = [(4usize, 32usize), (1, 16), (2, 24), (4, 32), (3, 40)];
+    let microbatch = 8;
+    let exe = rt.executable(StepKind::Train, microbatch).unwrap();
+
+    fn walk_step(
+        engine: &mut Engine<'_>,
+        exe: &Arc<StepExecutable>,
+        active: usize,
+        r: usize,
+        microbatch: usize,
+        params: &mut Arc<ParamSet>,
+    ) -> Vec<u32> {
+        let batch: Vec<usize> = (0..r).collect();
+        let shards = shard_batch(&batch, MAX_WORKERS);
+        let weights = shard_weights(&shards);
+        let outs = engine.dispatch(exe, params, shards, microbatch, active).unwrap();
+        let mut replicas: Vec<ParamSet> = outs.into_iter().map(|o| o.grads).collect();
+        allreduce_params(&mut replicas, &weights, Algorithm::Ring);
+        let mut opt = SgdMomentum::paper_cifar();
+        opt.step(Arc::make_mut(params), &replicas[0], 0.01);
+        param_bits(params)
+    }
+
+    let run = |elastic: bool| -> Vec<Vec<u32>> {
+        let mut params = Arc::new(ParamSet::init(&rt.entry.params, 7));
+        let mut trace = Vec::new();
+        if elastic {
+            // one engine, workers park and reactivate across the walk
+            std::thread::scope(|s| {
+                let mut engine = Engine::start(s, MAX_WORKERS, &data, &rt.entry.params);
+                for &(active, r) in &walk {
+                    trace.push(walk_step(&mut engine, &exe, active, r, microbatch, &mut params));
+                }
+                engine.shutdown();
+            });
+        } else {
+            // fresh fully-active engine for every update
+            for &(_, r) in &walk {
+                std::thread::scope(|s| {
+                    let mut engine = Engine::start(s, MAX_WORKERS, &data, &rt.entry.params);
+                    trace.push(walk_step(
+                        &mut engine,
+                        &exe,
+                        MAX_WORKERS,
+                        r,
+                        microbatch,
+                        &mut params,
+                    ));
+                    engine.shutdown();
+                });
+            }
+        }
+        trace
+    };
+
+    let elastic = run(true);
+    let fresh = run(false);
+    for (i, (a, b)) in elastic.iter().zip(&fresh).enumerate() {
+        assert_eq!(a, b, "step {i}: activity walk changed the parameter trajectory");
+    }
+}

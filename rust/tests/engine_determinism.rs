@@ -107,6 +107,59 @@ fn pool_training_reduces_loss() {
     assert_eq!(hist.epochs[2].batch, 64);
 }
 
+/// ISSUE 5: an elastic run (4 slots, active count ratcheting 2 → 4 with
+/// the doubling batch) is **bitwise identical** to the fixed 4-worker
+/// pool — elasticity is pure scheduling, the fixed-slot reduction keeps
+/// it out of the numerics entirely (DESIGN.md §10).
+#[test]
+fn elastic_run_matches_fixed_pool_run_bitwise() {
+    let (train_d, test_d) = data();
+    let rt = ModelRuntime::reference_classifier("ref_linear", IMG_LEN, 4, &[8, 16, 32, 64], 64);
+    let policy = || {
+        AdaBatchPolicy::new(
+            "det-elastic",
+            BatchSchedule::doubling(32, 2),
+            LrSchedule::step(0.05, 0.75, 2),
+        )
+    };
+
+    let fixed_cfg = TrainerConfig::new(4).with_seed(9).with_workers(4);
+    let mut gov = IntervalGovernor::new(policy());
+    let (fixed, _) = train(&rt, &fixed_cfg, &mut gov, &train_d, &test_d).unwrap();
+
+    // samples_per_worker 16: batch 32 → 2 active, batch 64 → 4 active
+    let elastic_cfg = TrainerConfig::new(4).with_seed(9).with_elastic(4, 16);
+    let mut gov = IntervalGovernor::new(policy());
+    let (elastic, timers) = train(&rt, &elastic_cfg, &mut gov, &train_d, &test_d).unwrap();
+
+    let actives: Vec<usize> = elastic.epochs.iter().map(|e| e.active_workers).collect();
+    assert_eq!(actives, vec![2, 2, 4, 4], "the ratchet walk this test exercises");
+    assert!(fixed.epochs.iter().all(|e| e.active_workers == 4));
+    // workers 2 and 3 were parked for epochs 0–1 but still did epoch 2–3
+    // work; worker 0 carried slots for every epoch
+    assert!(timers.count("w0/fwd_bwd") > timers.count("w3/fwd_bwd"));
+    assert!(timers.count("w3/fwd_bwd") > 0);
+
+    assert_eq!(fixed.epochs.len(), elastic.epochs.len());
+    for (a, b) in fixed.epochs.iter().zip(&elastic.epochs) {
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "epoch {}: elasticity leaked into the train loss",
+            a.epoch
+        );
+        assert_eq!(
+            a.test_loss.to_bits(),
+            b.test_loss.to_bits(),
+            "epoch {}: elasticity leaked into the eval",
+            a.epoch
+        );
+        assert_eq!(a.test_error.to_bits(), b.test_error.to_bits());
+    }
+}
+
 /// ISSUE 4: a long-lived workspace threaded through an optimizer-driven
 /// step sequence — executable ladder transitions (32 → 8, ragged padding,
 /// back to 32) interleaved with weight updates — is bitwise identical to

@@ -1,0 +1,116 @@
+//! Fault injection for the elastic engine (ISSUE 5): a worker that
+//! panics mid-epoch must never deadlock `dispatch` or `shutdown` — the
+//! dispatch barrier polls with a timeout and surfaces the death as an
+//! error, and `shutdown` re-raises the original panic payload instead of
+//! swallowing it. A poisoned worker that is never *activated* (parked by
+//! the elastic policy for the whole run) shuts down cleanly.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use adabatch::coordinator::{Engine, TrainData};
+use adabatch::data::shard::shard_batch;
+use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use adabatch::optim::param::ParamSet;
+use adabatch::runtime::{ModelRuntime, StepKind};
+
+fn tiny() -> (TrainData, ModelRuntime) {
+    let mut spec = SyntheticSpec::cifar10();
+    spec.n_classes = 4;
+    spec.train_per_class = 8; // 32 samples
+    spec.test_per_class = 2;
+    let data = TrainData::Images(generate(&spec).train);
+    let rt = ModelRuntime::reference_classifier("ref_linear", IMG_LEN, 4, &[4, 8], 16);
+    (data, rt)
+}
+
+/// An activated poisoned worker kills its dispatch with an error (no
+/// hang), and the panic payload resurfaces at shutdown.
+#[test]
+fn activated_poisoned_worker_fails_dispatch_then_surfaces_at_shutdown() {
+    let (data, rt) = tiny();
+    let exe = rt.executable(StepKind::Train, 4).unwrap();
+    let params = Arc::new(ParamSet::init(&rt.entry.params, 1));
+    let batch: Vec<usize> = (0..16).collect();
+
+    std::thread::scope(|s| {
+        let mut engine = Engine::start(s, 4, &data, &rt.entry.params);
+        // a healthy update first: the pool works
+        let shards = shard_batch(&batch, 4);
+        engine.dispatch(&exe, &params, shards.clone(), 4, 4).unwrap();
+
+        engine.poison_worker(2).unwrap();
+        let err = engine
+            .dispatch(&exe, &params, shards.clone(), 4, 4)
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("exited mid-update"),
+            "dispatch must surface the dead worker, got: {err:#}"
+        );
+
+        // shutdown re-raises the injected panic instead of dropping it
+        let panicked = catch_unwind(AssertUnwindSafe(|| engine.shutdown()));
+        let payload = panicked.expect_err("shutdown must re-raise the worker panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("injected fault"), "unexpected panic payload: {msg:?}");
+    });
+}
+
+/// The elastic case the tentpole motivates: the policy parks a worker
+/// for the whole run, so its poison never fires — every dispatch
+/// succeeds and shutdown is clean (no panic, sane timers).
+#[test]
+fn parked_poisoned_worker_never_activated_completes_cleanly() {
+    let (data, rt) = tiny();
+    let exe = rt.executable(StepKind::Train, 4).unwrap();
+    let params = Arc::new(ParamSet::init(&rt.entry.params, 2));
+    let batch: Vec<usize> = (0..16).collect();
+
+    std::thread::scope(|s| {
+        let mut engine = Engine::start(s, 4, &data, &rt.entry.params);
+        engine.poison_worker(3).unwrap();
+        // active=2: workers 2 and 3 stay parked; the poisoned one never
+        // receives a Run job
+        for _ in 0..3 {
+            let outs = engine
+                .dispatch(&exe, &params, shard_batch(&batch, 4), 4, 2)
+                .unwrap();
+            assert_eq!(outs.len(), 4, "all slots covered by the active pair");
+        }
+        let (timers, _) = engine.shutdown();
+        assert!(timers.count("w0/fwd_bwd") > 0);
+        assert_eq!(timers.count("w3/fwd_bwd"), 0, "parked worker never executed");
+    });
+}
+
+/// A panic mid-run does not poison *later* pools: after surfacing the
+/// failure, a brand-new engine over the same borrowed dataset works.
+#[test]
+fn pool_death_is_contained_to_its_engine() {
+    let (data, rt) = tiny();
+    let exe = rt.executable(StepKind::Train, 4).unwrap();
+    let params = Arc::new(ParamSet::init(&rt.entry.params, 3));
+    let batch: Vec<usize> = (0..16).collect();
+
+    std::thread::scope(|s| {
+        let mut engine = Engine::start(s, 2, &data, &rt.entry.params);
+        engine.poison_worker(0).unwrap();
+        let _ = engine
+            .dispatch(&exe, &params, shard_batch(&batch, 2), 4, 2)
+            .unwrap_err();
+        let _ = catch_unwind(AssertUnwindSafe(|| engine.shutdown()));
+    });
+    // fresh scope, fresh pool: unaffected
+    std::thread::scope(|s| {
+        let mut engine = Engine::start(s, 2, &data, &rt.entry.params);
+        let outs = engine
+            .dispatch(&exe, &params, shard_batch(&batch, 2), 4, 2)
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        engine.shutdown();
+    });
+}
