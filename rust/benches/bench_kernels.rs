@@ -22,7 +22,8 @@
 
 use adabatch::optim::param::ParamSet;
 use adabatch::runtime::kernels;
-use adabatch::runtime::{HostBatch, RefKind, RefModel, Workspace};
+use adabatch::runtime::{HostBatch, KernelPool, RefKind, RefModel, Workspace};
+use adabatch::util::benchhistory;
 use adabatch::util::benchkit::{black_box, fmt_time, BenchSuite};
 use adabatch::util::json::Json;
 use adabatch::util::rng::Pcg32;
@@ -31,7 +32,91 @@ const IN_DIM: usize = 256;
 const HIDDEN: usize = 128;
 const CLASSES: usize = 10;
 
+/// FNV-1a over the little-endian bit patterns — bitwise, not approximate.
+fn fnv1a(xs: &[f32]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// `--digest <path>`: write timing-free checksums of every kernel's output
+/// on seeded inputs (including a 2-thread-pool vs serial pair) and exit.
+/// CI runs this twice — forced-scalar and auto-detected — and
+/// byte-compares the files: the lane-tree contract (DESIGN.md §8) says
+/// they must be identical.
+fn write_digest(path: &str) {
+    let mut rng = Pcg32::new(0xD16E57);
+    let mut out = String::from("kernel digest v1\n");
+    let pool = KernelPool::new(2);
+    // awkward shapes on purpose: sub-lane, non-multiple-of-8 tails, and
+    // spans crossing every blocking boundary
+    for &(m, n, k) in
+        &[(1usize, 1usize, 1usize), (3, 5, 7), (8, 8, 8), (9, 11, 31), (33, 10, 65), (130, 17, 72)]
+    {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let d: Vec<f32> = (0..m * n).map(|_| rng.normal()).collect();
+        let mut bt = Vec::new();
+        kernels::pack_transpose(&b, k, n, &mut bt);
+
+        let mut c = vec![0.1f32; m * n];
+        kernels::gemm_abt(&a, &bt, &mut c, m, n, k);
+        out.push_str(&format!("gemm_abt {m}x{n}x{k} {:016x}\n", fnv1a(&c)));
+        let mut c_mt = vec![0.1f32; m * n];
+        kernels::gemm_abt_mt(Some(&pool), &a, &bt, &mut c_mt, m, n, k);
+        assert_eq!(c, c_mt, "gemm_abt: 2-thread pool diverged from serial at {m}x{n}x{k}");
+
+        let mut g = vec![0.2f32; k * n];
+        kernels::gemm_atb(&a, &d, &mut g, m, k, n);
+        out.push_str(&format!("gemm_atb {m}x{k}x{n} {:016x}\n", fnv1a(&g)));
+        let mut g_mt = vec![0.2f32; k * n];
+        kernels::gemm_atb_mt(Some(&pool), &a, &d, &mut g_mt, m, k, n);
+        assert_eq!(g, g_mt, "gemm_atb: 2-thread pool diverged from serial at {m}x{k}x{n}");
+
+        let mut cs = vec![0.3f32; n];
+        kernels::col_sum(&d, m, n, &mut cs);
+        out.push_str(&format!("col_sum {m}x{n} {:016x}\n", fnv1a(&cs)));
+
+        let mut act = d.clone();
+        kernels::relu_fwd(&mut act);
+        let mut grad = a[..m * n.min(k)].to_vec();
+        grad.resize(m * n, -0.5);
+        kernels::relu_bwd(&act, &mut grad);
+        out.push_str(&format!("relu {m}x{n} {:016x} {:016x}\n", fnv1a(&act), fnv1a(&grad)));
+
+        let row: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut bc = vec![0.0f32; m * n];
+        kernels::broadcast_rows_into(&row, m, &mut bc);
+        out.push_str(&format!("broadcast {m}x{n} {:016x}\n", fnv1a(&bc)));
+
+        let y: Vec<i32> = (0..m).map(|i| if i % 5 == 4 { -1 } else { (i % n) as i32 }).collect();
+        let mut logits = d.clone();
+        let xo = kernels::softmax_xent_rows(&mut logits, &y, n, 1.0 / m as f32, true)
+            .expect("digest labels are in range");
+        out.push_str(&format!(
+            "softmax {m}x{n} {:016x} loss {:016x}\n",
+            fnv1a(&logits),
+            xo.loss_sum.to_bits()
+        ));
+    }
+    let tail: Vec<f32> = (0..29).map(|_| rng.normal()).collect();
+    out.push_str(&format!("dot_lanes 29 {:08x}\n", kernels::dot_lanes(&tail, &tail).to_bits()));
+    std::fs::write(path, out).expect("write digest file");
+    eprintln!("kernel digest written to {path} (dispatch: {})", kernels::dispatch_name());
+}
+
 fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    if let Some(i) = argv.iter().position(|a| a == "--digest") {
+        let path = argv.get(i + 1).expect("--digest needs a file path");
+        write_digest(path);
+        return;
+    }
     let smoke = std::env::args().any(|a| a == "--smoke");
     if smoke {
         std::env::set_var("ADABATCH_BENCH_FAST", "1");
@@ -135,12 +220,20 @@ fn main() {
     // out separately because small batches are where AdaBatch schedules
     // start and where per-step overhead dominates
     let b32_ns = curve[0].1 * 1e9;
+    let b1024_ns = curve
+        .iter()
+        .find(|&&(bs, _)| bs == 1024)
+        .map(|&(_, per)| per * 1e9)
+        .expect("the curve always includes batch 1024");
     let json = Json::obj(vec![
         ("bench", Json::str("kernels")),
         ("in_dim", Json::num(IN_DIM as f64)),
         ("hidden", Json::num(HIDDEN as f64)),
         ("classes", Json::num(CLASSES as f64)),
+        ("kernel_dispatch", Json::str(kernels::dispatch_name())),
+        ("kernel_threads", Json::num(1.0)),
         ("b32_ns_per_sample", Json::num(b32_ns)),
+        ("b1024_ns_per_sample", Json::num(b1024_ns)),
         ("pack_count", Json::num(wstats.pack_count as f64)),
         ("pack_hit_rate", Json::num(wstats.hit_rate())),
         ("alloc_bytes_steady_state", Json::num(wstats.alloc_bytes as f64)),
@@ -155,6 +248,18 @@ fn main() {
         ),
     ]);
     println!("\n{json}");
+
+    // persist the run into the cross-PR bench trajectory at the repo root
+    let hist_path = benchhistory::history_path("BENCH_kernels.json");
+    let mut record = json.clone();
+    if let Json::Obj(map) = &mut record {
+        map.insert("ts".into(), Json::num(benchhistory::unix_ts() as f64));
+        map.insert("mode".into(), Json::str(if smoke { "smoke" } else { "full" }));
+    }
+    match benchhistory::append(&hist_path, record) {
+        Ok(n) => eprintln!("bench history: {} now holds {n} records", hist_path.display()),
+        Err(e) => eprintln!("bench history: could not append to {}: {e:#}", hist_path.display()),
+    }
 
     // the load-bearing claim: per-sample cost decreases (within noise)
     // as the batch grows — fixed per-call costs amortize
@@ -197,6 +302,42 @@ fn main() {
                 wstats.pack_hits,
             );
             std::process::exit(1);
+        }
+        // the vectorization gate: at batch 1024 the auto-detected path
+        // must beat the most recent scalar b1024 record by ≥ 1.5×. CI
+        // runs the forced-scalar smoke first in the same job, so the
+        // reference is a fresh same-machine measurement (the committed
+        // "bootstrap" estimate only serves until a real record lands).
+        if kernels::dispatch_name() == "scalar" {
+            eprintln!("vectorization gate: skipped (scalar dispatch is the baseline itself)");
+        } else {
+            let scalar_ref = benchhistory::load(&hist_path).ok().and_then(|records| {
+                benchhistory::latest(&records, |r| {
+                    r.get("kernel_dispatch").and_then(Json::as_str) == Some("scalar")
+                        && r.get("b1024_ns_per_sample").and_then(Json::as_f64).is_some()
+                })
+                .and_then(|r| r.get("b1024_ns_per_sample").and_then(Json::as_f64))
+            });
+            match scalar_ref {
+                None => eprintln!(
+                    "vectorization gate: skipped (no scalar b1024 record in {})",
+                    hist_path.display()
+                ),
+                Some(scalar_ns) => {
+                    let speedup = scalar_ns / b1024_ns;
+                    println!(
+                        "vectorization gate: b1024 {b1024_ns:.0} ns/sample vs scalar \
+                         {scalar_ns:.0} ns/sample = {speedup:.2}x (need >= 1.5x)"
+                    );
+                    if speedup < 1.5 {
+                        eprintln!(
+                            "FAIL: vector dispatch is only {speedup:.2}x the scalar path at \
+                             b1024 (>= 1.5x required)"
+                        );
+                        std::process::exit(1);
+                    }
+                }
+            }
         }
     }
 }

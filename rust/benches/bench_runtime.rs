@@ -22,8 +22,10 @@ use adabatch::coordinator::{ElasticConfig, ElasticPolicy, Engine, TrainData};
 use adabatch::data::shard::shard_batch;
 use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
 use adabatch::optim::param::ParamSet;
+use adabatch::runtime::kernels;
 use adabatch::runtime::{plan, ModelRuntime, StepKind};
 use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
+use adabatch::util::benchhistory;
 use adabatch::util::json::Json;
 
 const NATIVES: &[usize] = &[8, 16, 32, 64];
@@ -126,11 +128,20 @@ fn main() -> anyhow::Result<()> {
     }
     let report = Json::obj(vec![
         ("report", Json::str("bench_runtime_elastic")),
+        ("ts", Json::num(benchhistory::unix_ts() as f64)),
+        ("kernel_dispatch", Json::str(kernels::dispatch_name())),
         ("pool", Json::num(MAX_WORKERS as f64)),
         ("samples_per_worker", Json::num(SAMPLES_PER_WORKER as f64)),
         ("rows", Json::Arr(rows)),
     ]);
     println!("\n{report}");
+
+    // persist the run into the cross-PR bench trajectory at the repo root
+    let hist_path = benchhistory::history_path("BENCH_runtime.json");
+    match benchhistory::append(&hist_path, report.clone()) {
+        Ok(n) => eprintln!("bench history: {} now holds {n} records", hist_path.display()),
+        Err(e) => eprintln!("bench history: could not append to {}: {e:#}", hist_path.display()),
+    }
 
     if check_failures.is_empty() {
         println!("\ncheck: elastic beats fixed-1 at every batch >= 1024");

@@ -242,6 +242,9 @@ pub struct ServeConfig {
     pub service_per_sample_us: f64,
     /// served reference architecture (linear | mlp)
     pub arch: ModelArch,
+    /// intra-op kernel threads per inference server (1 = serial kernels;
+    /// bitwise-identical outputs at any setting, DESIGN.md §11)
+    pub kernel_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -263,6 +266,7 @@ impl Default for ServeConfig {
             service_base_us: 300.0,
             service_per_sample_us: 30.0,
             arch: ModelArch::Linear,
+            kernel_threads: 1,
         }
     }
 }
@@ -288,6 +292,9 @@ impl ServeConfig {
         }
         if self.workers == 0 {
             bail!("workers must be > 0");
+        }
+        if self.kernel_threads == 0 {
+            bail!("kernel-threads must be > 0");
         }
         if self.window == 0 {
             bail!("governor window must be > 0");

@@ -79,6 +79,9 @@ pub struct TrainerConfig {
     /// only enough for the governed batch. When set, `workers` is ignored
     /// and the engine's slot count is `max_workers` (DESIGN.md §10).
     pub elastic: Option<ElasticConfig>,
+    /// intra-op kernel threads per worker (1 = serial kernels). Tiled
+    /// GEMMs are bitwise identical at any setting (DESIGN.md §11).
+    pub kernel_threads: usize,
 }
 
 impl TrainerConfig {
@@ -95,6 +98,7 @@ impl TrainerConfig {
             checkpoint_every: 1,
             resume: None,
             elastic: None,
+            kernel_threads: 1,
         }
     }
 
@@ -132,6 +136,12 @@ impl TrainerConfig {
     /// (ratcheting; see [`ElasticPolicy`]).
     pub fn with_elastic(mut self, max_workers: usize, samples_per_worker: usize) -> Self {
         self.elastic = Some(ElasticConfig { max_workers, samples_per_worker });
+        self
+    }
+
+    /// Intra-op kernel threads per worker (0 is normalized to 1).
+    pub fn with_kernel_threads(mut self, n: usize) -> Self {
+        self.kernel_threads = n.max(1);
         self
     }
 }
@@ -251,10 +261,11 @@ pub fn train<G: BatchGovernor + ?Sized>(
     let mut eval_bufs = GatherBufs::default();
 
     let scope_out = std::thread::scope(|scope| -> Result<(PhaseTimers, WorkspaceStats)> {
-        let mut engine = Engine::start(scope, n_slots, train_data, &rt.entry.params);
+        let mut engine =
+            Engine::start_with(scope, n_slots, train_data, &rt.entry.params, cfg.kernel_threads);
         // the controller's own long-lived arena for the eval loop (the
         // serial fallback of DESIGN.md §9's ownership map)
-        let mut eval_ws = Workspace::new();
+        let mut eval_ws = Workspace::with_kernel_threads(cfg.kernel_threads);
         let mut last_batch = 0usize;
         let mut warned_single_micro = false;
         'epochs: for epoch in start_epoch..cfg.epochs {

@@ -112,14 +112,33 @@ impl<'scope> Engine<'scope> {
         data: &'env TrainData,
         specs: &'env [ParamSpec],
     ) -> Engine<'scope> {
+        Engine::start_with(scope, workers, data, specs, 1)
+    }
+
+    /// [`Engine::start`] plus an intra-op kernel thread count: each
+    /// replica worker's workspace gets its own [`KernelPool`] of
+    /// `kernel_threads` workers (1 = serial kernels, the default).
+    ///
+    /// [`KernelPool`]: crate::runtime::KernelPool
+    pub fn start_with<'env: 'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        workers: usize,
+        data: &'env TrainData,
+        specs: &'env [ParamSpec],
+        kernel_threads: usize,
+    ) -> Engine<'scope> {
         assert!(workers > 0, "engine needs at least one worker");
+        assert!(kernel_threads > 0, "engine needs at least one kernel thread");
         let (res_tx, res_rx) = channel();
         let mut job_txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for w in 0..workers {
             let (tx, rx) = channel::<Job>();
             let res_tx = res_tx.clone();
-            handles.push(scope.spawn(move || worker_loop(w, scope, rx, res_tx, data, specs)));
+            handles.push(
+                scope
+                    .spawn(move || worker_loop(w, scope, rx, res_tx, data, specs, kernel_threads)),
+            );
             job_txs.push(tx);
         }
         Engine { job_txs, res_rx, handles, seq: 0 }
@@ -256,6 +275,7 @@ fn worker_loop<'scope, 'env: 'scope>(
     results: Sender<(usize, u64, Result<Vec<(usize, WorkerOut)>>)>,
     data: &'env TrainData,
     specs: &'env [ParamSpec],
+    kernel_threads: usize,
 ) -> (PhaseTimers, WorkspaceStats) {
     let prefetcher = Prefetcher::spawn(scope, data);
     let mut acc = GradAccumulator::new(specs);
@@ -263,7 +283,7 @@ fn worker_loop<'scope, 'env: 'scope>(
     // one arena for the worker's lifetime: scratch, packed weights and
     // recycled grad sets persist across every dispatch — and across
     // parked stretches, so a reactivated worker's caches are still warm
-    let mut ws = Workspace::new();
+    let mut ws = Workspace::with_kernel_threads(kernel_threads);
     let mut poisoned = false;
     while let Ok(job) = jobs.recv() {
         match job {

@@ -30,6 +30,7 @@ use adabatch::coordinator::{train, TrainData};
 use adabatch::data::corpus::LmDataset;
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::experiments::{self, harness::ExpCtx};
+use adabatch::runtime::kernels;
 use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
 use adabatch::schedule::{
     BatchGovernor, BatchSchedule, DiversityGovernor, GradVarianceController, IntervalGovernor,
@@ -107,6 +108,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("warmup", "0", "LR warmup epochs (Goyal et al.)")
         .opt("warmup-scale", "1.0", "warmup target scale (batch/base-batch)")
         .opt("workers", "1", "data-parallel replica threads (fixed pool)")
+        .opt("kernel-threads", "1", "intra-op kernel threads per worker (DESIGN.md §11)")
         .flag("elastic", "scale active workers with the governed batch (DESIGN.md §10)")
         .opt("max-workers", "4", "elastic: worker threads spawned (activation cap)")
         .opt("samples-per-worker", "256", "elastic: target per-worker share of the batch")
@@ -153,6 +155,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             .with_elastic(a.usize("max-workers")?, a.usize("samples-per-worker")?);
     }
     job.trainer.seed = a.u64("seed")?;
+    job.trainer.kernel_threads = a.usize("kernel-threads")?;
     job.trainer.allreduce = allreduce_from_name(&a.str("allreduce"))?;
     let cap = a.usize("max-microbatch")?;
     job.trainer.max_microbatch = (cap > 0).then_some(cap);
@@ -280,6 +283,11 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         ("model", Json::str(&job.model)),
         ("governor", Json::str(governor.name())),
         ("workers", Json::num(pool as f64)),
+        // dispatch provenance: which kernel path trained the run and how
+        // many intra-op threads per worker (neither changes a bit of the
+        // result — DESIGN.md §8/§11 — but both change wall time)
+        ("kernel_dispatch", Json::str(kernels::dispatch_name())),
+        ("kernel_threads", Json::num(job.trainer.kernel_threads as f64)),
         ("elastic", Json::Bool(job.trainer.elastic.is_some())),
         ("active_workers", Json::arr_usize(&actives)),
         ("worker_occupancy", Json::num(occupancy)),
@@ -338,6 +346,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         .opt("max-batch", "64", "micro-batch cap (power of two)")
         .opt("max-wait-ms", "5", "max wait to fill a micro-batch, ms")
         .opt("workers", "2", "parallel inference servers")
+        .opt("kernel-threads", "1", "intra-op kernel threads per server (DESIGN.md §11)")
         .opt("window", "64", "slo-governor decision window, requests")
         .opt("warmup", "0.3", "seconds of arrivals excluded from the tail report")
         .opt("seed", "0", "PRNG seed (arrivals, payloads, params)")
@@ -375,6 +384,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         service_base_us: a.f64("service-base-us")?,
         service_per_sample_us: a.f64("service-per-sample-us")?,
         arch: ModelArch::from_name(&a.str("model"), a.usize("hidden")?)?,
+        kernel_threads: a.usize("kernel-threads")?,
     };
     let clock = Clock::from_name(&a.str("clock"))?;
     let classes = a.usize("classes")?;

@@ -1,0 +1,279 @@
+//! Intra-op kernel thread pool (DESIGN.md §11): lets one engine/serve
+//! worker's GEMM use idle cores when the elastic pool is running fewer
+//! active workers than the machine has.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Determinism.** [`KernelPool::run`] executes `f(0..tiles)` where
+//!    the tile decomposition is chosen by the *caller* as a pure function
+//!    of operand shape. Tiles own disjoint output ranges and never split
+//!    a reduction dimension, so which thread runs a tile — and how many
+//!    threads exist — can never change a bit of output. The static
+//!    partition (tile `t` → worker `t % threads`) is itself deterministic
+//!    so even execution *placement* is reproducible.
+//! 2. **Liveness under panics.** A panicking tile must neither hang
+//!    `run` nor kill a helper thread: helpers catch the payload, always
+//!    signal completion, and `run` re-raises the first payload after the
+//!    barrier (mirroring the engine's fault model,
+//!    `tests/engine_faults.rs`). The pool stays usable afterwards.
+//! 3. **Zero steady-state cost at 1 thread.** `KernelPool::new(1)` spawns
+//!    nothing and `run` degenerates to an inline loop with no locking and
+//!    no allocation, so the default configuration cannot disturb the
+//!    zero-allocation hot-path contract (DESIGN.md §9).
+//!
+//! Threads are persistent for the pool's lifetime (spawned once, parked
+//! on a condvar between jobs) because the hot path dispatches thousands
+//! of small GEMMs per epoch. The caller participates as worker 0, so
+//! `threads = n` means `n − 1` spawned helpers.
+
+use std::any::Any;
+use std::fmt;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// The tile closure: called once per tile index, from whichever worker
+/// owns the tile. Must confine its writes to tile-owned output ranges.
+pub type TileFn = dyn Fn(usize) + Sync;
+
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const TileFn,
+    tiles: usize,
+}
+
+// SAFETY: the closure behind `f` is `Sync` (shared-reference callable
+// from any thread), and `run` does not return until every helper has
+// reported completion of the epoch, so the erased borrow never dangles.
+unsafe impl Send for Job {}
+
+struct State {
+    job: Option<Job>,
+    /// Bumped once per `run`; helpers track the last epoch they served
+    /// so a job is executed exactly once per helper.
+    epoch: u64,
+    /// Helpers that have not yet finished the current epoch.
+    pending: usize,
+    /// First panic payload captured from a helper tile this epoch.
+    panic: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Helpers wait here for a new epoch (or shutdown).
+    work_cv: Condvar,
+    /// `run` waits here for `pending == 0`.
+    done_cv: Condvar,
+}
+
+/// A persistent pool of `threads − 1` helper threads plus the calling
+/// thread, executing deterministic static tile partitions.
+pub struct KernelPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl fmt::Debug for KernelPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("KernelPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl KernelPool {
+    /// Build a pool with `threads` total workers (the caller counts as
+    /// one). `threads == 1` spawns nothing.
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0, "kernel pool needs at least one thread");
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                job: None,
+                epoch: 0,
+                pending: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..threads)
+            .map(|index| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("adabatch-kernel-{index}"))
+                    .spawn(move || helper_loop(&shared, index, threads))
+                    .expect("spawn kernel pool helper")
+            })
+            .collect();
+        KernelPool { shared, handles, threads }
+    }
+
+    /// Total worker count, including the caller.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `f(t)` for every tile `t in 0..tiles`, tile `t` on worker
+    /// `t % threads` (the caller is worker 0). Blocks until every tile
+    /// has finished; if any tile panicked, the first payload is re-raised
+    /// here — after the barrier, so no worker ever outlives the borrow
+    /// of `f` or of the buffers it captures.
+    pub fn run(&self, tiles: usize, f: &TileFn) {
+        if tiles == 0 {
+            return;
+        }
+        if self.threads == 1 || tiles == 1 {
+            // tile 0 belongs to worker 0 (the caller) either way — the
+            // inline loop is the same partition with zero overhead.
+            for t in 0..tiles {
+                f(t);
+            }
+            return;
+        }
+        // Lifetime erasure: helpers only dereference the pointer between
+        // the epoch publication below and their completion signal, and we
+        // hold the `f` borrow until after the barrier.
+        #[allow(clippy::useless_transmute, clippy::missing_transmute_annotations)]
+        let erased: *const TileFn = unsafe { std::mem::transmute(f) };
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Job { f: erased, tiles });
+            st.epoch += 1;
+            st.pending = self.threads - 1;
+            self.shared.work_cv.notify_all();
+        }
+        // The caller is worker 0 — catch its tiles' panics too, so the
+        // barrier below always runs before any unwinding escapes.
+        let caller = panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut t = 0;
+            while t < tiles {
+                f(t);
+                t += self.threads;
+            }
+        }));
+        let helper_panic = {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.pending > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+            st.panic.take()
+        };
+        if let Err(p) = caller {
+            panic::resume_unwind(p);
+        }
+        if let Some(p) = helper_panic {
+            panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn helper_loop(shared: &Shared, index: usize, threads: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch > seen {
+                    seen = st.epoch;
+                    break st.job.expect("epoch advanced without a job");
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        let result = panic::catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: `run` keeps the closure (and everything it borrows)
+            // alive until this helper decrements `pending` below.
+            let f = unsafe { &*job.f };
+            let mut t = index;
+            while t < job.tiles {
+                f(t);
+                t += threads;
+            }
+        }));
+        // Always signal completion — a swallowed panic must never hang
+        // the barrier in `run`.
+        let mut st = shared.state.lock().unwrap();
+        if let Err(p) = result {
+            if st.panic.is_none() {
+                st.panic = Some(p);
+            }
+        }
+        st.pending -= 1;
+        if st.pending == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = KernelPool::new(1);
+        let hits = AtomicUsize::new(0);
+        pool.run(5, &|t| {
+            hits.fetch_add(t + 1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn every_tile_runs_exactly_once() {
+        let pool = KernelPool::new(3);
+        for tiles in [1usize, 2, 3, 7, 64] {
+            let counts: Vec<AtomicUsize> = (0..tiles).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tiles, &|t| {
+                counts[t].fetch_add(1, Ordering::SeqCst);
+            });
+            for (t, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::SeqCst), 1, "tiles={tiles} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_tile_and_stays_usable() {
+        let pool = KernelPool::new(2);
+        let caught = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(4, &|t| {
+                if t == 1 {
+                    panic!("injected tile fault");
+                }
+            });
+        }));
+        let payload = caught.expect_err("run must re-raise the tile panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("injected tile fault"), "unexpected payload: {msg:?}");
+        // liveness: the same pool still completes a healthy job
+        let hits = AtomicUsize::new(0);
+        pool.run(8, &|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+}

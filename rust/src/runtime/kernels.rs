@@ -1,24 +1,42 @@
-//! Dense-kernel library for the reference backend: cache-blocked GEMM
-//! over a transposed/packed weight layout, a fused numerically-stable
-//! softmax–cross-entropy forward/backward, and ReLU forward/backward.
+//! Dense-kernel library for the reference backend: a register-tiled,
+//! runtime-dispatched GEMM pair over a transposed/packed weight layout, a
+//! fused numerically-stable softmax–cross-entropy forward/backward, and
+//! ReLU forward/backward — all built on one explicit-width 8-lane
+//! accumulation tree.
 //!
 //! Why this exists: the original `RefModel` was a scalar triple loop, so
 //! per-sample cost was *flat* in batch size and the paper's central
 //! efficiency claim (AdaBatch §4: larger adaptive batches buy
 //! computational efficiency) was invisible in our benches. These kernels
 //! make batch-vs-throughput a real trade-off — per-call fixed costs
-//! (weight packing, scratch setup) amortize over the batch, and blocked
-//! loops keep the packed weight panel hot in cache across rows — while
+//! (weight packing, scratch setup) amortize over the batch, blocked loops
+//! keep the packed weight panel hot in cache across rows, and the inner
+//! loops run 8-wide FMA lanes (AVX2+FMA when the CPU has them) — while
 //! preserving the reference backend's determinism contract.
 //!
-//! **Determinism contract** (DESIGN.md §8): every kernel sums in a fixed
-//! order that depends only on operand *shapes*, never on data. Blocking
-//! and unroll-by-4 change the association (`(s0+s1)+(s2+s3)` per 4-chunk,
-//! depth blocks ascending) but the schedule is a pure function of the
-//! dimensions, so the same inputs always produce bitwise-identical
-//! outputs — which is what keeps the engine-determinism and
-//! checkpoint-resume bitwise tests honest. Zero padding rows contribute
+//! **Lane-tree determinism contract** (DESIGN.md §8): every kernel sums
+//! in a fixed order that depends only on operand *shapes* and the fixed
+//! lane width [`LANES`], never on data, the dispatch path, or the kernel
+//! thread count. Each reduction walks full 8-element chunks in ascending
+//! order with one fused multiply-add per lane, folds the `len % 8` tail
+//! into lanes `0..tail`, and collapses the 8 partials with the fixed
+//! [`reduce_lanes`] tree. `f32::mul_add` is correctly rounded, exactly
+//! like the hardware `vfmadd` instruction, so the portable scalar path
+//! and the AVX2+FMA path are **bitwise equal** — [`paths`] exposes both
+//! for the equality tests that pin this. Zero padding rows contribute
 //! exact zeros to every accumulation.
+//!
+//! **Dispatch.** [`active_dispatch`] picks the vector path iff the CPU
+//! reports `avx2` and `fma` and `ADABATCH_FORCE_SCALAR=1` is not set in
+//! the environment (checked once per process). Reports carry
+//! [`dispatch_name`] so bench records are self-describing.
+//!
+//! **Intra-op parallelism.** The `*_mt` GEMM variants accept an optional
+//! [`KernelPool`](super::kernel_pool::KernelPool) and split the *output*
+//! rows into fixed-size tiles (never the reduction dimension), so every
+//! C cell is still produced by exactly one thread running the exact
+//! serial summation schedule — thread count changes wall time, never
+//! bits (DESIGN.md §11).
 //!
 //! Layout conventions: all matrices are row-major `&[f32]`. GEMM operands
 //! named `bt` are stored *transposed* (`[n × k]` for a logical `[k × n]`
@@ -26,11 +44,15 @@
 //! [`pack_transpose`] to build them from a natural-layout weight.
 
 use anyhow::{bail, Result};
+use once_cell::sync::Lazy;
 
-/// Unroll factor of the inner accumulations (4 independent partial sums).
-pub const UNROLL: usize = 4;
+use super::kernel_pool::KernelPool;
 
-/// Row-block size: C/A rows processed per block of [`gemm_abt`].
+/// Lane width of the accumulation tree (f32x8 — one AVX2 ymm register).
+pub const LANES: usize = 8;
+
+/// Row-block size: C/A rows processed per block of [`gemm_abt`], and the
+/// row-tile grain of [`gemm_abt_mt`].
 const MC: usize = 64;
 /// Depth-block size: the k-extent sliced per pass (keeps the packed
 /// weight panel resident in L1/L2 while a row block streams through).
@@ -38,38 +60,573 @@ const KC: usize = 256;
 /// Column-block size of [`gemm_abt`] (bounds the bt panel at NC×KC).
 const NC: usize = 64;
 /// Row-block size of the Aᵀ·B (weight-gradient) kernel: bounds the C
-/// panel kept hot while the batch dimension streams through.
+/// panel kept hot while the batch dimension streams through, and the
+/// row-tile grain of [`gemm_atb_mt`].
 const MCT: usize = 256;
 /// Tile edge of the blocked transpose in [`pack_transpose`].
 const TB: usize = 32;
+/// Output columns per register tile of the vector `gemm_abt` microkernel
+/// (4 independent accumulators share each `a` load).
+const JTILE: usize = 4;
 
-/// Inner product of two equal-length slices with 4 independent
-/// accumulators; fixed association `((s0+s1)+(s2+s3)) + tail`.
-#[inline]
-pub fn dot_unroll4(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut ca = a.chunks_exact(UNROLL);
-    let mut cb = b.chunks_exact(UNROLL);
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for (qa, qb) in (&mut ca).zip(&mut cb) {
-        s0 += qa[0] * qb[0];
-        s1 += qa[1] * qb[1];
-        s2 += qa[2] * qb[2];
-        s3 += qa[3] * qb[3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
-        s += x * y;
-    }
-    s
+// ---------------------------------------------------------------------------
+// Runtime dispatch
+// ---------------------------------------------------------------------------
+
+/// Which inner-loop implementation the process is using. Both paths run
+/// the identical lane-tree summation schedule and are bitwise equal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// 8-wide AVX2+FMA intrinsics (x86_64 with both features detected).
+    Avx2Fma,
+    /// Portable scalar emulation of the same 8-lane tree via
+    /// [`f32::mul_add`].
+    Scalar,
 }
+
+/// Hardware capability, ignoring the environment override.
+pub fn detected_dispatch() -> Dispatch {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Dispatch::Avx2Fma;
+        }
+    }
+    Dispatch::Scalar
+}
+
+static ACTIVE_DISPATCH: Lazy<Dispatch> = Lazy::new(|| {
+    if std::env::var("ADABATCH_FORCE_SCALAR").as_deref() == Ok("1") {
+        Dispatch::Scalar
+    } else {
+        detected_dispatch()
+    }
+});
+
+/// The dispatch path every public kernel in this module uses, decided
+/// once per process: `ADABATCH_FORCE_SCALAR=1` forces the scalar path,
+/// otherwise CPU feature detection picks.
+pub fn active_dispatch() -> Dispatch {
+    *ACTIVE_DISPATCH
+}
+
+/// Stable name for reports and bench records.
+pub fn dispatch_name() -> &'static str {
+    match active_dispatch() {
+        Dispatch::Avx2Fma => "avx2+fma",
+        Dispatch::Scalar => "scalar",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The shared lane tree: the single summation-order implementation
+// ---------------------------------------------------------------------------
+
+/// Collapse 8 lane partials with the fixed tree
+/// `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`. Every dispatch path funnels
+/// through this exact function, so the final rounding sequence is shared
+/// by construction.
+#[inline]
+fn reduce_lanes(l: &[f32; LANES]) -> f32 {
+    let m0 = l[0] + l[4];
+    let m1 = l[1] + l[5];
+    let m2 = l[2] + l[6];
+    let m3 = l[3] + l[7];
+    (m0 + m2) + (m1 + m3)
+}
+
+/// Fold the `len % LANES` tail of a dot product into lanes `0..tail` —
+/// shared verbatim by the scalar and vector paths so tails can never
+/// diverge (the bug `dot_unroll4` had: its tail summed outside the
+/// accumulator tree).
+#[inline]
+fn dot_tail(a_tail: &[f32], b_tail: &[f32], lanes: &mut [f32; LANES]) {
+    for (l, (x, y)) in a_tail.iter().zip(b_tail).enumerate() {
+        lanes[l] = x.mul_add(*y, lanes[l]);
+    }
+}
+
+/// Inner product of two equal-length slices over the 8-lane FMA tree:
+/// full chunks ascending, tail into lanes `0..tail`, then
+/// [`reduce_lanes`]. This is the *only* summation-order definition in
+/// the module — the vector path reproduces it instruction for
+/// instruction.
+#[inline]
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut lanes = [0.0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (qa, qb) in (&mut ca).zip(&mut cb) {
+        for l in 0..LANES {
+            lanes[l] = qa[l].mul_add(qb[l], lanes[l]);
+        }
+    }
+    dot_tail(ca.remainder(), cb.remainder(), &mut lanes);
+    reduce_lanes(&lanes)
+}
+
+/// Lane-tree maximum of a row (init −∞; max is exactly associative for
+/// the finite inputs the models produce, so this equals the plain fold).
+#[inline]
+fn row_max_lanes(row: &[f32]) -> f32 {
+    let mut lanes = [f32::NEG_INFINITY; LANES];
+    let mut ch = row.chunks_exact(LANES);
+    for q in &mut ch {
+        for l in 0..LANES {
+            lanes[l] = lanes[l].max(q[l]);
+        }
+    }
+    for (l, &x) in ch.remainder().iter().enumerate() {
+        lanes[l] = lanes[l].max(x);
+    }
+    let m0 = lanes[0].max(lanes[4]);
+    let m1 = lanes[1].max(lanes[5]);
+    let m2 = lanes[2].max(lanes[6]);
+    let m3 = lanes[3].max(lanes[7]);
+    (m0.max(m2)).max(m1.max(m3))
+}
+
+/// Lane-tree Σ exp(x − max) of a row (the softmax denominator).
+#[inline]
+fn row_exp_sum_lanes(row: &[f32], max: f32) -> f32 {
+    let mut lanes = [0.0f32; LANES];
+    let mut ch = row.chunks_exact(LANES);
+    for q in &mut ch {
+        for l in 0..LANES {
+            lanes[l] += (q[l] - max).exp();
+        }
+    }
+    for (l, &x) in ch.remainder().iter().enumerate() {
+        lanes[l] += (x - max).exp();
+    }
+    reduce_lanes(&lanes)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar path (portable twin of the vector microkernels)
+// ---------------------------------------------------------------------------
+
+fn gemm_abt_scalar(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    for j0 in (0..n).step_by(NC) {
+        let j1 = (j0 + NC).min(n);
+        for p0 in (0..k).step_by(KC) {
+            let p1 = (p0 + KC).min(k);
+            for i0 in (0..m).step_by(MC) {
+                let i1 = (i0 + MC).min(m);
+                for i in i0..i1 {
+                    let ar = &a[i * k + p0..i * k + p1];
+                    let crow = &mut c[i * n + j0..i * n + j1];
+                    for (jj, cj) in crow.iter_mut().enumerate() {
+                        let j = j0 + jj;
+                        *cj += dot_lanes(ar, &bt[j * k + p0..j * k + p1]);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `c[j] = x.mul_add(b[j], c[j])` — one rank-1-update row. Each output
+/// element carries an independent FMA chain, so the vector twin is
+/// lanewise identical.
+#[inline]
+fn axpy_scalar(x: f32, b: &[f32], c: &mut [f32]) {
+    for (cj, bj) in c.iter_mut().zip(b) {
+        *cj = x.mul_add(*bj, *cj);
+    }
+}
+
+/// `out[j] += b[j]` — one column-sum row (plain adds, ascending rows).
+#[inline]
+fn add_assign_scalar(b: &[f32], out: &mut [f32]) {
+    for (o, x) in out.iter_mut().zip(b) {
+        *o += *x;
+    }
+}
+
+fn relu_fwd_scalar(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn relu_bwd_scalar(act: &[f32], g: &mut [f32]) {
+    for (v, a) in g.iter_mut().zip(act) {
+        if *a <= 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn broadcast_rows_scalar(bias: &[f32], out: &mut [f32]) {
+    for row in out.chunks_exact_mut(bias.len()) {
+        row.copy_from_slice(bias);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Vector path (AVX2+FMA). Every function here is bitwise equal to its
+// scalar twin: full 8-chunks run the same per-lane FMA chain in the same
+// order, tails and the final reduction reuse the scalar helpers verbatim.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod vx {
+    use super::{dot_tail, reduce_lanes, JTILE, KC, LANES, MC, NC};
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn finish_dot(acc: __m256, a_tail: &[f32], b_tail: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        dot_tail(a_tail, b_tail, &mut lanes);
+        reduce_lanes(&lanes)
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let len = a.len();
+        let full = len - len % LANES;
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc = _mm256_setzero_ps();
+        let mut p = 0;
+        while p < full {
+            acc = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(p)), _mm256_loadu_ps(bp.add(p)), acc);
+            p += LANES;
+        }
+        finish_dot(acc, &a[full..], &b[full..])
+    }
+
+    /// One C row of the forward GEMM: JTILE output columns share each
+    /// `a` load across 4 independent accumulators.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn abt_row(
+        ar: &[f32],
+        bt: &[f32],
+        crow: &mut [f32],
+        j0: usize,
+        k: usize,
+        p0: usize,
+        p1: usize,
+    ) {
+        let len = p1 - p0;
+        let full = len - len % LANES;
+        let cols = crow.len();
+        let ap = ar.as_ptr();
+        let mut jj = 0;
+        while jj + JTILE <= cols {
+            let b0 = &bt[(j0 + jj) * k + p0..(j0 + jj) * k + p1];
+            let b1 = &bt[(j0 + jj + 1) * k + p0..(j0 + jj + 1) * k + p1];
+            let b2 = &bt[(j0 + jj + 2) * k + p0..(j0 + jj + 2) * k + p1];
+            let b3 = &bt[(j0 + jj + 3) * k + p0..(j0 + jj + 3) * k + p1];
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut acc2 = _mm256_setzero_ps();
+            let mut acc3 = _mm256_setzero_ps();
+            let mut p = 0;
+            while p < full {
+                let va = _mm256_loadu_ps(ap.add(p));
+                acc0 = _mm256_fmadd_ps(va, _mm256_loadu_ps(b0.as_ptr().add(p)), acc0);
+                acc1 = _mm256_fmadd_ps(va, _mm256_loadu_ps(b1.as_ptr().add(p)), acc1);
+                acc2 = _mm256_fmadd_ps(va, _mm256_loadu_ps(b2.as_ptr().add(p)), acc2);
+                acc3 = _mm256_fmadd_ps(va, _mm256_loadu_ps(b3.as_ptr().add(p)), acc3);
+                p += LANES;
+            }
+            let at = &ar[full..];
+            crow[jj] += finish_dot(acc0, at, &b0[full..]);
+            crow[jj + 1] += finish_dot(acc1, at, &b1[full..]);
+            crow[jj + 2] += finish_dot(acc2, at, &b2[full..]);
+            crow[jj + 3] += finish_dot(acc3, at, &b3[full..]);
+            jj += JTILE;
+        }
+        while jj < cols {
+            let brow = &bt[(j0 + jj) * k + p0..(j0 + jj) * k + p1];
+            crow[jj] += dot(ar, brow);
+            jj += 1;
+        }
+    }
+
+    /// Identical blocking to the scalar path; only the per-row inner
+    /// kernel differs (and is lanewise identical).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn gemm_abt(
+        a: &[f32],
+        bt: &[f32],
+        c: &mut [f32],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) {
+        for j0 in (0..n).step_by(NC) {
+            let j1 = (j0 + NC).min(n);
+            for p0 in (0..k).step_by(KC) {
+                let p1 = (p0 + KC).min(k);
+                for i0 in (0..m).step_by(MC) {
+                    let i1 = (i0 + MC).min(m);
+                    for i in i0..i1 {
+                        let ar = &a[i * k + p0..i * k + p1];
+                        let crow = &mut c[i * n + j0..i * n + j1];
+                        abt_row(ar, bt, crow, j0, k, p0, p1);
+                    }
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn axpy(x: f32, b: &[f32], c: &mut [f32]) {
+        let n = c.len();
+        let full = n - n % LANES;
+        let vx = _mm256_set1_ps(x);
+        let bp = b.as_ptr();
+        let cp = c.as_mut_ptr();
+        let mut j = 0;
+        while j < full {
+            let vc = _mm256_loadu_ps(cp.add(j));
+            let vb = _mm256_loadu_ps(bp.add(j));
+            _mm256_storeu_ps(cp.add(j), _mm256_fmadd_ps(vx, vb, vc));
+            j += LANES;
+        }
+        for (cj, bj) in c[full..].iter_mut().zip(&b[full..]) {
+            *cj = x.mul_add(*bj, *cj);
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn add_assign(b: &[f32], out: &mut [f32]) {
+        let n = out.len();
+        let full = n - n % LANES;
+        let bp = b.as_ptr();
+        let op = out.as_mut_ptr();
+        let mut j = 0;
+        while j < full {
+            let vo = _mm256_loadu_ps(op.add(j));
+            let vb = _mm256_loadu_ps(bp.add(j));
+            _mm256_storeu_ps(op.add(j), _mm256_add_ps(vo, vb));
+            j += LANES;
+        }
+        for (o, x) in out[full..].iter_mut().zip(&b[full..]) {
+            *o += *x;
+        }
+    }
+
+    /// `x < 0 → 0`, keeping `-0.0` and NaN exactly like the scalar
+    /// branch (`_CMP_LT_OQ` is false for both, so they pass through —
+    /// `vmaxps` would not preserve this).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn relu_fwd(x: &mut [f32]) {
+        let n = x.len();
+        let full = n - n % LANES;
+        let zero = _mm256_setzero_ps();
+        let xp = x.as_mut_ptr();
+        let mut i = 0;
+        while i < full {
+            let v = _mm256_loadu_ps(xp.add(i));
+            let neg = _mm256_cmp_ps::<_CMP_LT_OQ>(v, zero);
+            _mm256_storeu_ps(xp.add(i), _mm256_andnot_ps(neg, v));
+            i += LANES;
+        }
+        for v in &mut x[full..] {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// `act ≤ 0 → g = 0` (`_CMP_LE_OQ`, matching the scalar mask).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn relu_bwd(act: &[f32], g: &mut [f32]) {
+        let n = g.len();
+        let full = n - n % LANES;
+        let zero = _mm256_setzero_ps();
+        let ap = act.as_ptr();
+        let gp = g.as_mut_ptr();
+        let mut i = 0;
+        while i < full {
+            let va = _mm256_loadu_ps(ap.add(i));
+            let vg = _mm256_loadu_ps(gp.add(i));
+            let dead = _mm256_cmp_ps::<_CMP_LE_OQ>(va, zero);
+            _mm256_storeu_ps(gp.add(i), _mm256_andnot_ps(dead, vg));
+            i += LANES;
+        }
+        for (v, a) in g[full..].iter_mut().zip(&act[full..]) {
+            if *a <= 0.0 {
+                *v = 0.0;
+            }
+        }
+    }
+
+    /// Pure copy (bitwise trivially equal to the scalar memcpy).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub(super) unsafe fn broadcast_rows(bias: &[f32], out: &mut [f32]) {
+        let n = bias.len();
+        let full = n - n % LANES;
+        let bp = bias.as_ptr();
+        for row in out.chunks_exact_mut(n) {
+            let rp = row.as_mut_ptr();
+            let mut j = 0;
+            while j < full {
+                _mm256_storeu_ps(rp.add(j), _mm256_loadu_ps(bp.add(j)));
+                j += LANES;
+            }
+            row[full..].copy_from_slice(&bias[full..]);
+        }
+    }
+}
+
+/// Non-x86_64 stand-in: [`detected_dispatch`] never returns `Avx2Fma`
+/// there, so these delegates are unreachable in practice but keep the
+/// dispatch sites compiling unchanged.
+#[cfg(not(target_arch = "x86_64"))]
+mod vx {
+    pub(super) unsafe fn gemm_abt(
+        a: &[f32],
+        bt: &[f32],
+        c: &mut [f32],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) {
+        super::gemm_abt_scalar(a, bt, c, m, n, k);
+    }
+
+    pub(super) unsafe fn axpy(x: f32, b: &[f32], c: &mut [f32]) {
+        super::axpy_scalar(x, b, c);
+    }
+
+    pub(super) unsafe fn add_assign(b: &[f32], out: &mut [f32]) {
+        super::add_assign_scalar(b, out);
+    }
+
+    pub(super) unsafe fn relu_fwd(x: &mut [f32]) {
+        super::relu_fwd_scalar(x);
+    }
+
+    pub(super) unsafe fn relu_bwd(act: &[f32], g: &mut [f32]) {
+        super::relu_bwd_scalar(act, g);
+    }
+
+    pub(super) unsafe fn broadcast_rows(bias: &[f32], out: &mut [f32]) {
+        super::broadcast_rows_scalar(bias, out);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatching kernel bodies
+// ---------------------------------------------------------------------------
+
+fn gemm_abt_d(d: Dispatch, a: &[f32], bt: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
+    assert_eq!(a.len(), m * k, "gemm_abt: A is not m×k");
+    assert_eq!(bt.len(), n * k, "gemm_abt: Bᵀ is not n×k");
+    assert_eq!(c.len(), m * n, "gemm_abt: C is not m×n");
+    match d {
+        Dispatch::Scalar => gemm_abt_scalar(a, bt, c, m, n, k),
+        // SAFETY: `Avx2Fma` is only produced by feature detection (or
+        // re-verified by `paths`), so the target features are present.
+        Dispatch::Avx2Fma => unsafe { vx::gemm_abt(a, bt, c, m, n, k) },
+    }
+}
+
+#[inline]
+fn axpy_d(d: Dispatch, x: f32, b: &[f32], c: &mut [f32]) {
+    match d {
+        Dispatch::Scalar => axpy_scalar(x, b, c),
+        // SAFETY: see `gemm_abt_d`.
+        Dispatch::Avx2Fma => unsafe { vx::axpy(x, b, c) },
+    }
+}
+
+/// Rank-1-update rows `0..rows` of the Aᵀ·B product into the C row range
+/// `[i0, i1)` (held in `c_rows`). The batch dimension `r` is the
+/// reduction: it always runs ascending and is never partitioned.
+#[allow(clippy::too_many_arguments)]
+fn gemm_atb_rows(
+    d: Dispatch,
+    a: &[f32],
+    b: &[f32],
+    c_rows: &mut [f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+    i0: usize,
+    i1: usize,
+) {
+    debug_assert_eq!(c_rows.len(), (i1 - i0) * n);
+    for r in 0..rows {
+        let arow = &a[r * m..(r + 1) * m];
+        let brow = &b[r * n..(r + 1) * n];
+        for i in i0..i1 {
+            let x = arow[i];
+            let crow = &mut c_rows[(i - i0) * n..(i - i0 + 1) * n];
+            axpy_d(d, x, brow, crow);
+        }
+    }
+}
+
+fn gemm_atb_d(d: Dispatch, a: &[f32], b: &[f32], c: &mut [f32], rows: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), rows * m, "gemm_atb: A is not rows×m");
+    assert_eq!(b.len(), rows * n, "gemm_atb: B is not rows×n");
+    assert_eq!(c.len(), m * n, "gemm_atb: C is not m×n");
+    for i0 in (0..m).step_by(MCT) {
+        let i1 = (i0 + MCT).min(m);
+        gemm_atb_rows(d, a, b, &mut c[i0 * n..i1 * n], rows, m, n, i0, i1);
+    }
+}
+
+fn col_sum_d(d: Dispatch, b: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(b.len(), rows * n, "col_sum: b is not rows×n");
+    assert_eq!(out.len(), n, "col_sum: out is not n");
+    for r in 0..rows {
+        let brow = &b[r * n..(r + 1) * n];
+        match d {
+            Dispatch::Scalar => add_assign_scalar(brow, out),
+            // SAFETY: see `gemm_abt_d`.
+            Dispatch::Avx2Fma => unsafe { vx::add_assign(brow, out) },
+        }
+    }
+}
+
+fn relu_fwd_d(d: Dispatch, x: &mut [f32]) {
+    match d {
+        Dispatch::Scalar => relu_fwd_scalar(x),
+        // SAFETY: see `gemm_abt_d`.
+        Dispatch::Avx2Fma => unsafe { vx::relu_fwd(x) },
+    }
+}
+
+fn relu_bwd_d(d: Dispatch, act: &[f32], g: &mut [f32]) {
+    assert_eq!(act.len(), g.len(), "relu_bwd: shape mismatch");
+    match d {
+        Dispatch::Scalar => relu_bwd_scalar(act, g),
+        // SAFETY: see `gemm_abt_d`.
+        Dispatch::Avx2Fma => unsafe { vx::relu_bwd(act, g) },
+    }
+}
+
+fn broadcast_rows_into_d(d: Dispatch, bias: &[f32], rows: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), rows * bias.len(), "broadcast_rows_into: out is not rows×n");
+    if bias.is_empty() {
+        return;
+    }
+    match d {
+        Dispatch::Scalar => broadcast_rows_scalar(bias, out),
+        // SAFETY: see `gemm_abt_d`.
+        Dispatch::Avx2Fma => unsafe { vx::broadcast_rows(bias, out) },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public kernels
+// ---------------------------------------------------------------------------
 
 /// Pack `src` (`[rows × cols]`, row-major) into its transpose
 /// (`[cols × rows]`, row-major), tiled for cache locality. The packed
-/// form is the `bt` operand of [`gemm_abt`]; packing is a per-call cost
-/// (parameters change every optimizer step, so the pack can never be
-/// cached) that amortizes over the batch — one source of the
-/// batch-efficiency curve `bench_kernels` measures.
+/// form is the `bt` operand of [`gemm_abt`]; the per-thread workspace
+/// caches packs per weight version (DESIGN.md §9) so the cost amortizes
+/// over accumulation microbatches and whole eval epochs.
 pub fn pack_transpose(src: &[f32], rows: usize, cols: usize, dst: &mut Vec<f32>) {
     assert_eq!(src.len(), rows * cols, "pack_transpose: src is not rows×cols");
     dst.clear();
@@ -101,44 +658,21 @@ pub fn broadcast_rows(bias: &[f32], rows: usize, out: &mut Vec<f32>) {
 /// Slice-borrowing twin of [`broadcast_rows`] for workspace-arena callers
 /// (`runtime::workspace::Slot` hands out exact-sized slices): tile `bias`
 /// into `out`, which must be exactly `rows × bias.len()`. Every element
-/// is overwritten, so reused scratch may hold stale data on entry.
+/// is overwritten, so reused scratch may hold stale data on entry. Pure
+/// copy — both dispatch paths are trivially bitwise identical.
 pub fn broadcast_rows_into(bias: &[f32], rows: usize, out: &mut [f32]) {
-    assert_eq!(out.len(), rows * bias.len(), "broadcast_rows_into: out is not rows×n");
-    if bias.is_empty() {
-        return;
-    }
-    for row in out.chunks_exact_mut(bias.len()) {
-        row.copy_from_slice(bias);
-    }
+    broadcast_rows_into_d(active_dispatch(), bias, rows, out);
 }
 
 /// `C += A · Bᵀ` — the forward-GEMM: `a` is `[m × k]`, `bt` is the packed
 /// transpose `[n × k]`, `c` is `[m × n]`.
 ///
-/// Blocked `j → p → i` with the inner product unrolled by 4; for each
-/// C cell the depth blocks accumulate in ascending `p` order, so the
-/// summation schedule is a pure function of `(m, n, k)`.
+/// Blocked `j → p → i`; for each C cell the depth blocks accumulate in
+/// ascending `p` order and each block's partial is a [`dot_lanes`] tree,
+/// so the summation schedule is a pure function of `(m, n, k)` and
+/// [`LANES`].
 pub fn gemm_abt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, n: usize, k: usize) {
-    assert_eq!(a.len(), m * k, "gemm_abt: A is not m×k");
-    assert_eq!(bt.len(), n * k, "gemm_abt: Bᵀ is not n×k");
-    assert_eq!(c.len(), m * n, "gemm_abt: C is not m×n");
-    for j0 in (0..n).step_by(NC) {
-        let j1 = (j0 + NC).min(n);
-        for p0 in (0..k).step_by(KC) {
-            let p1 = (p0 + KC).min(k);
-            for i0 in (0..m).step_by(MC) {
-                let i1 = (i0 + MC).min(m);
-                for i in i0..i1 {
-                    let ar = &a[i * k + p0..i * k + p1];
-                    let crow = &mut c[i * n + j0..i * n + j1];
-                    for (jj, cj) in crow.iter_mut().enumerate() {
-                        let j = j0 + jj;
-                        *cj += dot_unroll4(ar, &bt[j * k + p0..j * k + p1]);
-                    }
-                }
-            }
-        }
-    }
+    gemm_abt_d(active_dispatch(), a, bt, c, m, n, k);
 }
 
 /// `C += Aᵀ · B` — the weight-gradient GEMM: `a` is `[rows × m]` (the
@@ -146,82 +680,23 @@ pub fn gemm_abt(a: &[f32], bt: &[f32], c: &mut [f32], m: usize, n: usize, k: usi
 /// `[m × n]` (the gradient, in the weight's natural layout).
 ///
 /// The summation dimension is the batch: rows accumulate in ascending
-/// order, fused in groups of [`UNROLL`] (`(x0·b0+x1·b1)+(x2·b2+x3·b3)`),
-/// with the C panel blocked to stay cache-resident while the batch
-/// streams through. Zero rows (padding) contribute exact zeros.
+/// order, one fused multiply-add per row and C cell, with the C panel
+/// blocked to stay cache-resident while the batch streams through. Zero
+/// rows (padding) contribute exact zeros.
 pub fn gemm_atb(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, m: usize, n: usize) {
-    assert_eq!(a.len(), rows * m, "gemm_atb: A is not rows×m");
-    assert_eq!(b.len(), rows * n, "gemm_atb: B is not rows×n");
-    assert_eq!(c.len(), m * n, "gemm_atb: C is not m×n");
-    let full = rows - rows % UNROLL;
-    for i0 in (0..m).step_by(MCT) {
-        let i1 = (i0 + MCT).min(m);
-        let mut r = 0;
-        while r < full {
-            let a0 = &a[r * m..(r + 1) * m];
-            let a1 = &a[(r + 1) * m..(r + 2) * m];
-            let a2 = &a[(r + 2) * m..(r + 3) * m];
-            let a3 = &a[(r + 3) * m..(r + 4) * m];
-            let b0 = &b[r * n..(r + 1) * n];
-            let b1 = &b[(r + 1) * n..(r + 2) * n];
-            let b2 = &b[(r + 2) * n..(r + 3) * n];
-            let b3 = &b[(r + 3) * n..(r + 4) * n];
-            for i in i0..i1 {
-                let (x0, x1, x2, x3) = (a0[i], a1[i], a2[i], a3[i]);
-                let crow = &mut c[i * n..(i + 1) * n];
-                for (j, cj) in crow.iter_mut().enumerate() {
-                    *cj += (x0 * b0[j] + x1 * b1[j]) + (x2 * b2[j] + x3 * b3[j]);
-                }
-            }
-            r += UNROLL;
-        }
-        while r < rows {
-            let arow = &a[r * m..(r + 1) * m];
-            let brow = &b[r * n..(r + 1) * n];
-            for i in i0..i1 {
-                let x = arow[i];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for (cj, bj) in crow.iter_mut().zip(brow) {
-                    *cj += x * bj;
-                }
-            }
-            r += 1;
-        }
-    }
+    gemm_atb_d(active_dispatch(), a, b, c, rows, m, n);
 }
 
 /// `out += column sums of b` (`[rows × n]` → `[n]`) — the bias gradient.
-/// Rows accumulate ascending, fused in groups of [`UNROLL`].
+/// Rows accumulate ascending, one add per row and column.
 pub fn col_sum(b: &[f32], rows: usize, n: usize, out: &mut [f32]) {
-    assert_eq!(b.len(), rows * n, "col_sum: b is not rows×n");
-    assert_eq!(out.len(), n, "col_sum: out is not n");
-    let full = rows - rows % UNROLL;
-    let mut r = 0;
-    while r < full {
-        let b0 = &b[r * n..(r + 1) * n];
-        let b1 = &b[(r + 1) * n..(r + 2) * n];
-        let b2 = &b[(r + 2) * n..(r + 3) * n];
-        let b3 = &b[(r + 3) * n..(r + 4) * n];
-        for (j, o) in out.iter_mut().enumerate() {
-            *o += (b0[j] + b1[j]) + (b2[j] + b3[j]);
-        }
-        r += UNROLL;
-    }
-    while r < rows {
-        for (o, x) in out.iter_mut().zip(&b[r * n..(r + 1) * n]) {
-            *o += x;
-        }
-        r += 1;
-    }
+    col_sum_d(active_dispatch(), b, rows, n, out);
 }
 
-/// ReLU forward, in place: `x = max(x, 0)`.
+/// ReLU forward, in place: negatives become `+0.0`; `-0.0` and NaN pass
+/// through unchanged on both dispatch paths.
 pub fn relu_fwd(x: &mut [f32]) {
-    for v in x {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
+    relu_fwd_d(active_dispatch(), x);
 }
 
 /// ReLU backward, in place: zero `g` wherever the forward output `act`
@@ -229,13 +704,97 @@ pub fn relu_fwd(x: &mut [f32]) {
 /// mask from the *post*-activation equals the mask from the
 /// pre-activation).
 pub fn relu_bwd(act: &[f32], g: &mut [f32]) {
-    assert_eq!(act.len(), g.len(), "relu_bwd: shape mismatch");
-    for (v, a) in g.iter_mut().zip(act) {
-        if *a <= 0.0 {
-            *v = 0.0;
+    relu_bwd_d(active_dispatch(), act, g);
+}
+
+// ---------------------------------------------------------------------------
+// Pool-tiled variants (DESIGN.md §11)
+// ---------------------------------------------------------------------------
+
+/// Shareable raw output pointer for handing disjoint row tiles to pool
+/// workers. Soundness: every tile writes only its own `[i0, i1) × n`
+/// range, and [`KernelPool::run`] does not return while workers hold it.
+struct SendPtr(*mut f32);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// [`gemm_abt`] with optional intra-op parallelism: output rows split
+/// into fixed [`MC`]-row tiles (a pure function of `m`), each tile
+/// running the full serial schedule on its own rows. Tiles never split
+/// the `k` reduction, so results are bitwise identical to the serial
+/// kernel for every thread count.
+pub fn gemm_abt_mt(
+    pool: Option<&KernelPool>,
+    a: &[f32],
+    bt: &[f32],
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+) {
+    let tiles = m.div_ceil(MC);
+    match pool {
+        Some(p) if p.threads() > 1 && tiles > 1 => {
+            assert_eq!(a.len(), m * k, "gemm_abt: A is not m×k");
+            assert_eq!(bt.len(), n * k, "gemm_abt: Bᵀ is not n×k");
+            assert_eq!(c.len(), m * n, "gemm_abt: C is not m×n");
+            let d = active_dispatch();
+            let cp = SendPtr(c.as_mut_ptr());
+            p.run(tiles, &|t| {
+                let i0 = t * MC;
+                let i1 = (i0 + MC).min(m);
+                // SAFETY: tile t owns rows [i0, i1) of c exclusively; the
+                // ranges of distinct tiles are disjoint and the borrow of
+                // c outlives `run` (which blocks until all tiles finish).
+                let c_tile =
+                    unsafe { std::slice::from_raw_parts_mut(cp.0.add(i0 * n), (i1 - i0) * n) };
+                gemm_abt_d(d, &a[i0 * k..i1 * k], bt, c_tile, i1 - i0, n, k);
+            });
         }
+        _ => gemm_abt(a, bt, c, m, n, k),
     }
 }
+
+/// [`gemm_atb`] with optional intra-op parallelism: the *output* rows
+/// (`m`, the weight's input dimension) split into fixed [`MCT`]-row
+/// tiles — exactly the serial kernel's block boundaries — while the
+/// batch reduction stays whole inside every tile. Bitwise identical to
+/// the serial kernel for every thread count.
+pub fn gemm_atb_mt(
+    pool: Option<&KernelPool>,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    rows: usize,
+    m: usize,
+    n: usize,
+) {
+    let tiles = m.div_ceil(MCT);
+    match pool {
+        Some(p) if p.threads() > 1 && tiles > 1 => {
+            assert_eq!(a.len(), rows * m, "gemm_atb: A is not rows×m");
+            assert_eq!(b.len(), rows * n, "gemm_atb: B is not rows×n");
+            assert_eq!(c.len(), m * n, "gemm_atb: C is not m×n");
+            let d = active_dispatch();
+            let cp = SendPtr(c.as_mut_ptr());
+            p.run(tiles, &|t| {
+                let i0 = t * MCT;
+                let i1 = (i0 + MCT).min(m);
+                // SAFETY: as in `gemm_abt_mt` — disjoint row tiles.
+                let c_tile =
+                    unsafe { std::slice::from_raw_parts_mut(cp.0.add(i0 * n), (i1 - i0) * n) };
+                gemm_atb_rows(d, a, b, c_tile, rows, m, n, i0, i1);
+            });
+        }
+        _ => gemm_atb(a, b, c, rows, m, n),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused softmax–cross-entropy (shared by both dispatch paths: the
+// transcendentals stay scalar, the reductions use the lane tree, so the
+// dispatch choice cannot influence a single bit here either)
+// ---------------------------------------------------------------------------
 
 /// Aggregates of one fused softmax–cross-entropy pass.
 #[derive(Debug, Clone, Copy)]
@@ -256,7 +815,8 @@ pub struct XentOut {
 /// * `label ≥ c` is an error (the kernels never clamp);
 /// * per-row loss is `(ln Σ e^{l−max} − (l_y − max)) · inv` — the
 ///   batch-mean `1/r` lives here, so gradients come out batch-mean
-///   scaled exactly as the AOT loss kernels promise;
+///   scaled exactly as the AOT loss kernels promise; the row max and the
+///   denominator Σ both reduce over the 8-lane tree;
 /// * when `backward`, `logits` is overwritten with
 ///   `(softmax − onehot) · inv`;
 /// * ties in the argmax resolve to the *last* maximal class (the
@@ -284,11 +844,8 @@ pub fn softmax_xent_rows(
         if label >= c {
             bail!("label {label} out of range for {c} classes");
         }
-        let max = rowbuf.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut denom = 0.0f32;
-        for &l in rowbuf.iter() {
-            denom += (l - max).exp();
-        }
+        let max = row_max_lanes(rowbuf);
+        let denom = row_exp_sum_lanes(rowbuf, max);
         let log_denom = denom.ln();
         loss_sum += f64::from((log_denom - (rowbuf[label] - max)) * inv);
         let mut argmax = 0usize;
@@ -310,6 +867,82 @@ pub fn softmax_xent_rows(
         }
     }
     Ok(XentOut { loss_sum, correct })
+}
+
+// ---------------------------------------------------------------------------
+// Forced-dispatch entry points for equality tests and CI digests
+// ---------------------------------------------------------------------------
+
+/// Test/bench surface only: run a kernel on an explicitly chosen
+/// dispatch path so scalar-vs-vector bitwise equality can be asserted in
+/// one process (`tests/kernel_dispatch.rs`, `bench_kernels --digest`).
+/// Forcing the vector path on hardware without it is rejected loudly.
+#[doc(hidden)]
+pub mod paths {
+    use super::*;
+
+    /// Hardware capability, ignoring `ADABATCH_FORCE_SCALAR`.
+    pub fn detected() -> Dispatch {
+        detected_dispatch()
+    }
+
+    fn check(d: Dispatch) {
+        if d == Dispatch::Avx2Fma {
+            assert_eq!(
+                detected_dispatch(),
+                Dispatch::Avx2Fma,
+                "vector path forced on hardware without avx2+fma"
+            );
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_abt_with(
+        d: Dispatch,
+        a: &[f32],
+        bt: &[f32],
+        c: &mut [f32],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) {
+        check(d);
+        gemm_abt_d(d, a, bt, c, m, n, k);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_atb_with(
+        d: Dispatch,
+        a: &[f32],
+        b: &[f32],
+        c: &mut [f32],
+        rows: usize,
+        m: usize,
+        n: usize,
+    ) {
+        check(d);
+        gemm_atb_d(d, a, b, c, rows, m, n);
+    }
+
+    pub fn col_sum_with(d: Dispatch, b: &[f32], rows: usize, n: usize, out: &mut [f32]) {
+        check(d);
+        col_sum_d(d, b, rows, n, out);
+    }
+
+    pub fn relu_fwd_with(d: Dispatch, x: &mut [f32]) {
+        check(d);
+        relu_fwd_d(d, x);
+    }
+
+    pub fn relu_bwd_with(d: Dispatch, act: &[f32], g: &mut [f32]) {
+        check(d);
+        relu_bwd_d(d, act, g);
+    }
+
+    pub fn broadcast_rows_into_with(d: Dispatch, bias: &[f32], rows: usize, out: &mut [f32]) {
+        check(d);
+        broadcast_rows_into_d(d, bias, rows, out);
+    }
 }
 
 #[cfg(test)]
@@ -401,7 +1034,7 @@ mod tests {
         pack_transpose(&b, k, n, &mut bt);
         let mut c_slot = Slot::default();
         let mut g_slot = Slot::default();
-        // m sequence straddles the unroll boundary; the middle 0-row and
+        // m sequence straddles the lane boundary; the middle 0-row and
         // the final all-padding (zero) block exercise shrink reuse
         let big_a = randvec(&mut rng, 64 * k);
         let zeros = vec![0.0f32; 64 * k];
@@ -453,7 +1086,7 @@ mod tests {
 
     #[test]
     fn gemm_abt_matches_naive_across_block_boundaries() {
-        // dims straddle MC/NC/KC and the unroll-4 boundary
+        // dims straddle MC/NC/KC and the 8-lane boundary
         propcheck::check_cases(
             "gemm_abt == naive",
             Triple(UsizeRange(1, 70), UsizeRange(1, 70), UsizeRange(1, 300)),
@@ -595,5 +1228,49 @@ mod tests {
         let mut logits = vec![1.0f32, 1.0, 0.0];
         let out = softmax_xent_rows(&mut logits, &[0], 3, 1.0, false).unwrap();
         assert_eq!(out.correct, 0.0);
+    }
+
+    /// The scalar path emulates the vector path's lane tree exactly —
+    /// in-process check across tails and shapes (the full propcheck suite
+    /// lives in `tests/kernel_dispatch.rs`). Vacuous on non-AVX2 hosts.
+    #[test]
+    fn forced_paths_agree_bitwise_on_awkward_shapes() {
+        let hw = paths::detected();
+        let mut rng = Pcg32::new(77);
+        for &(m, n, k) in &[(1usize, 1usize, 1usize), (3, 5, 7), (9, 11, 31), (17, 10, 65)] {
+            let a = randvec(&mut rng, m * k);
+            let b = randvec(&mut rng, k * n);
+            let mut bt = Vec::new();
+            pack_transpose(&b, k, n, &mut bt);
+            let mut c_s = vec![0.0f32; m * n];
+            let mut c_v = vec![0.0f32; m * n];
+            paths::gemm_abt_with(Dispatch::Scalar, &a, &bt, &mut c_s, m, n, k);
+            paths::gemm_abt_with(hw, &a, &bt, &mut c_v, m, n, k);
+            assert!(
+                c_s.iter().zip(&c_v).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "gemm_abt dispatch divergence at ({m},{n},{k})"
+            );
+        }
+    }
+
+    /// Pool-tiled GEMMs with no pool are exactly the serial kernels.
+    #[test]
+    fn mt_variants_without_pool_match_serial_bitwise() {
+        let mut rng = Pcg32::new(41);
+        let (m, n, k) = (130, 9, 33);
+        let a = randvec(&mut rng, m * k);
+        let b = randvec(&mut rng, k * n);
+        let mut bt = Vec::new();
+        pack_transpose(&b, k, n, &mut bt);
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_abt(&a, &bt, &mut c1, m, n, k);
+        gemm_abt_mt(None, &a, &bt, &mut c2, m, n, k);
+        assert!(c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let mut g1 = vec![0.0f32; k * n];
+        let mut g2 = vec![0.0f32; k * n];
+        gemm_atb(&a, &c1, &mut g1, m, k, n);
+        gemm_atb_mt(None, &a, &c2, &mut g2, m, k, n);
+        assert!(g1.iter().zip(&g2).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 }

@@ -5,6 +5,7 @@
 pub mod artifact;
 pub mod client;
 pub mod executable;
+pub mod kernel_pool;
 pub mod kernels;
 pub mod plan;
 pub mod reference;
@@ -17,6 +18,7 @@ pub use executable::{
     HostBatch, ModelRuntime, StepExecutable, StepKind, StepOutputs, REF_EVAL_BATCH,
     REF_TRAIN_LADDER,
 };
+pub use kernel_pool::KernelPool;
 pub use plan::{plan, plan_schedule, ExecutionPlan};
 pub use reference::{RefKind, RefModel};
 pub use workspace::{PackedParams, Slot, Workspace, WorkspaceStats};

@@ -186,11 +186,11 @@ impl RefModel {
         let wt = ws.packed.get(params, 0, in_dim, c);
         let logits = ws.logits.take(rows, c);
         kernels::broadcast_rows_into(b, rows, logits);
-        kernels::gemm_abt(x, wt, logits, rows, c, in_dim);
+        kernels::gemm_abt_mt(ws.pool.as_deref(), x, wt, logits, rows, c, in_dim);
         let out = kernels::softmax_xent_rows(logits, y, c, inv, grads.is_some())?;
         if let Some(g) = grads {
             // logits now holds the batch-mean-scaled dlogits
-            kernels::gemm_atb(x, logits, &mut g.bufs[0], rows, in_dim, c);
+            kernels::gemm_atb_mt(ws.pool.as_deref(), x, logits, &mut g.bufs[0], rows, in_dim, c);
             kernels::col_sum(logits, rows, c, &mut g.bufs[1]);
         }
         Ok(out)
@@ -228,7 +228,7 @@ impl RefModel {
         {
             let w1t = ws.packed.get(params, 0, in_dim, hidden);
             kernels::broadcast_rows_into(b1, rows, h);
-            kernels::gemm_abt(x, w1t, h, rows, hidden, in_dim);
+            kernels::gemm_abt_mt(ws.pool.as_deref(), x, w1t, h, rows, hidden, in_dim);
         }
         kernels::relu_fwd(h);
 
@@ -236,21 +236,21 @@ impl RefModel {
         {
             let w2t = ws.packed.get(params, 2, hidden, c);
             kernels::broadcast_rows_into(b2, rows, logits);
-            kernels::gemm_abt(h, w2t, logits, rows, c, hidden);
+            kernels::gemm_abt_mt(ws.pool.as_deref(), h, w2t, logits, rows, c, hidden);
         }
 
         let out = kernels::softmax_xent_rows(logits, y, c, inv, grads.is_some())?;
         if let Some(g) = grads {
             // logits now holds the batch-mean-scaled dlogits (padding
             // rows zero)
-            kernels::gemm_atb(h, logits, &mut g.bufs[2], rows, hidden, c);
+            kernels::gemm_atb_mt(ws.pool.as_deref(), h, logits, &mut g.bufs[2], rows, hidden, c);
             kernels::col_sum(logits, rows, c, &mut g.bufs[3]);
             // dh = d · W2ᵀ — w2's natural [hidden × c] layout *is* the
             // packed-transposed operand of this product
             let dh = ws.dh.take_zeroed(rows, hidden);
-            kernels::gemm_abt(logits, w2, dh, rows, hidden, c);
+            kernels::gemm_abt_mt(ws.pool.as_deref(), logits, w2, dh, rows, hidden, c);
             kernels::relu_bwd(h, dh);
-            kernels::gemm_atb(x, dh, &mut g.bufs[0], rows, in_dim, hidden);
+            kernels::gemm_atb_mt(ws.pool.as_deref(), x, dh, &mut g.bufs[0], rows, in_dim, hidden);
             kernels::col_sum(dh, rows, hidden, &mut g.bufs[1]);
         }
         Ok(out)

@@ -34,8 +34,11 @@
 //! (tests, finite-difference probes) must call `ParamSet::touch` before
 //! the next step, or the cache will serve a stale pack.
 
+use std::sync::Arc;
+
 use crate::optim::param::{ParamSet, ParamSpec};
 
+use super::kernel_pool::KernelPool;
 use super::kernels;
 
 /// Grad-set pool depth: more than one in flight per thread never happens
@@ -183,6 +186,10 @@ pub struct Workspace {
     pub dh: Slot,
     /// versioned packed-transpose weight cache
     pub packed: PackedParams,
+    /// intra-op kernel pool (DESIGN.md §11); `None` means serial kernels.
+    /// Shared so reference-model code can tile GEMMs through it while
+    /// slots are borrowed (disjoint-field borrows).
+    pub pool: Option<Arc<KernelPool>>,
     grad_pool: Vec<ParamSet>,
 }
 
@@ -192,6 +199,22 @@ impl Workspace {
             grad_pool: Vec::with_capacity(GRAD_POOL_CAP),
             ..Workspace::default()
         }
+    }
+
+    /// A workspace whose GEMMs tile across `kernel_threads` threads
+    /// (`--kernel-threads`). `1` is exactly [`Workspace::new`]: no pool,
+    /// no spawned threads, bitwise-identical results either way.
+    pub fn with_kernel_threads(kernel_threads: usize) -> Self {
+        let mut ws = Workspace::new();
+        if kernel_threads > 1 {
+            ws.pool = Some(Arc::new(KernelPool::new(kernel_threads)));
+        }
+        ws
+    }
+
+    /// Thread count the kernels of this workspace use (1 when serial).
+    pub fn kernel_threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads())
     }
 
     /// A zeroed gradient set shaped like `specs`, reusing a recycled set

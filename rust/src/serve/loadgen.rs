@@ -44,6 +44,7 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::dataset::{GatherBufs, TrainData};
 use crate::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
 use crate::optim::param::ParamSet;
+use crate::runtime::kernels;
 use crate::runtime::{ModelRuntime, Workspace};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
@@ -145,6 +146,9 @@ pub struct VirtualCfg {
     pub warmup_ns: u64,
     /// admission cap, mirroring the wall queue: arrivals beyond it shed
     pub queue_capacity: usize,
+    /// intra-op kernel threads for the driver's forward passes (cannot
+    /// change any observable: kernels are bitwise thread-invariant)
+    pub kernel_threads: usize,
 }
 
 impl VirtualCfg {
@@ -157,6 +161,7 @@ impl VirtualCfg {
             horizon_ns: scfg.horizon_ns(),
             warmup_ns: scfg.warmup_ns(),
             queue_capacity: scfg.queue_capacity,
+            kernel_threads: scfg.kernel_threads,
         }
     }
 }
@@ -190,7 +195,7 @@ pub fn run_virtual(
     let mut stats = ServeStats::default();
     let mut bufs = GatherBufs::default();
     // the virtual driver serves every batch on one thread: one arena
-    let mut ws = Workspace::new();
+    let mut ws = Workspace::with_kernel_threads(cfg.kernel_threads);
     let mut lats: Vec<u64> = Vec::new();
     let mut i = 0usize;
     let mut shed = 0u64;
@@ -367,6 +372,7 @@ pub fn run_serve_bench(
                         governor,
                         &queue,
                         scfg.workers,
+                        scfg.kernel_threads,
                         max_wait,
                         &ladder,
                         start,
@@ -428,6 +434,11 @@ pub fn report_json(
         // exactly for the reproduce-from-report workflow
         ("seed", Json::str(scfg.seed.to_string())),
         ("workers", Json::num(scfg.workers as f64)),
+        // dispatch provenance: which kernel path served the run and how
+        // many intra-op threads each server used (neither affects a bit
+        // of output — DESIGN.md §8/§11 — but both affect wall timings)
+        ("kernel_dispatch", Json::str(kernels::dispatch_name())),
+        ("kernel_threads", Json::num(scfg.kernel_threads as f64)),
         ("min_batch", Json::num(scfg.min_batch as f64)),
         ("max_batch", Json::num(scfg.max_batch as f64)),
         ("max_wait_ms", Json::num(scfg.max_wait_ms)),

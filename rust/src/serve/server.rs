@@ -68,6 +68,7 @@ pub fn serve_wall(
     governor: &mut dyn ServeGovernor,
     queue: &BoundedQueue<Request>,
     workers: usize,
+    kernel_threads: usize,
     max_wait: Duration,
     ladder: &[usize],
     start: Instant,
@@ -75,6 +76,7 @@ pub fn serve_wall(
     deadline: Instant,
 ) -> Result<ServeStats> {
     assert!(workers > 0, "server needs at least one worker");
+    assert!(kernel_threads > 0, "server needs at least one kernel thread");
     std::thread::scope(|scope| {
         let (res_tx, res_rx) = channel::<(usize, Result<BatchDone>)>();
         let mut job_txs: Vec<Sender<Job>> = Vec::with_capacity(workers);
@@ -82,7 +84,9 @@ pub fn serve_wall(
         for w in 0..workers {
             let (tx, rx) = channel::<Job>();
             let res_tx = res_tx.clone();
-            handles.push(scope.spawn(move || worker_loop(w, rx, res_tx, rt, params, data, start)));
+            handles.push(scope.spawn(move || {
+                worker_loop(w, rx, res_tx, rt, params, data, start, kernel_threads)
+            }));
             job_txs.push(tx);
         }
         drop(res_tx);
@@ -197,6 +201,7 @@ fn absorb(
     });
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     index: usize,
     jobs: Receiver<Job>,
@@ -205,11 +210,12 @@ fn worker_loop(
     params: &ParamSet,
     data: &TrainData,
     start: Instant,
+    kernel_threads: usize,
 ) -> WorkspaceStats {
     let mut bufs = GatherBufs::default();
     // one arena per serve worker for the run's lifetime: params are
     // frozen, so weights pack once and every batch reuses the scratch
-    let mut ws = Workspace::new();
+    let mut ws = Workspace::with_kernel_threads(kernel_threads);
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Finish => break,
@@ -275,6 +281,7 @@ mod tests {
                     &mut gov,
                     &queue,
                     2,
+                    1,
                     Duration::from_millis(2),
                     &ladder,
                     start,
@@ -327,6 +334,7 @@ mod tests {
                     &data,
                     &mut gov,
                     &queue,
+                    1,
                     1,
                     Duration::from_millis(1),
                     &ladder,

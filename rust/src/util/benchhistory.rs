@@ -1,0 +1,102 @@
+//! Persistent bench history: benches append one JSON record per run to a
+//! tracked file at the repo root (`BENCH_kernels.json`,
+//! `BENCH_runtime.json`), so perf regressions are visible across the PR
+//! trajectory — not just within one CI run.
+//!
+//! Format: a JSON array with one record per line, oldest first, so diffs
+//! show exactly the appended record. Records are ordinary
+//! [`Json`] objects; this module does not impose a schema beyond "array
+//! of values" — each bench owns its record shape.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::json::Json;
+
+/// Resolve a history file at the repository root (one directory above the
+/// crate manifest, which lives in `rust/`).
+pub fn history_path(file: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(file)
+}
+
+/// Seconds since the Unix epoch, for stamping appended records.
+pub fn unix_ts() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// Load all records from `path`; a missing file is an empty history.
+pub fn load(path: &Path) -> Result<Vec<Json>> {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+    };
+    let parsed = Json::parse(&text)
+        .map_err(|e| anyhow!("bench history {} is not valid JSON: {e}", path.display()))?;
+    match parsed {
+        Json::Arr(records) => Ok(records),
+        _ => Err(anyhow!("bench history {} must be a JSON array", path.display())),
+    }
+}
+
+/// Append `record` to the history at `path` (creating it if absent) and
+/// return the new record count. The whole file is rewritten — histories
+/// are small and the one-record-per-line layout keeps diffs minimal.
+pub fn append(path: &Path, record: Json) -> Result<usize> {
+    let mut records = load(path)?;
+    records.push(record);
+    let mut out = String::from("[\n");
+    for (i, r) in records.iter().enumerate() {
+        out.push_str("  ");
+        out.push_str(&r.to_string());
+        if i + 1 < records.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str("]\n");
+    fs::write(path, out).with_context(|| format!("writing {}", path.display()))?;
+    Ok(records.len())
+}
+
+/// The most recent record satisfying `pred` (histories are append-only,
+/// so "most recent" is the last match).
+pub fn latest<'a>(records: &'a [Json], pred: impl Fn(&Json) -> bool) -> Option<&'a Json> {
+    records.iter().rev().find(|&r| pred(r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_load_roundtrip_and_latest() {
+        let dir = std::env::temp_dir().join("adabatch_benchhistory_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("hist_{}.json", std::process::id()));
+        let _ = fs::remove_file(&path);
+
+        assert!(load(&path).unwrap().is_empty(), "missing file is an empty history");
+        let n1 = append(&path, Json::obj(vec![("run", Json::num(1.0)), ("tag", Json::str("a"))]))
+            .unwrap();
+        let n2 = append(&path, Json::obj(vec![("run", Json::num(2.0)), ("tag", Json::str("b"))]))
+            .unwrap();
+        assert_eq!((n1, n2), (1, 2));
+
+        let records = load(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[1].get("run").and_then(Json::as_f64), Some(2.0));
+
+        let last_a =
+            latest(&records, |r| r.get("tag").and_then(Json::as_str) == Some("a")).unwrap();
+        assert_eq!(last_a.get("run").and_then(Json::as_f64), Some(1.0));
+        assert!(latest(&records, |r| r.get("tag").and_then(Json::as_str) == Some("z")).is_none());
+
+        let _ = fs::remove_file(&path);
+    }
+}

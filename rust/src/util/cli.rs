@@ -22,15 +22,26 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown option --{0}")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({why})")]
     BadValue { key: String, value: String, why: String },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown option --{name}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            CliError::BadValue { key, value, why } => {
+                write!(f, "invalid value for --{key}: {value:?} ({why})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 pub struct Command {
     pub name: &'static str,

@@ -4,6 +4,7 @@
 //! and a counting allocator for zero-allocation assertions.
 
 pub mod alloc;
+pub mod benchhistory;
 pub mod benchkit;
 pub mod cli;
 pub mod json;

@@ -1,0 +1,153 @@
+//! The kernel-pool tile-ownership contract (DESIGN.md §11): intra-op
+//! parallelism is pure scheduling. A pooled GEMM with N threads must be
+//! **bitwise identical** to the serial kernel, because tiles own disjoint
+//! output rows and never split a reduction; and a panicking tile must
+//! surface as a panic without hanging or wedging the pool (the engine's
+//! fault model, mirrored one layer down — see `tests/engine_faults.rs`).
+
+use std::panic::{self, AssertUnwindSafe};
+
+use adabatch::runtime::kernels;
+use adabatch::runtime::KernelPool;
+use adabatch::util::propcheck::{self, Triple, UsizeRange};
+use adabatch::util::rng::Pcg32;
+
+fn randvec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal()).collect()
+}
+
+#[test]
+fn pooled_gemms_match_serial_bitwise_for_every_thread_count() {
+    let pools: Vec<KernelPool> = [2, 3, 5].into_iter().map(KernelPool::new).collect();
+    // m up to 300 spans several 64-row (abt) and a second 256-row (atb)
+    // tile, so multi-tile schedules really execute
+    let gen = Triple(UsizeRange(1, 300), UsizeRange(1, 24), UsizeRange(1, 80));
+    propcheck::check_cases("pooled gemm == serial gemm", gen, 25, |&(m, n, k)| {
+        let mut rng = Pcg32::new((m * 7919 + n * 131 + k) as u64);
+        let a = randvec(&mut rng, m * k);
+        let bt = randvec(&mut rng, n * k);
+        let init = randvec(&mut rng, m * n);
+
+        let mut serial = init.clone();
+        kernels::gemm_abt_mt(None, &a, &bt, &mut serial, m, n, k);
+        for pool in &pools {
+            let mut pooled = init.clone();
+            kernels::gemm_abt_mt(Some(pool), &a, &bt, &mut pooled, m, n, k);
+            for (i, (s, p)) in serial.iter().zip(&pooled).enumerate() {
+                assert_eq!(
+                    s.to_bits(),
+                    p.to_bits(),
+                    "gemm_abt: {} threads diverged at index {i}, shape ({m},{n},{k})",
+                    pool.threads()
+                );
+            }
+        }
+
+        // the gradient GEMM reduces over the batch: tile only the output
+        let rows = k; // reuse the generated extent as the batch size
+        let b2 = randvec(&mut rng, rows * n);
+        let a2 = randvec(&mut rng, rows * m);
+        let ginit = randvec(&mut rng, m * n);
+        let mut gserial = ginit.clone();
+        kernels::gemm_atb_mt(None, &a2, &b2, &mut gserial, rows, m, n);
+        for pool in &pools {
+            let mut gpooled = ginit.clone();
+            kernels::gemm_atb_mt(Some(pool), &a2, &b2, &mut gpooled, rows, m, n);
+            for (i, (s, p)) in gserial.iter().zip(&gpooled).enumerate() {
+                assert_eq!(
+                    s.to_bits(),
+                    p.to_bits(),
+                    "gemm_atb: {} threads diverged at index {i}, shape ({rows},{m},{n})",
+                    pool.threads()
+                );
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn one_thread_pool_is_exactly_the_serial_kernel() {
+    // threads == 1 must take the inline path: same bits, no helpers
+    let pool = KernelPool::new(1);
+    assert_eq!(pool.threads(), 1);
+    let (m, n, k) = (130usize, 9usize, 33usize);
+    let mut rng = Pcg32::new(0x5EED);
+    let a = randvec(&mut rng, m * k);
+    let bt = randvec(&mut rng, n * k);
+    let mut serial = vec![0.0f32; m * n];
+    let mut inline = vec![0.0f32; m * n];
+    kernels::gemm_abt_mt(None, &a, &bt, &mut serial, m, n, k);
+    kernels::gemm_abt_mt(Some(&pool), &a, &bt, &mut inline, m, n, k);
+    assert_eq!(
+        serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        inline.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+    );
+}
+
+#[test]
+fn panicking_tile_surfaces_and_pool_stays_live() {
+    let pool = KernelPool::new(3);
+    let caught = panic::catch_unwind(AssertUnwindSafe(|| {
+        pool.run(9, &|t| {
+            if t == 4 {
+                panic!("injected kernel tile fault (tile {t})");
+            }
+        });
+    }));
+    let payload = caught.expect_err("the tile panic must re-raise from run");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("injected kernel tile fault"), "unexpected payload: {msg:?}");
+
+    // liveness: the same pool then completes a real GEMM, correctly
+    let (m, n, k) = (200usize, 8usize, 40usize);
+    let mut rng = Pcg32::new(0xFA17);
+    let a = randvec(&mut rng, m * k);
+    let bt = randvec(&mut rng, n * k);
+    let mut serial = vec![0.0f32; m * n];
+    let mut pooled = vec![0.0f32; m * n];
+    kernels::gemm_abt_mt(None, &a, &bt, &mut serial, m, n, k);
+    kernels::gemm_abt_mt(Some(&pool), &a, &bt, &mut pooled, m, n, k);
+    assert_eq!(
+        serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        pooled.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+    );
+}
+
+#[test]
+fn pooled_workspace_runs_the_reference_model_identically() {
+    // end to end through the model layer: a Workspace with a pool and a
+    // Workspace without one produce bitwise-identical losses and grads
+    use adabatch::optim::param::ParamSet;
+    use adabatch::runtime::{HostBatch, RefKind, RefModel, Workspace};
+
+    let (in_dim, hidden, classes, batch) = (33, 17, 5, 70);
+    let model = RefModel { kind: RefKind::Mlp { in_dim, hidden }, n_classes: classes };
+    let params = ParamSet::init(&model.param_specs(), 11);
+    let mut rng = Pcg32::new(0xAB);
+    let x = randvec(&mut rng, batch * in_dim);
+    let y: Vec<i32> = (0..batch).map(|i| (i % classes) as i32).collect();
+
+    let mut ws1 = Workspace::new();
+    assert_eq!(ws1.kernel_threads(), 1);
+    let mut ws3 = Workspace::with_kernel_threads(3);
+    assert_eq!(ws3.kernel_threads(), 3);
+
+    let o1 = model.run(&params, HostBatch::F32(&x), &y, batch, true, &mut ws1).unwrap();
+    let o3 = model.run(&params, HostBatch::F32(&x), &y, batch, true, &mut ws3).unwrap();
+    assert_eq!(o1.loss.to_bits(), o3.loss.to_bits(), "loss must not depend on kernel threads");
+    let (g1, g3) = (o1.grads.unwrap(), o3.grads.unwrap());
+    for (t, (b1, b3)) in g1.bufs.iter().zip(&g3.bufs).enumerate() {
+        for (i, (v1, v3)) in b1.iter().zip(b3).enumerate() {
+            assert_eq!(
+                v1.to_bits(),
+                v3.to_bits(),
+                "grad tensor {t} diverged at {i} with a 3-thread kernel pool"
+            );
+        }
+    }
+}
