@@ -21,6 +21,8 @@ use std::time::Instant;
 use adabatch::coordinator::{ElasticConfig, ElasticPolicy, Engine, TrainData};
 use adabatch::data::shard::shard_batch;
 use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use adabatch::metrics::PhaseTimers;
+use adabatch::obs::MetricsRegistry;
 use adabatch::optim::param::ParamSet;
 use adabatch::runtime::kernels;
 use adabatch::runtime::{plan, ModelRuntime, StepKind};
@@ -35,6 +37,8 @@ const LADDER: &[usize] = &[32, 128, 512, 1024, 2048, 4096];
 
 /// Measured seconds per epoch at batch `r` on an `n_slots`-slot pool with
 /// `active` workers: time a few dispatches, scale by updates-per-epoch.
+/// Also returns the pool's merged phase timers, so the bench report can
+/// carry the fwd_bwd/gather split alongside the wall times.
 fn epoch_secs(
     data: &TrainData,
     rt: &ModelRuntime,
@@ -42,14 +46,14 @@ fn epoch_secs(
     r: usize,
     n_slots: usize,
     active: usize,
-) -> anyhow::Result<f64> {
+) -> anyhow::Result<(f64, PhaseTimers)> {
     let n = data.len();
     let p = plan(r, n_slots, NATIVES, None)?;
     let exe = rt.executable(StepKind::Train, p.microbatch)?;
     let updates_per_epoch = (n / r).max(1);
     let timed = updates_per_epoch.min(3);
     let batch: Vec<usize> = (0..r).collect();
-    let secs = std::thread::scope(|s| -> anyhow::Result<f64> {
+    std::thread::scope(|s| -> anyhow::Result<(f64, PhaseTimers)> {
         let mut engine = Engine::start(s, n_slots, data, &rt.entry.params);
         // warmup: packs weights, faults in the arenas
         engine.dispatch(&exe, params, shard_batch(&batch, n_slots), p.microbatch, active)?;
@@ -58,10 +62,9 @@ fn epoch_secs(
             engine.dispatch(&exe, params, shard_batch(&batch, n_slots), p.microbatch, active)?;
         }
         let per_update = t0.elapsed().as_secs_f64() / timed as f64;
-        engine.shutdown();
-        Ok(per_update * updates_per_epoch as f64)
-    })?;
-    Ok(secs)
+        let (timers, _ws) = engine.shutdown();
+        Ok((per_update * updates_per_epoch as f64, timers))
+    })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -97,11 +100,15 @@ fn main() -> anyhow::Result<()> {
     });
     let mut rows: Vec<Json> = Vec::new();
     let mut check_failures = Vec::new();
+    let mut phases = PhaseTimers::new();
     for &r in LADDER {
         let active = policy.decide(r); // the governor's walk ratchets this
-        let fixed1 = epoch_secs(&data, &rt, &params, r, 1, 1)?;
-        let fixed4 = epoch_secs(&data, &rt, &params, r, MAX_WORKERS, MAX_WORKERS)?;
-        let elastic = epoch_secs(&data, &rt, &params, r, MAX_WORKERS, active)?;
+        let (fixed1, t1) = epoch_secs(&data, &rt, &params, r, 1, 1)?;
+        let (fixed4, t4) = epoch_secs(&data, &rt, &params, r, MAX_WORKERS, MAX_WORKERS)?;
+        let (elastic, te) = epoch_secs(&data, &rt, &params, r, MAX_WORKERS, active)?;
+        phases.merge(&t1);
+        phases.merge(&t4);
+        phases.merge(&te);
         let occupancy = active as f64 / MAX_WORKERS as f64;
         let measured = fixed1 / elastic;
         let predicted = cluster.epoch_cost_active(&workload, r, 1).total()
@@ -126,12 +133,17 @@ fn main() -> anyhow::Result<()> {
             ("predicted_speedup", Json::num(predicted)),
         ]));
     }
+    // per-phase timing provenance for the history record: the merged
+    // pool timers across all arms, as a registry snapshot (DESIGN.md §12)
+    let mut reg = MetricsRegistry::new();
+    reg.absorb_phase_timers(&phases);
     let report = Json::obj(vec![
         ("report", Json::str("bench_runtime_elastic")),
         ("ts", Json::num(benchhistory::unix_ts() as f64)),
         ("kernel_dispatch", Json::str(kernels::dispatch_name())),
         ("pool", Json::num(MAX_WORKERS as f64)),
         ("samples_per_worker", Json::num(SAMPLES_PER_WORKER as f64)),
+        ("registry", reg.snapshot_json()),
         ("rows", Json::Arr(rows)),
     ]);
     println!("\n{report}");

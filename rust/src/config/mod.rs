@@ -9,6 +9,7 @@ use crate::coordinator::allreduce::Algorithm;
 use crate::coordinator::controller::TrainerConfig;
 use crate::data::corpus::VOCAB;
 use crate::data::synthetic::IMG_LEN;
+use crate::obs::TelemetryConfig;
 use crate::runtime::{ModelRuntime, REF_EVAL_BATCH, REF_TRAIN_LADDER};
 use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
 
@@ -245,6 +246,10 @@ pub struct ServeConfig {
     /// intra-op kernel threads per inference server (1 = serial kernels;
     /// bitwise-identical outputs at any setting, DESIGN.md §11)
     pub kernel_threads: usize,
+    /// structured tracing + metrics exposition (DESIGN.md §12). Virtual
+    /// clock only for traces: timestamps are deterministic, so two
+    /// seeded runs write byte-identical JSONL.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ServeConfig {
@@ -267,6 +272,7 @@ impl Default for ServeConfig {
             service_per_sample_us: 30.0,
             arch: ModelArch::Linear,
             kernel_threads: 1,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }

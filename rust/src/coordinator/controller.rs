@@ -45,6 +45,8 @@ use super::eval::evaluate;
 use crate::data::loader::BatchPlanner;
 use crate::data::shard::{shard_batch, shard_weights};
 use crate::metrics::{EpochRecord, PhaseTimers, RunHistory};
+use crate::obs::trace::{SpanPayload, TraceBuf};
+use crate::obs::{write_prometheus, write_train_trace, MetricsRegistry, TelemetryConfig};
 use crate::optim::param::ParamSet;
 use crate::optim::sgd::Optimizer;
 use crate::runtime::{plan_schedule, ModelRuntime, StepKind, Workspace, WorkspaceStats};
@@ -82,6 +84,10 @@ pub struct TrainerConfig {
     /// intra-op kernel threads per worker (1 = serial kernels). Tiled
     /// GEMMs are bitwise identical at any setting (DESIGN.md §11).
     pub kernel_threads: usize,
+    /// structured tracing + metrics exposition (DESIGN.md §12). Recording
+    /// is a pure side channel: the trajectory is bitwise identical with
+    /// telemetry on or off (`tests/engine_determinism.rs`).
+    pub telemetry: TelemetryConfig,
 }
 
 impl TrainerConfig {
@@ -99,6 +105,7 @@ impl TrainerConfig {
             resume: None,
             elastic: None,
             kernel_threads: 1,
+            telemetry: TelemetryConfig::default(),
         }
     }
 
@@ -142,6 +149,12 @@ impl TrainerConfig {
     /// Intra-op kernel threads per worker (0 is normalized to 1).
     pub fn with_kernel_threads(mut self, n: usize) -> Self {
         self.kernel_threads = n.max(1);
+        self
+    }
+
+    /// Enable structured tracing / metrics exposition for the run.
+    pub fn with_telemetry(mut self, t: TelemetryConfig) -> Self {
+        self.telemetry = t;
         self
     }
 }
@@ -260,158 +273,227 @@ pub fn train<G: BatchGovernor + ?Sized>(
     let mut timers = PhaseTimers::new();
     let mut eval_bufs = GatherBufs::default();
 
-    let scope_out = std::thread::scope(|scope| -> Result<(PhaseTimers, WorkspaceStats)> {
-        let mut engine =
-            Engine::start_with(scope, n_slots, train_data, &rt.entry.params, cfg.kernel_threads);
-        // the controller's own long-lived arena for the eval loop (the
-        // serial fallback of DESIGN.md §9's ownership map)
-        let mut eval_ws = Workspace::with_kernel_threads(cfg.kernel_threads);
-        let mut last_batch = 0usize;
-        let mut warned_single_micro = false;
-        'epochs: for epoch in start_epoch..cfg.epochs {
-            let t_epoch = Instant::now();
-            let r = clamp_batch(governor.batch_for_epoch(epoch), n);
-            let plan = crate::runtime::plan(r, n_slots, &natives, cfg.max_microbatch)?;
-            // elasticity decision sits between the governor's (post-clamp)
-            // batch and dispatch: how many of the spawned workers the
-            // epoch's updates activate
-            let active = match elastic.as_mut() {
-                Some(p) => p.decide(r),
-                None => n_slots,
-            };
-            let epoch_lr = governor.lr_coupling(epoch, 0, planner.iters_per_epoch(r).max(1));
-            if r != last_batch {
-                log::info!(
-                    "[{}] epoch {epoch}: batch {r} = {} slots × {} µbatch × {} accum, \
-                     {active}/{n_slots} workers active, lr {:.5}",
-                    governor.name(),
-                    plan.workers,
-                    plan.microbatch,
-                    plan.accum_steps,
-                    epoch_lr
-                );
-                last_batch = r;
-            }
-            let exe = rt.executable(StepKind::Train, plan.microbatch)?;
-            let epoch_plan = planner.plan_epoch(epoch, r);
-            let iters = epoch_plan.batches.len();
-            let mut loss_sum = 0.0f64;
+    // controller-side trace buffer: epoch timeline rows, governor
+    // decisions, elastic transitions, checkpoints. Capacity 0 (telemetry
+    // off) makes every record a single branch.
+    let trace_cap = cfg.telemetry.trace_capacity();
+    let mut ctl_trace = TraceBuf::new(trace_cap);
 
-            for (it, batch) in epoch_plan.batches.iter().enumerate() {
-                let lr = governor.lr_coupling(epoch, it, iters);
-                let shards = shard_batch(&batch.indices, n_slots);
-                let weights = shard_weights(&shards);
-                // per-slot gradient production on the worker pool (the
-                // active subset covers all n_slots canonical shards)
-                let mut outs = engine.dispatch(&exe, &params, shards, plan.microbatch, active)?;
-                for (w, out) in outs.iter().enumerate() {
-                    loss_sum += out.loss * weights[w];
-                }
-                let micro_norms: Vec<f64> = if governor.wants_stats() {
-                    outs.iter()
-                        .flat_map(|o| o.micro_sq_norms.iter().copied())
-                        .collect()
-                } else {
-                    Vec::new()
+    let scope_out =
+        std::thread::scope(|scope| -> Result<(PhaseTimers, WorkspaceStats, Vec<TraceBuf>)> {
+            let mut engine = Engine::start_traced(
+                scope,
+                n_slots,
+                train_data,
+                &rt.entry.params,
+                cfg.kernel_threads,
+                trace_cap,
+            );
+            // the controller's own long-lived arena for the eval loop (the
+            // serial fallback of DESIGN.md §9's ownership map)
+            let mut eval_ws = Workspace::with_kernel_threads(cfg.kernel_threads);
+            let mut last_batch = 0usize;
+            let mut warned_single_micro = false;
+            'epochs: for epoch in start_epoch..cfg.epochs {
+                let t_epoch = Instant::now();
+                let r = clamp_batch(governor.batch_for_epoch(epoch), n);
+                let plan = crate::runtime::plan(r, n_slots, &natives, cfg.max_microbatch)?;
+                // elasticity decision sits between the governor's (post-clamp)
+                // batch and dispatch: how many of the spawned workers the
+                // epoch's updates activate
+                let active = match elastic.as_mut() {
+                    Some(p) => p.decide(r),
+                    None => n_slots,
                 };
-                let mut replica_grads: Vec<ParamSet> =
-                    outs.drain(..).map(|o| o.grads).collect();
-                timers.time("allreduce", || {
-                    allreduce_params(&mut replica_grads, &weights, cfg.allreduce)
+                if elastic.is_some() {
+                    ctl_trace.record(SpanPayload::Elastic { active: active as u32 });
+                }
+                ctl_trace.record(SpanPayload::GovernorDecision {
+                    batch: r as u32,
+                    decisions: governor.decisions() as u32,
                 });
+                let epoch_lr = governor.lr_coupling(epoch, 0, planner.iters_per_epoch(r).max(1));
+                if r != last_batch {
+                    log::info!(
+                        "[{}] epoch {epoch}: batch {r} = {} slots × {} µbatch × {} accum, \
+                         {active}/{n_slots} workers active, lr {:.5}",
+                        governor.name(),
+                        plan.workers,
+                        plan.microbatch,
+                        plan.accum_steps,
+                        epoch_lr
+                    );
+                    last_batch = r;
+                }
+                let exe = rt.executable(StepKind::Train, plan.microbatch)?;
+                let epoch_plan = planner.plan_epoch(epoch, r);
+                let iters = epoch_plan.batches.len();
+                let mut loss_sum = 0.0f64;
 
-                // divergence guard BEFORE the step: a non-finite gradient
-                // must never be applied to the parameters
-                if cfg.divergence_guard && !replica_grads[0].all_finite() {
-                    log::warn!("[{}] diverged at epoch {epoch} iter {it}", governor.name());
+                for (it, batch) in epoch_plan.batches.iter().enumerate() {
+                    let lr = governor.lr_coupling(epoch, it, iters);
+                    let shards = shard_batch(&batch.indices, n_slots);
+                    let weights = shard_weights(&shards);
+                    // per-slot gradient production on the worker pool (the
+                    // active subset covers all n_slots canonical shards)
+                    let mut outs = engine.dispatch(&exe, &params, shards, plan.microbatch, active)?;
+                    for (w, out) in outs.iter().enumerate() {
+                        loss_sum += out.loss * weights[w];
+                    }
+                    let micro_norms: Vec<f64> = if governor.wants_stats() {
+                        outs.iter()
+                            .flat_map(|o| o.micro_sq_norms.iter().copied())
+                            .collect()
+                    } else {
+                        Vec::new()
+                    };
+                    let mut replica_grads: Vec<ParamSet> =
+                        outs.drain(..).map(|o| o.grads).collect();
+                    timers.time("allreduce", || {
+                        allreduce_params(&mut replica_grads, &weights, cfg.allreduce)
+                    });
+
+                    // divergence guard BEFORE the step: a non-finite gradient
+                    // must never be applied to the parameters
+                    if cfg.divergence_guard && !replica_grads[0].all_finite() {
+                        log::warn!("[{}] diverged at epoch {epoch} iter {it}", governor.name());
+                        history.diverged = true;
+                        break 'epochs;
+                    }
+
+                    if governor.wants_stats() {
+                        if micro_norms.len() < 2 && !warned_single_micro {
+                            warned_single_micro = true;
+                            log::warn!(
+                                "[{}] updates are realized as a single microbatch — the \
+                                 gradient-variance estimate is always 0 and the governor \
+                                 cannot adapt; lower max_microbatch or raise workers so \
+                                 each update accumulates ≥ 2 microbatches",
+                                governor.name()
+                            );
+                        }
+                        let stats = GradVarianceController::stats_from_norms(
+                            &micro_norms,
+                            replica_grads[0].sq_norm(),
+                        );
+                        governor.observe(stats);
+                    }
+
+                    timers.time("optim", || {
+                        opt.step(Arc::make_mut(&mut params), &replica_grads[0], lr)
+                    });
+                }
+
+                if cfg.divergence_guard && !params.all_finite() {
                     history.diverged = true;
                     break 'epochs;
                 }
 
-                if governor.wants_stats() {
-                    if micro_norms.len() < 2 && !warned_single_micro {
-                        warned_single_micro = true;
-                        log::warn!(
-                            "[{}] updates are realized as a single microbatch — the \
-                             gradient-variance estimate is always 0 and the governor \
-                             cannot adapt; lower max_microbatch or raise workers so \
-                             each update accumulates ≥ 2 microbatches",
-                            governor.name()
+                let mean_train_loss = loss_sum / iters.max(1) as f64;
+                let (test_loss, test_error) =
+                    if epoch % eval_every == 0 || epoch + 1 == cfg.epochs {
+                        let ev = timers.time("eval", || {
+                            evaluate(rt, &params, test_data, &mut eval_bufs, &mut eval_ws)
+                        })?;
+                        (ev.loss, ev.error)
+                    } else {
+                        let prev = history.epochs.last();
+                        (
+                            prev.map(|p| p.test_loss).unwrap_or(f64::NAN),
+                            prev.map(|p| p.test_error).unwrap_or(f64::NAN),
+                        )
+                    };
+                history.push(EpochRecord {
+                    epoch,
+                    batch: r,
+                    lr: epoch_lr,
+                    train_loss: mean_train_loss,
+                    test_loss,
+                    test_error,
+                    iterations: iters,
+                    active_workers: active,
+                    wall_secs: t_epoch.elapsed().as_secs_f64(),
+                });
+                // the timeline row: one span per epoch carrying everything the
+                // training timeline view needs (wall duration lands only in
+                // the chrome view — the byte-compared JSONL has no wall time)
+                ctl_trace.record_span(
+                    SpanPayload::Epoch {
+                        epoch: epoch as u32,
+                        batch: r as u32,
+                        active: active as u32,
+                        iterations: iters as u32,
+                        lr: epoch_lr,
+                        train_loss: mean_train_loss,
+                        test_loss,
+                        test_error,
+                        signal: governor.signal().unwrap_or(f64::NAN),
+                        decisions: governor.decisions() as u32,
+                        occupancy: active as f64 / n_slots as f64,
+                    },
+                    t_epoch.elapsed().as_nanos() as u64,
+                );
+
+                // checkpoint on the configured cadence and at the final epoch
+                // (only completed, non-diverged epochs reach this point)
+                if let Some(dir) = &cfg.checkpoint_dir {
+                    let every = cfg.checkpoint_every.max(1);
+                    if (epoch + 1) % every == 0 || epoch + 1 == cfg.epochs {
+                        let ck = super::checkpoint::Checkpoint {
+                            model: rt.entry.name.clone(),
+                            epoch,
+                            batch: r,
+                            params: params.as_ref().clone(),
+                            velocity: opt.velocity().cloned(),
+                        };
+                        let path = dir.join(format!("epoch{epoch:04}.ckpt"));
+                        timers.time("checkpoint", || ck.save(&path))?;
+                        ctl_trace.record(SpanPayload::Checkpoint { epoch: epoch as u32 });
+                        log::info!(
+                            "[{}] checkpointed epoch {epoch} → {}",
+                            governor.name(),
+                            path.display()
                         );
                     }
-                    let stats = GradVarianceController::stats_from_norms(
-                        &micro_norms,
-                        replica_grads[0].sq_norm(),
-                    );
-                    governor.observe(stats);
-                }
-
-                timers.time("optim", || {
-                    opt.step(Arc::make_mut(&mut params), &replica_grads[0], lr)
-                });
-            }
-
-            if cfg.divergence_guard && !params.all_finite() {
-                history.diverged = true;
-                break 'epochs;
-            }
-
-            let mean_train_loss = loss_sum / iters.max(1) as f64;
-            let (test_loss, test_error) = if epoch % eval_every == 0 || epoch + 1 == cfg.epochs {
-                let ev = timers.time("eval", || {
-                    evaluate(rt, &params, test_data, &mut eval_bufs, &mut eval_ws)
-                })?;
-                (ev.loss, ev.error)
-            } else {
-                let prev = history.epochs.last();
-                (
-                    prev.map(|p| p.test_loss).unwrap_or(f64::NAN),
-                    prev.map(|p| p.test_error).unwrap_or(f64::NAN),
-                )
-            };
-            history.push(EpochRecord {
-                epoch,
-                batch: r,
-                lr: epoch_lr,
-                train_loss: mean_train_loss,
-                test_loss,
-                test_error,
-                iterations: iters,
-                active_workers: active,
-                wall_secs: t_epoch.elapsed().as_secs_f64(),
-            });
-
-            // checkpoint on the configured cadence and at the final epoch
-            // (only completed, non-diverged epochs reach this point)
-            if let Some(dir) = &cfg.checkpoint_dir {
-                let every = cfg.checkpoint_every.max(1);
-                if (epoch + 1) % every == 0 || epoch + 1 == cfg.epochs {
-                    let ck = super::checkpoint::Checkpoint {
-                        model: rt.entry.name.clone(),
-                        epoch,
-                        batch: r,
-                        params: params.as_ref().clone(),
-                        velocity: opt.velocity().cloned(),
-                    };
-                    let path = dir.join(format!("epoch{epoch:04}.ckpt"));
-                    timers.time("checkpoint", || ck.save(&path))?;
-                    log::info!(
-                        "[{}] checkpointed epoch {epoch} → {}",
-                        governor.name(),
-                        path.display()
-                    );
                 }
             }
-        }
-        let (worker_timers, mut stats) = engine.shutdown();
-        stats.merge(&eval_ws.stats());
-        Ok((worker_timers, stats))
-    })?;
-    let (worker_timers, ws_stats) = scope_out;
+            let (worker_timers, mut stats, traces) = engine.shutdown_full();
+            stats.merge(&eval_ws.stats());
+            Ok((worker_timers, stats, traces))
+        })?;
+    let (worker_timers, ws_stats, worker_traces) = scope_out;
     timers.merge(&worker_timers);
     // workspace accounting rides on the history so `adabatch train` can
     // report alloc_bytes_steady_state / pack_count without new plumbing
     history.workspace = ws_stats;
+
+    // -- exposition: drain trace buffers and snapshot the registry. All
+    // writes happen after the run, outside every hot path. --
+    if let Some(path) = &cfg.telemetry.metrics_out {
+        let mut reg = MetricsRegistry::default();
+        reg.absorb_phase_timers(&timers);
+        let epochs = reg.counter("train_epochs_total");
+        reg.inc(epochs, history.epochs.len() as u64);
+        let iters = reg.counter("train_iterations_total");
+        reg.inc(iters, history.epochs.iter().map(|e| e.iterations as u64).sum());
+        let decisions = reg.counter("governor_decisions_total");
+        reg.inc(decisions, governor.decisions() as u64);
+        let dropped = reg.counter("trace_events_dropped_total");
+        reg.inc(
+            dropped,
+            ctl_trace.dropped() + worker_traces.iter().map(|b| b.dropped()).sum::<u64>(),
+        );
+        let pack = reg.counter("workspace_pack_count_total");
+        reg.inc(pack, history.workspace.pack_count);
+        let alloc = reg.gauge("workspace_alloc_bytes");
+        reg.set(alloc, history.workspace.alloc_bytes as f64);
+        write_prometheus(path, &reg).context("writing metrics snapshot")?;
+    }
+    if let Some(path) = &cfg.telemetry.trace_out {
+        let ctl_events = ctl_trace.drain();
+        let workers: Vec<_> = worker_traces.into_iter().map(|mut b| b.drain()).collect();
+        write_train_trace(path, &ctl_events, &workers).context("writing trace")?;
+    }
     Ok((history, timers))
 }
 

@@ -59,6 +59,7 @@ use super::accumulate::GradAccumulator;
 use super::dataset::TrainData;
 use crate::data::loader::Prefetcher;
 use crate::metrics::PhaseTimers;
+use crate::obs::trace::{SpanPayload, TraceBuf};
 use crate::optim::param::{ParamSet, ParamSpec};
 use crate::runtime::{Dtype, HostBatch, StepExecutable, Workspace, WorkspaceStats};
 
@@ -97,7 +98,7 @@ enum Job {
 pub struct Engine<'scope> {
     job_txs: Vec<Sender<Job>>,
     res_rx: Receiver<(usize, u64, Result<Vec<(usize, WorkerOut)>>)>,
-    handles: Vec<ScopedJoinHandle<'scope, (PhaseTimers, WorkspaceStats)>>,
+    handles: Vec<ScopedJoinHandle<'scope, (PhaseTimers, WorkspaceStats, TraceBuf)>>,
     seq: u64,
 }
 
@@ -127,6 +128,22 @@ impl<'scope> Engine<'scope> {
         specs: &'env [ParamSpec],
         kernel_threads: usize,
     ) -> Engine<'scope> {
+        Engine::start_traced(scope, workers, data, specs, kernel_threads, 0)
+    }
+
+    /// [`Engine::start_with`] plus a per-worker trace-buffer capacity:
+    /// each worker ring-buffers microbatch and kernel-dispatch span
+    /// events (capacity 0 disables recording entirely — the hot path
+    /// sees one branch per would-be event and no allocation either way).
+    /// Drained buffers come back from [`Engine::shutdown_full`].
+    pub fn start_traced<'env: 'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        workers: usize,
+        data: &'env TrainData,
+        specs: &'env [ParamSpec],
+        kernel_threads: usize,
+        trace_capacity: usize,
+    ) -> Engine<'scope> {
         assert!(workers > 0, "engine needs at least one worker");
         assert!(kernel_threads > 0, "engine needs at least one kernel thread");
         let (res_tx, res_rx) = channel();
@@ -135,10 +152,9 @@ impl<'scope> Engine<'scope> {
         for w in 0..workers {
             let (tx, rx) = channel::<Job>();
             let res_tx = res_tx.clone();
-            handles.push(
-                scope
-                    .spawn(move || worker_loop(w, scope, rx, res_tx, data, specs, kernel_threads)),
-            );
+            handles.push(scope.spawn(move || {
+                worker_loop(w, scope, rx, res_tx, data, specs, kernel_threads, trace_capacity)
+            }));
             job_txs.push(tx);
         }
         Engine { job_txs, res_rx, handles, seq: 0 }
@@ -249,25 +265,37 @@ impl<'scope> Engine<'scope> {
     /// workspace accounting. A worker that panicked is re-raised here
     /// rather than silently dropped.
     pub fn shutdown(self) -> (PhaseTimers, WorkspaceStats) {
+        let (timers, ws_stats, _traces) = self.shutdown_full();
+        (timers, ws_stats)
+    }
+
+    /// [`Engine::shutdown`] that additionally hands back each worker's
+    /// trace buffer (worker-index order). Buffers are empty unless the
+    /// engine was started via [`Engine::start_traced`] with a nonzero
+    /// capacity.
+    pub fn shutdown_full(self) -> (PhaseTimers, WorkspaceStats, Vec<TraceBuf>) {
         for tx in &self.job_txs {
             let _ = tx.send(Job::Finish);
         }
         let mut merged = PhaseTimers::new();
         let mut ws_stats = WorkspaceStats::default();
+        let mut traces = Vec::with_capacity(self.handles.len());
         for (w, handle) in self.handles.into_iter().enumerate() {
             match handle.join() {
-                Ok((timers, ws)) => {
+                Ok((timers, ws, trace)) => {
                     merged.merge(&timers);
                     merged.merge_prefixed(&format!("w{w}/"), &timers);
                     ws_stats.merge(&ws);
+                    traces.push(trace);
                 }
                 Err(payload) => std::panic::resume_unwind(payload),
             }
         }
-        (merged, ws_stats)
+        (merged, ws_stats, traces)
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop<'scope, 'env: 'scope>(
     index: usize,
     scope: &'scope Scope<'scope, 'env>,
@@ -276,7 +304,8 @@ fn worker_loop<'scope, 'env: 'scope>(
     data: &'env TrainData,
     specs: &'env [ParamSpec],
     kernel_threads: usize,
-) -> (PhaseTimers, WorkspaceStats) {
+    trace_capacity: usize,
+) -> (PhaseTimers, WorkspaceStats, TraceBuf) {
     let prefetcher = Prefetcher::spawn(scope, data);
     let mut acc = GradAccumulator::new(specs);
     let mut timers = PhaseTimers::new();
@@ -284,6 +313,7 @@ fn worker_loop<'scope, 'env: 'scope>(
     // recycled grad sets persist across every dispatch — and across
     // parked stretches, so a reactivated worker's caches are still warm
     let mut ws = Workspace::with_kernel_threads(kernel_threads);
+    let mut trace = TraceBuf::new(trace_capacity);
     let mut poisoned = false;
     while let Ok(job) = jobs.recv() {
         match job {
@@ -296,6 +326,7 @@ fn worker_loop<'scope, 'env: 'scope>(
                 let mut slot_outs = Vec::with_capacity(slots.len());
                 let mut failure: Option<anyhow::Error> = None;
                 for (slot, shard) in &slots {
+                    let dispatched = ws.pool.as_ref().map(|p| p.dispatches());
                     // each slot runs its own accumulator lifecycle, so a
                     // slot's gradient never depends on which worker (or
                     // how many siblings) computed the others
@@ -310,8 +341,22 @@ fn worker_loop<'scope, 'env: 'scope>(
                         shard,
                         microbatch,
                         specs,
+                        *slot,
+                        &mut trace,
                     ) {
-                        Ok(out) => slot_outs.push((*slot, out)),
+                        Ok(out) => {
+                            if let Some(before) = dispatched {
+                                let delta = ws
+                                    .pool
+                                    .as_ref()
+                                    .map(|p| p.dispatches() - before)
+                                    .unwrap_or(0);
+                                if delta > 0 {
+                                    trace.record(SpanPayload::KernelDispatch { delta });
+                                }
+                            }
+                            slot_outs.push((*slot, out));
+                        }
                         Err(e) => {
                             failure = Some(e);
                             break;
@@ -332,7 +377,7 @@ fn worker_loop<'scope, 'env: 'scope>(
             }
         }
     }
-    (timers, ws.stats())
+    (timers, ws.stats(), trace)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -347,6 +392,8 @@ fn run_shard(
     shard: &[usize],
     microbatch: usize,
     specs: &[ParamSpec],
+    slot: usize,
+    trace: &mut TraceBuf,
 ) -> Result<WorkerOut> {
     if shard.is_empty() {
         // empty slot this step (more slots than samples): zero-weight
@@ -360,6 +407,10 @@ fn run_shard(
     }
     let n_chunks = shard.len().div_ceil(microbatch);
     for chunk in shard.chunks(microbatch) {
+        trace.record(SpanPayload::Microbatch {
+            slot: slot as u32,
+            size: chunk.len() as u32,
+        });
         prefetcher.request(chunk.to_vec(), microbatch);
     }
     let dtype = data.x_dtype();
@@ -427,10 +478,12 @@ mod tests {
             let mut acc = GradAccumulator::new(&rt.entry.params);
             let mut timers = PhaseTimers::new();
             let mut ws = Workspace::new();
+            let mut trace = TraceBuf::disabled();
             for shard in &shards {
                 let specs = &rt.entry.params;
                 let out = run_shard(
                     &pf, &mut acc, &mut timers, &mut ws, &data, &exe, &params, shard, 4, specs,
+                    0, &mut trace,
                 );
                 serial.push(out.unwrap());
             }
@@ -501,6 +554,42 @@ mod tests {
         assert_eq!(ws_stats.pack_count, 2, "one pack per worker for a frozen ParamSet");
         assert!(ws_stats.pack_hits >= 4);
         assert!(ws_stats.alloc_bytes > 0);
+    }
+
+    #[test]
+    fn traced_engine_reports_microbatch_spans() {
+        let data = tiny_data();
+        let rt = ModelRuntime::reference_classifier("ref", IMG_LEN, 4, &[4, 8], 16);
+        let exe = rt.executable(StepKind::Train, 4).unwrap();
+        let params = Arc::new(ParamSet::init(&rt.entry.params, 1));
+        let batch: Vec<usize> = (0..16).collect();
+        let traces = std::thread::scope(|s| {
+            let mut engine = Engine::start_traced(s, 2, &data, &rt.entry.params, 1, 1024);
+            let shards = crate::data::shard::shard_batch(&batch, 2);
+            engine.dispatch(&exe, &params, shards, 4, 2).unwrap();
+            let (_, _, traces) = engine.shutdown_full();
+            traces
+        });
+        assert_eq!(traces.len(), 2);
+        for buf in &traces {
+            // 8 samples per slot at microbatch 4 = two chunk events
+            let micro = buf
+                .events()
+                .iter()
+                .filter(|e| matches!(e.payload, SpanPayload::Microbatch { .. }))
+                .count();
+            assert_eq!(micro, 2);
+            assert_eq!(buf.dropped(), 0);
+        }
+        // the untraced constructors keep buffers disabled
+        let empty = std::thread::scope(|s| {
+            let mut engine = Engine::start(s, 2, &data, &rt.entry.params);
+            let shards = crate::data::shard::shard_batch(&batch, 2);
+            engine.dispatch(&exe, &params, shards, 4, 2).unwrap();
+            let (_, _, traces) = engine.shutdown_full();
+            traces
+        });
+        assert!(empty.iter().all(|b| b.events().is_empty()));
     }
 
     /// The elastic core claim, at engine granularity: slot outputs are a

@@ -15,6 +15,7 @@ use crate::config::{reference_runtime, DatasetChoice};
 use crate::coordinator::{train, TrainData, TrainerConfig};
 use crate::data::synthetic::{generate, SyntheticSpec};
 use crate::metrics::{PhaseTimers, RunHistory};
+use crate::obs::TelemetryConfig;
 use crate::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
 use crate::schedule::{AdaBatchPolicy, IntervalGovernor};
 use crate::util::stats;
@@ -32,6 +33,10 @@ pub struct ExpCtx {
     /// trials per arm (paper uses 5; scaled default 1–3)
     pub trials: usize,
     pub workers: usize,
+    /// telemetry template for every arm's runs (default: disabled). When
+    /// outputs are set, each trial suffixes its paths with `.t<trial>` so
+    /// trials never overwrite one another.
+    pub telemetry: TelemetryConfig,
 }
 
 impl ExpCtx {
@@ -49,6 +54,7 @@ impl ExpCtx {
             epochs,
             trials,
             workers: 1,
+            telemetry: TelemetryConfig::default(),
         })
     }
 
@@ -109,12 +115,29 @@ impl ExpCtx {
         for trial in 0..self.trials {
             let mut cfg = TrainerConfig::new(self.epochs)
                 .with_seed(1000 + trial as u64)
-                .with_workers(self.workers);
+                .with_workers(self.workers)
+                .with_telemetry(self.trial_telemetry(trial));
             cfg.max_microbatch = max_microbatch;
             let mut governor = IntervalGovernor::new(policy.clone());
             out.push(train(rt, &cfg, &mut governor, &data.0, &data.1)?);
         }
         Ok(out)
+    }
+
+    /// The context's telemetry template with per-trial output paths
+    /// (`trace.jsonl` → `trace.jsonl.t1`), so multi-trial arms keep every
+    /// trial's trace instead of overwriting the file `trials` times.
+    fn trial_telemetry(&self, trial: usize) -> TelemetryConfig {
+        let suffix = |p: &std::path::Path| {
+            let mut s = p.as_os_str().to_os_string();
+            s.push(format!(".t{trial}"));
+            PathBuf::from(s)
+        };
+        TelemetryConfig {
+            trace_out: self.telemetry.trace_out.as_deref().map(suffix),
+            metrics_out: self.telemetry.metrics_out.as_deref().map(suffix),
+            ..self.telemetry.clone()
+        }
     }
 }
 

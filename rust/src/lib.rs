@@ -40,6 +40,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod metrics;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod schedule;

@@ -20,7 +20,7 @@
 //! Everything runs from the AOT artifacts (`make artifacts`) or the
 //! pure-Rust reference backend; no python at run time.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use adabatch::config::{
     allreduce_from_name, build_policy, reference_runtime, DatasetChoice, JobConfig, ModelArch,
@@ -30,6 +30,7 @@ use adabatch::coordinator::{train, TrainData};
 use adabatch::data::corpus::LmDataset;
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::experiments::{self, harness::ExpCtx};
+use adabatch::obs::{validate_trace, TelemetryConfig};
 use adabatch::runtime::kernels;
 use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
 use adabatch::schedule::{
@@ -67,6 +68,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(rest),
         "inspect-artifacts" => cmd_inspect(rest),
         "simulate" => cmd_simulate(rest),
+        "validate-trace" => cmd_validate_trace(rest),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -85,6 +87,7 @@ fn print_help() {
          \x20 experiment <id>     regenerate a paper table/figure: {ids}\n\
          \x20 inspect-artifacts   list AOT models and native batch sizes\n\
          \x20 simulate            query the P100 cluster performance model\n\
+         \x20 validate-trace F…   check a --trace-out JSONL trace's schema\n\
          \x20 help                this message",
         ids = experiments::ALL.join(", ")
     );
@@ -121,6 +124,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("checkpoint-every", "1", "epochs between checkpoints")
         .opt("resume", "", "resume from this checkpoint file (\"\" = fresh run)")
         .opt("report-out", "", "also write the JSON report line to this file")
+        .opt("trace-out", "", "write a JSONL trace (+ .chrome.json view) here (\"\" = off)")
+        .opt("metrics-out", "", "write a Prometheus text snapshot here (\"\" = off)")
         .flag("help", "show usage");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.usage());
@@ -168,6 +173,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     if !resume.is_empty() {
         job.trainer.resume = Some(resume.into());
     }
+    job.trainer.telemetry = TelemetryConfig::from_cli(&a.str("trace-out"), &a.str("metrics-out"));
     job.validate()?;
 
     // batch criterion: the paper's interval policy, or a data-driven
@@ -309,6 +315,12 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         std::fs::write(&report_out, &rendered)?;
         eprintln!("train report written to {report_out}");
     }
+    if let Some(p) = &job.trainer.telemetry.trace_out {
+        eprintln!("trace written to {} (+ .chrome.json view)", p.display());
+    }
+    if let Some(p) = &job.trainer.telemetry.metrics_out {
+        eprintln!("metrics snapshot written to {}", p.display());
+    }
     Ok(())
 }
 
@@ -359,6 +371,8 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         .opt("drain-grace", "0.5", "seconds of serving allowed past the arrival window")
         .opt("checkpoint", "", "serve params from this training checkpoint")
         .opt("out", "", "also write the JSON report to this file")
+        .opt("trace-out", "", "virtual clock: write a JSONL trace here (\"\" = off)")
+        .opt("metrics-out", "", "write a Prometheus text snapshot here (\"\" = off)")
         .flag("smoke", "tiny CI run: all three governors over ~2s of traffic")
         .flag("help", "show usage");
     if argv.iter().any(|a| a == "--help") {
@@ -385,6 +399,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         service_per_sample_us: a.f64("service-per-sample-us")?,
         arch: ModelArch::from_name(&a.str("model"), a.usize("hidden")?)?,
         kernel_threads: a.usize("kernel-threads")?,
+        telemetry: TelemetryConfig::from_cli(&a.str("trace-out"), &a.str("metrics-out")),
     };
     let clock = Clock::from_name(&a.str("clock"))?;
     let classes = a.usize("classes")?;
@@ -435,6 +450,34 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     if !out.is_empty() {
         std::fs::write(&out, &rendered)?;
         eprintln!("report written to {out}");
+    }
+    if clock == Clock::Virtual {
+        if let Some(p) = &scfg.telemetry.trace_out {
+            eprintln!("trace written to {} (+ .chrome.json view)", p.display());
+        }
+    }
+    if let Some(p) = &scfg.telemetry.metrics_out {
+        eprintln!("metrics snapshot written to {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_validate_trace(argv: &[String]) -> Result<()> {
+    let cmd = Command::new("validate-trace", "check a JSONL trace's schema and sequencing")
+        .flag("help", "show usage");
+    if argv.iter().any(|a| a == "--help") {
+        println!("{}", cmd.usage());
+        println!("usage: adabatch validate-trace FILE [FILE…]");
+        return Ok(());
+    }
+    let a = cmd.parse(argv)?;
+    if a.positional.is_empty() {
+        bail!("which trace? usage: adabatch validate-trace FILE [FILE…]");
+    }
+    for path in &a.positional {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let summary = validate_trace(&text).with_context(|| format!("invalid trace {path}"))?;
+        println!("{path}: ok — {} events across {} threads", summary.lines, summary.threads);
     }
     Ok(())
 }

@@ -144,6 +144,23 @@ impl LatencyHistogram {
         self.quantile(0.99)
     }
 
+    /// Σ of all recorded values (saturating at u64::MAX for exposition;
+    /// the internal accumulator is u128).
+    pub fn sum(&self) -> u64 {
+        u64::try_from(self.sum).unwrap_or(u64::MAX)
+    }
+
+    /// Non-empty buckets as `(inclusive upper edge, count)`, ascending —
+    /// the Prometheus `_bucket{le=..}` substrate (`obs::MetricsRegistry`
+    /// renders these as a cumulative series).
+    pub fn buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(idx, &c)| (Self::bucket_upper(idx), c))
+    }
+
     /// Fold `other` in: exact bucket-wise addition (associative and
     /// commutative — workers can be merged in any order).
     pub fn merge(&mut self, other: &LatencyHistogram) {
@@ -320,6 +337,21 @@ mod tests {
                 db <= 1 && got >= exact
             })
         });
+    }
+
+    #[test]
+    fn buckets_iterator_covers_every_record_in_order() {
+        let mut h = LatencyHistogram::new();
+        for v in [3u64, 3, 17, 500_000] {
+            h.record(v);
+        }
+        let buckets: Vec<(u64, u64)> = h.buckets().collect();
+        assert_eq!(buckets.iter().map(|&(_, c)| c).sum::<u64>(), h.count());
+        assert!(buckets.windows(2).all(|w| w[0].0 < w[1].0), "edges ascend");
+        assert_eq!(buckets[0], (3, 2), "unit bucket below SUB is exact");
+        assert!(buckets.iter().all(|&(_, c)| c > 0), "only non-empty buckets appear");
+        assert_eq!(h.sum(), 3 + 3 + 17 + 500_000);
+        assert_eq!(LatencyHistogram::new().buckets().count(), 0);
     }
 
     #[test]

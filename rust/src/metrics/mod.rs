@@ -11,11 +11,17 @@ use std::time::{Duration, Instant};
 
 use crate::util::stats;
 
-/// Named wall-clock phase accumulator.
+/// Named wall-clock phase accumulator. Phase names are interned: the
+/// first `add` for a name pays one `String` allocation, every later
+/// one is a map lookup plus two vector writes — the hot path
+/// (`time("fwd_bwd", ..)` per micro-batch) never allocates (ISSUE 7).
 #[derive(Debug, Default, Clone)]
 pub struct PhaseTimers {
-    totals: BTreeMap<String, Duration>,
-    counts: BTreeMap<String, u64>,
+    /// phase name → slot in `totals`/`counts` (sorted, so reports and
+    /// `phases()` keep their stable BTreeMap order)
+    index: BTreeMap<String, usize>,
+    totals: Vec<Duration>,
+    counts: Vec<u64>,
 }
 
 impl PhaseTimers {
@@ -32,16 +38,27 @@ impl PhaseTimers {
     }
 
     pub fn add(&mut self, name: &str, d: Duration) {
-        *self.totals.entry(name.to_string()).or_default() += d;
-        *self.counts.entry(name.to_string()).or_default() += 1;
+        self.accumulate(name, d, 1);
+    }
+
+    fn accumulate(&mut self, name: &str, d: Duration, n: u64) {
+        if let Some(&i) = self.index.get(name) {
+            self.totals[i] += d;
+            self.counts[i] += n;
+        } else {
+            let i = self.totals.len();
+            self.index.insert(name.to_string(), i);
+            self.totals.push(d);
+            self.counts.push(n);
+        }
     }
 
     pub fn total(&self, name: &str) -> Duration {
-        self.totals.get(name).copied().unwrap_or_default()
+        self.index.get(name).map(|&i| self.totals[i]).unwrap_or_default()
     }
 
     pub fn count(&self, name: &str) -> u64 {
-        self.counts.get(name).copied().unwrap_or_default()
+        self.index.get(name).map(|&i| self.counts[i]).unwrap_or_default()
     }
 
     pub fn mean_secs(&self, name: &str) -> f64 {
@@ -54,30 +71,25 @@ impl PhaseTimers {
     }
 
     pub fn merge(&mut self, other: &PhaseTimers) {
-        for (k, v) in &other.totals {
-            *self.totals.entry(k.clone()).or_default() += *v;
-        }
-        for (k, v) in &other.counts {
-            *self.counts.entry(k.clone()).or_default() += *v;
+        for (k, &i) in &other.index {
+            self.accumulate(k, other.totals[i], other.counts[i]);
         }
     }
 
     /// Merge `other` under `prefix` (e.g. `w3/fwd_bwd`) — how the engine
     /// folds per-worker timers into the run's timers without losing
-    /// attribution.
+    /// attribution. Prefixed names are formed only here, at merge time,
+    /// never per record.
     pub fn merge_prefixed(&mut self, prefix: &str, other: &PhaseTimers) {
-        for (k, v) in &other.totals {
-            *self.totals.entry(format!("{prefix}{k}")).or_default() += *v;
-        }
-        for (k, v) in &other.counts {
-            *self.counts.entry(format!("{prefix}{k}")).or_default() += *v;
+        for (k, &i) in &other.index {
+            self.accumulate(&format!("{prefix}{k}"), other.totals[i], other.counts[i]);
         }
     }
 
     pub fn phases(&self) -> impl Iterator<Item = (&str, Duration, u64)> {
-        self.totals
+        self.index
             .iter()
-            .map(|(k, v)| (k.as_str(), *v, self.count(k)))
+            .map(|(k, &i)| (k.as_str(), self.totals[i], self.counts[i]))
     }
 
     pub fn report(&self) -> String {
@@ -245,6 +257,25 @@ mod tests {
             "only flat + w0/ entries exist: {:?}",
             run_a.phases().map(|(k, _, _)| k.to_string()).collect::<Vec<_>>()
         );
+    }
+
+    /// ISSUE 7 satellite: `add` used to allocate a `String` key per
+    /// call. With interning, only the *first* add of a name allocates;
+    /// the steady state is allocation-free under the counting
+    /// allocator.
+    #[test]
+    fn add_does_not_allocate_after_interning() {
+        let mut t = PhaseTimers::new();
+        t.add("fwd_bwd", Duration::from_millis(1));
+        t.add("gather", Duration::from_millis(1));
+        let (_, allocs, bytes) = crate::util::alloc::count_allocs(|| {
+            for _ in 0..10_000 {
+                t.add("fwd_bwd", Duration::from_micros(3));
+                t.add("gather", Duration::from_micros(1));
+            }
+        });
+        assert_eq!(allocs, 0, "interned phase adds must not allocate ({bytes} bytes)");
+        assert_eq!(t.count("fwd_bwd"), 10_001);
     }
 
     #[test]

@@ -1,0 +1,123 @@
+//! `obs` — the unified telemetry subsystem (ISSUE 7, DESIGN.md §12):
+//! deterministic structured tracing, a registry of named metrics, and
+//! text exposition, shared by the train and serve paths.
+//!
+//! Three layers:
+//!
+//! * [`registry`] — a [`MetricsRegistry`] of named counters, gauges and
+//!   log-bucketed histograms. Names resolve **once** to index handles
+//!   ([`CounterId`]/[`GaugeId`]/[`HistId`]); every hot-path update is a
+//!   plain `Vec` index — no string hashing, no allocation, no locking.
+//! * [`trace`] — span-based structured tracing into per-thread
+//!   [`TraceBuf`] ring buffers of `Copy` events with deterministic
+//!   per-thread sequence numbers. Recording into a pre-reserved buffer
+//!   is zero-allocation; a full buffer drops the newest events and
+//!   counts them rather than growing.
+//! * [`writer`] — drains buffers into a JSONL trace (one event per
+//!   line, canonical sorted-key rendering) plus a sibling
+//!   chrome://tracing `*.chrome.json` view, renders the registry as a
+//!   Prometheus-style text snapshot, and validates trace schemas
+//!   (`adabatch validate-trace`).
+//!
+//! Load-bearing contracts (pinned by tests):
+//!
+//! * **Bitwise invariance** — telemetry enabled vs disabled changes no
+//!   model output: events are recorded off to the side and only ever
+//!   *read* engine state. `tests/engine_determinism.rs` compares full
+//!   trajectories bit-for-bit with tracing on and off.
+//! * **Determinism split** — the byte-compared JSONL carries only
+//!   fields that are pure functions of (seed, config): the train trace
+//!   omits wall times entirely; the serve trace *includes* its
+//!   timestamps because the virtual clock makes them deterministic
+//!   (two seeded serve runs must produce byte-identical files). Wall
+//!   timings live only in the chrome sibling, which is never compared.
+//! * **Zero allocation** — steady-state recording allocates nothing
+//!   (`util::alloc::CountingAlloc` tests in [`trace`] and
+//!   [`registry`]).
+
+pub mod registry;
+pub mod trace;
+pub mod writer;
+
+pub use registry::{CounterId, GaugeId, HistId, MetricsRegistry};
+pub use trace::{SpanPayload, TraceBuf, TraceEvent};
+pub use writer::{validate_trace, write_prometheus, write_serve_trace, write_train_trace};
+
+use std::path::PathBuf;
+
+/// Where (and whether) a run emits telemetry. Default: fully disabled —
+/// a `TraceBuf` built from a disabled config has capacity 0 and its
+/// `record` calls are branch-and-return.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetryConfig {
+    /// JSONL trace destination (`--trace-out`); a chrome://tracing view
+    /// is written next to it as `<path>.chrome.json`.
+    pub trace_out: Option<PathBuf>,
+    /// Prometheus-style text snapshot destination (`--metrics-out`).
+    pub metrics_out: Option<PathBuf>,
+    /// Per-thread event-buffer capacity; events past this are dropped
+    /// (and counted) rather than grown into.
+    pub buffer_capacity: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { trace_out: None, metrics_out: None, buffer_capacity: 65536 }
+    }
+}
+
+impl TelemetryConfig {
+    /// True when any output is requested; gates all recording.
+    pub fn enabled(&self) -> bool {
+        self.trace_out.is_some() || self.metrics_out.is_some()
+    }
+
+    /// The per-thread buffer capacity to allocate: 0 when disabled, so
+    /// buffers built from a disabled config never record or allocate.
+    pub fn trace_capacity(&self) -> usize {
+        if self.enabled() {
+            self.buffer_capacity
+        } else {
+            0
+        }
+    }
+
+    /// Build a config from optional CLI path strings (empty = off).
+    pub fn from_cli(trace_out: &str, metrics_out: &str) -> Self {
+        TelemetryConfig {
+            trace_out: if trace_out.is_empty() { None } else { Some(PathBuf::from(trace_out)) },
+            metrics_out: if metrics_out.is_empty() {
+                None
+            } else {
+                Some(PathBuf::from(metrics_out))
+            },
+            ..TelemetryConfig::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_disabled() {
+        let t = TelemetryConfig::default();
+        assert!(!t.enabled());
+        assert_eq!(t.trace_capacity(), 0);
+    }
+
+    #[test]
+    fn from_cli_empty_strings_stay_off() {
+        let t = TelemetryConfig::from_cli("", "");
+        assert!(!t.enabled());
+        let t = TelemetryConfig::from_cli("trace.jsonl", "");
+        assert!(t.enabled());
+        assert_eq!(t.trace_out.as_deref(), Some(std::path::Path::new("trace.jsonl")));
+        assert!(t.metrics_out.is_none());
+        assert_eq!(t.trace_capacity(), 65536);
+        let t = TelemetryConfig::from_cli("", "m.prom");
+        assert!(t.enabled());
+        assert!(t.trace_out.is_none());
+    }
+}

@@ -1,0 +1,349 @@
+//! A registry of named metrics with pre-resolved index handles.
+//!
+//! Names are resolved **once** — at registration — into
+//! [`CounterId`]/[`GaugeId`]/[`HistId`] handles that index straight
+//! into per-kind `Vec` storage. Every hot-path update (`inc`, `set`,
+//! `record`) is a bounds-checked array write: no string hashing, no
+//! allocation, no locking. The registry is single-owner by design
+//! (each recording site owns one, merged by name at shutdown — the
+//! same pattern `PhaseTimers` uses), so there is no shared-state
+//! synchronization to pay for or get wrong.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::metrics::{LatencyHistogram, PhaseTimers};
+use crate::util::json::Json;
+
+/// Handle to a registered counter (monotone u64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(usize);
+
+/// Handle to a registered gauge (last-write f64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(usize);
+
+/// Handle to a registered log-bucketed histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistId(usize);
+
+/// Named counters, gauges and histograms behind index handles.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsRegistry {
+    counter_index: BTreeMap<String, usize>,
+    counters: Vec<u64>,
+    gauge_index: BTreeMap<String, usize>,
+    gauges: Vec<f64>,
+    hist_index: BTreeMap<String, usize>,
+    hists: Vec<LatencyHistogram>,
+}
+
+/// Prometheus metric names allow `[a-zA-Z0-9_:]`; phase keys contain
+/// `/` (e.g. `w0/fwd_bwd`), so everything else maps to `_`.
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect()
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Register (or look up) a counter; the returned handle is stable
+    /// for the registry's lifetime. Names are sanitized at
+    /// registration, so `w0/fwd` and `w0_fwd` are the same metric.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        let name = sanitize(name);
+        if let Some(&i) = self.counter_index.get(&name) {
+            return CounterId(i);
+        }
+        let i = self.counters.len();
+        self.counters.push(0);
+        self.counter_index.insert(name, i);
+        CounterId(i)
+    }
+
+    pub fn gauge(&mut self, name: &str) -> GaugeId {
+        let name = sanitize(name);
+        if let Some(&i) = self.gauge_index.get(&name) {
+            return GaugeId(i);
+        }
+        let i = self.gauges.len();
+        self.gauges.push(0.0);
+        self.gauge_index.insert(name, i);
+        GaugeId(i)
+    }
+
+    pub fn hist(&mut self, name: &str) -> HistId {
+        let name = sanitize(name);
+        if let Some(&i) = self.hist_index.get(&name) {
+            return HistId(i);
+        }
+        let i = self.hists.len();
+        self.hists.push(LatencyHistogram::new());
+        self.hist_index.insert(name, i);
+        HistId(i)
+    }
+
+    // -- hot-path updates: plain Vec indexing, zero allocation ---------
+
+    #[inline]
+    pub fn inc(&mut self, id: CounterId, by: u64) {
+        self.counters[id.0] += by;
+    }
+
+    #[inline]
+    pub fn set(&mut self, id: GaugeId, v: f64) {
+        self.gauges[id.0] = v;
+    }
+
+    #[inline]
+    pub fn record(&mut self, id: HistId, v: u64) {
+        self.hists[id.0].record(v);
+    }
+
+    // -- cold-path reads ----------------------------------------------
+
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.counter_index.get(name).map(|&i| self.counters[i])
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauge_index.get(name).map(|&i| self.gauges[i])
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LatencyHistogram> {
+        self.hist_index.get(name).map(|&i| &self.hists[i])
+    }
+
+    /// Fold another registry in by name (counters add, gauges
+    /// last-write-wins, histograms merge) — the shutdown-time merge
+    /// that keeps the hot path single-owner.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (name, &i) in &other.counter_index {
+            let id = self.counter(name);
+            self.counters[id.0] += other.counters[i];
+        }
+        for (name, &i) in &other.gauge_index {
+            let id = self.gauge(name);
+            self.gauges[id.0] = other.gauges[i];
+        }
+        for (name, &i) in &other.hist_index {
+            let id = self.hist(name);
+            self.hists[id.0].merge(&other.hists[i]);
+        }
+    }
+
+    /// Absorb a [`PhaseTimers`] report: per phase, a
+    /// `phase_<name>_seconds` gauge and a `phase_<name>_calls` counter.
+    pub fn absorb_phase_timers(&mut self, timers: &PhaseTimers) {
+        for (name, total, count) in timers.phases() {
+            let base = sanitize(name);
+            let g = self.gauge(&format!("phase_{base}_seconds"));
+            self.set(g, total.as_secs_f64());
+            let c = self.counter(&format!("phase_{base}_calls"));
+            self.inc(c, count);
+        }
+    }
+
+    /// Merge an existing histogram under `name` (e.g. the serve path's
+    /// request-latency histogram).
+    pub fn absorb_histogram(&mut self, name: &str, hist: &LatencyHistogram) {
+        let id = self.hist(name);
+        self.hists[id.0].merge(hist);
+    }
+
+    /// Prometheus text exposition: `# TYPE` lines plus samples, names
+    /// prefixed `adabatch_`, histograms as cumulative `_bucket{le=..}`
+    /// series over the log-bucket upper edges.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, &i) in &self.counter_index {
+            let _ = writeln!(out, "# TYPE adabatch_{name} counter");
+            let _ = writeln!(out, "adabatch_{name} {}", self.counters[i]);
+        }
+        for (name, &i) in &self.gauge_index {
+            let _ = writeln!(out, "# TYPE adabatch_{name} gauge");
+            let _ = writeln!(out, "adabatch_{name} {}", self.gauges[i]);
+        }
+        for (name, &i) in &self.hist_index {
+            let h = &self.hists[i];
+            let _ = writeln!(out, "# TYPE adabatch_{name} histogram");
+            let mut cum = 0u64;
+            for (upper, count) in h.buckets() {
+                cum += count;
+                let _ = writeln!(out, "adabatch_{name}_bucket{{le=\"{upper}\"}} {cum}");
+            }
+            let _ = writeln!(out, "adabatch_{name}_bucket{{le=\"+Inf\"}} {}", h.count());
+            let _ = writeln!(out, "adabatch_{name}_sum {}", h.sum());
+            let _ = writeln!(out, "adabatch_{name}_count {}", h.count());
+        }
+        out
+    }
+
+    /// The registry as a JSON object (for report embedding and bench
+    /// history records): counters and gauges by name, histograms as
+    /// count/mean/p50/p95/p99 summaries.
+    pub fn snapshot_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counter_index
+            .iter()
+            .map(|(k, &i)| (k.clone(), Json::num(self.counters[i] as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> =
+            self.gauge_index.iter().map(|(k, &i)| (k.clone(), Json::num(self.gauges[i]))).collect();
+        let hists: BTreeMap<String, Json> = self
+            .hist_index
+            .iter()
+            .map(|(k, &i)| {
+                let h = &self.hists[i];
+                (
+                    k.clone(),
+                    Json::obj(vec![
+                        ("count", Json::num(h.count() as f64)),
+                        ("mean", Json::num(h.mean())),
+                        ("p50", Json::num(h.p50() as f64)),
+                        ("p95", Json::num(h.p95() as f64)),
+                        ("p99", Json::num(h.p99() as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::alloc::count_allocs;
+    use std::time::Duration;
+
+    #[test]
+    fn handles_resolve_once_and_updates_read_back() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("steps");
+        let c2 = reg.counter("steps");
+        assert_eq!(c, c2, "re-registering a name returns the same handle");
+        reg.inc(c, 3);
+        reg.inc(c, 2);
+        assert_eq!(reg.counter_value("steps"), Some(5));
+
+        let g = reg.gauge("occupancy");
+        reg.set(g, 0.5);
+        reg.set(g, 0.75);
+        assert_eq!(reg.gauge_value("occupancy"), Some(0.75));
+
+        let h = reg.hist("lat_ns");
+        for v in [10, 100, 1000] {
+            reg.record(h, v);
+        }
+        assert_eq!(reg.histogram("lat_ns").unwrap().count(), 3);
+    }
+
+    #[test]
+    fn hot_path_updates_are_zero_allocation() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("steps");
+        let g = reg.gauge("occupancy");
+        let h = reg.hist("lat_ns");
+        reg.record(h, 1); // fault in nothing: hist storage is fixed-size
+        let (_, allocs, _) = count_allocs(|| {
+            for i in 0..10_000u64 {
+                reg.inc(c, 1);
+                reg.set(g, i as f64);
+                reg.record(h, i + 1);
+            }
+        });
+        assert_eq!(allocs, 0, "handle-based updates must not allocate");
+    }
+
+    #[test]
+    fn merge_by_name() {
+        let mut a = MetricsRegistry::new();
+        let c = a.counter("steps");
+        a.inc(c, 2);
+        let h = a.hist("lat");
+        a.record(h, 50);
+
+        let mut b = MetricsRegistry::new();
+        let c = b.counter("steps");
+        b.inc(c, 3);
+        let c = b.counter("drops");
+        b.inc(c, 1);
+        let h = b.hist("lat");
+        b.record(h, 70);
+
+        a.merge(&b);
+        assert_eq!(a.counter_value("steps"), Some(5));
+        assert_eq!(a.counter_value("drops"), Some(1));
+        assert_eq!(a.histogram("lat").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn absorbs_phase_timers_with_sanitized_names() {
+        let mut t = PhaseTimers::new();
+        t.add("fwd_bwd", Duration::from_millis(10));
+        let mut pref = PhaseTimers::new();
+        pref.add("fwd_bwd", Duration::from_millis(4));
+        t.merge_prefixed("w0/", &pref);
+
+        let mut reg = MetricsRegistry::new();
+        reg.absorb_phase_timers(&t);
+        assert_eq!(reg.counter_value("phase_fwd_bwd_calls"), Some(1));
+        assert_eq!(reg.counter_value("phase_w0_fwd_bwd_calls"), Some(1));
+        let secs = reg.gauge_value("phase_w0_fwd_bwd_seconds").unwrap();
+        assert!((secs - 0.004).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_wellformed() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("epochs");
+        reg.inc(c, 4);
+        let g = reg.gauge("pack_hit_rate");
+        reg.set(g, 0.9375);
+        let h = reg.hist("serve_latency_ns");
+        for v in [100, 200, 200, 4000] {
+            reg.record(h, v);
+        }
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE adabatch_epochs counter\nadabatch_epochs 4\n"));
+        assert!(
+            text.contains("# TYPE adabatch_pack_hit_rate gauge\nadabatch_pack_hit_rate 0.9375\n")
+        );
+        assert!(text.contains("# TYPE adabatch_serve_latency_ns histogram"));
+        assert!(text.contains("adabatch_serve_latency_ns_bucket{le=\"+Inf\"} 4"));
+        assert!(text.contains("adabatch_serve_latency_ns_sum 4500"));
+        assert!(text.contains("adabatch_serve_latency_ns_count 4"));
+        // cumulative buckets are non-decreasing and end at the count
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.contains("_bucket{le=") && !l.contains("+Inf")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "cumulative bucket counts must not decrease");
+            last = v;
+        }
+        assert_eq!(last, 4);
+    }
+
+    #[test]
+    fn snapshot_json_embeds_all_kinds() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("n");
+        reg.inc(c, 7);
+        let g = reg.gauge("x");
+        reg.set(g, 1.5);
+        let h = reg.hist("lat");
+        reg.record(h, 1000);
+        let j = reg.snapshot_json();
+        assert_eq!(j.path(&["counters", "n"]).and_then(Json::as_f64), Some(7.0));
+        assert_eq!(j.path(&["gauges", "x"]).and_then(Json::as_f64), Some(1.5));
+        assert_eq!(j.path(&["histograms", "lat", "count"]).and_then(Json::as_f64), Some(1.0));
+    }
+}

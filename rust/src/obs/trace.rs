@@ -1,0 +1,241 @@
+//! Span-based structured tracing: per-thread ring buffers of `Copy`
+//! events with deterministic per-thread sequence numbers.
+//!
+//! Each recording thread owns one [`TraceBuf`]; nothing is shared, so
+//! there is no locking and no cross-thread ordering to get wrong. The
+//! controller drains every buffer at shutdown and serializes events
+//! grouped by thread id, so the output order is a pure function of the
+//! per-thread event streams — never of the thread schedule.
+//!
+//! Recording is zero-allocation by construction: the event `Vec` is
+//! reserved once at `new(capacity)`, events are `Copy`, and a full
+//! buffer *drops* the newest event (counting it) instead of growing.
+//! A capacity of 0 means disabled — `record` is branch-and-return.
+
+use std::time::Instant;
+
+/// What a span measured, with its structured fields. Everything is
+/// `Copy` so recording never touches the heap. Optional float fields
+/// use NaN as "absent" (JSON cannot represent NaN, so the writer omits
+/// non-finite values rather than emitting them).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SpanPayload {
+    /// One training epoch: the per-step timeline row (batch/LR/loss
+    /// co-evolution — the trajectory AdaBatch's §3–4 argue about).
+    Epoch {
+        epoch: u32,
+        batch: u32,
+        active: u32,
+        iterations: u32,
+        lr: f64,
+        train_loss: f64,
+        test_loss: f64,
+        test_error: f64,
+        /// governor adaptation signal (SNR / gradient diversity); NaN
+        /// when the governor has none
+        signal: f64,
+        decisions: u32,
+        occupancy: f64,
+    },
+    /// One micro-batch executed by an engine worker.
+    Microbatch { slot: u32, size: u32 },
+    /// Kernel-pool dispatches issued while a worker ran one slot.
+    KernelDispatch { delta: u64 },
+    /// A batch-size governor decision (train or serve).
+    GovernorDecision { batch: u32, decisions: u32 },
+    /// One serve micro-batch (virtual clock).
+    ServeBatch { batch: u32, padded: u32, depth: u32 },
+    /// Periodic serve-path snapshot keyed to the virtual clock.
+    Snapshot { idx: u32, completed: u64, batches: u64, shed: u64, depth: u32, p99_ns: u64 },
+    /// A checkpoint write.
+    Checkpoint { epoch: u32 },
+    /// An elastic-policy activation decision.
+    Elastic { active: u32 },
+}
+
+impl SpanPayload {
+    /// Stable event-kind name; the `kind` key of every trace line.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SpanPayload::Epoch { .. } => "epoch",
+            SpanPayload::Microbatch { .. } => "microbatch",
+            SpanPayload::KernelDispatch { .. } => "kernel",
+            SpanPayload::GovernorDecision { .. } => "governor",
+            SpanPayload::ServeBatch { .. } => "serve_batch",
+            SpanPayload::Snapshot { .. } => "snapshot",
+            SpanPayload::Checkpoint { .. } => "checkpoint",
+            SpanPayload::Elastic { .. } => "elastic",
+        }
+    }
+}
+
+/// One recorded span: deterministic per-thread sequence number, a
+/// timestamp + duration (wall ns for train threads, virtual ns on the
+/// serve path), and the structured payload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub payload: SpanPayload,
+}
+
+/// A per-thread event buffer. Not `Sync` and never shared: each thread
+/// records into its own and hands it back at shutdown.
+#[derive(Debug)]
+pub struct TraceBuf {
+    events: Vec<TraceEvent>,
+    capacity: usize,
+    seq: u64,
+    dropped: u64,
+    origin: Instant,
+}
+
+impl TraceBuf {
+    /// A buffer that can hold `capacity` events; 0 disables recording
+    /// entirely (and allocates nothing).
+    pub fn new(capacity: usize) -> TraceBuf {
+        TraceBuf {
+            events: Vec::with_capacity(capacity),
+            capacity,
+            seq: 0,
+            dropped: 0,
+            origin: Instant::now(),
+        }
+    }
+
+    /// A disabled buffer (capacity 0).
+    pub fn disabled() -> TraceBuf {
+        TraceBuf::new(0)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    /// Record an instantaneous event stamped with the wall clock
+    /// (ns since this buffer's creation).
+    #[inline]
+    pub fn record(&mut self, payload: SpanPayload) {
+        if self.capacity == 0 {
+            return;
+        }
+        let ts = self.origin.elapsed().as_nanos() as u64;
+        self.push(payload, ts, 0);
+    }
+
+    /// Record a span that took `dur_ns`, ending now on the wall clock.
+    #[inline]
+    pub fn record_span(&mut self, payload: SpanPayload, dur_ns: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        let ts = self.origin.elapsed().as_nanos() as u64;
+        self.push(payload, ts.saturating_sub(dur_ns), dur_ns);
+    }
+
+    /// Record with an explicit timestamp — the serve path's virtual
+    /// clock, which makes the whole event (including time) a pure
+    /// function of (seed, config).
+    #[inline]
+    pub fn record_at(&mut self, payload: SpanPayload, ts_ns: u64, dur_ns: u64) {
+        if self.capacity == 0 {
+            return;
+        }
+        self.push(payload, ts_ns, dur_ns);
+    }
+
+    #[inline]
+    fn push(&mut self, payload: SpanPayload, ts_ns: u64, dur_ns: u64) {
+        self.seq += 1;
+        if self.events.len() < self.capacity {
+            self.events.push(TraceEvent { seq: self.seq, ts_ns, dur_ns, payload });
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Events recorded so far, in order.
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    /// Events that arrived after the buffer filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Take the recorded events, leaving the buffer empty (sequence
+    /// numbers keep counting, so a later drain stays monotone).
+    pub fn drain(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::alloc::count_allocs;
+
+    #[test]
+    fn sequence_numbers_are_strictly_increasing() {
+        let mut buf = TraceBuf::new(16);
+        for i in 0..5u32 {
+            buf.record(SpanPayload::Elastic { active: i });
+        }
+        let seqs: Vec<u64> = buf.events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn disabled_buffer_records_nothing() {
+        let mut buf = TraceBuf::disabled();
+        assert!(!buf.enabled());
+        buf.record(SpanPayload::Checkpoint { epoch: 1 });
+        assert!(buf.events().is_empty());
+        assert_eq!(buf.dropped(), 0, "a disabled buffer does not even count drops");
+    }
+
+    #[test]
+    fn full_buffer_drops_newest_and_counts() {
+        let mut buf = TraceBuf::new(2);
+        for i in 0..5u32 {
+            buf.record(SpanPayload::Elastic { active: i });
+        }
+        assert_eq!(buf.events().len(), 2);
+        assert_eq!(buf.dropped(), 3);
+        // the retained events are the oldest ones
+        assert!(matches!(buf.events()[0].payload, SpanPayload::Elastic { active: 0 }));
+        // seq kept counting through the drops
+        let drained = buf.drain();
+        assert_eq!(drained.len(), 2);
+        buf.record(SpanPayload::Elastic { active: 9 });
+        assert_eq!(buf.events()[0].seq, 6, "seq is monotone across drops and drains");
+    }
+
+    #[test]
+    fn record_at_uses_the_given_virtual_timestamp() {
+        let mut buf = TraceBuf::new(4);
+        buf.record_at(SpanPayload::ServeBatch { batch: 3, padded: 4, depth: 1 }, 1_000, 250);
+        let e = buf.events()[0];
+        assert_eq!((e.ts_ns, e.dur_ns), (1_000, 250));
+    }
+
+    #[test]
+    fn steady_state_recording_is_zero_allocation() {
+        let mut buf = TraceBuf::new(1024);
+        // warm nothing: the Vec is pre-reserved at construction
+        let (_, allocs, bytes) = count_allocs(|| {
+            for i in 0..1024u32 {
+                buf.record(SpanPayload::Microbatch { slot: i % 4, size: 64 });
+            }
+            // overflow path must also be allocation-free
+            for _ in 0..64 {
+                buf.record(SpanPayload::KernelDispatch { delta: 2 });
+            }
+        });
+        assert_eq!(allocs, 0, "recording must never allocate ({bytes} bytes)");
+        assert_eq!(buf.events().len(), 1024);
+        assert_eq!(buf.dropped(), 64);
+    }
+}

@@ -1,0 +1,337 @@
+//! Trace and metrics serialization: JSONL traces (canonical sorted-key
+//! rendering, one event per line), a chrome://tracing sibling view,
+//! Prometheus text snapshots, and trace-schema validation.
+//!
+//! The determinism split (DESIGN.md §12): the JSONL trace is the
+//! byte-comparable artifact, so it carries only fields that are pure
+//! functions of (seed, config) — the train writer omits timestamps
+//! entirely, the serve writer includes its virtual-clock timestamps.
+//! Wall timings always go to the `<path>.chrome.json` sibling, which
+//! exists for humans and is never byte-compared.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::registry::MetricsRegistry;
+use super::trace::{SpanPayload, TraceEvent};
+use crate::util::json::Json;
+
+fn payload_fields(p: &SpanPayload, m: &mut BTreeMap<String, Json>) {
+    let mut put = |k: &str, v: Json| {
+        m.insert(k.to_string(), v);
+    };
+    match *p {
+        SpanPayload::Epoch {
+            epoch,
+            batch,
+            active,
+            iterations,
+            lr,
+            train_loss,
+            test_loss,
+            test_error,
+            signal,
+            decisions,
+            occupancy,
+        } => {
+            put("epoch", Json::num(epoch as f64));
+            put("batch", Json::num(batch as f64));
+            put("active", Json::num(active as f64));
+            put("iterations", Json::num(iterations as f64));
+            put("lr", Json::num(lr));
+            put("train_loss", Json::num(train_loss));
+            // NaN is not JSON: absent evals (resume + eval cadence) and
+            // absent governor signals render as missing keys. Finiteness
+            // here is a pure function of (seed, config), so omission is
+            // still deterministic.
+            if test_loss.is_finite() {
+                put("test_loss", Json::num(test_loss));
+            }
+            if test_error.is_finite() {
+                put("test_error", Json::num(test_error));
+            }
+            if signal.is_finite() {
+                put("signal", Json::num(signal));
+            }
+            put("decisions", Json::num(decisions as f64));
+            put("occupancy", Json::num(occupancy));
+        }
+        SpanPayload::Microbatch { slot, size } => {
+            put("slot", Json::num(slot as f64));
+            put("size", Json::num(size as f64));
+        }
+        SpanPayload::KernelDispatch { delta } => {
+            put("delta", Json::num(delta as f64));
+        }
+        SpanPayload::GovernorDecision { batch, decisions } => {
+            put("batch", Json::num(batch as f64));
+            put("decisions", Json::num(decisions as f64));
+        }
+        SpanPayload::ServeBatch { batch, padded, depth } => {
+            put("batch", Json::num(batch as f64));
+            put("padded", Json::num(padded as f64));
+            put("depth", Json::num(depth as f64));
+        }
+        SpanPayload::Snapshot { idx, completed, batches, shed, depth, p99_ns } => {
+            put("idx", Json::num(idx as f64));
+            put("completed", Json::num(completed as f64));
+            put("batches", Json::num(batches as f64));
+            put("shed", Json::num(shed as f64));
+            put("depth", Json::num(depth as f64));
+            put("p99_ns", Json::num(p99_ns as f64));
+        }
+        SpanPayload::Checkpoint { epoch } => {
+            put("epoch", Json::num(epoch as f64));
+        }
+        SpanPayload::Elastic { active } => {
+            put("active", Json::num(active as f64));
+        }
+    }
+}
+
+/// One trace event as a JSON object. `include_time` gates `ts_ns` /
+/// `dur_ns`: true only when the timestamps are deterministic (the
+/// serve path's virtual clock).
+pub fn event_json(tid: &str, ev: &TraceEvent, include_time: bool) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("kind".to_string(), Json::str(ev.payload.kind()));
+    m.insert("tid".to_string(), Json::str(tid));
+    m.insert("seq".to_string(), Json::num(ev.seq as f64));
+    if include_time {
+        m.insert("ts_ns".to_string(), Json::num(ev.ts_ns as f64));
+        m.insert("dur_ns".to_string(), Json::num(ev.dur_ns as f64));
+    }
+    payload_fields(&ev.payload, &mut m);
+    Json::Obj(m)
+}
+
+fn jsonl(streams: &[(String, &[TraceEvent])], include_time: bool) -> String {
+    let mut out = String::new();
+    for (tid, events) in streams {
+        for ev in *events {
+            out.push_str(&event_json(tid, ev, include_time).to_string());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// chrome://tracing "trace event format" view: complete (`ph:"X"`)
+/// events with µs timestamps, one `tid` per source thread.
+fn chrome_json(streams: &[(String, &[TraceEvent])]) -> Json {
+    let mut events = Vec::new();
+    for (t, (tid, evs)) in streams.iter().enumerate() {
+        for ev in *evs {
+            let mut args = BTreeMap::new();
+            payload_fields(&ev.payload, &mut args);
+            args.insert("seq".to_string(), Json::num(ev.seq as f64));
+            events.push(Json::obj(vec![
+                ("name", Json::str(ev.payload.kind())),
+                ("cat", Json::str(tid.as_str())),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(ev.ts_ns as f64 / 1e3)),
+                ("dur", Json::num(ev.dur_ns as f64 / 1e3)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(t as f64)),
+                ("args", Json::Obj(args)),
+            ]));
+        }
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(events))])
+}
+
+fn write_both(path: &Path, streams: &[(String, &[TraceEvent])], include_time: bool) -> Result<()> {
+    fs::write(path, jsonl(streams, include_time))
+        .with_context(|| format!("writing trace {}", path.display()))?;
+    let chrome = format!("{}.chrome.json", path.display());
+    fs::write(&chrome, format!("{}\n", chrome_json(streams)))
+        .with_context(|| format!("writing chrome trace {chrome}"))?;
+    Ok(())
+}
+
+/// Write a training trace: the controller's events as tid `ctl`, each
+/// worker's as `w0..wN`. The JSONL lines carry **no timestamps** (wall
+/// times are not deterministic); the chrome sibling carries them.
+pub fn write_train_trace(
+    path: &Path,
+    ctl: &[TraceEvent],
+    workers: &[Vec<TraceEvent>],
+) -> Result<()> {
+    let mut streams: Vec<(String, &[TraceEvent])> = vec![("ctl".to_string(), ctl)];
+    for (w, events) in workers.iter().enumerate() {
+        streams.push((format!("w{w}"), events.as_slice()));
+    }
+    write_both(path, &streams, false)
+}
+
+/// Write a serve trace (virtual clock, single driver thread): the
+/// timestamps are deterministic, so the JSONL includes them and two
+/// seeded runs must produce byte-identical files.
+pub fn write_serve_trace(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    let streams: Vec<(String, &[TraceEvent])> = vec![("serve".to_string(), events)];
+    write_both(path, &streams, true)
+}
+
+/// Write the registry's Prometheus text snapshot.
+pub fn write_prometheus(path: &Path, registry: &MetricsRegistry) -> Result<()> {
+    fs::write(path, registry.render_prometheus())
+        .with_context(|| format!("writing metrics {}", path.display()))
+}
+
+/// What [`validate_trace`] certifies about a JSONL trace.
+#[derive(Debug, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// event lines parsed
+    pub lines: usize,
+    /// distinct thread ids seen
+    pub threads: usize,
+}
+
+/// Validate a JSONL trace's schema: every non-empty line parses as a
+/// JSON object with string `kind`/`tid` and numeric `seq`, and per-tid
+/// sequence numbers are strictly increasing (the CI `obs-smoke`
+/// contract, exposed as `adabatch validate-trace`).
+pub fn validate_trace(text: &str) -> Result<TraceSummary> {
+    let mut last_seq: BTreeMap<String, u64> = BTreeMap::new();
+    let mut lines = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let n = i + 1;
+        let j = Json::parse(line).map_err(|e| anyhow!("line {n}: {e}"))?;
+        j.get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("line {n}: missing string key \"kind\""))?;
+        let tid = j
+            .get("tid")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("line {n}: missing string key \"tid\""))?;
+        let seq = j
+            .get("seq")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("line {n}: missing integer key \"seq\""))? as u64;
+        if let Some(&prev) = last_seq.get(tid) {
+            if seq <= prev {
+                return Err(anyhow!(
+                    "line {n}: tid {tid:?} seq {seq} is not greater than previous {prev}"
+                ));
+            }
+        }
+        last_seq.insert(tid.to_string(), seq);
+        lines += 1;
+    }
+    if lines == 0 {
+        return Err(anyhow!("trace contains no events"));
+    }
+    Ok(TraceSummary { lines, threads: last_seq.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::TraceBuf;
+
+    fn events() -> Vec<TraceEvent> {
+        let mut buf = TraceBuf::new(8);
+        buf.record_at(SpanPayload::ServeBatch { batch: 3, padded: 4, depth: 2 }, 1000, 500);
+        buf.record_at(SpanPayload::GovernorDecision { batch: 8, decisions: 1 }, 1500, 0);
+        buf.drain()
+    }
+
+    #[test]
+    fn serve_jsonl_includes_virtual_time_and_validates() {
+        let evs = events();
+        let streams: Vec<(String, &[TraceEvent])> = vec![("serve".to_string(), evs.as_slice())];
+        let text = jsonl(&streams, true);
+        assert!(text.contains("\"ts_ns\":1000"));
+        assert!(text.contains("\"dur_ns\":500"));
+        let summary = validate_trace(&text).unwrap();
+        assert_eq!(summary, TraceSummary { lines: 2, threads: 1 });
+    }
+
+    #[test]
+    fn train_jsonl_omits_wall_time() {
+        let mut buf = TraceBuf::new(8);
+        buf.record(SpanPayload::Checkpoint { epoch: 2 });
+        let evs = buf.drain();
+        let streams: Vec<(String, &[TraceEvent])> = vec![("ctl".to_string(), evs.as_slice())];
+        let text = jsonl(&streams, false);
+        assert!(!text.contains("ts_ns"), "wall timestamps must not reach the JSONL: {text}");
+        assert!(text.contains("\"kind\":\"checkpoint\""));
+        validate_trace(&text).unwrap();
+    }
+
+    #[test]
+    fn nan_signal_is_omitted_not_emitted() {
+        let ev = TraceEvent {
+            seq: 1,
+            ts_ns: 0,
+            dur_ns: 0,
+            payload: SpanPayload::Epoch {
+                epoch: 0,
+                batch: 32,
+                active: 1,
+                iterations: 8,
+                lr: 0.05,
+                train_loss: 1.0,
+                test_loss: 1.0,
+                test_error: 0.5,
+                signal: f64::NAN,
+                decisions: 0,
+                occupancy: 1.0,
+            },
+        };
+        let line = event_json("ctl", &ev, false).to_string();
+        assert!(!line.contains("signal"), "NaN is not JSON: {line}");
+        Json::parse(&line).unwrap();
+    }
+
+    #[test]
+    fn validator_rejects_broken_traces() {
+        assert!(validate_trace("").is_err(), "empty trace");
+        assert!(validate_trace("not json\n").is_err(), "unparsable line");
+        assert!(
+            validate_trace("{\"kind\":\"epoch\",\"seq\":1}\n").is_err(),
+            "missing tid"
+        );
+        let non_monotone = "{\"kind\":\"a\",\"tid\":\"ctl\",\"seq\":2}\n\
+                            {\"kind\":\"a\",\"tid\":\"ctl\",\"seq\":2}\n";
+        assert!(validate_trace(non_monotone).is_err(), "repeated seq");
+        let per_thread = "{\"kind\":\"a\",\"tid\":\"ctl\",\"seq\":5}\n\
+                          {\"kind\":\"a\",\"tid\":\"w0\",\"seq\":1}\n\
+                          {\"kind\":\"a\",\"tid\":\"ctl\",\"seq\":6}\n";
+        let summary = validate_trace(per_thread).unwrap();
+        assert_eq!(summary.threads, 2, "monotonicity is per thread, not global");
+    }
+
+    #[test]
+    fn chrome_view_is_valid_json_with_microsecond_times() {
+        let evs = events();
+        let streams: Vec<(String, &[TraceEvent])> = vec![("serve".to_string(), evs.as_slice())];
+        let j = chrome_json(&streams);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let first = parsed.path(&["traceEvents", "0"]).unwrap();
+        assert_eq!(first.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(first.get("ts").and_then(Json::as_f64), Some(1.0), "1000 ns = 1 µs");
+        assert_eq!(first.get("dur").and_then(Json::as_f64), Some(0.5));
+    }
+
+    #[test]
+    fn files_land_on_disk_with_chrome_sibling() {
+        let dir = std::env::temp_dir().join("adabatch_obs_writer_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("trace_{}.jsonl", std::process::id()));
+        let evs = events();
+        write_serve_trace(&path, &evs).unwrap();
+        let text = fs::read_to_string(&path).unwrap();
+        validate_trace(&text).unwrap();
+        let chrome = fs::read_to_string(format!("{}.chrome.json", path.display())).unwrap();
+        Json::parse(chrome.trim()).unwrap();
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(format!("{}.chrome.json", path.display()));
+    }
+}

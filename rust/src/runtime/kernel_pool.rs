@@ -29,6 +29,7 @@
 use std::any::Any;
 use std::fmt;
 use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -73,6 +74,10 @@ pub struct KernelPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
     threads: usize,
+    /// Jobs dispatched through `run` (inline or pooled) — observability
+    /// only (the engine's trace records per-slot deltas); never read on
+    /// the kernel path itself.
+    dispatches: AtomicU64,
 }
 
 impl fmt::Debug for KernelPool {
@@ -106,12 +111,18 @@ impl KernelPool {
                     .expect("spawn kernel pool helper")
             })
             .collect();
-        KernelPool { shared, handles, threads }
+        KernelPool { shared, handles, threads, dispatches: AtomicU64::new(0) }
     }
 
     /// Total worker count, including the caller.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Jobs executed so far (monotone; relaxed — a telemetry signal,
+    /// not a synchronization point).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
     }
 
     /// Execute `f(t)` for every tile `t in 0..tiles`, tile `t` on worker
@@ -123,6 +134,7 @@ impl KernelPool {
         if tiles == 0 {
             return;
         }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
         if self.threads == 1 || tiles == 1 {
             // tile 0 belongs to worker 0 (the caller) either way — the
             // inline loop is the same partition with zero overhead.
@@ -250,6 +262,17 @@ mod tests {
                 assert_eq!(c.load(Ordering::SeqCst), 1, "tiles={tiles} t={t}");
             }
         }
+    }
+
+    #[test]
+    fn dispatch_counter_counts_jobs_not_tiles() {
+        let pool = KernelPool::new(2);
+        assert_eq!(pool.dispatches(), 0);
+        pool.run(0, &|_| {});
+        assert_eq!(pool.dispatches(), 0, "an empty job is not a dispatch");
+        pool.run(8, &|_| {});
+        pool.run(1, &|_| {});
+        assert_eq!(pool.dispatches(), 2, "one per run, inline or pooled");
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct GradVarianceController {
     var_sum: f64,
     count: usize,
     decisions: usize,
+    /// SNR computed at the last window close (telemetry: the signal the
+    /// epoch trace reports; `None` until a full window has elapsed or
+    /// when the window's noise estimate was 0)
+    last_snr: Option<f64>,
 }
 
 /// One iteration's gradient statistics (from accumulated microbatches).
@@ -57,6 +61,7 @@ impl GradVarianceController {
             var_sum: 0.0,
             count: 0,
             decisions: 0,
+            last_snr: None,
         }
     }
 
@@ -66,6 +71,12 @@ impl GradVarianceController {
 
     pub fn decisions(&self) -> usize {
         self.decisions
+    }
+
+    /// SNR measured at the most recent window close (`None` before the
+    /// first complete window, or when its noise estimate was 0).
+    pub fn last_snr(&self) -> Option<f64> {
+        self.last_snr
     }
 
     /// Feed one iteration's stats; returns `Some(new_batch)` when the
@@ -82,6 +93,7 @@ impl GradVarianceController {
         self.mean_sq_sum = 0.0;
         self.var_sum = 0.0;
         self.count = 0;
+        self.last_snr = (mean_noise > 0.0).then(|| mean_signal / mean_noise);
         // Byrd-style test: grow when noise dominates signal.
         if mean_noise > 0.0 && mean_signal / mean_noise < self.snr_threshold {
             let next = (self.current_batch * self.factor).min(self.max_batch);
@@ -179,6 +191,22 @@ mod tests {
                 true
             },
         );
+    }
+
+    #[test]
+    fn last_snr_tracks_window_closes() {
+        let mut c = GradVarianceController::new(64, 1.0, 2, 2, 1024);
+        assert_eq!(c.last_snr(), None, "no complete window yet");
+        c.observe(noisy_stats(1.0, 10.0));
+        assert_eq!(c.last_snr(), None, "mid-window: still no measurement");
+        c.observe(noisy_stats(1.0, 10.0));
+        // signal 1.0, noise 10/64 -> snr 6.4
+        let snr = c.last_snr().expect("window closed");
+        assert!((snr - 6.4).abs() < 1e-9, "snr {snr}");
+        // a zero-noise window clears the signal rather than reporting ∞
+        c.observe(noisy_stats(1.0, 0.0));
+        c.observe(noisy_stats(1.0, 0.0));
+        assert_eq!(c.last_snr(), None);
     }
 
     #[test]

@@ -70,6 +70,16 @@ pub trait BatchGovernor {
     fn decisions(&self) -> usize {
         0
     }
+
+    /// The governor's current adaptation signal — gradient SNR for the
+    /// variance criterion, mean diversity for the diversity criterion —
+    /// measured at its last decision window. `None` for static
+    /// schedules or before the first complete window. Telemetry only
+    /// (the epoch trace's `signal` field): reading it never advances
+    /// governor state.
+    fn signal(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// The paper's criterion: a fixed-interval coupled (batch, LR) policy.
@@ -170,6 +180,10 @@ impl BatchGovernor for VarianceGovernor {
     fn decisions(&self) -> usize {
         self.controller.decisions()
     }
+
+    fn signal(&self) -> Option<f64> {
+        self.controller.last_snr()
+    }
 }
 
 /// Gradient-diversity criterion (Yin et al. 2018 / DiveBatch): large-batch
@@ -193,6 +207,8 @@ pub struct DiversityGovernor {
     div_sum: f64,
     count: usize,
     decisions: usize,
+    /// mean diversity at the last window close (telemetry only)
+    last_signal: Option<f64>,
 }
 
 impl DiversityGovernor {
@@ -216,6 +232,7 @@ impl DiversityGovernor {
             div_sum: 0.0,
             count: 0,
             decisions: 0,
+            last_signal: None,
         }
     }
 
@@ -258,6 +275,7 @@ impl BatchGovernor for DiversityGovernor {
         let mean_diversity = self.div_sum / self.count as f64;
         self.div_sum = 0.0;
         self.count = 0;
+        self.last_signal = Some(mean_diversity);
         // target batch: initial × diversity, realized conservatively as
         // the largest geometric-ladder rung ≤ target (never overshoot the
         // statistical-efficiency bound), clamped monotone non-decreasing
@@ -282,6 +300,10 @@ impl BatchGovernor for DiversityGovernor {
 
     fn decisions(&self) -> usize {
         self.decisions
+    }
+
+    fn signal(&self) -> Option<f64> {
+        self.last_signal
     }
 }
 
@@ -380,6 +402,33 @@ mod tests {
         g.observe(stats(0.0, 5.0));
         assert_eq!(g.batch_for_epoch(1), 128);
         assert_eq!(g.ladder(10), vec![64, 128]);
+    }
+
+    /// ISSUE 7: governors surface their adaptation signal for the epoch
+    /// trace — SNR for variance, mean diversity for diversity, nothing
+    /// for static schedules — without advancing any state.
+    #[test]
+    fn signals_are_telemetry_only() {
+        let mut iv = IntervalGovernor::new(AdaBatchPolicy::sec41_fixed(64));
+        iv.batch_for_epoch(0);
+        assert_eq!(iv.signal(), None, "static schedules have no signal");
+
+        let ctrl = GradVarianceController::new(32, 1.0, 2, 2, 256);
+        let mut vg = VarianceGovernor::new(ctrl, LrSchedule::step(0.1, 1.0, 1000));
+        assert_eq!(vg.signal(), None);
+        vg.observe(stats(1.0, 10.0));
+        vg.observe(stats(1.0, 10.0));
+        let snr = vg.signal().expect("window closed");
+        assert!((snr - 1.0 / (10.0 / 32.0)).abs() < 1e-9);
+        let before = vg.decided_batch();
+        assert_eq!(vg.signal(), vg.signal(), "reading twice is idempotent");
+        assert_eq!(vg.decided_batch(), before);
+
+        let mut dg = DiversityGovernor::new(32, LrSchedule::step(0.1, 1.0, 1000), 2, 2, 1024);
+        assert_eq!(dg.signal(), None);
+        dg.observe(stats(1.0, 9.0));
+        dg.observe(stats(1.0, 9.0));
+        assert_eq!(dg.signal(), Some(10.0), "diversity = 1 + 9/1");
     }
 
     #[test]

@@ -43,6 +43,8 @@ use crate::config::{ModelArch, ServeConfig, TrafficShape};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::dataset::{GatherBufs, TrainData};
 use crate::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use crate::obs::trace::{SpanPayload, TraceBuf};
+use crate::obs::{write_prometheus, write_serve_trace, MetricsRegistry};
 use crate::optim::param::ParamSet;
 use crate::runtime::kernels;
 use crate::runtime::{ModelRuntime, Workspace};
@@ -166,6 +168,11 @@ impl VirtualCfg {
     }
 }
 
+/// Virtual-time gap between in-run telemetry snapshots: every 250 ms of
+/// event time the trace records queue depth, completions and the running
+/// p99 — deterministic because the boundaries live on the virtual clock.
+const SNAPSHOT_INTERVAL_NS: u64 = 250_000_000;
+
 /// Discrete-event serving run on the virtual clock. The batcher policy is
 /// [`super::batcher::batch_ready`] evaluated in event time: a batch closes
 /// at the earliest instant it is full, its front request has waited
@@ -183,6 +190,7 @@ pub fn run_virtual(
     samples: &[usize],
     ladder: &[usize],
     cfg: &VirtualCfg,
+    trace: &mut TraceBuf,
 ) -> Result<ServeStats> {
     assert!(cfg.workers > 0, "need at least one virtual server");
     assert_eq!(arrivals.len(), samples.len());
@@ -199,6 +207,8 @@ pub fn run_virtual(
     let mut lats: Vec<u64> = Vec::new();
     let mut i = 0usize;
     let mut shed = 0u64;
+    let mut next_snapshot = SNAPSHOT_INTERVAL_NS;
+    let mut snapshot_idx = 0u32;
 
     loop {
         let Reverse(free_at) = *workers.peek().expect("worker heap is never empty");
@@ -286,11 +296,50 @@ pub fn run_virtual(
         stats.loss_sum += out.loss;
         stats.correct_sum += out.correct as f64;
         stats.last_done_ns = stats.last_done_ns.max(done);
+        // telemetry is a pure side channel on the virtual clock: batch
+        // spans and snapshot rows carry event-time stamps, so two seeded
+        // runs serialize to byte-identical JSONL (DESIGN.md §12)
+        trace.record_at(
+            SpanPayload::ServeBatch {
+                batch: take as u32,
+                padded: padded as u32,
+                depth: depth_after as u32,
+            },
+            t,
+            service,
+        );
+        while done >= next_snapshot {
+            trace.record_at(
+                SpanPayload::Snapshot {
+                    idx: snapshot_idx,
+                    completed: stats.completed,
+                    batches: stats.batches,
+                    shed,
+                    depth: depth_after as u32,
+                    p99_ns: stats.hist.p99(),
+                },
+                next_snapshot,
+                0,
+            );
+            snapshot_idx += 1;
+            next_snapshot += SNAPSHOT_INTERVAL_NS;
+        }
+        let decisions_before = governor.decisions();
         governor.observe(ServeObservation {
             batch: take,
             queue_depth: depth_after,
             latencies_ns: &lats,
         });
+        if governor.decisions() != decisions_before {
+            trace.record_at(
+                SpanPayload::GovernorDecision {
+                    batch: governor.current_batch() as u32,
+                    decisions: governor.decisions() as u32,
+                },
+                done,
+                0,
+            );
+        }
     }
     stats.shed = shed;
     stats.pack_count = ws.stats().pack_count;
@@ -352,10 +401,19 @@ pub fn run_serve_bench(
         params = ck.params;
     }
 
+    // trace buffer for the virtual driver; the wall path gets a disabled
+    // buffer (its timestamps are not deterministic, so a wall trace would
+    // break the byte-identical contract — metrics still work)
+    let mut trace = TraceBuf::new(match clock {
+        Clock::Virtual => scfg.telemetry.trace_capacity(),
+        Clock::Wall => 0,
+    });
     let stats = match clock {
         Clock::Virtual => {
             let vcfg = VirtualCfg::from_serve(scfg);
-            run_virtual(&rt, &params, &data, governor, &arrivals, &samples, &ladder, &vcfg)?
+            run_virtual(
+                &rt, &params, &data, governor, &arrivals, &samples, &ladder, &vcfg, &mut trace,
+            )?
         }
         Clock::Wall => {
             let queue: BoundedQueue<Request> = BoundedQueue::bounded(scfg.queue_capacity);
@@ -406,6 +464,35 @@ pub fn run_serve_bench(
             stats
         }
     };
+    if let Some(path) = &scfg.telemetry.trace_out {
+        match clock {
+            Clock::Virtual => {
+                let events = trace.drain();
+                write_serve_trace(path, &events)?;
+            }
+            Clock::Wall => log::warn!(
+                "--trace-out needs the virtual clock (wall timestamps are not \
+                 deterministic); no trace written"
+            ),
+        }
+    }
+    if let Some(path) = &scfg.telemetry.metrics_out {
+        let mut reg = MetricsRegistry::default();
+        let completed = reg.counter("serve_completed_total");
+        reg.inc(completed, stats.completed);
+        let batches = reg.counter("serve_batches_total");
+        reg.inc(batches, stats.batches);
+        let shed = reg.counter("serve_shed_total");
+        reg.inc(shed, stats.shed);
+        let padded = reg.counter("serve_padded_samples_total");
+        reg.inc(padded, stats.padded_samples);
+        let pack = reg.counter("workspace_pack_count_total");
+        reg.inc(pack, stats.pack_count);
+        let alloc = reg.gauge("workspace_alloc_bytes");
+        reg.set(alloc, stats.alloc_bytes as f64);
+        reg.absorb_histogram("serve_latency_ns", &stats.hist);
+        write_prometheus(path, &reg)?;
+    }
     let report = report_json(scfg, clock, &*governor, &stats, n);
     Ok((stats, report))
 }

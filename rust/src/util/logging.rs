@@ -46,15 +46,36 @@ impl log::Log for StderrLogger {
 
 static LOGGER: StderrLogger = StderrLogger;
 
+/// Parse an `ADABATCH_LOG` value; `Err` carries back the rejected
+/// string so `init` can warn instead of silently defaulting (ISSUE 7
+/// satellite).
+fn parse_level(raw: &str) -> Result<LevelFilter, &str> {
+    match raw {
+        "error" => Ok(LevelFilter::Error),
+        "warn" => Ok(LevelFilter::Warn),
+        "info" => Ok(LevelFilter::Info),
+        "debug" => Ok(LevelFilter::Debug),
+        "trace" => Ok(LevelFilter::Trace),
+        other => Err(other),
+    }
+}
+
 /// Install the logger (idempotent). Level comes from `ADABATCH_LOG`
-/// (error|warn|info|debug|trace), defaulting to info.
+/// (error|warn|info|debug|trace), defaulting to info; an unrecognized
+/// value warns on stderr rather than falling through silently.
 pub fn init() {
-    let level = match std::env::var("ADABATCH_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("warn") => LevelFilter::Warn,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        _ => LevelFilter::Info,
+    let level = match std::env::var("ADABATCH_LOG") {
+        Ok(raw) => match parse_level(&raw) {
+            Ok(level) => level,
+            Err(other) => {
+                eprintln!(
+                    "adabatch: unrecognized ADABATCH_LOG value {other:?} \
+                     (accepted: error|warn|info|debug|trace); using info"
+                );
+                LevelFilter::Info
+            }
+        },
+        Err(_) => LevelFilter::Info,
     };
     set_level(level);
     let _ = log::set_logger(&LOGGER).map(|()| log::set_max_level(level));
@@ -83,5 +104,20 @@ mod tests {
         init();
         init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn level_parsing_accepts_all_levels_and_names_rejects() {
+        for (raw, want) in [
+            ("error", LevelFilter::Error),
+            ("warn", LevelFilter::Warn),
+            ("info", LevelFilter::Info),
+            ("debug", LevelFilter::Debug),
+            ("trace", LevelFilter::Trace),
+        ] {
+            assert_eq!(parse_level(raw), Ok(want));
+        }
+        assert_eq!(parse_level("verbose"), Err("verbose"));
+        assert_eq!(parse_level("INFO"), Err("INFO"), "levels are lowercase");
     }
 }

@@ -10,6 +10,7 @@
 use adabatch::coordinator::{train, TrainData, TrainerConfig};
 use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
 use adabatch::metrics::RunHistory;
+use adabatch::obs::{validate_trace, TelemetryConfig};
 use adabatch::optim::param::ParamSet;
 use adabatch::optim::sgd::{Optimizer, SgdMomentum};
 use adabatch::runtime::{HostBatch, ModelRuntime, StepKind, Workspace};
@@ -209,4 +210,92 @@ fn long_lived_workspace_trajectory_matches_fresh_workspaces_bitwise() {
         assert_eq!(a.0, b.0, "step {i}: loss must not see workspace reuse");
         assert_eq!(a.1, b.1, "step {i}: grads must not see workspace reuse");
     }
+}
+
+/// ISSUE 7: telemetry is a pure side channel. A run recording a full
+/// trace + metrics snapshot is **bitwise identical** to the untraced run
+/// of the same (seed, config) — recording only ever reads engine state —
+/// and the emitted JSONL passes schema validation with one stream per
+/// thread (`ctl` + `w0..w3`).
+#[test]
+fn telemetry_on_and_off_are_bitwise_identical() {
+    let dir = std::env::temp_dir().join(format!("adabatch_obs_train_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("trace.jsonl");
+    let metrics_path = dir.join("metrics.prom");
+
+    let plain = run(4, 9, 3);
+
+    let (train_d, test_d) = data();
+    let rt = ModelRuntime::reference_classifier("ref_linear", IMG_LEN, 4, &[8, 16, 32, 64], 64);
+    let policy = AdaBatchPolicy::new(
+        "det",
+        BatchSchedule::doubling(32, 2),
+        LrSchedule::step(0.05, 0.75, 2),
+    );
+    let cfg = TrainerConfig::new(3).with_seed(9).with_workers(4).with_telemetry(TelemetryConfig {
+        trace_out: Some(trace_path.clone()),
+        metrics_out: Some(metrics_path.clone()),
+        ..TelemetryConfig::default()
+    });
+    let mut governor = IntervalGovernor::new(policy);
+    let (traced, _) = train(&rt, &cfg, &mut governor, &train_d, &test_d).unwrap();
+
+    assert_eq!(plain.epochs.len(), traced.epochs.len());
+    for (x, y) in plain.epochs.iter().zip(&traced.epochs) {
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "epoch {}: tracing leaked into the trajectory",
+            x.epoch
+        );
+        assert_eq!(x.test_loss.to_bits(), y.test_loss.to_bits());
+        assert_eq!(x.test_error.to_bits(), y.test_error.to_bits());
+        assert_eq!(x.batch, y.batch);
+    }
+
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let summary = validate_trace(&text).unwrap();
+    assert_eq!(summary.threads, 5, "expected ctl + 4 worker streams");
+    assert!(text.contains("\"kind\":\"epoch\""));
+    assert!(text.contains("\"kind\":\"governor\""));
+    assert!(text.contains("\"kind\":\"microbatch\""));
+    assert!(!text.contains("ts_ns"), "train JSONL must not carry wall timestamps");
+    // the human view rides alongside, and the metrics snapshot landed
+    let chrome = format!("{}.chrome.json", trace_path.display());
+    assert!(std::path::Path::new(&chrome).exists(), "missing chrome sibling {chrome}");
+    let prom = std::fs::read_to_string(&metrics_path).unwrap();
+    assert!(prom.contains("train_epochs_total 3"), "{prom}");
+    assert!(prom.contains("phase_fwd_bwd_seconds"), "{prom}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two traced runs of the same (seed, config) emit **byte-identical**
+/// train traces: the JSONL carries no wall times, so every byte is a
+/// pure function of (seed, config).
+#[test]
+fn train_traces_replay_byte_identical() {
+    let dir = std::env::temp_dir().join(format!("adabatch_obs_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut bytes = Vec::new();
+    for i in 0..2 {
+        let path = dir.join(format!("trace_{i}.jsonl"));
+        let (train_d, test_d) = data();
+        let rt =
+            ModelRuntime::reference_classifier("ref_linear", IMG_LEN, 4, &[8, 16, 32, 64], 64);
+        let policy = AdaBatchPolicy::new(
+            "det",
+            BatchSchedule::doubling(32, 2),
+            LrSchedule::step(0.05, 0.75, 2),
+        );
+        let cfg = TrainerConfig::new(3).with_seed(9).with_workers(2).with_telemetry(
+            TelemetryConfig { trace_out: Some(path.clone()), ..TelemetryConfig::default() },
+        );
+        let mut governor = IntervalGovernor::new(policy);
+        train(&rt, &cfg, &mut governor, &train_d, &test_d).unwrap();
+        bytes.push(std::fs::read(&path).unwrap());
+    }
+    assert_eq!(bytes[0], bytes[1], "same (seed, config) must emit byte-identical train traces");
+    let _ = std::fs::remove_dir_all(&dir);
 }

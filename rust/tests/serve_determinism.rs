@@ -6,6 +6,7 @@
 //! pure function of (seed, config).
 
 use adabatch::config::{ServeConfig, TrafficShape};
+use adabatch::obs::validate_trace;
 use adabatch::serve::loadgen::{arrival_schedule, governor_from_name, run_serve_bench, Clock};
 
 fn bench_cfg() -> ServeConfig {
@@ -78,4 +79,37 @@ fn different_seed_changes_the_report() {
         changed.to_string(),
         "a different seed must change the arrival stream and hence the report"
     );
+}
+
+/// ISSUE 7: the serve trace is keyed to the virtual clock, so two seeded
+/// runs must emit **byte-identical** JSONL files — timestamps included —
+/// and the stream must carry per-batch spans plus the 250 ms in-run
+/// snapshots.
+#[test]
+fn serve_traces_replay_byte_identical() {
+    let dir = std::env::temp_dir().join(format!("adabatch_obs_serve_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut bytes = Vec::new();
+    for i in 0..2 {
+        let mut scfg = bench_cfg();
+        scfg.telemetry.trace_out = Some(dir.join(format!("serve_{i}.jsonl")));
+        let mut gov = governor_from_name("slo", &scfg).unwrap();
+        let (stats, _) =
+            run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 64, None).unwrap();
+        assert!(stats.completed > 0, "empty run records nothing worth comparing");
+        bytes.push(std::fs::read(scfg.telemetry.trace_out.as_ref().unwrap()).unwrap());
+    }
+    assert_eq!(bytes[0], bytes[1], "same (seed, config) must emit byte-identical serve traces");
+
+    let text = String::from_utf8(bytes.pop().unwrap()).unwrap();
+    let summary = validate_trace(&text).unwrap();
+    assert!(summary.lines > 0);
+    assert_eq!(summary.threads, 1, "the virtual-clock driver is a single stream");
+    assert!(text.contains("\"kind\":\"serve_batch\""));
+    assert!(text.contains("\"ts_ns\":"), "virtual timestamps belong in the serve JSONL");
+    assert!(
+        text.contains("\"kind\":\"snapshot\""),
+        "a 1 s run must cross the 250 ms snapshot boundaries"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
 }
