@@ -53,7 +53,7 @@ fn main() {
     suite.bench_units("virtual_bench_500req", Some(500.0), || {
         let mut gov = governor_from_name("slo", &scfg).unwrap();
         let (stats, _report) =
-            run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 32, None).unwrap();
+            run_serve_bench(&scfg, &mut gov, Clock::Virtual, 4, 32, None).unwrap();
         black_box(stats.completed);
     });
 

@@ -12,6 +12,8 @@ use crate::data::synthetic::IMG_LEN;
 use crate::obs::TelemetryConfig;
 use crate::runtime::{ModelRuntime, REF_EVAL_BATCH, REF_TRAIN_LADDER};
 use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use crate::serve::lifecycle::LifecycleConfig;
+use crate::serve::serve_ladder;
 
 /// Which dataset family a job trains on.
 #[derive(Debug, Clone, PartialEq)]
@@ -250,6 +252,9 @@ pub struct ServeConfig {
     /// clock only for traces: timestamps are deterministic, so two
     /// seeded runs write byte-identical JSONL.
     pub telemetry: TelemetryConfig,
+    /// daemon lifecycle: admission policy, retry budget, fault plan,
+    /// drain / suspend / reload schedule (DESIGN.md §13)
+    pub lifecycle: LifecycleConfig,
 }
 
 impl Default for ServeConfig {
@@ -273,6 +278,7 @@ impl Default for ServeConfig {
             arch: ModelArch::Linear,
             kernel_threads: 1,
             telemetry: TelemetryConfig::default(),
+            lifecycle: LifecycleConfig::default(),
         }
     }
 }
@@ -327,11 +333,26 @@ impl ServeConfig {
         if self.queue_capacity < self.max_batch {
             bail!("queue capacity must hold at least one max batch");
         }
+        // `serve_ladder` doubles from min_batch, so a max_batch that is
+        // not min·2^k would silently never be reached (min=5, max=8 →
+        // ladder [5]) and `pad_to_rung` would then pad oversize drains
+        // *down*. The power-of-two checks above make this unreachable
+        // today; this pins the contract if they are ever relaxed.
+        let ladder = serve_ladder(self.min_batch, self.max_batch);
+        if *ladder.last().expect("ladder is never empty") != self.max_batch {
+            bail!(
+                "max batch {} is unreachable from min batch {} by doubling (ladder ends at {})",
+                self.max_batch,
+                self.min_batch,
+                ladder.last().unwrap()
+            );
+        }
         if let ModelArch::Mlp { hidden } = self.arch {
             if hidden == 0 {
                 bail!("mlp serving needs a hidden width > 0");
             }
         }
+        self.lifecycle.validate()?;
         Ok(())
     }
 

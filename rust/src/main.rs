@@ -38,6 +38,7 @@ use adabatch::schedule::{
     LrSchedule, VarianceGovernor,
 };
 use adabatch::serve::loadgen::{governor_from_name, run_serve_bench, Clock};
+use adabatch::serve::{LifecycleConfig, ReloadSpec};
 use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
 use adabatch::util::cli::Command;
 use adabatch::util::json::Json;
@@ -373,6 +374,27 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         .opt("out", "", "also write the JSON report to this file")
         .opt("trace-out", "", "virtual clock: write a JSONL trace here (\"\" = off)")
         .opt("metrics-out", "", "write a Prometheus text snapshot here (\"\" = off)")
+        .opt(
+            "admission",
+            "shed-newest",
+            "full-queue policy: block|shed-newest|shed-oldest|deadline (DESIGN.md §13)",
+        )
+        .opt("admission-deadline-ms", "0", "deadline policy: evict queued requests older than this")
+        .opt("retry-budget", "3", "max attempts per batch before the run fails loudly")
+        .opt("retry-backoff-ms", "1", "base backoff before a retry; doubles per failed attempt")
+        .opt("fault-rate", "0", "injected fault probability per (batch, attempt); 0 = off")
+        .opt("fault-seed", "0", "seed for the injected-fault PRNG")
+        .opt("fault-attempts", "1", "injected faults only hit the first N attempts of a batch")
+        .flag("fault-panic", "injected faults panic the worker instead of returning an error")
+        .opt("drain-at", "", "graceful drain: close admission at this many seconds (\"\" = off)")
+        .opt("suspend-at", "", "park the worker pool at this many seconds (\"\" = off)")
+        .opt("resume-at", "", "wake the worker pool at this many seconds (with --suspend-at)")
+        .opt("reload-at", "", "hot reload governor/ladder/SLO at this many seconds (\"\" = off)")
+        .opt("reload-governor", "", "reload: new governor (default: keep current)")
+        .opt("reload-slo-ms", "", "reload: new p99 SLO, ms (default: keep current)")
+        .opt("reload-batch", "", "reload: new min micro-batch (default: keep current)")
+        .opt("reload-max-batch", "", "reload: new micro-batch cap (default: keep current)")
+        .opt("reload-window", "", "reload: new slo-governor window (default: keep current)")
         .flag("smoke", "tiny CI run: all three governors over ~2s of traffic")
         .flag("help", "show usage");
     if argv.iter().any(|a| a == "--help") {
@@ -380,6 +402,55 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     let a = cmd.parse(argv)?;
+
+    // "" means "not set" for the lifecycle schedule opts
+    let opt_f64 = |name: &str| -> Result<Option<f64>> {
+        let s = a.str(name);
+        if s.is_empty() {
+            Ok(None)
+        } else {
+            Ok(Some(s.parse::<f64>().with_context(|| format!("--{name}: not a number: {s:?}"))?))
+        }
+    };
+    let opt_usize = |name: &str| -> Result<Option<usize>> {
+        let s = a.str(name);
+        if s.is_empty() {
+            Ok(None)
+        } else {
+            Ok(Some(s.parse::<usize>().with_context(|| format!("--{name}: not a count: {s:?}"))?))
+        }
+    };
+    let reload_at_s = opt_f64("reload-at")?;
+    // reload fields default to the base run's values: a reload that names
+    // only --reload-max-batch keeps everything else as configured
+    let reload = match reload_at_s {
+        None => None,
+        Some(_) => Some(ReloadSpec {
+            governor: match a.str("reload-governor") {
+                s if s.is_empty() => a.str("governor"),
+                s => s,
+            },
+            slo_ms: opt_f64("reload-slo-ms")?.map_or(a.f64("slo-ms")?, |v| v),
+            min_batch: opt_usize("reload-batch")?.map_or(a.usize("batch")?, |v| v),
+            max_batch: opt_usize("reload-max-batch")?.map_or(a.usize("max-batch")?, |v| v),
+            window: opt_usize("reload-window")?.map_or(a.usize("window")?, |v| v),
+        }),
+    };
+    let lifecycle = LifecycleConfig {
+        admission: a.str("admission"),
+        admission_deadline_ms: a.f64("admission-deadline-ms")?,
+        retry_budget: a.usize("retry-budget")? as u32,
+        retry_backoff_ms: a.f64("retry-backoff-ms")?,
+        fault_rate: a.f64("fault-rate")?,
+        fault_seed: a.u64("fault-seed")?,
+        fault_attempts: a.usize("fault-attempts")? as u32,
+        fault_panic: a.has_flag("fault-panic"),
+        drain_at_s: opt_f64("drain-at")?,
+        suspend_at_s: opt_f64("suspend-at")?,
+        resume_at_s: opt_f64("resume-at")?,
+        reload_at_s,
+        reload,
+    };
 
     let mut scfg = ServeConfig {
         qps: a.f64("qps")?,
@@ -400,6 +471,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         arch: ModelArch::from_name(&a.str("model"), a.usize("hidden")?)?,
         kernel_threads: a.usize("kernel-threads")?,
         telemetry: TelemetryConfig::from_cli(&a.str("trace-out"), &a.str("metrics-out")),
+        lifecycle,
     };
     let clock = Clock::from_name(&a.str("clock"))?;
     let classes = a.usize("classes")?;
@@ -430,7 +502,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
         for name in ["fixed", "queue", "slo"] {
             let mut gov = governor_from_name(name, &scfg)?;
             let (stats, rep) =
-                run_serve_bench(&scfg, gov.as_mut(), clock, classes, pool, checkpoint.as_deref())?;
+                run_serve_bench(&scfg, &mut gov, clock, classes, pool, checkpoint.as_deref())?;
             if stats.completed == 0 {
                 bail!("smoke run produced an empty report for governor {name:?}");
             }
@@ -440,7 +512,7 @@ fn cmd_serve_bench(argv: &[String]) -> Result<()> {
     } else {
         let mut gov = governor_from_name(&a.str("governor"), &scfg)?;
         let (_stats, rep) =
-            run_serve_bench(&scfg, gov.as_mut(), clock, classes, pool, checkpoint.as_deref())?;
+            run_serve_bench(&scfg, &mut gov, clock, classes, pool, checkpoint.as_deref())?;
         rep
     };
 

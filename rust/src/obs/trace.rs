@@ -51,6 +51,22 @@ pub enum SpanPayload {
     Checkpoint { epoch: u32 },
     /// An elastic-policy activation decision.
     Elastic { active: u32 },
+    /// A failed batch requeued with backoff (DESIGN.md §13): which batch
+    /// (sequence number), which attempt just failed, how many requests.
+    Retry { seq: u64, attempt: u32, batch: u32 },
+    /// A request refused or evicted at admission; `evicted` is true when
+    /// a queued request was displaced (shed-oldest / deadline-aware),
+    /// false when the newcomer itself was shed.
+    Shed { id: u64, depth: u32, evicted: bool },
+    /// Graceful drain began: admission closed with this many requests
+    /// still queued, all of which will be served.
+    Drain { pending: u32 },
+    /// A hot reload applied: the new ladder bounds and SLO target.
+    Reload { min_batch: u32, max_batch: u32, slo_ns: u64 },
+    /// Worker pool parked (the span's duration covers the pause).
+    Suspend,
+    /// Worker pool woken.
+    Resume,
 }
 
 impl SpanPayload {
@@ -65,6 +81,12 @@ impl SpanPayload {
             SpanPayload::Snapshot { .. } => "snapshot",
             SpanPayload::Checkpoint { .. } => "checkpoint",
             SpanPayload::Elastic { .. } => "elastic",
+            SpanPayload::Retry { .. } => "retry",
+            SpanPayload::Shed { .. } => "shed",
+            SpanPayload::Drain { .. } => "drain",
+            SpanPayload::Reload { .. } => "reload",
+            SpanPayload::Suspend => "suspend",
+            SpanPayload::Resume => "resume",
         }
     }
 }

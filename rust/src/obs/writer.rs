@@ -89,6 +89,25 @@ fn payload_fields(p: &SpanPayload, m: &mut BTreeMap<String, Json>) {
         SpanPayload::Elastic { active } => {
             put("active", Json::num(active as f64));
         }
+        SpanPayload::Retry { seq, attempt, batch } => {
+            put("retry_seq", Json::num(seq as f64));
+            put("attempt", Json::num(attempt as f64));
+            put("batch", Json::num(batch as f64));
+        }
+        SpanPayload::Shed { id, depth, evicted } => {
+            put("id", Json::num(id as f64));
+            put("depth", Json::num(depth as f64));
+            put("evicted", Json::Bool(evicted));
+        }
+        SpanPayload::Drain { pending } => {
+            put("pending", Json::num(pending as f64));
+        }
+        SpanPayload::Reload { min_batch, max_batch, slo_ns } => {
+            put("min_batch", Json::num(min_batch as f64));
+            put("max_batch", Json::num(max_batch as f64));
+            put("slo_ns", Json::num(slo_ns as f64));
+        }
+        SpanPayload::Suspend | SpanPayload::Resume => {}
     }
 }
 

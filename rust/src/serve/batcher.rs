@@ -37,6 +37,13 @@ impl Batcher {
         deadline: Option<Instant>,
     ) -> Option<Vec<T>> {
         let target = target.max(1);
+        // horizon check must precede the opening pop: under continuous
+        // trickle load pop_up_to never times out, so checking the
+        // deadline only on Pop::TimedOut would keep opening batches
+        // past the horizon forever
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Some(Vec::new());
+        }
         // wait (in max_wait slices, so a close is noticed promptly) for
         // the batch-opening request
         let mut batch: Vec<T> = loop {
@@ -50,7 +57,11 @@ impl Batcher {
                 Pop::Closed => return None,
             }
         };
-        let fill_deadline = Instant::now() + self.max_wait;
+        // the fill window never extends past the horizon
+        let mut fill_deadline = Instant::now() + self.max_wait;
+        if let Some(d) = deadline {
+            fill_deadline = fill_deadline.min(d);
+        }
         while batch.len() < target {
             let now = Instant::now();
             if now >= fill_deadline {
@@ -134,6 +145,43 @@ mod tests {
             let batch = b.next_batch(&q, 4, None).unwrap();
             assert_eq!(batch, vec![0, 1, 2, 3], "accumulates across pops until target");
         });
+    }
+
+    #[test]
+    fn expired_deadline_refuses_to_open_under_trickle_load() {
+        // regression: with requests always available, the old code never
+        // hit Pop::TimedOut and so never noticed the horizon — it kept
+        // opening batches forever
+        let q = BoundedQueue::bounded(16);
+        for i in 0..8 {
+            q.push(i).unwrap();
+        }
+        let b = Batcher::new(Duration::from_millis(5));
+        let past = Instant::now() - Duration::from_millis(1);
+        assert_eq!(
+            b.next_batch(&q, 4, Some(past)),
+            Some(Vec::new()),
+            "expired horizon must refuse to open a batch even with work queued"
+        );
+        assert_eq!(q.len(), 8, "no request consumed past the horizon");
+    }
+
+    #[test]
+    fn fill_window_capped_at_deadline() {
+        // regression: a batch opening just before the horizon must not
+        // wait a full max_wait for fill — the window is clipped
+        let q = BoundedQueue::bounded(16);
+        q.push(1).unwrap();
+        let b = Batcher::new(Duration::from_secs(5));
+        let horizon = Instant::now() + Duration::from_millis(40);
+        let t0 = Instant::now();
+        let batch = b.next_batch(&q, 64, Some(horizon)).unwrap();
+        assert_eq!(batch, vec![1]);
+        let waited = t0.elapsed();
+        assert!(
+            waited < Duration::from_secs(2),
+            "fill wait must be clipped at the horizon, waited {waited:?}"
+        );
     }
 
     #[test]

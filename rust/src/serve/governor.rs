@@ -278,6 +278,62 @@ mod tests {
     }
 
     #[test]
+    fn ladder_reachability_property() {
+        // Pin the exact contract ServeConfig::validate enforces: the
+        // ladder tops out at max_batch iff max_batch = min·2^k; when it
+        // does not, pad_to_rung pads oversize drains *down* — which is
+        // why unreachable configurations must be rejected upstream.
+        for min in 1usize..=24 {
+            for max in min..=96 {
+                let ladder = serve_ladder(min, max);
+                // structural invariants, all (min, max)
+                assert_eq!(ladder[0], min);
+                assert!(ladder.windows(2).all(|w| w[1] == w[0] * 2), "geometric ×2");
+                assert!(ladder.iter().all(|&r| r <= max), "no rung exceeds max");
+
+                let reachable = {
+                    let mut r = min;
+                    while r < max {
+                        r *= 2;
+                    }
+                    r == max
+                };
+                assert_eq!(
+                    *ladder.last().unwrap() == max,
+                    reachable,
+                    "ladder({min},{max}) reaches max iff max = min·2^k"
+                );
+
+                // padding: any k within the ladder's reach pads *up*...
+                let top = *ladder.last().unwrap();
+                for k in 1..=top {
+                    assert!(pad_to_rung(k, &ladder) >= k);
+                }
+                // ...but a drain larger than every rung pads DOWN — the
+                // failure mode unreachable max_batch would expose
+                assert_eq!(pad_to_rung(top + 1, &ladder), top);
+            }
+        }
+        // the motivating example from the issue: min=5, max=8 → [5]
+        assert_eq!(serve_ladder(5, 8), vec![5]);
+        assert_eq!(pad_to_rung(8, &serve_ladder(5, 8)), 5, "oversize drain padded down");
+    }
+
+    #[test]
+    fn unreachable_max_batch_rejected_by_config() {
+        use crate::config::ServeConfig;
+        let ok = ServeConfig::default();
+        ok.validate().unwrap();
+        let mut bad = ServeConfig::default();
+        bad.min_batch = 5;
+        bad.max_batch = 8;
+        let err = bad.validate().unwrap_err().to_string();
+        // rejected (today by the power-of-two rule; the reachability
+        // check keeps holding if that rule is ever relaxed)
+        assert!(!err.is_empty());
+    }
+
+    #[test]
     fn fixed_is_constant() {
         let mut g = FixedServeGovernor::new(8);
         assert_eq!(g.name(), "fixed-8");

@@ -1,0 +1,473 @@
+//! Serving lifecycle: admission policies, retry with backoff, fault
+//! injection, and control-plane messages (drain / suspend / resume /
+//! hot reload).
+//!
+//! The lifecycle layer turns the serving path from a benchmark rig into
+//! a daemon. Everything here is deterministic by construction: fault
+//! injection is a pure function of (fault seed, batch sequence number,
+//! attempt), backoff delays are fixed arithmetic on the virtual clock,
+//! and control events fire at configured virtual timestamps. See
+//! DESIGN.md §13 for the state machine and the determinism contract.
+
+use anyhow::{bail, Result};
+
+use crate::config::ServeConfig;
+use crate::serve::governor::{
+    serve_ladder, FixedServeGovernor, QueueDepthGovernor, ServeGovernor, SloGovernor,
+};
+use crate::util::rng::Pcg32;
+
+/// How the server admits (or refuses) an arriving request when the
+/// bounded queue is full.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmissionPolicy {
+    /// Block the producer until space frees up (bounded by the bench
+    /// deadline on the wall clock; never sheds on the virtual clock).
+    Block,
+    /// Reject the arriving request (classic tail-drop). The default,
+    /// and the historical behavior of the wall-clock load generator.
+    ShedNewest,
+    /// Evict the oldest queued request to make room for the new one
+    /// (head-drop: freshest traffic wins).
+    ShedOldest,
+    /// Evict queued requests whose age already exceeds `deadline_ns`
+    /// (they could not meet the SLO anyway); if none are expired,
+    /// shed the newcomer.
+    DeadlineAware { deadline_ns: u64 },
+}
+
+impl AdmissionPolicy {
+    pub fn from_name(name: &str, deadline_ns: u64) -> Result<Self> {
+        match name {
+            "block" => Ok(AdmissionPolicy::Block),
+            "shed-newest" => Ok(AdmissionPolicy::ShedNewest),
+            "shed-oldest" => Ok(AdmissionPolicy::ShedOldest),
+            "deadline" | "deadline-aware" => {
+                if deadline_ns == 0 {
+                    bail!("admission policy 'deadline' requires --admission-deadline-ms > 0");
+                }
+                Ok(AdmissionPolicy::DeadlineAware { deadline_ns })
+            }
+            other => bail!(
+                "unknown admission policy {other:?} (expected block|shed-newest|shed-oldest|deadline)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AdmissionPolicy::Block => "block",
+            AdmissionPolicy::ShedNewest => "shed-newest",
+            AdmissionPolicy::ShedOldest => "shed-oldest",
+            AdmissionPolicy::DeadlineAware { .. } => "deadline",
+        }
+    }
+}
+
+/// Per-batch retry policy: a failed batch is requeued with exponential
+/// backoff until `budget` attempts have been spent, at which point the
+/// failure surfaces loudly as a run error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum number of attempts per batch (>= 1). An attempt is one
+    /// dispatch to a worker; budget 3 means the original try plus two
+    /// retries.
+    pub budget: u32,
+    /// Base backoff delay; attempt `a` (1-based, counting the failed
+    /// attempt) waits `backoff_ns << (a-1)`, capped to avoid overflow.
+    pub backoff_ns: u64,
+}
+
+impl RetryPolicy {
+    /// Delay before re-dispatching after `failed_attempts` attempts
+    /// have failed (so 1 after the first failure).
+    pub fn backoff_for(&self, failed_attempts: u32) -> u64 {
+        let shift = failed_attempts.saturating_sub(1).min(16);
+        self.backoff_ns.saturating_mul(1u64 << shift)
+    }
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            budget: 3,
+            backoff_ns: 1_000_000, // 1 ms
+        }
+    }
+}
+
+/// Deterministic fault plan: whether a given (batch, attempt) pair
+/// fails is a pure function of the plan seed and the batch's sequence
+/// number, so a (seed, config, fault plan) triple replays exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    /// Probability that a batch's first `fail_attempts` dispatches fail.
+    pub rate: f64,
+    /// How many leading attempts of a selected batch fail. 1 means the
+    /// retry succeeds; `u32::MAX` exhausts any finite budget (used by
+    /// the budget-exhaustion tests).
+    pub fail_attempts: u32,
+    /// On the wall clock, panic inside the worker instead of returning
+    /// an error — exercises the catch_unwind path.
+    pub panic: bool,
+}
+
+impl FaultPlan {
+    pub fn should_fail(&self, batch_seq: u64, attempt: u32) -> bool {
+        if self.rate <= 0.0 || attempt > self.fail_attempts {
+            return false;
+        }
+        // One draw per batch: mix the sequence number into the seed so
+        // each batch gets an independent, replayable coin flip.
+        let mut rng = Pcg32::new(self.seed ^ batch_seq.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        rng.next_f64() < self.rate
+    }
+}
+
+/// Control-plane message for a running wall-clock server.
+#[derive(Debug, Clone)]
+pub enum Control {
+    /// Close admission, serve every accepted request, then shut down.
+    Drain,
+    /// Park the worker pool (workspaces stay warm); queued requests wait.
+    Suspend,
+    /// Wake a suspended pool.
+    Resume,
+    /// Swap SLO target / governor / ladder bounds without dropping
+    /// in-flight requests.
+    Reload(ReloadSpec),
+}
+
+/// The reconfiguration applied by a hot reload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReloadSpec {
+    pub governor: String,
+    pub slo_ms: f64,
+    pub min_batch: usize,
+    pub max_batch: usize,
+    pub window: usize,
+}
+
+impl ReloadSpec {
+    pub fn validate(&self) -> Result<()> {
+        if !self.min_batch.is_power_of_two() || !self.max_batch.is_power_of_two() {
+            bail!("reload: min_batch and max_batch must be powers of two");
+        }
+        if self.min_batch > self.max_batch {
+            bail!("reload: min_batch must be <= max_batch");
+        }
+        if self.slo_ms <= 0.0 {
+            bail!("reload: slo_ms must be positive");
+        }
+        if self.window == 0 {
+            bail!("reload: window must be >= 1");
+        }
+        let ladder = serve_ladder(self.min_batch, self.max_batch);
+        if *ladder.last().expect("ladder is never empty") != self.max_batch {
+            bail!(
+                "reload: max_batch {} is not reachable from min_batch {} by doubling",
+                self.max_batch,
+                self.min_batch
+            );
+        }
+        match self.governor.as_str() {
+            "fixed" | "queue" | "slo" => Ok(()),
+            other => bail!("reload: unknown governor {other:?} (expected fixed|queue|slo)"),
+        }
+    }
+
+    pub fn ladder(&self) -> Vec<usize> {
+        serve_ladder(self.min_batch, self.max_batch)
+    }
+
+    pub fn build_governor(&self) -> Result<Box<dyn ServeGovernor>> {
+        let slo_ns = (self.slo_ms * 1e6) as u64;
+        match self.governor.as_str() {
+            "fixed" => Ok(Box::new(FixedServeGovernor::new(self.max_batch))),
+            "queue" => Ok(Box::new(QueueDepthGovernor::new(
+                self.min_batch,
+                self.max_batch,
+            ))),
+            "slo" => Ok(Box::new(SloGovernor::new(
+                slo_ns,
+                self.min_batch,
+                self.max_batch,
+                self.window,
+            ))),
+            other => bail!("reload: unknown governor {other:?} (expected fixed|queue|slo)"),
+        }
+    }
+}
+
+/// Lifecycle knobs as they appear on `ServeConfig` (human units; the
+/// ns-resolved form is [`LifecyclePlan`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LifecycleConfig {
+    /// Admission policy name: block | shed-newest | shed-oldest | deadline.
+    pub admission: String,
+    /// Age bound for the deadline-aware policy (ms).
+    pub admission_deadline_ms: f64,
+    /// Max dispatch attempts per batch.
+    pub retry_budget: u32,
+    /// Base retry backoff (ms), doubled per failed attempt.
+    pub retry_backoff_ms: f64,
+    /// Probability a batch is selected by the fault plan (0 disables).
+    pub fault_rate: f64,
+    /// Seed for the fault plan's per-batch coin flips.
+    pub fault_seed: u64,
+    /// How many leading attempts of a selected batch fail.
+    pub fault_attempts: u32,
+    /// Wall clock only: panic in the worker instead of returning Err.
+    pub fault_panic: bool,
+    /// Virtual seconds at which admission closes for a graceful drain
+    /// (None = classic horizon cutoff).
+    pub drain_at_s: Option<f64>,
+    /// Suspend the worker pool at this virtual time...
+    pub suspend_at_s: Option<f64>,
+    /// ...and resume it at this one (required together).
+    pub resume_at_s: Option<f64>,
+    /// Apply `reload` at this virtual time.
+    pub reload_at_s: Option<f64>,
+    pub reload: Option<ReloadSpec>,
+}
+
+impl Default for LifecycleConfig {
+    fn default() -> Self {
+        LifecycleConfig {
+            admission: "shed-newest".to_string(),
+            admission_deadline_ms: 0.0,
+            retry_budget: 3,
+            retry_backoff_ms: 1.0,
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_attempts: 1,
+            fault_panic: false,
+            drain_at_s: None,
+            suspend_at_s: None,
+            resume_at_s: None,
+            reload_at_s: None,
+            reload: None,
+        }
+    }
+}
+
+impl LifecycleConfig {
+    pub fn validate(&self) -> Result<()> {
+        AdmissionPolicy::from_name(&self.admission, (self.admission_deadline_ms * 1e6) as u64)?;
+        if self.retry_budget == 0 {
+            bail!("retry_budget must be >= 1");
+        }
+        if self.retry_backoff_ms < 0.0 {
+            bail!("retry_backoff_ms must be >= 0");
+        }
+        if !(0.0..=1.0).contains(&self.fault_rate) {
+            bail!("fault_rate must be in [0, 1]");
+        }
+        if self.fault_rate > 0.0 && self.fault_attempts == 0 {
+            bail!("fault_attempts must be >= 1 when fault_rate > 0");
+        }
+        match (self.suspend_at_s, self.resume_at_s) {
+            (None, None) => {}
+            (Some(s), Some(r)) => {
+                if r <= s {
+                    bail!("resume_at must be after suspend_at");
+                }
+            }
+            _ => bail!("suspend_at and resume_at must be given together"),
+        }
+        match (self.reload_at_s, &self.reload) {
+            (None, None) => {}
+            (Some(_), Some(spec)) => spec.validate()?,
+            (Some(_), None) => bail!("reload_at given without a reload spec"),
+            (None, Some(_)) => bail!("reload spec given without --reload-at"),
+        }
+        Ok(())
+    }
+}
+
+/// The ns-resolved lifecycle plan the drivers execute.
+#[derive(Debug, Clone)]
+pub struct LifecyclePlan {
+    pub admission: AdmissionPolicy,
+    pub retry: RetryPolicy,
+    pub fault: Option<FaultPlan>,
+    /// Virtual timestamp after which no new arrivals are admitted; the
+    /// driver then serves everything accepted and shuts down.
+    pub drain_at_ns: Option<u64>,
+    /// (suspend, resume) virtual timestamps.
+    pub suspend_ns: Option<(u64, u64)>,
+    /// (at, spec) for the hot reload.
+    pub reload: Option<(u64, ReloadSpec)>,
+}
+
+impl Default for LifecyclePlan {
+    fn default() -> Self {
+        LifecyclePlan {
+            admission: AdmissionPolicy::ShedNewest,
+            retry: RetryPolicy::default(),
+            fault: None,
+            drain_at_ns: None,
+            suspend_ns: None,
+            reload: None,
+        }
+    }
+}
+
+impl LifecyclePlan {
+    pub fn from_serve(scfg: &ServeConfig) -> Result<Self> {
+        let lc = &scfg.lifecycle;
+        let admission =
+            AdmissionPolicy::from_name(&lc.admission, (lc.admission_deadline_ms * 1e6) as u64)?;
+        let retry = RetryPolicy {
+            budget: lc.retry_budget,
+            backoff_ns: (lc.retry_backoff_ms * 1e6) as u64,
+        };
+        let fault = if lc.fault_rate > 0.0 {
+            Some(FaultPlan {
+                seed: lc.fault_seed,
+                rate: lc.fault_rate,
+                fail_attempts: lc.fault_attempts,
+                panic: lc.fault_panic,
+            })
+        } else {
+            None
+        };
+        Ok(LifecyclePlan {
+            admission,
+            retry,
+            fault,
+            drain_at_ns: lc.drain_at_s.map(|s| (s * 1e9) as u64),
+            suspend_ns: match (lc.suspend_at_s, lc.resume_at_s) {
+                (Some(s), Some(r)) => Some(((s * 1e9) as u64, (r * 1e9) as u64)),
+                _ => None,
+            },
+            reload: match (lc.reload_at_s, &lc.reload) {
+                (Some(at), Some(spec)) => Some(((at * 1e9) as u64, spec.clone())),
+                _ => None,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admission_parse_round_trip() {
+        for name in ["block", "shed-newest", "shed-oldest"] {
+            let p = AdmissionPolicy::from_name(name, 0).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        let p = AdmissionPolicy::from_name("deadline", 5_000_000).unwrap();
+        assert_eq!(p, AdmissionPolicy::DeadlineAware { deadline_ns: 5_000_000 });
+        assert!(AdmissionPolicy::from_name("deadline", 0).is_err());
+        assert!(AdmissionPolicy::from_name("lru", 0).is_err());
+    }
+
+    #[test]
+    fn backoff_doubles_and_saturates() {
+        let r = RetryPolicy { budget: 5, backoff_ns: 1_000 };
+        assert_eq!(r.backoff_for(1), 1_000);
+        assert_eq!(r.backoff_for(2), 2_000);
+        assert_eq!(r.backoff_for(3), 4_000);
+        // Shift is clamped; huge attempt counts must not overflow.
+        assert_eq!(r.backoff_for(1_000), 1_000 << 16);
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_attempt_bounded() {
+        let plan = FaultPlan { seed: 42, rate: 0.5, fail_attempts: 2, panic: false };
+        for seq in 0..64u64 {
+            let a = plan.should_fail(seq, 1);
+            let b = plan.should_fail(seq, 1);
+            assert_eq!(a, b, "same (seq, attempt) must replay identically");
+            if a {
+                assert!(plan.should_fail(seq, 2));
+                assert!(!plan.should_fail(seq, 3), "attempts past fail_attempts succeed");
+            }
+        }
+        let never = FaultPlan { seed: 42, rate: 0.0, fail_attempts: 1, panic: false };
+        assert!(!never.should_fail(7, 1));
+    }
+
+    #[test]
+    fn fault_plan_rate_one_selects_everything() {
+        let plan = FaultPlan { seed: 9, rate: 1.0, fail_attempts: u32::MAX, panic: false };
+        for seq in 0..16u64 {
+            assert!(plan.should_fail(seq, 1));
+            assert!(plan.should_fail(seq, 1_000_000));
+        }
+    }
+
+    #[test]
+    fn reload_spec_validation() {
+        let good = ReloadSpec {
+            governor: "slo".into(),
+            slo_ms: 10.0,
+            min_batch: 2,
+            max_batch: 8,
+            window: 32,
+        };
+        good.validate().unwrap();
+        assert_eq!(good.ladder(), vec![2, 4, 8]);
+        assert!(good.build_governor().is_ok());
+
+        let bad_gov = ReloadSpec { governor: "pid".into(), ..good.clone() };
+        assert!(bad_gov.validate().is_err());
+        let bad_batch = ReloadSpec { min_batch: 3, ..good.clone() };
+        assert!(bad_batch.validate().is_err());
+        let bad_order = ReloadSpec { min_batch: 16, max_batch: 8, ..good };
+        assert!(bad_order.validate().is_err());
+    }
+
+    #[test]
+    fn lifecycle_config_validation() {
+        let mut lc = LifecycleConfig::default();
+        lc.validate().unwrap();
+
+        lc.retry_budget = 0;
+        assert!(lc.validate().is_err());
+        lc.retry_budget = 3;
+
+        lc.fault_rate = 1.5;
+        assert!(lc.validate().is_err());
+        lc.fault_rate = 0.0;
+
+        lc.suspend_at_s = Some(1.0);
+        assert!(lc.validate().is_err(), "suspend without resume");
+        lc.resume_at_s = Some(0.5);
+        assert!(lc.validate().is_err(), "resume before suspend");
+        lc.resume_at_s = Some(2.0);
+        lc.validate().unwrap();
+
+        lc.reload_at_s = Some(1.0);
+        assert!(lc.validate().is_err(), "reload_at without spec");
+        lc.reload = Some(ReloadSpec {
+            governor: "queue".into(),
+            slo_ms: 10.0,
+            min_batch: 1,
+            max_batch: 4,
+            window: 16,
+        });
+        lc.validate().unwrap();
+    }
+
+    #[test]
+    fn plan_resolution_converts_units() {
+        let mut scfg = ServeConfig::default();
+        scfg.lifecycle.admission = "deadline".into();
+        scfg.lifecycle.admission_deadline_ms = 2.0;
+        scfg.lifecycle.retry_backoff_ms = 0.5;
+        scfg.lifecycle.drain_at_s = Some(1.5);
+        let plan = LifecyclePlan::from_serve(&scfg).unwrap();
+        assert_eq!(
+            plan.admission,
+            AdmissionPolicy::DeadlineAware { deadline_ns: 2_000_000 }
+        );
+        assert_eq!(plan.retry.backoff_ns, 500_000);
+        assert_eq!(plan.drain_at_ns, Some(1_500_000_000));
+        assert!(plan.fault.is_none());
+    }
+}

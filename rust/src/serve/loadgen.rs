@@ -28,6 +28,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::mpsc::channel;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -36,6 +37,7 @@ use super::governor::{
     pad_to_rung, FixedServeGovernor, QueueDepthGovernor, ServeGovernor, ServeObservation,
     SloGovernor,
 };
+use super::lifecycle::{AdmissionPolicy, Control, LifecyclePlan};
 use super::queue::BoundedQueue;
 use super::server::serve_wall;
 use super::{Request, ServeStats};
@@ -173,31 +175,169 @@ impl VirtualCfg {
 /// p99 — deterministic because the boundaries live on the virtual clock.
 const SNAPSHOT_INTERVAL_NS: u64 = 250_000_000;
 
+/// A failed batch waiting out its backoff before the next attempt.
+struct RetryBatch {
+    /// earliest virtual instant the next attempt may dispatch
+    ready_ns: u64,
+    /// the batch's sequence number (assigned at first dispatch; the
+    /// fault plan is keyed on it, so every attempt replays identically)
+    seq: u64,
+    /// the attempt about to run (1 = first dispatch)
+    attempt: u32,
+    reqs: Vec<Request>,
+}
+
+/// Admit one arrival under the configured policy (virtual clock). The
+/// `Block` policy has no producer to park in a discrete-event model, so
+/// it admits unconditionally — capacity exists to model the shedding
+/// policies, not physical memory.
+#[allow(clippy::too_many_arguments)]
+fn admit_virtual(
+    r: Request,
+    now: u64,
+    policy: AdmissionPolicy,
+    capacity: usize,
+    pending: &mut VecDeque<Request>,
+    stats: &mut ServeStats,
+    shed: &mut u64,
+    trace: &mut TraceBuf,
+) {
+    if pending.len() < capacity {
+        pending.push_back(r);
+        return;
+    }
+    match policy {
+        AdmissionPolicy::Block => pending.push_back(r),
+        AdmissionPolicy::ShedNewest => {
+            *shed += 1;
+            trace.record_at(
+                SpanPayload::Shed { id: r.id, depth: pending.len() as u32, evicted: false },
+                now,
+                0,
+            );
+        }
+        AdmissionPolicy::ShedOldest => {
+            let victim = pending.pop_front().expect("full queue has a front");
+            stats.evicted += 1;
+            trace.record_at(
+                SpanPayload::Shed { id: victim.id, depth: pending.len() as u32, evicted: true },
+                now,
+                0,
+            );
+            pending.push_back(r);
+        }
+        AdmissionPolicy::DeadlineAware { deadline_ns } => {
+            while pending.len() >= capacity {
+                match pending.front() {
+                    Some(front) if front.arrival_ns.saturating_add(deadline_ns) <= now => {
+                        let victim = pending.pop_front().expect("front exists");
+                        stats.evicted += 1;
+                        trace.record_at(
+                            SpanPayload::Shed {
+                                id: victim.id,
+                                depth: pending.len() as u32,
+                                evicted: true,
+                            },
+                            now,
+                            0,
+                        );
+                    }
+                    _ => break,
+                }
+            }
+            if pending.len() < capacity {
+                pending.push_back(r);
+            } else {
+                *shed += 1;
+                trace.record_at(
+                    SpanPayload::Shed { id: r.id, depth: pending.len() as u32, evicted: false },
+                    now,
+                    0,
+                );
+            }
+        }
+    }
+}
+
+/// If the drain point has been reached, refuse (and count) every
+/// remaining arrival; the arrival schedule is sorted, so one arrival at
+/// or past `drain_at` means all the rest are too. Returns true if the
+/// remainder was flushed.
+#[allow(clippy::too_many_arguments)]
+fn drain_flush(
+    arrivals: &[u64],
+    i: &mut usize,
+    drain_at: u64,
+    pending_len: usize,
+    shed: &mut u64,
+    drain_logged: &mut bool,
+    trace: &mut TraceBuf,
+) -> bool {
+    let n = arrivals.len();
+    if *i < n && arrivals[*i] >= drain_at {
+        if !*drain_logged {
+            trace.record_at(SpanPayload::Drain { pending: pending_len as u32 }, drain_at, 0);
+            *drain_logged = true;
+        }
+        *shed += (n - *i) as u64;
+        *i = n;
+        return true;
+    }
+    false
+}
+
+/// Clamp a dispatch instant out of the suspension window: nothing may
+/// dispatch in `[suspend, resume)`. The spans are recorded only when the
+/// window actually deflects a dispatch, so a suspension that nothing
+/// runs into leaves the whole run (trace included) bitwise unchanged.
+fn apply_suspend(
+    t: u64,
+    window: Option<(u64, u64)>,
+    logged: &mut bool,
+    trace: &mut TraceBuf,
+) -> u64 {
+    if let Some((s, r)) = window {
+        if t >= s && t < r {
+            if !*logged {
+                trace.record_at(SpanPayload::Suspend, s, r - s);
+                trace.record_at(SpanPayload::Resume, r, 0);
+                *logged = true;
+            }
+            return r;
+        }
+    }
+    t
+}
+
 /// Discrete-event serving run on the virtual clock. The batcher policy is
 /// [`super::batcher::batch_ready`] evaluated in event time: a batch closes
 /// at the earliest instant it is full, its front request has waited
 /// `max_wait`, or no more arrivals can come. `workers` parallel servers
 /// are modeled as a min-heap of busy-until times; the forward pass runs
 /// for real on the reference backend, the service *time* comes from the
-/// affine model. Everything observable is a pure function of the inputs.
+/// affine model. The lifecycle `plan` layers admission policy, per-batch
+/// retry with backoff, graceful drain, suspend/resume and hot reload on
+/// top (DESIGN.md §13) — all of it event-time arithmetic, so everything
+/// observable stays a pure function of (seed, config, fault plan).
 #[allow(clippy::too_many_arguments)]
 pub fn run_virtual(
     rt: &ModelRuntime,
     params: &ParamSet,
     data: &TrainData,
-    governor: &mut dyn ServeGovernor,
+    governor: &mut Box<dyn ServeGovernor>,
     arrivals: &[u64],
     samples: &[usize],
     ladder: &[usize],
     cfg: &VirtualCfg,
+    plan: &LifecyclePlan,
     trace: &mut TraceBuf,
 ) -> Result<ServeStats> {
     assert!(cfg.workers > 0, "need at least one virtual server");
     assert_eq!(arrivals.len(), samples.len());
     let n = arrivals.len();
-    let req = |i: usize| Request { id: i as u64, sample: samples[i], arrival_ns: arrivals[i] };
 
     let mut pending: VecDeque<Request> = VecDeque::new();
+    let mut retryq: Vec<RetryBatch> = Vec::new();
     let mut workers: BinaryHeap<Reverse<u64>> =
         (0..cfg.workers).map(|_| Reverse(0u64)).collect();
     let mut stats = ServeStats::default();
@@ -209,77 +349,190 @@ pub fn run_virtual(
     let mut shed = 0u64;
     let mut next_snapshot = SNAPSHOT_INTERVAL_NS;
     let mut snapshot_idx = 0u32;
+    let mut batch_seq = 0u64;
+    let mut pad_ladder: Vec<usize> = ladder.to_vec();
+    let mut reload_pending = plan.reload.clone();
+    let mut drain_logged = false;
+    let mut suspend_logged = false;
+
+    // admit every arrival at or before `t` under the lifecycle plan
+    macro_rules! admit_until {
+        ($t:expr) => {
+            while i < n && arrivals[i] <= $t {
+                if let Some(d) = plan.drain_at_ns {
+                    if drain_flush(
+                        arrivals,
+                        &mut i,
+                        d,
+                        pending.len(),
+                        &mut shed,
+                        &mut drain_logged,
+                        trace,
+                    ) {
+                        break;
+                    }
+                }
+                let r = Request { id: i as u64, sample: samples[i], arrival_ns: arrivals[i] };
+                admit_virtual(
+                    r,
+                    arrivals[i],
+                    plan.admission,
+                    cfg.queue_capacity,
+                    &mut pending,
+                    &mut stats,
+                    &mut shed,
+                    trace,
+                );
+                i += 1;
+            }
+        };
+    }
 
     loop {
         let Reverse(free_at) = *workers.peek().expect("worker heap is never empty");
-        while i < n && arrivals[i] <= free_at {
-            // mirror the wall queue's admission cap: overflow is shed
-            if pending.len() < cfg.queue_capacity {
-                pending.push_back(req(i));
-            } else {
-                shed += 1;
-            }
-            i += 1;
+        admit_until!(free_at);
+        // a future arrival at/past the drain point will never be
+        // admitted, so the fill estimate must not wait for it
+        if let Some(d) = plan.drain_at_ns {
+            drain_flush(arrivals, &mut i, d, pending.len(), &mut shed, &mut drain_logged, trace);
         }
         let closed = i >= n;
         let target = governor.target_batch(pending.len()).max(1);
-        let mut t = free_at;
-        if pending.len() < target {
-            if closed {
-                // no arrival can ever fill this batch: serve the
-                // leftovers immediately (batch_ready's `closed` arm)
-                if pending.is_empty() {
-                    break; // fully served
-                }
+
+        // earliest retry whose backoff can have elapsed (ties by seq)
+        let retry_pick = retryq
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, rb)| (rb.ready_ns, rb.seq))
+            .map(|(idx, rb)| (idx, rb.ready_ns.max(free_at)));
+
+        // earliest instant a *new* batch can close: it is already full,
+        // it fills, its front (or first future) request hits max_wait,
+        // or no arrival can ever come (serve the leftovers)
+        let new_t: Option<u64> = if pending.len() >= target {
+            Some(free_at)
+        } else if closed {
+            if pending.is_empty() {
+                None
             } else {
-                // earliest instant the batch can close: it fills, or its
-                // front (or first future) request hits max_wait
-                let t_fill = arrivals.get(i + (target - pending.len()) - 1).copied();
-                let t_timeout = pending
-                    .front()
-                    .map(|r| r.arrival_ns + cfg.max_wait_ns)
-                    .unwrap_or(arrivals[i] + cfg.max_wait_ns);
-                t = match t_fill {
+                Some(free_at)
+            }
+        } else {
+            let t_fill = arrivals.get(i + (target - pending.len()) - 1).copied();
+            let t_timeout = pending
+                .front()
+                .map(|r| r.arrival_ns + cfg.max_wait_ns)
+                .unwrap_or(arrivals[i] + cfg.max_wait_ns);
+            Some(
+                match t_fill {
                     Some(fill) => fill.min(t_timeout),
                     None => t_timeout,
                 }
-                .max(free_at);
-                while i < n && arrivals[i] <= t {
-                    if pending.len() < cfg.queue_capacity {
-                        pending.push_back(req(i));
-                    } else {
-                        shed += 1;
-                    }
-                    i += 1;
+                .max(free_at),
+            )
+        };
+
+        // dispatch whichever is ready first; a retry wins ties so a
+        // requeued batch is never starved by fresh traffic
+        let (t0, is_retry, retry_idx) = match (retry_pick, new_t) {
+            (None, None) => break, // fully served: no pending, no retries, no arrivals
+            (Some((idx, tr)), None) => (tr, true, idx),
+            (None, Some(tn)) => (tn, false, 0),
+            (Some((idx, tr)), Some(tn)) => {
+                if tr <= tn {
+                    (tr, true, idx)
+                } else {
+                    (tn, false, 0)
                 }
             }
+        };
+
+        // hot reload applies at the first dispatch consultation at/past
+        // its scheduled instant: swap governor + pad ladder, then
+        // re-derive the decision under the new regime
+        if matches!(&reload_pending, Some((at, _)) if t0 >= *at) {
+            let (at, spec) = reload_pending.take().expect("reload is pending");
+            *governor = spec.build_governor()?;
+            pad_ladder = spec.ladder();
+            stats.reloads += 1;
+            trace.record_at(
+                SpanPayload::Reload {
+                    min_batch: spec.min_batch as u32,
+                    max_batch: spec.max_batch as u32,
+                    slo_ns: (spec.slo_ms * 1e6) as u64,
+                },
+                at,
+                0,
+            );
+            continue;
         }
-        // the closing-time candidates all sit at or after the next
-        // arrival, so something is always pending by now
-        assert!(!pending.is_empty(), "virtual batcher closed an empty batch");
-        if t >= cfg.horizon_ns {
-            stats.unserved = (pending.len() + (n - i)) as u64;
-            break;
-        }
 
-        let take = pending.len().min(target);
-        let batch: Vec<Request> = pending.drain(..take).collect();
-        // causality clamp: a batch only exists once its last member has
-        // arrived (pending is FIFO, so the last taken has the max
-        // arrival). Without this, a second worker freeing earlier than
-        // the admission instant could "serve" requests before they
-        // arrive and `done - arrival` would underflow.
-        let t = t.max(batch.last().expect("batch is non-empty").arrival_ns);
-        let depth_after = pending.len();
-        let padded = pad_to_rung(take, ladder);
+        let (t, batch, seq, attempt, depth_after) = if is_retry {
+            let t = apply_suspend(t0, plan.suspend_ns, &mut suspend_logged, trace);
+            if plan.drain_at_ns.is_none() && t >= cfg.horizon_ns {
+                let queued: usize = retryq.iter().map(|rb| rb.reqs.len()).sum();
+                stats.unserved = (pending.len() + (n - i) + queued) as u64;
+                break;
+            }
+            let rb = retryq.swap_remove(retry_idx);
+            (t, rb.reqs, rb.seq, rb.attempt, pending.len())
+        } else {
+            admit_until!(t0);
+            // the closing-time candidates all sit at or after the next
+            // arrival, so something is always pending by now
+            assert!(!pending.is_empty(), "virtual batcher closed an empty batch");
+            let t = apply_suspend(t0, plan.suspend_ns, &mut suspend_logged, trace);
+            if plan.drain_at_ns.is_none() && t >= cfg.horizon_ns {
+                let queued: usize = retryq.iter().map(|rb| rb.reqs.len()).sum();
+                stats.unserved = (pending.len() + (n - i) + queued) as u64;
+                break;
+            }
+            let take = pending.len().min(target);
+            let batch: Vec<Request> = pending.drain(..take).collect();
+            // causality clamp: a batch only exists once its last member
+            // has arrived (pending is FIFO, so the last taken has the
+            // max arrival). Without this, a second worker freeing
+            // earlier than the admission instant could "serve" requests
+            // before they arrive and `done - arrival` would underflow.
+            let t = t.max(batch.last().expect("batch is non-empty").arrival_ns);
+            // the causality clamp can land inside the suspension window
+            let t = apply_suspend(t, plan.suspend_ns, &mut suspend_logged, trace);
+            let seq = batch_seq;
+            batch_seq += 1;
+            (t, batch, seq, 1u32, pending.len())
+        };
 
-        // the forward pass really runs; only its *duration* is modeled
-        let out = super::forward_batch(rt, params, data, &batch, padded, &mut bufs, &mut ws)?;
-
+        let take = batch.len();
+        let padded = pad_to_rung(take, &pad_ladder);
         let service = cfg.service_base_ns + cfg.service_per_sample_ns * padded as u64;
         let done = t + service;
         workers.pop();
         workers.push(Reverse(done));
+
+        // injected fault: the dispatch consumes its service time (the
+        // worker was busy failing) but produces no completions
+        if plan.fault.is_some_and(|f| f.should_fail(seq, attempt)) {
+            stats.failed_batches += 1;
+            if attempt >= plan.retry.budget {
+                bail!(
+                    "retry budget exhausted: batch {seq} ({take} request(s)) failed \
+                     attempt {attempt} of {}",
+                    plan.retry.budget
+                );
+            }
+            stats.retries += 1;
+            trace.record_at(
+                SpanPayload::Retry { seq, attempt, batch: take as u32 },
+                done,
+                0,
+            );
+            let ready_ns = done + plan.retry.backoff_for(attempt);
+            retryq.push(RetryBatch { ready_ns, seq, attempt: attempt + 1, reqs: batch });
+            continue;
+        }
+
+        // the forward pass really runs; only its *duration* is modeled
+        let out = super::forward_batch(rt, params, data, &batch, padded, &mut bufs, &mut ws)?;
 
         lats.clear();
         for r in &batch {
@@ -342,6 +595,7 @@ pub fn run_virtual(
         }
     }
     stats.shed = shed;
+    stats.drained = plan.drain_at_ns.is_some() && stats.unserved == 0;
     stats.pack_count = ws.stats().pack_count;
     stats.alloc_bytes = ws.alloc_bytes();
     Ok(stats)
@@ -354,7 +608,7 @@ pub fn run_virtual(
 /// --checkpoint-dir` instead of a fresh init.
 pub fn run_serve_bench(
     scfg: &ServeConfig,
-    governor: &mut dyn ServeGovernor,
+    governor: &mut Box<dyn ServeGovernor>,
     clock: Clock,
     classes: usize,
     pool: usize,
@@ -364,7 +618,18 @@ pub fn run_serve_bench(
     if classes < 2 || pool == 0 {
         bail!("serve-bench needs ≥ 2 classes and a non-empty sample pool");
     }
+    let plan = LifecyclePlan::from_serve(scfg)?;
+    let governor_initial = governor.name().to_string();
+    // padding uses the live governor's ladder; the runtime's executable
+    // ladder is the union with the reload target's, so a hot reload
+    // never requests a batch size without a pre-built executable
     let ladder = governor.ladder();
+    let mut exec_ladder = ladder.clone();
+    if let Some((_, spec)) = &plan.reload {
+        exec_ladder.extend(spec.ladder());
+        exec_ladder.sort_unstable();
+        exec_ladder.dedup();
+    }
     let arrivals = arrival_schedule(scfg.qps, scfg.duration_s, scfg.shape, scfg.seed);
     let n = arrivals.len();
 
@@ -383,11 +648,15 @@ pub fn run_serve_bench(
 
     let rt = match scfg.arch {
         ModelArch::Linear => {
-            ModelRuntime::reference_serving("serve_ref", IMG_LEN, classes, &ladder)
+            ModelRuntime::reference_serving("serve_ref", IMG_LEN, classes, &exec_ladder)
         }
-        ModelArch::Mlp { hidden } => {
-            ModelRuntime::reference_serving_mlp("serve_ref_mlp", IMG_LEN, hidden, classes, &ladder)
-        }
+        ModelArch::Mlp { hidden } => ModelRuntime::reference_serving_mlp(
+            "serve_ref_mlp",
+            IMG_LEN,
+            hidden,
+            classes,
+            &exec_ladder,
+        ),
     };
     let mut params = ParamSet::init(&rt.entry.params, scfg.seed);
     if let Some(path) = checkpoint {
@@ -412,7 +681,8 @@ pub fn run_serve_bench(
         Clock::Virtual => {
             let vcfg = VirtualCfg::from_serve(scfg);
             run_virtual(
-                &rt, &params, &data, governor, &arrivals, &samples, &ladder, &vcfg, &mut trace,
+                &rt, &params, &data, governor, &arrivals, &samples, &ladder, &vcfg, &plan,
+                &mut trace,
             )?
         }
         Clock::Wall => {
@@ -420,7 +690,22 @@ pub fn run_serve_bench(
             let max_wait = Duration::from_nanos(scfg.max_wait_ns());
             let start = Instant::now();
             let deadline = start + Duration::from_nanos(scfg.horizon_ns());
+            // the control plan becomes a timeline of wall-clock sends
+            let mut controls: Vec<(u64, Control)> = Vec::new();
+            if let Some((s, r)) = plan.suspend_ns {
+                controls.push((s, Control::Suspend));
+                controls.push((r, Control::Resume));
+            }
+            if let Some((at, spec)) = &plan.reload {
+                controls.push((*at, Control::Reload(spec.clone())));
+            }
+            if let Some(d) = plan.drain_at_ns {
+                controls.push((d, Control::Drain));
+            }
+            controls.sort_by_key(|(t, _)| *t);
+            let (ctl_tx, ctl_rx) = channel::<Control>();
             let mut shed = 0u64;
+            let mut evicted = 0u64;
             let mut stats = std::thread::scope(|s| {
                 let server = s.spawn(|| {
                     serve_wall(
@@ -436,8 +721,26 @@ pub fn run_serve_bench(
                         start,
                         scfg.warmup_ns(),
                         deadline,
+                        &plan,
+                        Some(ctl_rx),
                     )
                 });
+                if controls.is_empty() {
+                    drop(ctl_tx);
+                } else {
+                    s.spawn(move || {
+                        for (t_ns, c) in controls {
+                            let due = Duration::from_nanos(t_ns);
+                            let now = start.elapsed();
+                            if due > now {
+                                std::thread::sleep(due - now);
+                            }
+                            if ctl_tx.send(c).is_err() {
+                                break; // server already gone
+                            }
+                        }
+                    });
+                }
                 for (i, &t_ns) in arrivals.iter().enumerate() {
                     let due = Duration::from_nanos(t_ns);
                     let now = start.elapsed();
@@ -449,8 +752,32 @@ pub fn run_serve_bench(
                     // show up as request latency (no coordinated
                     // omission), matching the virtual clock
                     let req = Request { id: i as u64, sample: samples[i], arrival_ns: t_ns };
-                    if queue.try_push(req).is_err() {
-                        shed += 1; // open loop: never slow the client
+                    // open loop: the client is never slowed past the
+                    // bench deadline, whatever the admission policy
+                    match plan.admission {
+                        AdmissionPolicy::Block => {
+                            if queue.push_deadline(req, deadline).is_err() {
+                                shed += 1;
+                            }
+                        }
+                        AdmissionPolicy::ShedNewest => {
+                            if queue.try_push(req).is_err() {
+                                shed += 1;
+                            }
+                        }
+                        AdmissionPolicy::ShedOldest => match queue.push_evicting(req, |_| true) {
+                            Ok(victims) => evicted += victims.len() as u64,
+                            Err(_) => shed += 1,
+                        },
+                        AdmissionPolicy::DeadlineAware { deadline_ns } => {
+                            let now_ns = start.elapsed().as_nanos() as u64;
+                            let expired =
+                                |r: &Request| r.arrival_ns.saturating_add(deadline_ns) <= now_ns;
+                            match queue.push_evicting(req, expired) {
+                                Ok(victims) => evicted += victims.len() as u64,
+                                Err(_) => shed += 1,
+                            }
+                        }
                     }
                 }
                 queue.close();
@@ -459,6 +786,7 @@ pub fn run_serve_bench(
                     .unwrap_or_else(|payload| std::panic::resume_unwind(payload))
             })?;
             stats.shed = shed;
+            stats.evicted += evicted;
             // arrivals admitted after the server hit its horizon cutoff
             stats.unserved += queue.try_drain(usize::MAX).len() as u64;
             stats
@@ -486,6 +814,16 @@ pub fn run_serve_bench(
         reg.inc(shed, stats.shed);
         let padded = reg.counter("serve_padded_samples_total");
         reg.inc(padded, stats.padded_samples);
+        let retries = reg.counter("serve_retries_total");
+        reg.inc(retries, stats.retries);
+        let failed = reg.counter("serve_failed_batches_total");
+        reg.inc(failed, stats.failed_batches);
+        let evicted = reg.counter("serve_evicted_total");
+        reg.inc(evicted, stats.evicted);
+        let reloads = reg.counter("serve_reloads_total");
+        reg.inc(reloads, stats.reloads);
+        let unserved = reg.counter("serve_unserved_total");
+        reg.inc(unserved, stats.unserved);
         let pack = reg.counter("workspace_pack_count_total");
         reg.inc(pack, stats.pack_count);
         let alloc = reg.gauge("workspace_alloc_bytes");
@@ -493,7 +831,7 @@ pub fn run_serve_bench(
         reg.absorb_histogram("serve_latency_ns", &stats.hist);
         write_prometheus(path, &reg)?;
     }
-    let report = report_json(scfg, clock, &*governor, &stats, n);
+    let report = report_json(scfg, clock, governor.as_ref(), &governor_initial, &stats, n);
     Ok((stats, report))
 }
 
@@ -503,6 +841,7 @@ pub fn report_json(
     scfg: &ServeConfig,
     clock: Clock,
     governor: &dyn ServeGovernor,
+    governor_initial: &str,
     stats: &ServeStats,
     requests: usize,
 ) -> Json {
@@ -514,7 +853,12 @@ pub fn report_json(
         ("clock", Json::str(clock.name())),
         ("model", Json::str(scfg.arch.name())),
         ("shape", Json::str(scfg.shape.name())),
-        ("governor", Json::str(governor.name())),
+        // the governor the run started under; after a hot reload,
+        // `governor_final` names the one it ended under
+        ("governor", Json::str(governor_initial)),
+        ("governor_final", Json::str(governor.name())),
+        ("admission", Json::str(scfg.lifecycle.admission.clone())),
+        ("retry_budget", Json::num(scfg.lifecycle.retry_budget as f64)),
         ("qps", Json::num(scfg.qps)),
         ("duration_s", Json::num(scfg.duration_s)),
         // string, not Json::num: a u64 seed above 2^53 must round-trip
@@ -535,7 +879,12 @@ pub fn report_json(
         ("requests", Json::num(requests as f64)),
         ("completed", Json::num(stats.completed as f64)),
         ("shed", Json::num(stats.shed as f64)),
+        ("evicted", Json::num(stats.evicted as f64)),
         ("unserved", Json::num(stats.unserved as f64)),
+        ("retries", Json::num(stats.retries as f64)),
+        ("failed_batches", Json::num(stats.failed_batches as f64)),
+        ("reloads", Json::num(stats.reloads as f64)),
+        ("drained", Json::Bool(stats.drained)),
         ("batches", Json::num(stats.batches as f64)),
         ("mean_batch", Json::num(stats.mean_batch())),
         ("final_batch", Json::num(governor.current_batch() as f64)),
@@ -652,7 +1001,7 @@ mod tests {
         for _ in 0..2 {
             let mut gov = governor_from_name("slo", &scfg).unwrap();
             let (stats, rep) =
-                run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 32, None).unwrap();
+                run_serve_bench(&scfg, &mut gov, Clock::Virtual, 4, 32, None).unwrap();
             assert!(stats.completed > 0);
             assert!(stats.loss_sum > 0.0, "the MLP really ran");
             rendered.push(rep.to_string());
@@ -674,7 +1023,7 @@ mod tests {
         scfg.validate().unwrap();
         let mut gov = governor_from_name("queue", &scfg).unwrap();
         let (stats, report) =
-            run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 32, None).unwrap();
+            run_serve_bench(&scfg, &mut gov, Clock::Virtual, 4, 32, None).unwrap();
         assert!(stats.completed > 0);
         assert_eq!(stats.unserved, 0, "capacity far exceeds offered load");
         assert_eq!(stats.completed, stats.hist.count(), "warmup 0: all recorded");

@@ -21,6 +21,7 @@
 
 pub mod batcher;
 pub mod governor;
+pub mod lifecycle;
 pub mod loadgen;
 pub mod queue;
 pub mod server;
@@ -29,6 +30,9 @@ pub use batcher::{batch_ready, Batcher};
 pub use governor::{
     pad_to_rung, serve_ladder, FixedServeGovernor, QueueDepthGovernor, ServeGovernor,
     ServeObservation, SloGovernor,
+};
+pub use lifecycle::{
+    AdmissionPolicy, Control, FaultPlan, LifecycleConfig, LifecyclePlan, ReloadSpec, RetryPolicy,
 };
 pub use loadgen::{arrival_schedule, run_serve_bench, run_virtual, Clock, VirtualCfg};
 pub use queue::{BoundedQueue, Pop, Reject};
@@ -83,6 +87,18 @@ pub struct ServeStats {
     pub pack_count: u64,
     /// steady-state bytes held by the workers' arenas
     pub alloc_bytes: u64,
+    /// batch dispatches that failed and were requeued with backoff
+    pub retries: u64,
+    /// batch dispatches that failed (injected fault or worker panic)
+    pub failed_batches: u64,
+    /// queued requests evicted by the shed-oldest / deadline-aware
+    /// admission policies to make room for newer arrivals
+    pub evicted: u64,
+    /// hot reloads applied (governor / SLO / ladder swap)
+    pub reloads: u64,
+    /// true when the run ended via graceful drain (admission closed,
+    /// every accepted request served) rather than the horizon cutoff
+    pub drained: bool,
 }
 
 /// The inference hot path both clocks share: gather `batch`'s samples

@@ -98,6 +98,65 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Blocking push with a deadline: parks until capacity frees, the
+    /// queue closes (`Reject::Closed`), or `deadline` passes
+    /// (`Reject::Full` — the admission timed out). This is what the
+    /// wall-clock load generator's `block` admission policy uses: a
+    /// saturated queue applies backpressure only up to the bench
+    /// deadline instead of wedging the producer forever.
+    pub fn push_deadline(&self, item: T, deadline: Instant) -> Result<(), Reject<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(Reject::Closed(item));
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(Reject::Full(item));
+            }
+            let (guard, _res) = self.not_full.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Push that makes room by evicting queued items from the *front*
+    /// while the queue is full and `evict` approves the victim. Returns
+    /// the evicted items (possibly empty) on success; `Reject::Full`
+    /// (nothing evicted) when the front item is not evictable, and
+    /// `Reject::Closed` after close. Powers the shed-oldest and
+    /// deadline-aware admission policies.
+    pub fn push_evicting(
+        &self,
+        item: T,
+        mut evict: impl FnMut(&T) -> bool,
+    ) -> Result<Vec<T>, Reject<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(Reject::Closed(item));
+        }
+        let mut evicted = Vec::new();
+        while g.items.len() >= self.capacity {
+            match g.items.front() {
+                Some(front) if evict(front) => {
+                    evicted.push(g.items.pop_front().expect("front exists"));
+                }
+                // front not evictable (capacity >= 1, so nothing was
+                // evicted yet on this path): shed the newcomer instead
+                _ => return Err(Reject::Full(item)),
+            }
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(evicted)
+    }
+
     /// Non-blocking push; a full or closed queue rejects with the item.
     pub fn try_push(&self, item: T) -> Result<(), Reject<T>> {
         let mut g = self.inner.lock().unwrap();
@@ -224,6 +283,56 @@ mod tests {
         });
         // the accepted item survives the close
         assert_eq!(q.try_drain(8), vec![7]);
+    }
+
+    #[test]
+    fn push_deadline_times_out_instead_of_wedging() {
+        let q = BoundedQueue::bounded(1);
+        q.push(0u32).unwrap();
+        let t0 = Instant::now();
+        let r = q.push_deadline(1, Instant::now() + Duration::from_millis(20));
+        assert_eq!(r, Err(Reject::Full(1)), "full past the deadline: admission timed out");
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // with room it admits immediately
+        assert_eq!(q.try_drain(1), vec![0]);
+        q.push_deadline(2, Instant::now() + Duration::from_millis(20)).unwrap();
+        assert_eq!(q.len(), 1);
+        q.close();
+        assert_eq!(
+            q.push_deadline(3, Instant::now() + Duration::from_millis(5)),
+            Err(Reject::Closed(3))
+        );
+    }
+
+    #[test]
+    fn push_deadline_wakes_when_capacity_frees() {
+        let q = BoundedQueue::bounded(1);
+        q.push(0u32).unwrap();
+        std::thread::scope(|s| {
+            let t = s.spawn(|| q.push_deadline(1, Instant::now() + Duration::from_secs(30)));
+            std::thread::sleep(Duration::from_millis(20));
+            assert_eq!(q.try_drain(1), vec![0]);
+            assert_eq!(t.join().unwrap(), Ok(()));
+        });
+        assert_eq!(q.try_drain(1), vec![1]);
+    }
+
+    #[test]
+    fn push_evicting_head_drop_and_predicate() {
+        let q = BoundedQueue::bounded(2);
+        q.push(10u32).unwrap();
+        q.push(11).unwrap();
+        // unconditional eviction = shed-oldest
+        assert_eq!(q.push_evicting(12, |_| true), Ok(vec![10]));
+        assert_eq!(q.len(), 2);
+        // predicate refuses the front: newcomer is rejected, queue intact
+        assert_eq!(q.push_evicting(13, |_| false), Err(Reject::Full(13)));
+        assert_eq!(q.try_drain(4), vec![11, 12]);
+        // room available: no eviction needed
+        assert_eq!(q.push_evicting(14, |_| true), Ok(vec![]));
+        q.close();
+        assert_eq!(q.push_evicting(15, |_| true), Err(Reject::Closed(15)));
+        assert_eq!(q.try_drain(4), vec![14]);
     }
 
     #[test]

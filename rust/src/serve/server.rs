@@ -15,7 +15,16 @@
 //! `target_batch(queue depth)` before each drain and feeds every
 //! completed batch's latencies back via `observe`, closing the control
 //! loop that makes the micro-batch size adaptive.
+//!
+//! Daemon lifecycle (DESIGN.md §13): a failed or panicked batch is
+//! caught at the worker, reported as a [`WorkerReply::Failed`], and
+//! requeued with exponential backoff until the retry budget is spent —
+//! only budget exhaustion surfaces as an error. A [`Control`] channel
+//! lets the caller drain (close admission, serve everything accepted),
+//! suspend/resume dispatch without discarding warm workspaces, or hot
+//! reload the governor and padding ladder mid-run.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
@@ -23,6 +32,7 @@ use anyhow::{anyhow, Result};
 
 use super::batcher::Batcher;
 use super::governor::{pad_to_rung, ServeGovernor, ServeObservation};
+use super::lifecycle::{Control, FaultPlan, LifecyclePlan, RetryPolicy};
 use super::queue::BoundedQueue;
 use super::{Request, ServeStats};
 use crate::coordinator::dataset::{GatherBufs, TrainData};
@@ -35,6 +45,11 @@ enum Job {
         depth: usize,
         batch: Vec<Request>,
         padded: usize,
+        /// 1-based attempt counter; retries re-dispatch with attempt + 1
+        attempt: u32,
+        /// batch sequence number assigned at first dispatch — the fault
+        /// plan keys on it so retries of one batch replay deterministically
+        seq: u64,
     },
     Finish,
 }
@@ -52,6 +67,23 @@ struct BatchDone {
     done_ns: u64,
 }
 
+enum WorkerReply {
+    Done(BatchDone),
+    /// The batch failed (forward error, injected fault, or caught
+    /// panic); the requests ride back so the dispatcher can requeue them.
+    Failed { depth: usize, batch: Vec<Request>, attempt: u32, seq: u64, err: String },
+}
+
+/// A failed batch waiting out its backoff before re-dispatch.
+struct RetryEntry {
+    ready: Instant,
+    depth: usize,
+    batch: Vec<Request>,
+    /// attempt number the *next* dispatch will carry
+    attempt: u32,
+    seq: u64,
+}
+
 /// Run the serving pipeline against `queue` until it is closed and
 /// drained, or the bench `deadline` (the horizon) passes — whichever
 /// comes first; at the deadline, still-queued requests are counted as
@@ -60,12 +92,18 @@ struct BatchDone {
 /// generator). `start` anchors the bench clock that request `arrival_ns`
 /// values were stamped against; requests arriving before `warmup_ns` are
 /// served but excluded from the latency histogram.
+///
+/// `plan` carries the retry policy and optional fault plan; `control`,
+/// when present, delivers [`Control`] messages (drain disables the
+/// deadline: every accepted request is served). In-flight batches and
+/// pending retries are always served to completion — accepted work is
+/// never dropped, even past the horizon.
 #[allow(clippy::too_many_arguments)]
 pub fn serve_wall(
     rt: &ModelRuntime,
     params: &ParamSet,
     data: &TrainData,
-    governor: &mut dyn ServeGovernor,
+    governor: &mut Box<dyn ServeGovernor>,
     queue: &BoundedQueue<Request>,
     workers: usize,
     kernel_threads: usize,
@@ -74,18 +112,21 @@ pub fn serve_wall(
     start: Instant,
     warmup_ns: u64,
     deadline: Instant,
+    plan: &LifecyclePlan,
+    control: Option<Receiver<Control>>,
 ) -> Result<ServeStats> {
     assert!(workers > 0, "server needs at least one worker");
     assert!(kernel_threads > 0, "server needs at least one kernel thread");
     std::thread::scope(|scope| {
-        let (res_tx, res_rx) = channel::<(usize, Result<BatchDone>)>();
+        let (res_tx, res_rx) = channel::<(usize, WorkerReply)>();
         let mut job_txs: Vec<Sender<Job>> = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
+        let fault = plan.fault;
         for w in 0..workers {
             let (tx, rx) = channel::<Job>();
             let res_tx = res_tx.clone();
             handles.push(scope.spawn(move || {
-                worker_loop(w, rx, res_tx, rt, params, data, start, kernel_threads)
+                worker_loop(w, rx, res_tx, rt, params, data, start, kernel_threads, fault)
             }));
             job_txs.push(tx);
         }
@@ -94,51 +135,130 @@ pub fn serve_wall(
         let batcher = Batcher::new(max_wait);
         let mut stats = ServeStats::default();
         let mut in_flight = vec![0usize; workers];
+        let mut retry_buf: Vec<RetryEntry> = Vec::new();
+        let mut batch_seq = 0u64;
+        let mut pad_ladder = ladder.to_vec();
+        let mut draining = false;
+        let mut suspended = false;
 
         let outcome = (|| -> Result<()> {
             loop {
-                // fold in any completions that have landed (non-blocking)
-                while let Ok((w, res)) = res_rx.try_recv() {
-                    in_flight[w] -= 1;
-                    absorb(&mut stats, &mut *governor, res?, warmup_ns);
+                // control plane first: drain/suspend/resume/reload take
+                // effect before the next dispatch decision
+                if let Some(rx) = &control {
+                    while let Ok(msg) = rx.try_recv() {
+                        match msg {
+                            Control::Drain => {
+                                draining = true;
+                                stats.drained = true;
+                                queue.close();
+                            }
+                            Control::Suspend => suspended = true,
+                            Control::Resume => suspended = false,
+                            Control::Reload(spec) => {
+                                *governor = spec.build_governor()?;
+                                pad_ladder = spec.ladder();
+                                stats.reloads += 1;
+                            }
+                        }
+                    }
                 }
-                if Instant::now() >= deadline {
+                // fold in any completions that have landed (non-blocking)
+                while let Ok((w, reply)) = res_rx.try_recv() {
+                    in_flight[w] -= 1;
+                    fold_reply(
+                        &mut stats,
+                        governor.as_mut(),
+                        &mut retry_buf,
+                        plan.retry,
+                        warmup_ns,
+                        reply,
+                    )?;
+                }
+                if suspended {
+                    // parked: workers keep their warm workspaces, nothing
+                    // dispatches. A passed horizon (outside drain mode)
+                    // overrides a lost Resume so the bench cannot hang.
+                    if draining || Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_millis(1));
+                        continue;
+                    }
+                    suspended = false;
+                }
+                // due retries dispatch ahead of new batches: their
+                // requests have been waiting the longest
+                let now = Instant::now();
+                let mut k = 0;
+                while k < retry_buf.len() {
+                    if retry_buf[k].ready <= now {
+                        let e = retry_buf.swap_remove(k);
+                        let padded = pad_to_rung(e.batch.len(), &pad_ladder);
+                        let job = Job::Run {
+                            depth: e.depth,
+                            batch: e.batch,
+                            padded,
+                            attempt: e.attempt,
+                            seq: e.seq,
+                        };
+                        send_to_least_loaded(&job_txs, &mut in_flight, job)?;
+                    } else {
+                        k += 1;
+                    }
+                }
+                if !draining && Instant::now() >= deadline {
                     // horizon: stop serving; the backlog is unserved
                     stats.unserved += queue.try_drain(usize::MAX).len() as u64;
                     break;
                 }
                 let target = governor.target_batch(queue.len());
-                let Some(batch) = batcher.next_batch(queue, target, Some(deadline)) else {
-                    break; // closed and drained
+                // drain mode has no horizon: everything accepted is served
+                let horizon = if draining { None } else { Some(deadline) };
+                let Some(batch) = batcher.next_batch(queue, target, horizon) else {
+                    break; // closed and drained (retries flush below)
                 };
                 if batch.is_empty() {
-                    continue; // deadline slice expired with nothing queued
+                    continue; // deadline slice expired with nothing opened
                 }
-                let padded = pad_to_rung(batch.len(), ladder);
+                let padded = pad_to_rung(batch.len(), &pad_ladder);
                 let depth = queue.len();
-                // least-loaded dispatch (first minimum ⇒ deterministic
-                // tie-break), mirroring the virtual clock's
-                // earliest-free-worker model
-                let worker = in_flight
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|&(_, &n)| n)
-                    .map(|(w, _)| w)
-                    .expect("workers > 0");
-                job_txs[worker]
-                    .send(Job::Run { depth, batch, padded })
-                    .map_err(|_| anyhow!("serve worker pool shut down"))?;
-                in_flight[worker] += 1;
+                let seq = batch_seq;
+                batch_seq += 1;
+                let job = Job::Run { depth, batch, padded, attempt: 1, seq };
+                send_to_least_loaded(&job_txs, &mut in_flight, job)?;
             }
-            for tx in &job_txs {
-                let _ = tx.send(Job::Finish);
-            }
-            // drain the stragglers, with the engine's panic-liveness poll
-            while in_flight.iter().sum::<usize>() > 0 {
-                match res_rx.recv_timeout(Duration::from_millis(100)) {
-                    Ok((w, res)) => {
+            // in-flight batches and pending retries are accepted work:
+            // serve them to completion before Finish, with the engine's
+            // panic-liveness poll
+            while in_flight.iter().sum::<usize>() > 0 || !retry_buf.is_empty() {
+                let now = Instant::now();
+                let mut k = 0;
+                while k < retry_buf.len() {
+                    if retry_buf[k].ready <= now {
+                        let e = retry_buf.swap_remove(k);
+                        let padded = pad_to_rung(e.batch.len(), &pad_ladder);
+                        let job = Job::Run {
+                            depth: e.depth,
+                            batch: e.batch,
+                            padded,
+                            attempt: e.attempt,
+                            seq: e.seq,
+                        };
+                        send_to_least_loaded(&job_txs, &mut in_flight, job)?;
+                    } else {
+                        k += 1;
+                    }
+                }
+                match res_rx.recv_timeout(Duration::from_millis(10)) {
+                    Ok((w, reply)) => {
                         in_flight[w] -= 1;
-                        absorb(&mut stats, &mut *governor, res?, warmup_ns);
+                        fold_reply(
+                            &mut stats,
+                            governor.as_mut(),
+                            &mut retry_buf,
+                            plan.retry,
+                            warmup_ns,
+                            reply,
+                        )?;
                     }
                     Err(RecvTimeoutError::Timeout) => {
                         let dead = in_flight
@@ -176,6 +296,60 @@ pub fn serve_wall(
     })
 }
 
+/// Send a job to the least-loaded worker (first minimum ⇒ deterministic
+/// tie-break), mirroring the virtual clock's earliest-free-worker model.
+fn send_to_least_loaded(
+    job_txs: &[Sender<Job>],
+    in_flight: &mut [usize],
+    job: Job,
+) -> Result<()> {
+    let worker = in_flight
+        .iter()
+        .enumerate()
+        .min_by_key(|&(_, &n)| n)
+        .map(|(w, _)| w)
+        .expect("workers > 0");
+    job_txs[worker]
+        .send(job)
+        .map_err(|_| anyhow!("serve worker pool shut down"))?;
+    in_flight[worker] += 1;
+    Ok(())
+}
+
+/// Fold one worker reply into the run stats: completions feed the
+/// governor, failures consume retry budget and requeue with backoff.
+/// Only budget exhaustion is an error.
+fn fold_reply(
+    stats: &mut ServeStats,
+    governor: &mut dyn ServeGovernor,
+    retry_buf: &mut Vec<RetryEntry>,
+    retry: RetryPolicy,
+    warmup_ns: u64,
+    reply: WorkerReply,
+) -> Result<()> {
+    match reply {
+        WorkerReply::Done(done) => {
+            absorb(stats, governor, done, warmup_ns);
+            Ok(())
+        }
+        WorkerReply::Failed { depth, batch, attempt, seq, err } => {
+            stats.failed_batches += 1;
+            if attempt >= retry.budget {
+                return Err(anyhow!(
+                    "retry budget exhausted: batch {seq} ({} request(s)) failed attempt \
+                     {attempt} of {}: {err}",
+                    batch.len(),
+                    retry.budget
+                ));
+            }
+            stats.retries += 1;
+            let ready = Instant::now() + Duration::from_nanos(retry.backoff_for(attempt));
+            retry_buf.push(RetryEntry { ready, depth, batch, attempt: attempt + 1, seq });
+            Ok(())
+        }
+    }
+}
+
 /// Fold one completed batch into the run stats and the governor.
 fn absorb(
     stats: &mut ServeStats,
@@ -205,12 +379,13 @@ fn absorb(
 fn worker_loop(
     index: usize,
     jobs: Receiver<Job>,
-    results: Sender<(usize, Result<BatchDone>)>,
+    results: Sender<(usize, WorkerReply)>,
     rt: &ModelRuntime,
     params: &ParamSet,
     data: &TrainData,
     start: Instant,
     kernel_threads: usize,
+    fault: Option<FaultPlan>,
 ) -> WorkspaceStats {
     let mut bufs = GatherBufs::default();
     // one arena per serve worker for the run's lifetime: params are
@@ -219,26 +394,53 @@ fn worker_loop(
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Finish => break,
-            Job::Run { depth, batch, padded } => {
-                let res =
-                    super::forward_batch(rt, params, data, &batch, padded, &mut bufs, &mut ws)
-                        .map(|out| {
-                            let done_ns = start.elapsed().as_nanos() as u64;
-                            BatchDone {
-                                depth,
-                                unpadded: batch.len(),
-                                padded,
-                                latencies_ns: batch
-                                    .iter()
-                                    .map(|r| done_ns.saturating_sub(r.arrival_ns))
-                                    .collect(),
-                                arrivals_ns: batch.iter().map(|r| r.arrival_ns).collect(),
-                                loss: out.loss,
-                                correct: out.correct as f64,
-                                done_ns,
+            Job::Run { depth, batch, padded, attempt, seq } => {
+                // injected faults fire inside catch_unwind so the panic
+                // variant exercises the same recovery path a real
+                // worker panic would
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    if let Some(f) = fault {
+                        if f.should_fail(seq, attempt) {
+                            if f.panic {
+                                panic!("injected serve fault: batch {seq} attempt {attempt}");
                             }
-                        });
-                if results.send((index, res)).is_err() {
+                            anyhow::bail!(
+                                "injected serve fault: batch {seq} attempt {attempt}"
+                            );
+                        }
+                    }
+                    super::forward_batch(rt, params, data, &batch, padded, &mut bufs, &mut ws)
+                }));
+                let reply = match result {
+                    Ok(Ok(out)) => {
+                        let done_ns = start.elapsed().as_nanos() as u64;
+                        WorkerReply::Done(BatchDone {
+                            depth,
+                            unpadded: batch.len(),
+                            padded,
+                            latencies_ns: batch
+                                .iter()
+                                .map(|r| done_ns.saturating_sub(r.arrival_ns))
+                                .collect(),
+                            arrivals_ns: batch.iter().map(|r| r.arrival_ns).collect(),
+                            loss: out.loss,
+                            correct: out.correct as f64,
+                            done_ns,
+                        })
+                    }
+                    Ok(Err(e)) => {
+                        WorkerReply::Failed { depth, batch, attempt, seq, err: e.to_string() }
+                    }
+                    Err(payload) => {
+                        let err = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| (*s).to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "worker panicked".to_string());
+                        WorkerReply::Failed { depth, batch, attempt, seq, err }
+                    }
+                };
+                if results.send((index, reply)).is_err() {
                     break;
                 }
             }
@@ -268,7 +470,7 @@ mod tests {
         let rt = ModelRuntime::reference_serving("serve_ref", IMG_LEN, 4, &ladder);
         let params = ParamSet::init(&rt.entry.params, 3);
         let queue: BoundedQueue<Request> = BoundedQueue::bounded(64);
-        let mut gov = QueueDepthGovernor::new(1, 8);
+        let mut gov: Box<dyn ServeGovernor> = Box::new(QueueDepthGovernor::new(1, 8));
         let start = Instant::now();
 
         let n = 40u64;
@@ -287,6 +489,8 @@ mod tests {
                     start,
                     0,
                     start + Duration::from_secs(60),
+                    &LifecyclePlan::default(),
+                    None,
                 )
             });
             for id in 0..n {
@@ -310,6 +514,8 @@ mod tests {
         assert!(stats.loss_sum.is_finite() && stats.loss_sum > 0.0);
         assert!(stats.last_done_ns > 0);
         assert!(stats.mean_batch() >= 1.0);
+        assert_eq!(stats.retries, 0, "no fault plan: nothing retries");
+        assert_eq!(stats.failed_batches, 0);
         // serve params are frozen: each worker packs the weight once and
         // serves every batch from its arena afterwards
         assert!(stats.pack_count >= 1, "workers must report packed-cache activity");
@@ -323,7 +529,7 @@ mod tests {
         let rt = ModelRuntime::reference_serving("serve_ref", IMG_LEN, 4, &ladder);
         let params = ParamSet::init(&rt.entry.params, 3);
         let queue: BoundedQueue<Request> = BoundedQueue::bounded(64);
-        let mut gov = QueueDepthGovernor::new(1, 4);
+        let mut gov: Box<dyn ServeGovernor> = Box::new(QueueDepthGovernor::new(1, 4));
         let start = Instant::now();
 
         let stats = std::thread::scope(|s| {
@@ -341,6 +547,8 @@ mod tests {
                     start,
                     u64::MAX, // everything counts as warmup
                     start + Duration::from_secs(60),
+                    &LifecyclePlan::default(),
+                    None,
                 )
             });
             for id in 0..10u64 {
@@ -355,5 +563,114 @@ mod tests {
 
         assert_eq!(stats.completed, 10);
         assert_eq!(stats.hist.count(), 0, "warmup excludes all latencies");
+    }
+
+    #[test]
+    fn injected_faults_retry_within_budget() {
+        let data = tiny_pool();
+        let ladder = serve_ladder(1, 8);
+        let rt = ModelRuntime::reference_serving("serve_ref", IMG_LEN, 4, &ladder);
+        let params = ParamSet::init(&rt.entry.params, 3);
+        let queue: BoundedQueue<Request> = BoundedQueue::bounded(64);
+        let mut gov: Box<dyn ServeGovernor> = Box::new(QueueDepthGovernor::new(1, 8));
+        let start = Instant::now();
+        // every batch fails its first attempt, then succeeds on retry
+        let plan = LifecyclePlan {
+            retry: RetryPolicy { budget: 3, backoff_ns: 100_000 },
+            fault: Some(FaultPlan { seed: 7, rate: 1.0, fail_attempts: 1, panic: false }),
+            ..LifecyclePlan::default()
+        };
+
+        let n = 16u64;
+        let stats = std::thread::scope(|s| {
+            let server = s.spawn(|| {
+                serve_wall(
+                    &rt,
+                    &params,
+                    &data,
+                    &mut gov,
+                    &queue,
+                    2,
+                    1,
+                    Duration::from_millis(1),
+                    &ladder,
+                    start,
+                    0,
+                    start + Duration::from_secs(60),
+                    &plan,
+                    None,
+                )
+            });
+            for id in 0..n {
+                let req = Request {
+                    id,
+                    sample: (id as usize) % data.len(),
+                    arrival_ns: start.elapsed().as_nanos() as u64,
+                };
+                queue.push(req).unwrap();
+            }
+            queue.close();
+            server.join().unwrap()
+        })
+        .unwrap();
+
+        assert_eq!(stats.completed, n, "every request survives its retry");
+        assert_eq!(stats.hist.count(), n, "retried requests still record latencies");
+        assert!(stats.retries >= 1 && stats.failed_batches >= 1);
+        assert_eq!(
+            stats.retries, stats.failed_batches,
+            "rate 1.0 / fail_attempts 1: each batch fails exactly its first attempt"
+        );
+    }
+
+    #[test]
+    fn budget_exhaustion_errors_without_deadlock() {
+        let data = tiny_pool();
+        let ladder = serve_ladder(1, 4);
+        let rt = ModelRuntime::reference_serving("serve_ref", IMG_LEN, 4, &ladder);
+        let params = ParamSet::init(&rt.entry.params, 3);
+        let queue: BoundedQueue<Request> = BoundedQueue::bounded(64);
+        let mut gov: Box<dyn ServeGovernor> = Box::new(QueueDepthGovernor::new(1, 4));
+        let start = Instant::now();
+        // unbounded fail_attempts: the budget must trip, loudly
+        let plan = LifecyclePlan {
+            retry: RetryPolicy { budget: 2, backoff_ns: 10_000 },
+            fault: Some(FaultPlan { seed: 3, rate: 1.0, fail_attempts: u32::MAX, panic: false }),
+            ..LifecyclePlan::default()
+        };
+
+        let result = std::thread::scope(|s| {
+            let server = s.spawn(|| {
+                serve_wall(
+                    &rt,
+                    &params,
+                    &data,
+                    &mut gov,
+                    &queue,
+                    1,
+                    1,
+                    Duration::from_millis(1),
+                    &ladder,
+                    start,
+                    0,
+                    start + Duration::from_secs(60),
+                    &plan,
+                    None,
+                )
+            });
+            for id in 0..4u64 {
+                queue
+                    .push(Request { id, sample: id as usize, arrival_ns: 0 })
+                    .unwrap();
+            }
+            queue.close();
+            server.join().unwrap()
+        });
+
+        let err = result.expect_err("budget exhaustion must surface as an error");
+        assert!(
+            err.to_string().contains("retry budget exhausted"),
+            "unexpected error: {err}"
+        );
     }
 }

@@ -46,7 +46,7 @@ fn virtual_reports_are_bit_identical_for_all_governors() {
         for _ in 0..2 {
             let mut gov = governor_from_name(name, &scfg).unwrap();
             let (stats, report) =
-                run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 64, None).unwrap();
+                run_serve_bench(&scfg, &mut gov, Clock::Virtual, 4, 64, None).unwrap();
             assert!(stats.completed > 0, "{name}: empty run");
             assert!(stats.loss_sum > 0.0, "{name}: inference never executed");
             rendered.push(report.to_string());
@@ -66,13 +66,13 @@ fn different_seed_changes_the_report() {
     let scfg = bench_cfg();
     let mut gov = governor_from_name("slo", &scfg).unwrap();
     let (_stats, base) =
-        run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 64, None).unwrap();
+        run_serve_bench(&scfg, &mut gov, Clock::Virtual, 4, 64, None).unwrap();
 
     let mut other = bench_cfg();
     other.seed = 4321;
     let mut gov = governor_from_name("slo", &other).unwrap();
     let (_stats, changed) =
-        run_serve_bench(&other, gov.as_mut(), Clock::Virtual, 4, 64, None).unwrap();
+        run_serve_bench(&other, &mut gov, Clock::Virtual, 4, 64, None).unwrap();
 
     assert_ne!(
         base.to_string(),
@@ -95,7 +95,7 @@ fn serve_traces_replay_byte_identical() {
         scfg.telemetry.trace_out = Some(dir.join(format!("serve_{i}.jsonl")));
         let mut gov = governor_from_name("slo", &scfg).unwrap();
         let (stats, _) =
-            run_serve_bench(&scfg, gov.as_mut(), Clock::Virtual, 4, 64, None).unwrap();
+            run_serve_bench(&scfg, &mut gov, Clock::Virtual, 4, 64, None).unwrap();
         assert!(stats.completed > 0, "empty run records nothing worth comparing");
         bytes.push(std::fs::read(scfg.telemetry.trace_out.as_ref().unwrap()).unwrap());
     }

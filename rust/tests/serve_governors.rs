@@ -36,7 +36,7 @@ fn scenario() -> ServeConfig {
     }
 }
 
-fn run(governor: &mut dyn ServeGovernor, scfg: &ServeConfig) -> ServeStats {
+fn run(governor: &mut Box<dyn ServeGovernor>, scfg: &ServeConfig) -> ServeStats {
     let (stats, _report) =
         run_serve_bench(scfg, governor, Clock::Virtual, 4, 64, None).unwrap();
     stats
@@ -50,7 +50,7 @@ fn slo_governor_beats_or_matches_every_fixed_batch() {
     let mut fixed_completed = Vec::new();
     let mut any_unstable = false;
     for b in [1usize, 2, 4, 8, 16, 32] {
-        let mut gov = FixedServeGovernor::new(b);
+        let mut gov: Box<dyn ServeGovernor> = Box::new(FixedServeGovernor::new(b));
         let stats = run(&mut gov, &scfg);
         if stats.unserved > 0 {
             any_unstable = true;
@@ -65,7 +65,7 @@ fn slo_governor_beats_or_matches_every_fixed_batch() {
     let best_fixed = fixed_completed.iter().map(|&(_, c)| c).max().unwrap();
 
     let mut adaptive = governor_from_name("slo", &scfg).unwrap();
-    let stats = run(adaptive.as_mut(), &scfg);
+    let stats = run(&mut adaptive, &scfg);
 
     assert!(
         stats.completed >= best_fixed,
@@ -89,7 +89,7 @@ fn slo_governor_beats_or_matches_every_fixed_batch() {
 #[test]
 fn undersized_fixed_batch_is_cut_off_by_the_horizon() {
     let scfg = scenario();
-    let mut gov = FixedServeGovernor::new(1);
+    let mut gov: Box<dyn ServeGovernor> = Box::new(FixedServeGovernor::new(1));
     let stats = run(&mut gov, &scfg);
     assert!(stats.unserved > 0, "batch 1 cannot sustain 1000 rps at 2.1ms/request");
     assert!(
@@ -113,7 +113,7 @@ fn wall_clock_end_to_end() {
     };
     let mut gov = governor_from_name("queue", &scfg).unwrap();
     let (stats, report) =
-        run_serve_bench(&scfg, gov.as_mut(), Clock::Wall, 4, 32, None).unwrap();
+        run_serve_bench(&scfg, &mut gov, Clock::Wall, 4, 32, None).unwrap();
     assert!(stats.completed > 0);
     assert_eq!(stats.completed, stats.hist.count(), "warmup 0: every latency recorded");
     assert!(stats.hist.p99() > 0);

@@ -1,0 +1,193 @@
+//! Daemon-lifecycle acceptance (DESIGN.md §13), all on the virtual
+//! clock: every behavior — graceful drain, retry with backoff under a
+//! seeded fault plan, suspend/resume, policy-driven admission, hot
+//! reload — must be a pure function of (seed, config, fault plan), so
+//! each scenario runs twice and the JSON reports are compared as bytes.
+
+use adabatch::config::{ServeConfig, TrafficShape};
+use adabatch::serve::loadgen::{arrival_schedule, governor_from_name, run_serve_bench, Clock};
+use adabatch::serve::{ReloadSpec, ServeStats};
+
+fn base() -> ServeConfig {
+    ServeConfig {
+        qps: 600.0,
+        duration_s: 1.0,
+        shape: TrafficShape::Steady,
+        slo_ms: 50.0,
+        min_batch: 1,
+        max_batch: 16,
+        max_wait_ms: 4.0,
+        workers: 2,
+        window: 32,
+        seed: 97,
+        warmup_s: 0.0,
+        drain_grace_s: 0.5,
+        service_base_us: 500.0,
+        service_per_sample_us: 50.0,
+        ..ServeConfig::default()
+    }
+}
+
+fn run(scfg: &ServeConfig, name: &str) -> anyhow::Result<(ServeStats, String)> {
+    let mut gov = governor_from_name(name, scfg)?;
+    let (stats, rep) = run_serve_bench(scfg, &mut gov, Clock::Virtual, 4, 64, None)?;
+    Ok((stats, rep.to_string()))
+}
+
+fn offered(scfg: &ServeConfig) -> u64 {
+    arrival_schedule(scfg.qps, scfg.duration_s, scfg.shape, scfg.seed).len() as u64
+}
+
+#[test]
+fn graceful_drain_serves_every_accepted_request_bitwise() {
+    let mut scfg = base();
+    scfg.lifecycle.drain_at_s = Some(0.5);
+
+    let (stats, rep1) = run(&scfg, "slo").unwrap();
+    let (_, rep2) = run(&scfg, "slo").unwrap();
+    assert_eq!(rep1, rep2, "drain runs must replay byte-identically");
+
+    assert!(stats.drained, "the report must record the drain");
+    assert_eq!(stats.unserved, 0, "drain serves everything accepted, past the horizon if needed");
+    assert!(stats.shed > 0, "arrivals after the drain point are refused");
+    assert_eq!(
+        stats.completed + stats.shed + stats.evicted,
+        offered(&scfg),
+        "every offered request is either served or refused — none stranded"
+    );
+    assert!(rep1.contains("\"drained\":true"));
+}
+
+#[test]
+fn seeded_faults_retry_with_backoff_and_replay_bitwise() {
+    let mut scfg = base();
+    scfg.lifecycle.fault_rate = 0.25;
+    scfg.lifecycle.fault_seed = 7;
+    scfg.lifecycle.fault_attempts = 1; // first attempt of a selected batch fails
+    scfg.lifecycle.retry_budget = 3;
+
+    let (stats, rep1) = run(&scfg, "queue").unwrap();
+    let (_, rep2) = run(&scfg, "queue").unwrap();
+    assert_eq!(rep1, rep2, "fault injection is part of the deterministic replay");
+
+    assert!(stats.failed_batches > 0, "rate 0.25 must select some batches");
+    assert_eq!(
+        stats.retries, stats.failed_batches,
+        "fail_attempts 1: each selected batch fails exactly once, then its retry lands"
+    );
+    assert!(stats.completed > 0);
+    assert_eq!(
+        stats.completed + stats.shed + stats.evicted + stats.unserved,
+        offered(&scfg),
+        "retries must not duplicate or lose requests"
+    );
+}
+
+#[test]
+fn retry_budget_exhaustion_fails_loudly() {
+    let mut scfg = base();
+    scfg.lifecycle.fault_rate = 1.0;
+    scfg.lifecycle.fault_seed = 3;
+    scfg.lifecycle.fault_attempts = u32::MAX; // never stops failing
+    scfg.lifecycle.retry_budget = 2;
+
+    let mut gov = governor_from_name("queue", &scfg).unwrap();
+    let err = run_serve_bench(&scfg, &mut gov, Clock::Virtual, 4, 64, None)
+        .expect_err("an unrecoverable batch must fail the run, not hang it");
+    assert!(
+        err.to_string().contains("retry budget exhausted"),
+        "unexpected error: {err}"
+    );
+}
+
+#[test]
+fn suspend_resume_over_an_idle_window_is_invisible() {
+    // arrivals stop at 1.0s and the backlog clears within milliseconds;
+    // a suspend window at [1.3, 1.45) deflects no dispatch, so the
+    // report must be bitwise identical to the run without it
+    let scfg = base();
+    let (_, baseline) = run(&scfg, "slo").unwrap();
+
+    let mut sus = base();
+    sus.lifecycle.suspend_at_s = Some(1.3);
+    sus.lifecycle.resume_at_s = Some(1.45);
+    let (_, with_suspend) = run(&sus, "slo").unwrap();
+
+    assert_eq!(baseline, with_suspend, "an idle suspend must not perturb the report");
+}
+
+#[test]
+fn admission_policies_account_for_every_offered_request() {
+    // heavy overload: offered 2500 rps against ~500 rps single-request
+    // capacity, tiny queue — admission decisions dominate
+    let mut over = base();
+    over.qps = 2500.0;
+    over.service_base_us = 2000.0;
+    over.service_per_sample_us = 100.0;
+    over.queue_capacity = 32;
+    let n = offered(&over);
+
+    for policy in ["block", "shed-newest", "shed-oldest", "deadline"] {
+        let mut cfg = over.clone();
+        cfg.lifecycle.admission = policy.to_string();
+        if policy == "deadline" {
+            cfg.lifecycle.admission_deadline_ms = 20.0;
+        }
+        let (stats, rep1) = run(&cfg, "queue").unwrap();
+        let (_, rep2) = run(&cfg, "queue").unwrap();
+        assert_eq!(rep1, rep2, "policy {policy}: reports must replay byte-identically");
+        assert_eq!(
+            stats.completed + stats.shed + stats.evicted + stats.unserved,
+            n,
+            "policy {policy}: every offered request lands in exactly one bucket"
+        );
+        match policy {
+            "block" => {
+                assert_eq!(stats.shed + stats.evicted, 0, "block never refuses");
+                assert!(stats.unserved > 0, "overload backlog is cut off at the horizon");
+            }
+            "shed-newest" => {
+                assert!(stats.shed > 0, "a full queue must shed arrivals");
+                assert_eq!(stats.evicted, 0, "shed-newest never displaces queued work");
+            }
+            "shed-oldest" => {
+                assert!(stats.evicted > 0, "shed-oldest displaces the head of the queue");
+            }
+            "deadline" => {
+                assert!(
+                    stats.shed + stats.evicted > 0,
+                    "a 20ms age bound under overload must refuse work"
+                );
+            }
+            _ => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn hot_reload_swaps_governor_and_ladder_mid_run() {
+    let mut scfg = base();
+    scfg.lifecycle.reload_at_s = Some(0.5);
+    scfg.lifecycle.reload = Some(ReloadSpec {
+        governor: "fixed".to_string(),
+        slo_ms: 25.0,
+        min_batch: 1,
+        max_batch: 32, // wider than the base ladder: exercises the exec-ladder union
+        window: 16,
+    });
+
+    let (stats, rep1) = run(&scfg, "slo").unwrap();
+    let (_, rep2) = run(&scfg, "slo").unwrap();
+    assert_eq!(rep1, rep2, "the reload is part of the deterministic replay");
+
+    assert_eq!(stats.reloads, 1);
+    assert_eq!(stats.unserved, 0, "no request is dropped across the swap");
+    assert!(
+        rep1.contains("\"governor\":\"slo-adaptive\""),
+        "the report keys the run by its initial governor"
+    );
+    assert!(
+        rep1.contains("\"governor_final\":\"fixed-32\""),
+        "the final governor reflects the reload: {rep1}"
+    );
+}
