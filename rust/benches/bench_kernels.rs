@@ -313,8 +313,15 @@ fn main() {
         } else {
             let scalar_ref = benchhistory::load(&hist_path).ok().and_then(|records| {
                 benchhistory::latest(&records, |r| {
+                    // only *calibrated* same-machine measurements may serve
+                    // as the baseline: the committed analytic bootstrap
+                    // record ("mode":"bootstrap", calibrated:false) is a
+                    // cost-model estimate, and gating wall clock against it
+                    // manufactures phantom regressions
                     r.get("kernel_dispatch").and_then(Json::as_str) == Some("scalar")
                         && r.get("b1024_ns_per_sample").and_then(Json::as_f64).is_some()
+                        && !matches!(r.get("calibrated"), Some(Json::Bool(false)))
+                        && r.get("mode").and_then(Json::as_str) != Some("bootstrap")
                 })
                 .and_then(|r| r.get("b1024_ns_per_sample").and_then(Json::as_f64))
             });

@@ -13,20 +13,34 @@
 //! (checked when run with `--check`): at batch ≥ 1024 the elastic arm's
 //! per-epoch wall time beats the fixed-1-worker baseline.
 //!
+//! A second, multi-shard pass (DESIGN.md §14) times the chunked-ring
+//! gradient exchange itself: `ShardPool` rounds with synthetic leaves
+//! across (shards, chunks) calibrate an [`Interconnect`] via
+//! `fit_interconnect`, and a held-out payload (the MLP's parameters) is
+//! then predicted vs measured per ladder row. The printed comm fraction —
+//! exchange seconds over exchange + fixed-4 compute seconds per epoch —
+//! must *fall* as the batch grows (comm is per update; updates/epoch
+//! shrink as 1/r: the §3.2 amortization argument, measured). `--check`
+//! additionally gates the held-out prediction at ≤ 25% relative error.
+//!
 //! Runs entirely on the reference backend — no artifacts needed.
 
 use std::sync::Arc;
 use std::time::Instant;
 
-use adabatch::coordinator::{ElasticConfig, ElasticPolicy, Engine, TrainData};
+use adabatch::coordinator::{
+    ElasticConfig, ElasticPolicy, Engine, ShardConfig, ShardPool, TrainData,
+};
 use adabatch::data::shard::shard_batch;
 use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
 use adabatch::metrics::PhaseTimers;
 use adabatch::obs::MetricsRegistry;
-use adabatch::optim::param::ParamSet;
+use adabatch::optim::param::{Init, ParamSet, ParamSpec};
 use adabatch::runtime::kernels;
 use adabatch::runtime::{plan, ModelRuntime, StepKind};
-use adabatch::simulator::{ClusterModel, GpuModel, Interconnect, Workload};
+use adabatch::simulator::{
+    fit_interconnect, ClusterModel, CommSample, GpuModel, Interconnect, Workload,
+};
 use adabatch::util::benchhistory;
 use adabatch::util::json::Json;
 
@@ -67,6 +81,41 @@ fn epoch_secs(
     })
 }
 
+/// Mean seconds per chunked-ring exchange of a `total_len`-float payload
+/// across `shards` executors (one slot each, mean weights), `updates`
+/// timed rounds after one warmup round.
+fn exchange_secs(
+    total_len: usize,
+    shards: usize,
+    chunks: usize,
+    updates: usize,
+) -> anyhow::Result<f64> {
+    let specs =
+        vec![ParamSpec { name: "payload".into(), shape: vec![total_len], init: Init::Normal(1.0) }];
+    let grads: Vec<ParamSet> =
+        (0..shards).map(|s| ParamSet::init(&specs, 0xC0FFEE + s as u64)).collect();
+    let weights = vec![1.0 / shards as f64; shards];
+    let mut cfg = ShardConfig::new(shards);
+    cfg.chunks = chunks;
+    std::thread::scope(|scope| -> anyhow::Result<f64> {
+        let mut pool = ShardPool::start(scope, &cfg, shards, total_len)?;
+        let mut t0 = Instant::now();
+        for round in 0..=updates {
+            if round == 1 {
+                t0 = Instant::now(); // round 0 warms the executors up
+            }
+            pool.begin(&weights)?;
+            for (slot, g) in grads.iter().enumerate() {
+                pool.feed(slot, g)?;
+            }
+            pool.finish()?;
+        }
+        let secs = t0.elapsed().as_secs_f64() / updates as f64;
+        let _ = pool.shutdown();
+        Ok(secs)
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     let check = std::env::args().any(|a| a == "--check");
     let mut spec = SyntheticSpec::cifar10();
@@ -101,6 +150,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows: Vec<Json> = Vec::new();
     let mut check_failures = Vec::new();
     let mut phases = PhaseTimers::new();
+    let mut fixed4_by_batch: Vec<f64> = Vec::new();
     for &r in LADDER {
         let active = policy.decide(r); // the governor's walk ratchets this
         let (fixed1, t1) = epoch_secs(&data, &rt, &params, r, 1, 1)?;
@@ -109,6 +159,7 @@ fn main() -> anyhow::Result<()> {
         phases.merge(&t1);
         phases.merge(&t4);
         phases.merge(&te);
+        fixed4_by_batch.push(fixed4);
         let occupancy = active as f64 / MAX_WORKERS as f64;
         let measured = fixed1 / elastic;
         let predicted = cluster.epoch_cost_active(&workload, r, 1).total()
@@ -133,6 +184,82 @@ fn main() -> anyhow::Result<()> {
             ("predicted_speedup", Json::num(predicted)),
         ]));
     }
+    // --- multi-shard exchange: calibrate, then predict held out -------
+    // synthetic payloads bracketing the MLP's parameter size, across
+    // shard counts and chunk depths, give the least-squares fit a
+    // full-rank design matrix
+    println!("\nchunked-ring exchange — calibrating the in-process interconnect");
+    let mut samples: Vec<CommSample> = Vec::new();
+    for &len in &[1usize << 16, 1 << 18] {
+        for &p in &[2usize, MAX_WORKERS] {
+            for &k in &[1usize, 4] {
+                let secs = exchange_secs(len, p, k, 8)?;
+                samples.push(CommSample { bytes: len * 4, p, chunks: k, secs });
+            }
+        }
+    }
+    let fitted = fit_interconnect("in-process-ring", &samples)
+        .ok_or_else(|| anyhow::anyhow!("interconnect fit is degenerate"))?;
+    println!(
+        "fitted: bandwidth {:.2} GB/s, per-hop latency {:.1} us",
+        fitted.bandwidth / 1e9,
+        fitted.latency * 1e6
+    );
+
+    // held out: the trained model's own parameter payload at the
+    // training shape (4 shards, 4 chunks) — a size the fit never saw
+    let param_len = params.total_len();
+    let meas_exchange = exchange_secs(param_len, MAX_WORKERS, 4, 16)?;
+    let pred_exchange = fitted.ring_allreduce_chunked(param_len * 4, MAX_WORKERS, 4);
+    let rel_err = (pred_exchange - meas_exchange).abs() / meas_exchange;
+    println!(
+        "held-out payload {param_len} floats: measured {:.1} us, predicted {:.1} us \
+         ({:.1}% relative error)",
+        meas_exchange * 1e6,
+        pred_exchange * 1e6,
+        rel_err * 100.0
+    );
+
+    // comm per epoch is exchange-per-update times updates/epoch, so its
+    // share of the fixed-4 epoch falls as the batch grows — the paper's
+    // amortization claim, measured end to end
+    println!(
+        "\n{:>6} {:>8} {:>12} {:>12} {:>10}",
+        "batch", "updates", "comm meas s", "comm pred s", "comm frac"
+    );
+    let mut shard_rows: Vec<Json> = Vec::new();
+    let mut fracs: Vec<f64> = Vec::new();
+    for (i, &r) in LADDER.iter().enumerate() {
+        let updates = (n / r).max(1) as f64;
+        let comm_meas = updates * meas_exchange;
+        let comm_pred = updates * pred_exchange;
+        let frac = comm_meas / (comm_meas + fixed4_by_batch[i]);
+        fracs.push(frac);
+        println!("{r:>6} {updates:>8.0} {comm_meas:>12.6} {comm_pred:>12.6} {frac:>10.4}");
+        shard_rows.push(Json::obj(vec![
+            ("batch", Json::num(r as f64)),
+            ("comm_epoch_s_measured", Json::num(comm_meas)),
+            ("comm_epoch_s_predicted", Json::num(comm_pred)),
+            ("comm_fraction", Json::num(frac)),
+        ]));
+    }
+    if rel_err > 0.25 {
+        check_failures.push(format!(
+            "held-out exchange prediction off by {:.1}% (> 25%): measured {meas_exchange:.3e}s \
+             vs predicted {pred_exchange:.3e}s",
+            rel_err * 100.0
+        ));
+    }
+    if fracs[0] <= fracs[fracs.len() - 1] {
+        check_failures.push(format!(
+            "comm fraction did not fall across the ladder: {:.4} @ b{} -> {:.4} @ b{}",
+            fracs[0],
+            LADDER[0],
+            fracs[fracs.len() - 1],
+            LADDER[LADDER.len() - 1]
+        ));
+    }
+
     // per-phase timing provenance for the history record: the merged
     // pool timers across all arms, as a registry snapshot (DESIGN.md §12)
     let mut reg = MetricsRegistry::new();
@@ -143,8 +270,12 @@ fn main() -> anyhow::Result<()> {
         ("kernel_dispatch", Json::str(kernels::dispatch_name())),
         ("pool", Json::num(MAX_WORKERS as f64)),
         ("samples_per_worker", Json::num(SAMPLES_PER_WORKER as f64)),
+        ("fit_bandwidth_bytes_per_s", Json::num(fitted.bandwidth)),
+        ("fit_latency_s", Json::num(fitted.latency)),
+        ("exchange_rel_err", Json::num(rel_err)),
         ("registry", reg.snapshot_json()),
         ("rows", Json::Arr(rows)),
+        ("shard_rows", Json::Arr(shard_rows)),
     ]);
     println!("\n{report}");
 
@@ -156,13 +287,16 @@ fn main() -> anyhow::Result<()> {
     }
 
     if check_failures.is_empty() {
-        println!("\ncheck: elastic beats fixed-1 at every batch >= 1024");
+        println!(
+            "\ncheck: elastic beats fixed-1 at batch >= 1024; exchange prediction within 25%; \
+             comm fraction falls across the ladder"
+        );
     } else {
         for f in &check_failures {
             eprintln!("check failed: {f}");
         }
         if check {
-            anyhow::bail!("elastic did not beat the fixed-1-worker baseline at batch >= 1024");
+            anyhow::bail!("bench_runtime acceptance checks failed (see above)");
         }
     }
     Ok(())

@@ -1,0 +1,290 @@
+//! Gradient compression for the sharded exchange: f32 → bf16/int8 wire
+//! encodings with **deterministic error-feedback residuals**.
+//!
+//! Error feedback (Seide et al.; Karimireddy et al.) keeps quantization
+//! from biasing SGD: the sender adds the residual left over from the
+//! previous update to the value it is about to quantize, then stores the
+//! new rounding error back into the residual —
+//!
+//! ```text
+//! y   = x + r        (carry in last update's rounding error)
+//! q   = Q(y)         (quantize)
+//! r'  = y − deq(q)   (carry out this update's rounding error)
+//! ```
+//!
+//! Everything here is a pure function of its inputs — no RNG, no
+//! stochastic rounding — so a compressed run is bitwise reproducible per
+//! (seed, config). [`Compression::None`] is an exact f32 passthrough and
+//! the default; with it the sharded path is bitwise identical to the
+//! unsharded canonical reduction (DESIGN.md §14).
+//!
+//! Encodings are self-describing (`dtype · count · [scale] · values`) so
+//! a frame can be decoded without out-of-band context:
+//!
+//! * `bf16` — round-to-nearest-even truncation to the top 16 bits;
+//!   2 bytes/value, ~3 decimal digits, same exponent range as f32.
+//! * `int8` — per-message symmetric max-abs scaling (`scale =
+//!   max|y|/127`), 1 byte/value + one f32 scale per message.
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Compression {
+    /// exact f32 passthrough (the default; bitwise-transparent)
+    #[default]
+    None,
+    /// bf16 truncation, round-to-nearest-even
+    Bf16,
+    /// symmetric int8 with a per-message f32 scale
+    Int8,
+}
+
+impl Compression {
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "none" => Compression::None,
+            "bf16" => Compression::Bf16,
+            "int8" => Compression::Int8,
+            other => bail!("unknown compression {other:?} (none|bf16|int8)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Compression::None => "none",
+            Compression::Bf16 => "bf16",
+            Compression::Int8 => "int8",
+        }
+    }
+
+    /// Whether encode/decode is an exact round trip.
+    pub fn is_lossless(&self) -> bool {
+        matches!(self, Compression::None)
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            Compression::None => 0,
+            Compression::Bf16 => 1,
+            Compression::Int8 => 2,
+        }
+    }
+
+    /// Encode `values` with error feedback: `residual` (resized to match
+    /// on first use) carries rounding error across calls. The caller
+    /// keys residuals so each call site sees the same shape every
+    /// update. Lossless encodings leave the residual untouched.
+    pub fn encode(&self, values: &[f32], residual: &mut Vec<f32>, out: &mut Vec<u8>) {
+        if residual.len() != values.len() {
+            residual.clear();
+            residual.resize(values.len(), 0.0);
+        }
+        out.push(self.tag());
+        out.extend_from_slice(&(values.len() as u32).to_le_bytes());
+        match self {
+            Compression::None => {
+                for &v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Compression::Bf16 => {
+                for (i, &v) in values.iter().enumerate() {
+                    let y = v + residual[i];
+                    let q = f32_to_bf16(y);
+                    residual[i] = y - bf16_to_f32(q);
+                    out.extend_from_slice(&q.to_le_bytes());
+                }
+            }
+            Compression::Int8 => {
+                // per-message symmetric scale over the carried-in values
+                let mut max_abs = 0.0f32;
+                for (i, &v) in values.iter().enumerate() {
+                    max_abs = max_abs.max((v + residual[i]).abs());
+                }
+                let scale = if max_abs > 0.0 { max_abs / 127.0 } else { 0.0 };
+                out.extend_from_slice(&scale.to_le_bytes());
+                for (i, &v) in values.iter().enumerate() {
+                    let y = v + residual[i];
+                    let q = if scale > 0.0 {
+                        (y / scale).round().clamp(-127.0, 127.0) as i8
+                    } else {
+                        0
+                    };
+                    residual[i] = y - q as f32 * scale;
+                    out.push(q as u8);
+                }
+            }
+        }
+    }
+
+    /// Wire bytes one encoded message of `n` values occupies (header
+    /// included) — the accounting the comm metrics report.
+    pub fn encoded_len(&self, n: usize) -> usize {
+        5 + match self {
+            Compression::None => 4 * n,
+            Compression::Bf16 => 2 * n,
+            Compression::Int8 => 4 + n,
+        }
+    }
+}
+
+/// Decode a self-describing encoded message; returns the values and the
+/// number of bytes consumed.
+pub fn decode(bytes: &[u8]) -> Result<(Vec<f32>, usize)> {
+    let err = || anyhow!("truncated compressed payload");
+    let tag = *bytes.first().ok_or_else(err)?;
+    let n = u32::from_le_bytes(bytes.get(1..5).ok_or_else(err)?.try_into().unwrap()) as usize;
+    let mut values = Vec::with_capacity(n);
+    let used;
+    match tag {
+        0 => {
+            let body = bytes.get(5..5 + 4 * n).ok_or_else(err)?;
+            for c in body.chunks_exact(4) {
+                values.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            used = 5 + 4 * n;
+        }
+        1 => {
+            let body = bytes.get(5..5 + 2 * n).ok_or_else(err)?;
+            for c in body.chunks_exact(2) {
+                values.push(bf16_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
+            }
+            used = 5 + 2 * n;
+        }
+        2 => {
+            let scale =
+                f32::from_le_bytes(bytes.get(5..9).ok_or_else(err)?.try_into().unwrap());
+            let body = bytes.get(9..9 + n).ok_or_else(err)?;
+            for &b in body {
+                values.push(b as i8 as f32 * scale);
+            }
+            used = 9 + n;
+        }
+        other => bail!("unknown compression tag {other}"),
+    }
+    Ok((values, used))
+}
+
+/// Round-to-nearest-even truncation of an f32 to its top 16 bits — the
+/// standard bf16 conversion. NaN is quieted so it cannot round to Inf.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn roundtrip(c: Compression, values: &[f32]) -> Vec<f32> {
+        let mut res = Vec::new();
+        let mut out = Vec::new();
+        c.encode(values, &mut res, &mut out);
+        assert_eq!(out.len(), c.encoded_len(values.len()));
+        let (got, used) = decode(&out).unwrap();
+        assert_eq!(used, out.len());
+        got
+    }
+
+    #[test]
+    fn none_is_bitwise_lossless() {
+        let vals = vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.14159e-7, -2.5e8];
+        let got = roundtrip(Compression::None, &vals);
+        for (a, b) in vals.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-9 is exactly between two bf16 values; ties go to even
+        assert_eq!(f32_to_bf16(1.0), 0x3F80);
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0)), 1.0);
+        let x = f32::from_bits(0x3F80_8000); // 1.00390625: exact tie
+        assert_eq!(f32_to_bf16(x), 0x3F80, "tie must round to even (down here)");
+        let y = f32::from_bits(0x3F81_8000); // next tie: rounds up to even
+        assert_eq!(f32_to_bf16(y), 0x3F82);
+        // relative error bounded by the 8-bit mantissa
+        let mut rng = Pcg32::new(7);
+        for _ in 0..1000 {
+            let v = rng.normal() * 100.0;
+            let back = bf16_to_f32(f32_to_bf16(v));
+            assert!((back - v).abs() <= v.abs() * (1.0 / 256.0) + 1e-30, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn int8_scale_bounds_error() {
+        let mut rng = Pcg32::new(9);
+        let vals: Vec<f32> = (0..512).map(|_| rng.normal()).collect();
+        let max_abs = vals.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let got = roundtrip(Compression::Int8, &vals);
+        for (a, b) in vals.iter().zip(&got) {
+            assert!((a - b).abs() <= max_abs / 127.0 * 0.5 + 1e-6, "{a} vs {b}");
+        }
+        // all-zero message: scale 0, decodes to exact zeros
+        let zeros = roundtrip(Compression::Int8, &[0.0; 16]);
+        assert!(zeros.iter().all(|&z| z == 0.0));
+    }
+
+    #[test]
+    fn error_feedback_carries_residual_deterministically() {
+        // quantizing the same value twice with EF produces *different*
+        // second outputs (the residual carried), and the whole sequence
+        // replays bitwise
+        let vals: Vec<f32> = (0..64).map(|i| 0.3 + i as f32 * 0.01).collect();
+        let run = || {
+            let mut res = Vec::new();
+            let mut outs = Vec::new();
+            for _ in 0..5 {
+                let mut out = Vec::new();
+                Compression::Int8.encode(&vals, &mut res, &mut out);
+                outs.push(out);
+            }
+            (outs, res)
+        };
+        let (a, ra) = run();
+        let (b, rb) = run();
+        assert_eq!(a, b, "EF encoding must replay bitwise");
+        assert_eq!(
+            ra.iter().map(|r| r.to_bits()).collect::<Vec<_>>(),
+            rb.iter().map(|r| r.to_bits()).collect::<Vec<_>>()
+        );
+        // and the residual is actually nonzero (64 distinct values cannot
+        // all sit on a 255-point grid)
+        assert!(ra.iter().any(|&r| r != 0.0));
+        // EF keeps the *cumulative* quantized sum near the true sum: the
+        // per-step errors telescope, so the bias after k steps is bounded
+        // by one final residual (≤ half a quantization step), not k steps
+        let mut res = Vec::new();
+        let mut acc = 0.0f64;
+        for _ in 0..50 {
+            let mut out = Vec::new();
+            Compression::Int8.encode(&vals, &mut res, &mut out);
+            let (dec, _) = decode(&out).unwrap();
+            acc += dec[0] as f64;
+        }
+        let truth = vals[0] as f64 * 50.0;
+        // scale ≈ max|y|/127 ≈ 0.94/127; half a step plus fp slack
+        assert!((acc - truth).abs() < 0.005, "{acc} vs {truth}");
+    }
+
+    #[test]
+    fn names_roundtrip_and_reject_unknown() {
+        for c in [Compression::None, Compression::Bf16, Compression::Int8] {
+            assert_eq!(Compression::from_name(c.name()).unwrap(), c);
+        }
+        assert!(Compression::from_name("fp4").is_err());
+        assert!(decode(&[9, 0, 0, 0, 0]).is_err(), "unknown tag must fail");
+        assert!(decode(&[1, 8, 0, 0, 0, 1]).is_err(), "truncated body must fail");
+    }
+}

@@ -1,0 +1,207 @@
+//! Serialized gradient frames — the wire format of the sharded exchange.
+//!
+//! Shard executors talk **only** through these byte frames (no shared
+//! memory on the exchange path), so the in-process channel transport can
+//! later be swapped for real sockets without touching the protocol. A
+//! frame is one ring hop for one chunk:
+//!
+//! * `Reduce` — carries a node-set: the canonical-tree partials
+//!   (DESIGN.md §14) accumulated so far for one chunk's payload range,
+//!   one payload of `chunk_len` f32 values per *present* node, encoded
+//!   with the run's [`Compression`].
+//! * `Gather` — carries the chunk owner's final reduced values, encoded
+//!   once by the owner; every shard (owner included) decodes the same
+//!   bytes and intermediates forward the blob verbatim, which is what
+//!   keeps compressed runs bitwise identical across shards.
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   u32   0x41474631 ("AGF1")
+//! kind    u8    0 = reduce, 1 = gather
+//! chunk   u32   chunk index
+//! hop     u32   ring hop counter (0-based; a frame lives p−1 hops)
+//! chunk_len u32 payload values per present node
+//! n_nodes u16   node descriptors (0 for gather)
+//! nodes   n_nodes × { level u8, idx u32, present u8 }
+//! blob_len u32
+//! blob    blob_len bytes (compress-encoded values)
+//! check   u32   FNV-1a over everything above
+//! ```
+
+use anyhow::{bail, Result};
+
+pub const FRAME_MAGIC: u32 = 0x4147_4631;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameKind {
+    Reduce,
+    Gather,
+}
+
+/// Descriptor of one aligned canonical-tree node carried by a reduce
+/// frame. `present: false` marks a covered-but-absent block (all its
+/// slots had zero weight) that contributes no payload — absence is part
+/// of the summation-order contract, so it must survive the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameNode {
+    pub level: u8,
+    pub idx: u32,
+    pub present: bool,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub chunk: u32,
+    pub hop: u32,
+    pub chunk_len: u32,
+    pub nodes: Vec<FrameNode>,
+    pub blob: Vec<u8>,
+}
+
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h = 0x811c_9dc5u32;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+impl Frame {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + self.nodes.len() * 6 + self.blob.len() + 8);
+        out.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+        out.push(match self.kind {
+            FrameKind::Reduce => 0,
+            FrameKind::Gather => 1,
+        });
+        out.extend_from_slice(&self.chunk.to_le_bytes());
+        out.extend_from_slice(&self.hop.to_le_bytes());
+        out.extend_from_slice(&self.chunk_len.to_le_bytes());
+        out.extend_from_slice(&(self.nodes.len() as u16).to_le_bytes());
+        for n in &self.nodes {
+            out.push(n.level);
+            out.extend_from_slice(&n.idx.to_le_bytes());
+            out.push(n.present as u8);
+        }
+        out.extend_from_slice(&(self.blob.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.blob);
+        let check = fnv1a(&out);
+        out.extend_from_slice(&check.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Frame> {
+        let mut r = Reader { bytes, pos: 0 };
+        if r.u32()? != FRAME_MAGIC {
+            bail!("bad frame magic");
+        }
+        let kind = match r.u8()? {
+            0 => FrameKind::Reduce,
+            1 => FrameKind::Gather,
+            k => bail!("bad frame kind {k}"),
+        };
+        let chunk = r.u32()?;
+        let hop = r.u32()?;
+        let chunk_len = r.u32()?;
+        let n_nodes = r.u16()? as usize;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let level = r.u8()?;
+            let idx = r.u32()?;
+            let present = match r.u8()? {
+                0 => false,
+                1 => true,
+                p => bail!("bad present flag {p}"),
+            };
+            nodes.push(FrameNode { level, idx, present });
+        }
+        let blob_len = r.u32()? as usize;
+        let blob = r.take(blob_len)?.to_vec();
+        let body_end = r.pos;
+        let check = r.u32()?;
+        if check != fnv1a(&bytes[..body_end]) {
+            bail!("frame checksum mismatch");
+        }
+        Ok(Frame { kind, chunk, hop, chunk_len, nodes, blob })
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Reader<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        match self.bytes.get(self.pos..self.pos + n) {
+            Some(s) => {
+                self.pos += n;
+                Ok(s)
+            }
+            None => bail!("truncated frame at byte {}", self.pos),
+        }
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        Frame {
+            kind: FrameKind::Reduce,
+            chunk: 3,
+            hop: 1,
+            chunk_len: 5,
+            nodes: vec![
+                FrameNode { level: 2, idx: 0, present: true },
+                FrameNode { level: 1, idx: 2, present: false },
+            ],
+            blob: vec![1, 2, 3, 4, 5, 6],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let f = sample();
+        let bytes = f.encode();
+        assert_eq!(Frame::decode(&bytes).unwrap(), f);
+        let g = Frame {
+            kind: FrameKind::Gather,
+            chunk: 0,
+            hop: 0,
+            chunk_len: 0,
+            nodes: vec![],
+            blob: vec![],
+        };
+        assert_eq!(Frame::decode(&g.encode()).unwrap(), g);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let bytes = sample().encode();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x40;
+            assert!(Frame::decode(&bad).is_err(), "flipped byte {i} went unnoticed");
+        }
+        assert!(Frame::decode(&bytes[..bytes.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        assert_eq!(sample().encode(), sample().encode());
+    }
+}

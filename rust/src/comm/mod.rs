@@ -1,0 +1,18 @@
+//! Communication layer for sharded data-parallel execution.
+//!
+//! Everything a gradient exchange needs short of real sockets: a
+//! self-describing wire [`frame`] format, deterministic error-feedback
+//! [`compress`]ion, and the chunked [`ring`] allreduce state machine
+//! whose result is bitwise identical to the unsharded canonical
+//! reduction for any shard/chunk count (compression off). The threaded
+//! transport that drives these lives in `coordinator::shard`; the
+//! analytic cost model it is calibrated against lives in
+//! `simulator::interconnect`. See DESIGN.md §14.
+
+pub mod compress;
+pub mod frame;
+pub mod ring;
+
+pub use compress::Compression;
+pub use frame::{Frame, FrameKind, FrameNode};
+pub use ring::{chunk_ranges, exchange_reference, CommStats, NodeSet, RingSpec, ShardPeer};

@@ -1,0 +1,717 @@
+//! Chunked ring allreduce over canonical-tree node-sets.
+//!
+//! The sharded exchange must produce **bitwise** the same reduction as
+//! the unsharded [`canonical_weighted_sum`] for any shard count and any
+//! chunk count (compression off). Two structural facts make that hold:
+//!
+//! 1. **Partition invariance** — each shard owns a contiguous slot
+//!    range; its local contribution is the unique decomposition of that
+//!    range into maximal *aligned* blocks of the canonical perfect tree
+//!    (a node at `(level, idx)` covers slots `[idx·2^level,
+//!    (idx+1)·2^level)`). Merging node-sets unions them and combines
+//!    complete sibling pairs with the same `left + right` used by the
+//!    unsharded tree, so every aligned node's value is independent of
+//!    the merge order in which the ring delivers contributions.
+//! 2. **Chunk invariance** — chunks partition *payload indices* of the
+//!    flattened gradient, never participants, so each chunk is an
+//!    independent (smaller) instance of the same reduction and the
+//!    concatenation is independent of the chunk count.
+//!
+//! Ring schedule for chunk `c` with `p` shards: the origin `c mod p`
+//! sends its node-set at hop 0; each receiver merges its own local set
+//! and forwards; after `p−1` hops the owner `(c mod p + p − 1) mod p`
+//! holds full coverage, collapses it to the final values, encodes them
+//! **once** (this is where broadcast compression happens), and the
+//! gather frame circulates `p−1` hops with its blob forwarded verbatim —
+//! so every shard decodes identical bytes and finishes with identical
+//! finals even under lossy compression. Origins are striped over shards,
+//! which is what pipelines chunk `k`'s reduce hops under chunk `k+1`'s
+//! compute and spreads bandwidth like a classic ring reduce-scatter.
+//!
+//! [`ShardPeer`] is the per-shard state machine, deliberately
+//! transport-free: `begin` and `on_frame` return encoded frames for the
+//! next shard in the ring, and whoever owns the wires (the in-process
+//! [`crate::coordinator::shard::ShardPool`], a socket loop later) just
+//! moves bytes.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use super::compress::{self, Compression};
+use super::frame::{Frame, FrameKind, FrameNode};
+use crate::coordinator::allreduce::combine_nodes;
+
+/// Fixed chunk partition of the flattened payload: contiguous,
+/// front-loaded remainders, a pure function of `(total, chunks)` — part
+/// of the determinism contract (DESIGN.md §14), so it must never depend
+/// on runtime state.
+pub fn chunk_ranges(total: usize, chunks: usize) -> Vec<Range<usize>> {
+    let chunks = chunks.max(1);
+    let base = total / chunks;
+    let extra = total % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut lo = 0;
+    for c in 0..chunks {
+        let len = base + usize::from(c < extra);
+        out.push(lo..lo + len);
+        lo += len;
+    }
+    debug_assert_eq!(lo, total);
+    out
+}
+
+/// Decompose `[lo, hi)` into the unique sequence of maximal aligned
+/// blocks `(level, idx)` — each block is a complete subtree of the
+/// canonical perfect tree.
+pub fn aligned_blocks(mut lo: usize, hi: usize) -> Vec<(u8, u32)> {
+    let mut out = Vec::new();
+    while lo < hi {
+        // largest power of two that both divides lo and fits in the rest
+        let align = if lo == 0 { usize::MAX } else { lo & lo.wrapping_neg() };
+        let size = align.min(prev_pow2(hi - lo));
+        out.push((size.trailing_zeros() as u8, (lo / size) as u32));
+        lo += size;
+    }
+    out
+}
+
+fn prev_pow2(n: usize) -> usize {
+    debug_assert!(n > 0);
+    1 << (usize::BITS - 1 - n.leading_zeros())
+}
+
+/// A set of disjoint aligned canonical-tree nodes with their partial
+/// sums. `None` data marks a covered-but-absent block (every slot in it
+/// had zero weight): absence is tracked, never materialized as zeros,
+/// so padding and inactive slots stay bitwise inert.
+#[derive(Debug, Clone, Default)]
+pub struct NodeSet {
+    /// keyed by (level, idx); values are payload vectors of the chunk's
+    /// length, or None for absent blocks
+    nodes: BTreeMap<(u8, u32), Option<Vec<f32>>>,
+}
+
+impl NodeSet {
+    /// Build a shard's local node-set for one chunk: `leaves[i]` is the
+    /// already-scaled gradient slice (restricted to the chunk's payload
+    /// range) of slot `range.start + i`, or None for zero-weight slots.
+    pub fn from_leaves(range: Range<usize>, leaves: &[Option<&[f32]>]) -> NodeSet {
+        debug_assert_eq!(leaves.len(), range.len());
+        let mut set = NodeSet::default();
+        for (level, idx) in aligned_blocks(range.start, range.end) {
+            let size = 1usize << level;
+            let lo = (idx as usize) << level;
+            let data = subtree(leaves, range.start, lo, size);
+            set.nodes.insert((level, idx), data);
+        }
+        set
+    }
+
+    /// Merge another node-set in and combine complete sibling pairs.
+    /// Sets must cover disjoint slot ranges (they do by construction:
+    /// shards own disjoint ranges and frames carry merged partials).
+    pub fn merge(&mut self, other: NodeSet) -> Result<()> {
+        for (k, v) in other.nodes {
+            if self.nodes.insert(k, v).is_some() {
+                bail!("overlapping node {k:?} in merge");
+            }
+        }
+        self.normalize();
+        Ok(())
+    }
+
+    fn normalize(&mut self) {
+        loop {
+            let Some(&(level, idx)) = self
+                .nodes
+                .keys()
+                .find(|&&(l, i)| self.nodes.contains_key(&(l, i ^ 1)))
+            else {
+                return;
+            };
+            let left_idx = idx & !1;
+            let left = self.nodes.remove(&(level, left_idx)).unwrap();
+            let right = self.nodes.remove(&(level, left_idx | 1)).unwrap();
+            let parent = match (left, right) {
+                (Some(mut l), Some(r)) => {
+                    combine_nodes(&mut l, &r);
+                    Some(l)
+                }
+                (Some(l), None) => Some(l),
+                (None, Some(r)) => Some(r),
+                (None, None) => None,
+            };
+            self.nodes.insert((level + 1, left_idx >> 1), parent);
+        }
+    }
+
+    /// Number of slots covered (present or absent).
+    pub fn covered(&self) -> usize {
+        self.nodes.keys().map(|&(l, _)| 1usize << l).sum()
+    }
+
+    /// Collapse a fully-covering normalized set over `n_slots` slots to
+    /// the final values (`None` if every slot was absent). The remaining
+    /// blocks are the left-to-right binary decomposition of `n_slots`;
+    /// in the padded canonical tree each block's sibling subtree to the
+    /// right contains only padding, so the root value is the
+    /// right-associated fold of the blocks.
+    pub fn collapse(self, n_slots: usize, chunk_len: usize) -> Option<Vec<f32>> {
+        debug_assert_eq!(self.covered(), n_slots);
+        // the decomposition's block sizes strictly decrease left to
+        // right, so ascending (level, idx) key order is *descending*
+        // slot position: fold right-to-left, current block as the left
+        // operand — exactly the padded tree's association
+        let mut acc: Option<Vec<f32>> = None;
+        for (_, data) in self.nodes.into_iter() {
+            acc = match (data, acc) {
+                (Some(mut l), Some(r)) => {
+                    combine_nodes(&mut l, &r);
+                    Some(l)
+                }
+                (Some(l), None) => Some(l),
+                (None, r) => r,
+            };
+        }
+        if let Some(v) = &acc {
+            debug_assert_eq!(v.len(), chunk_len);
+        }
+        acc
+    }
+
+    /// Nodes in slot-position order, as carried on the wire.
+    fn ordered(&self) -> Vec<(&(u8, u32), &Option<Vec<f32>>)> {
+        let mut v: Vec<_> = self.nodes.iter().collect();
+        v.sort_by_key(|((l, i), _)| (*i as u64) << *l);
+        v
+    }
+}
+
+/// Canonical subtree value over slots `[lo, lo+size)` (absolute ids),
+/// with `leaves` starting at absolute slot `base`. Absent slots are
+/// skipped, exactly like [`crate::coordinator::allreduce`]'s tree.
+fn subtree(leaves: &[Option<&[f32]>], base: usize, lo: usize, size: usize) -> Option<Vec<f32>> {
+    if size == 1 {
+        return leaves[lo - base].map(|s| s.to_vec());
+    }
+    let half = size / 2;
+    let left = subtree(leaves, base, lo, half);
+    let right = subtree(leaves, base, lo + half, half);
+    match (left, right) {
+        (Some(mut l), Some(r)) => {
+            combine_nodes(&mut l, &r);
+            Some(l)
+        }
+        (Some(l), None) => Some(l),
+        (None, r) => r,
+    }
+}
+
+/// Static description of one exchange: who participates, how the
+/// payload is chunked, and how leaves are spread over shards.
+#[derive(Debug, Clone)]
+pub struct RingSpec {
+    pub shards: usize,
+    pub chunks: usize,
+    pub n_slots: usize,
+    pub total_len: usize,
+    pub compression: Compression,
+}
+
+impl RingSpec {
+    pub fn new(
+        shards: usize,
+        chunks: usize,
+        n_slots: usize,
+        total_len: usize,
+        compression: Compression,
+    ) -> RingSpec {
+        assert!(shards >= 1 && shards <= n_slots, "need 1 <= shards <= n_slots");
+        RingSpec { shards, chunks: chunks.max(1), n_slots, total_len, compression }
+    }
+
+    pub fn chunk_ranges(&self) -> Vec<Range<usize>> {
+        chunk_ranges(self.total_len, self.chunks)
+    }
+
+    /// Contiguous front-loaded slot range owned by `shard` — the same
+    /// partition rule as `data::shard::shard_batch`, so the layout is a
+    /// pure function of `(n_slots, shards)`.
+    pub fn slot_range(&self, shard: usize) -> Range<usize> {
+        let base = self.n_slots / self.shards;
+        let extra = self.n_slots % self.shards;
+        let lo = shard * base + shard.min(extra);
+        let len = base + usize::from(shard < extra);
+        lo..lo + len
+    }
+
+    /// Shard that injects chunk `c` into the ring (striped round-robin,
+    /// which is what spreads bandwidth across links).
+    pub fn origin(&self, chunk: usize) -> usize {
+        chunk % self.shards
+    }
+
+    /// Shard where chunk `c`'s reduce completes after p−1 hops.
+    pub fn owner(&self, chunk: usize) -> usize {
+        (chunk % self.shards + self.shards - 1) % self.shards
+    }
+
+    pub fn next(&self, shard: usize) -> usize {
+        (shard + 1) % self.shards
+    }
+}
+
+/// Cumulative traffic accounting for one shard (summed pool-wide by the
+/// caller). `payload_bytes` counts logical f32 payload moved,
+/// `wire_bytes` counts actual encoded frame bytes — their ratio is the
+/// effective compression factor.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CommStats {
+    pub payload_bytes: u64,
+    pub wire_bytes: u64,
+    pub frames: u64,
+    pub stale_substitutions: u64,
+}
+
+impl CommStats {
+    pub fn add(&mut self, other: &CommStats) {
+        self.payload_bytes += other.payload_bytes;
+        self.wire_bytes += other.wire_bytes;
+        self.frames += other.frames;
+        self.stale_substitutions += other.stale_substitutions;
+    }
+}
+
+/// Per-shard protocol state machine. Owns the error-feedback residuals,
+/// which persist across updates (keyed per chunk — each shard encodes
+/// exactly one reduce frame and at most one gather blob per chunk per
+/// update, so the shapes recur; a shape change, e.g. the elastic
+/// ratchet activating a slot, deterministically resets that residual).
+pub struct ShardPeer {
+    spec: RingSpec,
+    shard: usize,
+    reduce_res: Vec<Vec<f32>>,
+    gather_res: Vec<Vec<f32>>,
+    /// per-update: local contribution per chunk (taken when sent/merged)
+    local: Vec<Option<NodeSet>>,
+    /// per-update: decoded final values per chunk
+    finals: Vec<Option<Vec<f32>>>,
+    stats: CommStats,
+}
+
+impl ShardPeer {
+    pub fn new(spec: RingSpec, shard: usize) -> ShardPeer {
+        assert!(shard < spec.shards);
+        let chunks = spec.chunks;
+        ShardPeer {
+            spec,
+            shard,
+            reduce_res: vec![Vec::new(); chunks],
+            gather_res: vec![Vec::new(); chunks],
+            local: Vec::new(),
+            finals: Vec::new(),
+            stats: CommStats::default(),
+        }
+    }
+
+    pub fn shard(&self) -> usize {
+        self.shard
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    pub fn note_stale_substitution(&mut self) {
+        self.stats.stale_substitutions += 1;
+    }
+
+    /// Start one exchange. `leaves[i]` is the already-scaled flat
+    /// gradient (full `total_len`) of slot `slot_range.start + i`, or
+    /// None for zero-weight slots. Returns the encoded frames to send
+    /// to the next shard in the ring (empty for `shards == 1`, where
+    /// every chunk finalizes locally).
+    pub fn begin(&mut self, leaves: &[Option<&[f32]>]) -> Result<Vec<Vec<u8>>> {
+        let range = self.spec.slot_range(self.shard);
+        debug_assert_eq!(leaves.len(), range.len());
+        for l in leaves.iter().flatten() {
+            debug_assert_eq!(l.len(), self.spec.total_len);
+        }
+        let ranges = self.spec.chunk_ranges();
+        self.local = ranges
+            .iter()
+            .map(|cr| {
+                let chunk_leaves: Vec<Option<&[f32]>> =
+                    leaves.iter().map(|l| l.map(|s| &s[cr.clone()])).collect();
+                Some(NodeSet::from_leaves(range.clone(), &chunk_leaves))
+            })
+            .collect();
+        self.finals = vec![None; ranges.len()];
+
+        let mut out = Vec::new();
+        for c in 0..ranges.len() {
+            if self.spec.shards == 1 {
+                let set = self.local[c].take().unwrap();
+                let vals = set
+                    .collapse(self.spec.n_slots, ranges[c].len())
+                    .unwrap_or_else(|| vec![0.0; ranges[c].len()]);
+                self.finals[c] = Some(vals);
+            } else if self.spec.origin(c) == self.shard {
+                let set = self.local[c].take().unwrap();
+                out.push(self.encode_reduce(c, 0, &set, ranges[c].len()));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Handle one incoming frame; returns frames to forward to the next
+    /// shard in the ring.
+    pub fn on_frame(&mut self, bytes: &[u8]) -> Result<Vec<Vec<u8>>> {
+        let frame = Frame::decode(bytes)?;
+        let c = frame.chunk as usize;
+        let ranges = self.spec.chunk_ranges();
+        if c >= ranges.len() {
+            bail!("frame for unknown chunk {c}");
+        }
+        let chunk_len = ranges[c].len();
+        if frame.chunk_len as usize != chunk_len {
+            bail!("frame chunk_len {} != expected {chunk_len}", frame.chunk_len);
+        }
+        let p = self.spec.shards;
+        let mut out = Vec::new();
+        match frame.kind {
+            FrameKind::Reduce => {
+                let mut set = decode_reduce_set(&frame)?;
+                let local = self
+                    .local
+                    .get_mut(c)
+                    .and_then(Option::take)
+                    .ok_or_else(|| anyhow::anyhow!("duplicate reduce frame for chunk {c}"))?;
+                set.merge(local)?;
+                if self.shard == self.spec.owner(c) {
+                    // full coverage: collapse, encode once, circulate
+                    debug_assert_eq!(frame.hop as usize, p - 2);
+                    let vals = set
+                        .collapse(self.spec.n_slots, chunk_len)
+                        .unwrap_or_else(|| vec![0.0; chunk_len]);
+                    let mut blob = Vec::new();
+                    self.spec.compression.encode(&vals, &mut self.gather_res[c], &mut blob);
+                    // the owner uses its own decode so all shards see
+                    // the same (possibly lossy) values
+                    let (decoded, _) = compress::decode(&blob)?;
+                    self.finals[c] = Some(decoded);
+                    let gather = Frame {
+                        kind: FrameKind::Gather,
+                        chunk: frame.chunk,
+                        hop: 0,
+                        chunk_len: chunk_len as u32,
+                        nodes: Vec::new(),
+                        blob,
+                    };
+                    out.push(self.count_send(gather.encode(), chunk_len));
+                } else {
+                    out.push(self.encode_reduce(c, frame.hop + 1, &set, chunk_len));
+                }
+            }
+            FrameKind::Gather => {
+                if self.finals[c].is_some() {
+                    bail!("duplicate gather frame for chunk {c}");
+                }
+                let (decoded, _) = compress::decode(&frame.blob)?;
+                if decoded.len() != chunk_len {
+                    bail!("gather payload {} != chunk len {chunk_len}", decoded.len());
+                }
+                self.finals[c] = Some(decoded);
+                if (frame.hop as usize) < p.saturating_sub(2) {
+                    // forward the blob verbatim — re-encoding would let
+                    // lossy compression diverge across shards
+                    let fwd = Frame { hop: frame.hop + 1, ..frame };
+                    out.push(self.count_send(fwd.encode(), chunk_len));
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn done(&self) -> bool {
+        !self.finals.is_empty() && self.finals.iter().all(Option::is_some)
+    }
+
+    /// Concatenate per-chunk finals into the flat reduced vector.
+    pub fn take_result(&mut self) -> Vec<f32> {
+        debug_assert!(self.done());
+        let mut out = Vec::with_capacity(self.spec.total_len);
+        for f in self.finals.drain(..) {
+            out.extend_from_slice(&f.unwrap());
+        }
+        out
+    }
+
+    fn encode_reduce(&mut self, c: usize, hop: u32, set: &NodeSet, chunk_len: usize) -> Vec<u8> {
+        let ordered = set.ordered();
+        let nodes: Vec<FrameNode> = ordered
+            .iter()
+            .map(|((l, i), d)| FrameNode { level: *l, idx: *i, present: d.is_some() })
+            .collect();
+        let mut values = Vec::new();
+        for (_, d) in &ordered {
+            if let Some(v) = d.as_deref() {
+                values.extend_from_slice(v);
+            }
+        }
+        let mut blob = Vec::new();
+        self.spec.compression.encode(&values, &mut self.reduce_res[c], &mut blob);
+        let frame = Frame {
+            kind: FrameKind::Reduce,
+            chunk: c as u32,
+            hop,
+            chunk_len: chunk_len as u32,
+            nodes,
+            blob,
+        };
+        self.count_send(frame.encode(), values.len())
+    }
+
+    fn count_send(&mut self, bytes: Vec<u8>, payload_values: usize) -> Vec<u8> {
+        self.stats.frames += 1;
+        self.stats.payload_bytes += 4 * payload_values as u64;
+        self.stats.wire_bytes += bytes.len() as u64;
+        bytes
+    }
+}
+
+/// Rebuild the node-set a reduce frame carries: the blob decodes to
+/// `present_count × chunk_len` values, split in wire node order.
+fn decode_reduce_set(frame: &Frame) -> Result<NodeSet> {
+    let (values, _) = compress::decode(&frame.blob)?;
+    let chunk_len = frame.chunk_len as usize;
+    let present = frame.nodes.iter().filter(|n| n.present).count();
+    if values.len() != present * chunk_len {
+        bail!("reduce blob {} values != {present} x {chunk_len}", values.len());
+    }
+    let mut set = NodeSet::default();
+    let mut off = 0;
+    for n in &frame.nodes {
+        let data = if n.present {
+            let v = values[off..off + chunk_len].to_vec();
+            off += chunk_len;
+            Some(v)
+        } else {
+            None
+        };
+        if set.nodes.insert((n.level, n.idx), data).is_some() {
+            bail!("duplicate node in frame");
+        }
+    }
+    Ok(set)
+}
+
+/// Drive a full exchange in-process, single-threaded: the reference
+/// implementation used by property tests and by the simulator-facing
+/// benches. Returns every shard's result (they must be — and are tested
+/// to be — bitwise identical).
+pub fn exchange_reference(
+    bufs: &[Vec<f32>],
+    weights: &[f64],
+    shards: usize,
+    chunks: usize,
+    compression: Compression,
+) -> Result<Vec<Vec<f32>>> {
+    let n_slots = bufs.len();
+    let total_len = bufs.first().map_or(0, Vec::len);
+    let spec = RingSpec::new(shards, chunks, n_slots, total_len, compression);
+    let scaled: Vec<Option<Vec<f32>>> = bufs
+        .iter()
+        .zip(weights)
+        .map(|(b, &w)| crate::coordinator::allreduce::scaled_leaf(b, w))
+        .collect();
+    let mut peers: Vec<ShardPeer> =
+        (0..shards).map(|s| ShardPeer::new(spec.clone(), s)).collect();
+    let mut queue: std::collections::VecDeque<(usize, Vec<u8>)> = Default::default();
+    for s in 0..shards {
+        let range = spec.slot_range(s);
+        let leaves: Vec<Option<&[f32]>> =
+            scaled[range.clone()].iter().map(|o| o.as_deref()).collect();
+        for f in peers[s].begin(&leaves)? {
+            queue.push_back((spec.next(s), f));
+        }
+    }
+    while let Some((dest, bytes)) = queue.pop_front() {
+        for f in peers[dest].on_frame(&bytes)? {
+            queue.push_back((spec.next(dest), f));
+        }
+    }
+    for p in &peers {
+        if !p.done() {
+            bail!("shard {} did not finish", p.shard());
+        }
+    }
+    Ok(peers.iter_mut().map(ShardPeer::take_result).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::allreduce::canonical_weighted_sum;
+    use crate::util::rng::Pcg32;
+
+    fn random_case(
+        seed: u64,
+        n_slots: usize,
+        len: usize,
+        zero_frac: f64,
+    ) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut rng = Pcg32::new(seed);
+        let bufs: Vec<Vec<f32>> =
+            (0..n_slots).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
+        let mut weights: Vec<f64> = (0..n_slots).map(|_| rng.next_f64() + 0.1).collect();
+        for w in weights.iter_mut() {
+            if rng.next_f64() < zero_frac {
+                *w = 0.0;
+            }
+        }
+        let total: f64 = weights.iter().sum();
+        if total > 0.0 {
+            for w in weights.iter_mut() {
+                *w /= total;
+            }
+        }
+        (bufs, weights)
+    }
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        for (total, chunks) in [(10, 3), (7, 7), (5, 9), (0, 4), (1, 1), (100, 1)] {
+            let rs = chunk_ranges(total, chunks);
+            assert_eq!(rs.len(), chunks.max(1));
+            assert_eq!(rs.first().unwrap().start, 0);
+            assert_eq!(rs.last().unwrap().end, total);
+            for w in rs.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+        }
+    }
+
+    #[test]
+    fn aligned_blocks_tile_the_range() {
+        for lo in 0..20 {
+            for hi in lo + 1..24 {
+                let blocks = aligned_blocks(lo, hi);
+                let mut pos = lo;
+                for &(level, idx) in &blocks {
+                    let size = 1usize << level;
+                    let start = (idx as usize) << level;
+                    assert_eq!(start, pos, "[{lo},{hi}) block misplaced");
+                    assert_eq!(start % size, 0, "block not aligned");
+                    pos += size;
+                }
+                assert_eq!(pos, hi);
+            }
+        }
+    }
+
+    #[test]
+    fn exchange_matches_canonical_sum_bitwise() {
+        for (seed, n_slots, len) in [(1u64, 4usize, 37usize), (2, 6, 64), (3, 7, 5), (4, 12, 130)]
+        {
+            let (bufs, weights) = random_case(seed, n_slots, len, 0.25);
+            let expect = canonical_weighted_sum(&bufs, &weights);
+            for shards in 1..=n_slots.min(5) {
+                for chunks in [1usize, 2, 3, 7] {
+                    let results =
+                        exchange_reference(&bufs, &weights, shards, chunks, Compression::None)
+                            .unwrap();
+                    for (s, r) in results.iter().enumerate() {
+                        assert_eq!(
+                            r.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                            expect.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                            "shard {s}/{shards} chunks {chunks} seed {seed} diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_weights_reduce_to_zeros() {
+        let bufs = vec![vec![1.0f32; 9]; 5];
+        let weights = vec![0.0; 5];
+        let results = exchange_reference(&bufs, &weights, 3, 2, Compression::None).unwrap();
+        for r in results {
+            assert!(r.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn compressed_exchange_is_shard_consistent_and_deterministic() {
+        let (bufs, weights) = random_case(11, 6, 95, 0.2);
+        for comp in [Compression::Bf16, Compression::Int8] {
+            let a = exchange_reference(&bufs, &weights, 4, 3, comp).unwrap();
+            let b = exchange_reference(&bufs, &weights, 4, 3, comp).unwrap();
+            assert_eq!(a, b, "{} exchange must replay bitwise", comp.name());
+            for r in &a[1..] {
+                assert_eq!(&a[0], r, "{} finals differ across shards", comp.name());
+            }
+            // and lossy compression stays near the exact reduction
+            let exact = canonical_weighted_sum(&bufs, &weights);
+            let scale = exact.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            for (x, y) in exact.iter().zip(&a[0]) {
+                assert!((x - y).abs() <= scale * 0.02 + 1e-5, "{x} vs {y} ({})", comp.name());
+            }
+        }
+    }
+
+    #[test]
+    fn compression_shrinks_wire_bytes() {
+        let (bufs, weights) = random_case(5, 4, 256, 0.0);
+        let stats = |comp| {
+            let spec = RingSpec::new(4, 2, 4, 256, comp);
+            let scaled: Vec<Option<Vec<f32>>> = bufs
+                .iter()
+                .zip(&weights)
+                .map(|(b, &w)| crate::coordinator::allreduce::scaled_leaf(b, w))
+                .collect();
+            let mut peers: Vec<ShardPeer> =
+                (0..4).map(|s| ShardPeer::new(spec.clone(), s)).collect();
+            let mut queue: std::collections::VecDeque<(usize, Vec<u8>)> = Default::default();
+            for s in 0..4 {
+                let range = spec.slot_range(s);
+                let leaves: Vec<Option<&[f32]>> =
+                    scaled[range].iter().map(|o| o.as_deref()).collect();
+                for f in peers[s].begin(&leaves).unwrap() {
+                    queue.push_back((spec.next(s), f));
+                }
+            }
+            while let Some((dest, bytes)) = queue.pop_front() {
+                for f in peers[dest].on_frame(&bytes).unwrap() {
+                    queue.push_back((spec.next(dest), f));
+                }
+            }
+            let mut total = CommStats::default();
+            for p in &peers {
+                total.add(&p.stats());
+            }
+            total
+        };
+        let none = stats(Compression::None);
+        let bf16 = stats(Compression::Bf16);
+        let int8 = stats(Compression::Int8);
+        assert_eq!(none.payload_bytes, bf16.payload_bytes);
+        assert!(none.wire_bytes > none.payload_bytes, "framing overhead exists");
+        assert!(
+            bf16.wire_bytes * 10 < none.wire_bytes * 6,
+            "bf16 {} vs none {}",
+            bf16.wire_bytes,
+            none.wire_bytes
+        );
+        assert!(
+            int8.wire_bytes * 10 < none.wire_bytes * 4,
+            "int8 {} vs none {}",
+            int8.wire_bytes,
+            none.wire_bytes
+        );
+    }
+}

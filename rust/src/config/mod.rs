@@ -154,6 +154,9 @@ impl JobConfig {
         if let Some(e) = &self.trainer.elastic {
             e.validate()?;
         }
+        if let Some(sc) = &self.trainer.shard {
+            sc.validate()?;
+        }
         let r0 = self.policy.batch.initial();
         if r0 == 0 {
             bail!("initial batch must be > 0");
@@ -410,7 +413,8 @@ pub fn allreduce_from_name(name: &str) -> Result<Algorithm> {
         "naive" => Algorithm::Naive,
         "ring" => Algorithm::Ring,
         "tree" => Algorithm::Tree,
-        other => bail!("unknown allreduce {other:?} (naive|ring|tree)"),
+        "chunked" => Algorithm::Chunked,
+        other => bail!("unknown allreduce {other:?} (naive|ring|tree|chunked)"),
     })
 }
 
@@ -548,6 +552,7 @@ mod tests {
     #[test]
     fn allreduce_names() {
         assert_eq!(allreduce_from_name("ring").unwrap(), Algorithm::Ring);
+        assert_eq!(allreduce_from_name("chunked").unwrap(), Algorithm::Chunked);
         assert!(allreduce_from_name("x").is_err());
     }
 

@@ -42,6 +42,8 @@ use super::dataset::{GatherBufs, TrainData};
 use super::elastic::{ElasticConfig, ElasticPolicy};
 use super::engine::Engine;
 use super::eval::evaluate;
+use super::shard::{unflatten_into, ShardConfig, ShardPool, StragglerEvent};
+use crate::comm::CommStats;
 use crate::data::loader::BatchPlanner;
 use crate::data::shard::{shard_batch, shard_weights};
 use crate::metrics::{EpochRecord, PhaseTimers, RunHistory};
@@ -88,6 +90,13 @@ pub struct TrainerConfig {
     /// is a pure side channel: the trajectory is bitwise identical with
     /// telemetry on or off (`tests/engine_determinism.rs`).
     pub telemetry: TelemetryConfig,
+    /// sharded execution (DESIGN.md §14): replace the monolithic
+    /// `allreduce` call with a chunked-ring gradient exchange over this
+    /// many shard executors, with optional wire compression and a
+    /// deterministic straggler plan. With compression off the trajectory
+    /// is bitwise identical to the monolithic path for any `1..=n_slots`
+    /// shard count; `allreduce` is then only used by the unsharded path.
+    pub shard: Option<ShardConfig>,
 }
 
 impl TrainerConfig {
@@ -106,6 +115,7 @@ impl TrainerConfig {
             elastic: None,
             kernel_threads: 1,
             telemetry: TelemetryConfig::default(),
+            shard: None,
         }
     }
 
@@ -157,6 +167,16 @@ impl TrainerConfig {
         self.telemetry = t;
         self
     }
+
+    /// Run the gradient exchange over `shards` ring executors with
+    /// `chunks` pipeline chunks (DESIGN.md §14). Compression and the
+    /// straggler plan default off; set them on the stored [`ShardConfig`].
+    pub fn with_shards(mut self, shards: usize, chunks: usize) -> Self {
+        let mut sc = ShardConfig::new(shards);
+        sc.chunks = chunks.max(1);
+        self.shard = Some(sc);
+        self
+    }
 }
 
 /// Clamp a scheduled effective batch to the dataset size, preserving
@@ -199,6 +219,15 @@ pub fn train<G: BatchGovernor + ?Sized>(
     }
     let n_slots = cfg.elastic.as_ref().map(|e| e.max_workers).unwrap_or(cfg.workers);
     let mut elastic = cfg.elastic.map(ElasticPolicy::new);
+
+    // -- sharded exchange pre-flight: a bad shard config must fail before
+    // any thread spawns --
+    if let Some(sc) = &cfg.shard {
+        sc.validate().context("shard config")?;
+        if sc.shards > n_slots {
+            bail!("--shards {} cannot exceed the {} engine slots", sc.shards, n_slots);
+        }
+    }
 
     // -- pre-flight: artifacts must match the manifest (stale-artifact
     // guard; cheap header parse, no compilation). Reference runtimes have
@@ -279,8 +308,9 @@ pub fn train<G: BatchGovernor + ?Sized>(
     let trace_cap = cfg.telemetry.trace_capacity();
     let mut ctl_trace = TraceBuf::new(trace_cap);
 
+    type ScopeOut = (PhaseTimers, WorkspaceStats, Vec<TraceBuf>, Option<CommStats>);
     let scope_out =
-        std::thread::scope(|scope| -> Result<(PhaseTimers, WorkspaceStats, Vec<TraceBuf>)> {
+        std::thread::scope(|scope| -> Result<ScopeOut> {
             let mut engine = Engine::start_traced(
                 scope,
                 n_slots,
@@ -289,6 +319,13 @@ pub fn train<G: BatchGovernor + ?Sized>(
                 cfg.kernel_threads,
                 trace_cap,
             );
+            // the shard executors live in the same scope as the engine:
+            // gradients stream from worker threads (via the controller's
+            // dispatch callback) into the ring while other slots compute
+            let mut pool = match &cfg.shard {
+                Some(sc) => Some(ShardPool::start(scope, sc, n_slots, params.total_len())?),
+                None => None,
+            };
             // the controller's own long-lived arena for the eval loop (the
             // serial fallback of DESIGN.md §9's ownership map)
             let mut eval_ws = Workspace::with_kernel_threads(cfg.kernel_threads);
@@ -329,14 +366,49 @@ pub fn train<G: BatchGovernor + ?Sized>(
                 let epoch_plan = planner.plan_epoch(epoch, r);
                 let iters = epoch_plan.batches.len();
                 let mut loss_sum = 0.0f64;
+                // per-epoch comm accounting for the `comm` trace span
+                // (straggles buffer here so a mid-epoch divergence break
+                // never leaves dangling spans in the trace)
+                let mut epoch_comm = CommStats::default();
+                let mut epoch_comm_ns = 0u64;
+                let mut epoch_straggles: Vec<StragglerEvent> = Vec::new();
 
                 for (it, batch) in epoch_plan.batches.iter().enumerate() {
                     let lr = governor.lr_coupling(epoch, it, iters);
                     let shards = shard_batch(&batch.indices, n_slots);
                     let weights = shard_weights(&shards);
                     // per-slot gradient production on the worker pool (the
-                    // active subset covers all n_slots canonical shards)
-                    let mut outs = engine.dispatch(&exe, &params, shards, plan.microbatch, active)?;
+                    // active subset covers all n_slots canonical shards).
+                    // Sharded runs open the exchange first and stream each
+                    // slot's gradient into the ring as its worker finishes,
+                    // so reduce hops overlap the remaining backward compute.
+                    let mut outs = match pool.as_mut() {
+                        Some(sp) => {
+                            epoch_straggles.extend(sp.begin(&weights)?);
+                            let mut feed_err: Option<anyhow::Error> = None;
+                            let outs = engine.dispatch_streaming(
+                                &exe,
+                                &params,
+                                shards,
+                                plan.microbatch,
+                                active,
+                                |slot, out| {
+                                    if feed_err.is_none() {
+                                        if let Err(e) = sp.feed(slot, &out.grads) {
+                                            feed_err = Some(e);
+                                        }
+                                    }
+                                },
+                            )?;
+                            if let Some(e) = feed_err {
+                                return Err(e.context("feeding the shard pool"));
+                            }
+                            outs
+                        }
+                        None => {
+                            engine.dispatch(&exe, &params, shards, plan.microbatch, active)?
+                        }
+                    };
                     for (w, out) in outs.iter().enumerate() {
                         loss_sum += out.loss * weights[w];
                     }
@@ -349,13 +421,33 @@ pub fn train<G: BatchGovernor + ?Sized>(
                     };
                     let mut replica_grads: Vec<ParamSet> =
                         outs.drain(..).map(|o| o.grads).collect();
-                    timers.time("allreduce", || {
-                        allreduce_params(&mut replica_grads, &weights, cfg.allreduce)
-                    });
+                    // the reduced update gradient: drained from the ring
+                    // (sharded — the "comm" phase is only the *exposed*
+                    // tail left after compute/comm overlap) or the
+                    // monolithic in-memory all-reduce. Both paths produce
+                    // the same bits (tests::sharded_training_is_bitwise_
+                    // identical_to_monolithic).
+                    let grad: ParamSet = match pool.as_mut() {
+                        Some(sp) => {
+                            let t_comm = Instant::now();
+                            let (flat, delta) = timers.time("comm", || sp.finish())?;
+                            epoch_comm_ns += t_comm.elapsed().as_nanos() as u64;
+                            epoch_comm.add(&delta);
+                            let mut g = replica_grads.swap_remove(0);
+                            unflatten_into(&flat, &mut g);
+                            g
+                        }
+                        None => {
+                            timers.time("allreduce", || {
+                                allreduce_params(&mut replica_grads, &weights, cfg.allreduce)
+                            });
+                            replica_grads.swap_remove(0)
+                        }
+                    };
 
                     // divergence guard BEFORE the step: a non-finite gradient
                     // must never be applied to the parameters
-                    if cfg.divergence_guard && !replica_grads[0].all_finite() {
+                    if cfg.divergence_guard && !grad.all_finite() {
                         log::warn!("[{}] diverged at epoch {epoch} iter {it}", governor.name());
                         history.diverged = true;
                         break 'epochs;
@@ -374,13 +466,13 @@ pub fn train<G: BatchGovernor + ?Sized>(
                         }
                         let stats = GradVarianceController::stats_from_norms(
                             &micro_norms,
-                            replica_grads[0].sq_norm(),
+                            grad.sq_norm(),
                         );
                         governor.observe(stats);
                     }
 
                     timers.time("optim", || {
-                        opt.step(Arc::make_mut(&mut params), &replica_grads[0], lr)
+                        opt.step(Arc::make_mut(&mut params), &grad, lr)
                     });
                 }
 
@@ -414,6 +506,30 @@ pub fn train<G: BatchGovernor + ?Sized>(
                     active_workers: active,
                     wall_secs: t_epoch.elapsed().as_secs_f64(),
                 });
+                // comm + straggler spans land just before their owning
+                // epoch span — validate_trace enforces the pairing
+                if let Some(sp) = &pool {
+                    for ev in epoch_straggles.drain(..) {
+                        ctl_trace.record(SpanPayload::Straggler {
+                            epoch: epoch as u32,
+                            shard: ev.shard,
+                            delay_ns: ev.delay_ns,
+                            substituted: ev.substituted,
+                        });
+                    }
+                    ctl_trace.record_span(
+                        SpanPayload::Comm {
+                            epoch: epoch as u32,
+                            shards: sp.shards() as u32,
+                            chunks: cfg.shard.as_ref().map_or(0, |s| s.chunks) as u32,
+                            bytes: epoch_comm.payload_bytes,
+                            wire_bytes: epoch_comm.wire_bytes,
+                            frames: epoch_comm.frames,
+                            stale: epoch_comm.stale_substitutions,
+                        },
+                        epoch_comm_ns,
+                    );
+                }
                 // the timeline row: one span per epoch carrying everything the
                 // training timeline view needs (wall duration lands only in
                 // the chrome view — the byte-compared JSONL has no wall time)
@@ -457,12 +573,14 @@ pub fn train<G: BatchGovernor + ?Sized>(
                     }
                 }
             }
+            let comm_totals = pool.take().map(ShardPool::shutdown);
             let (worker_timers, mut stats, traces) = engine.shutdown_full();
             stats.merge(&eval_ws.stats());
-            Ok((worker_timers, stats, traces))
+            Ok((worker_timers, stats, traces, comm_totals))
         })?;
-    let (worker_timers, ws_stats, worker_traces) = scope_out;
+    let (worker_timers, ws_stats, worker_traces, comm_totals) = scope_out;
     timers.merge(&worker_timers);
+    history.comm = comm_totals;
     // workspace accounting rides on the history so `adabatch train` can
     // report alloc_bytes_steady_state / pack_count without new plumbing
     history.workspace = ws_stats;
@@ -487,6 +605,16 @@ pub fn train<G: BatchGovernor + ?Sized>(
         reg.inc(pack, history.workspace.pack_count);
         let alloc = reg.gauge("workspace_alloc_bytes");
         reg.set(alloc, history.workspace.alloc_bytes as f64);
+        if let Some(c) = &history.comm {
+            let b = reg.counter("comm_bytes_total");
+            reg.inc(b, c.payload_bytes);
+            let wb = reg.counter("comm_wire_bytes_total");
+            reg.inc(wb, c.wire_bytes);
+            let fr = reg.counter("comm_frames_total");
+            reg.inc(fr, c.frames);
+            let st = reg.counter("comm_stale_substitutions_total");
+            reg.inc(st, c.stale_substitutions);
+        }
         write_prometheus(path, &reg).context("writing metrics snapshot")?;
     }
     if let Some(path) = &cfg.telemetry.trace_out {
@@ -653,6 +781,95 @@ mod tests {
         let mut gov = doubling_gov(16, 4);
         let err = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap_err();
         assert!(format!("{err:#}").contains("samples_per_worker"), "{err:#}");
+    }
+
+    #[test]
+    fn sharded_training_is_bitwise_identical_to_monolithic() {
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        let base = TrainerConfig::new(3).with_seed(11).with_workers(4);
+        let mut gov = doubling_gov(16, 2);
+        let (mono, _) = train(&rt, &base, &mut gov, &train_d, &test_d).unwrap();
+        assert!(mono.comm.is_none(), "monolithic runs carry no comm stats");
+        for shards in [1usize, 2, 4] {
+            let cfg = base.clone().with_shards(shards, 3);
+            let mut gov = doubling_gov(16, 2);
+            let (hist, timers) = train(&rt, &cfg, &mut gov, &train_d, &test_d).unwrap();
+            assert_eq!(mono.epochs.len(), hist.epochs.len());
+            for (a, b) in mono.epochs.iter().zip(&hist.epochs) {
+                assert_eq!(
+                    a.train_loss.to_bits(),
+                    b.train_loss.to_bits(),
+                    "{shards}-shard train loss diverged at epoch {}",
+                    a.epoch
+                );
+                assert_eq!(
+                    a.test_error.to_bits(),
+                    b.test_error.to_bits(),
+                    "{shards}-shard trajectory diverged at epoch {}",
+                    a.epoch
+                );
+            }
+            assert!(timers.count("comm") > 0, "sharded runs time the comm phase");
+            assert_eq!(timers.count("allreduce"), 0, "sharded runs bypass allreduce");
+            let comm = hist.comm.expect("sharded runs report comm stats");
+            if shards > 1 {
+                assert!(comm.frames > 0 && comm.wire_bytes > 0);
+            } else {
+                assert_eq!(comm.frames, 0, "a 1-shard ring moves no frames");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_sharded_run_replays_bitwise() {
+        use crate::comm::Compression;
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        let mut cfg = TrainerConfig::new(2).with_seed(9).with_workers(4).with_shards(4, 2);
+        cfg.shard.as_mut().unwrap().compression = Compression::Int8;
+        let mut g1 = doubling_gov(16, 2);
+        let (a, _) = train(&rt, &cfg, &mut g1, &train_d, &test_d).unwrap();
+        let mut g2 = doubling_gov(16, 2);
+        let (b, _) = train(&rt, &cfg, &mut g2, &train_d, &test_d).unwrap();
+        assert!(!a.diverged && !b.diverged);
+        for (x, y) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+            assert_eq!(x.test_error.to_bits(), y.test_error.to_bits());
+        }
+        let (ca, cb) = (a.comm.unwrap(), b.comm.unwrap());
+        assert_eq!(ca, cb, "comm accounting must replay exactly");
+        assert!(
+            ca.wire_bytes * 2 < ca.payload_bytes,
+            "int8 must shrink the wire below half the payload"
+        );
+    }
+
+    #[test]
+    fn straggler_stale_run_is_deterministic_and_counts_substitutions() {
+        use super::super::shard::{Mitigation, StragglerPlan};
+        let (train_d, test_d) = small_images(4);
+        let rt = ref_rt(4);
+        let mut cfg = TrainerConfig::new(2).with_seed(5).with_workers(4).with_shards(4, 2);
+        {
+            let sc = cfg.shard.as_mut().unwrap();
+            sc.straggler = Some(StragglerPlan { rate: 0.5, delay_us: 50, seed: 12 });
+            sc.mitigation = Mitigation::Stale;
+            sc.staleness_bound = 2;
+        }
+        let mut g1 = doubling_gov(16, 2);
+        let (a, _) = train(&rt, &cfg, &mut g1, &train_d, &test_d).unwrap();
+        let mut g2 = doubling_gov(16, 2);
+        let (b, _) = train(&rt, &cfg, &mut g2, &train_d, &test_d).unwrap();
+        for (x, y) in a.epochs.iter().zip(&b.epochs) {
+            assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits());
+            assert_eq!(x.test_error.to_bits(), y.test_error.to_bits());
+        }
+        assert_eq!(a.comm.unwrap(), b.comm.unwrap());
+        assert!(
+            a.comm.unwrap().stale_substitutions > 0,
+            "a 50% straggle rate over two epochs must substitute at least once"
+        );
     }
 
     #[test]

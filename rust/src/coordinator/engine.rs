@@ -189,6 +189,27 @@ impl<'scope> Engine<'scope> {
         microbatch: usize,
         active: usize,
     ) -> Result<Vec<WorkerOut>> {
+        self.dispatch_streaming(exe, params, shards, microbatch, active, |_, _| {})
+    }
+
+    /// [`Engine::dispatch`] with a per-slot completion callback:
+    /// `on_slot(slot, out)` fires as each slot's result lands, in arrival
+    /// order (nondeterministic — callers must be order-insensitive, like
+    /// the shard pool's confluent exchange). This is the compute/comm
+    /// overlap hook: the sharded controller streams finished slots into
+    /// [`super::shard::ShardPool::feed`] so ring reduce hops run while
+    /// the remaining workers are still inside backward compute. The
+    /// callback only sees slots from the current update's `seq`, and
+    /// never fires for a slot whose worker errored.
+    pub fn dispatch_streaming(
+        &mut self,
+        exe: &Arc<StepExecutable>,
+        params: &Arc<ParamSet>,
+        shards: Vec<Vec<usize>>,
+        microbatch: usize,
+        active: usize,
+        mut on_slot: impl FnMut(usize, &WorkerOut),
+    ) -> Result<Vec<WorkerOut>> {
         let n_slots = self.job_txs.len();
         assert_eq!(shards.len(), n_slots, "one canonical shard per slot");
         assert!(
@@ -244,6 +265,7 @@ impl<'scope> Engine<'scope> {
             match res {
                 Ok(slot_outs) => {
                     for (slot, out) in slot_outs {
+                        on_slot(slot, &out);
                         outs[slot] = Some(out);
                     }
                 }

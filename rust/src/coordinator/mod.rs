@@ -6,7 +6,11 @@
 //! * [`engine`] — the persistent worker-pool execution engine (one thread
 //!   per data-parallel replica, with prefetching).
 //! * [`accumulate`] — gradient accumulation (Eq. 5 / §4.3).
-//! * [`allreduce`] — naive/ring/tree replica gradient reduction.
+//! * [`allreduce`] — naive/ring/tree/chunked replica gradient reduction
+//!   (one canonical summation order for all of them).
+//! * [`shard`] — sharded data-parallel execution: in-process shard
+//!   executors exchanging serialized gradient frames over a chunked ring
+//!   (DESIGN.md §14).
 //! * [`elastic`] — batch-driven worker activation (slots, ratchet policy).
 //! * [`dataset`] — unified image/LM gather interface.
 //! * [`eval`] — padded test-set evaluation.
@@ -19,6 +23,7 @@ pub mod dataset;
 pub mod elastic;
 pub mod engine;
 pub mod eval;
+pub mod shard;
 
 pub use accumulate::GradAccumulator;
 pub use allreduce::{allreduce_mean, allreduce_params, Algorithm};
@@ -27,3 +32,4 @@ pub use dataset::{GatherBufs, TrainData};
 pub use elastic::{assign_slots, ElasticConfig, ElasticPolicy};
 pub use engine::{Engine, WorkerOut};
 pub use eval::{evaluate, EvalResult};
+pub use shard::{Mitigation, ShardConfig, ShardPool, StragglerPlan};

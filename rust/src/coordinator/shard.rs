@@ -1,0 +1,688 @@
+//! Shard-level distribution: N in-process shard executors exchanging
+//! serialized gradient frames over a chunked ring (DESIGN.md §14).
+//!
+//! Each executor is a persistent thread owning one contiguous slot range
+//! and one [`ShardPeer`] protocol state machine (with its persistent
+//! error-feedback residuals). The transport is socket-shaped: executors
+//! communicate *only* through encoded byte frames on per-edge channels,
+//! so swapping the channels for TCP sockets would not touch the
+//! protocol, the framing, or the arithmetic.
+//!
+//! Overlap model: the controller streams each slot's scaled gradient to
+//! its owning executor as the engine's workers finish
+//! ([`super::engine::Engine::dispatch_streaming`]); an executor whose
+//! range is complete starts its reduce hops immediately, while other
+//! workers are still inside backward compute. Chunks pipeline through
+//! the ring independently (origins are striped), so reduce-scatter of
+//! chunk *k* overlaps both compute and other chunks' hops. The
+//! controller's "comm" phase timer therefore measures only the
+//! *exposed* tail it spends blocked in [`ShardPool::finish`].
+//!
+//! Determinism: every merge is confluent and every chunk independent,
+//! so results are bitwise identical regardless of thread interleaving —
+//! equal to the unsharded canonical reduction for any `1..=N` shards
+//! (compression off), and pinned per (seed, config) with compression
+//! on. Straggler *injection* is plan-driven ([`StragglerPlan`], like
+//! PR 8's `FaultPlan`): delays are a pure function of (seed, shard,
+//! update), and the bounded-staleness mitigation substitutes a late
+//! shard's previous-update contribution — decided from the plan, never
+//! from wall time, so mitigated runs replay bitwise too.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::thread::{Scope, ScopedJoinHandle};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::ring::{CommStats, RingSpec, ShardPeer};
+use crate::comm::Compression;
+use crate::optim::param::ParamSet;
+use crate::util::rng::Pcg32;
+
+/// How a straggling shard is handled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mitigation {
+    /// wait out the delay — synchronous semantics, bitwise path
+    /// preserved, the update is just slower (the default)
+    #[default]
+    Wait,
+    /// substitute the shard's previous-update contribution, at most
+    /// `staleness_bound` consecutive times per shard
+    Stale,
+}
+
+/// Deterministic per-shard delay plan: shard `s` is delayed by
+/// `delay_us` before its exchange on update `u` iff a PCG stream keyed
+/// on `(seed, s, u)` draws below `rate`. A pure function — two runs with
+/// the same plan straggle identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StragglerPlan {
+    pub rate: f64,
+    pub delay_us: u64,
+    pub seed: u64,
+}
+
+impl StragglerPlan {
+    pub fn delay_ns(&self, shard: usize, update: u64) -> u64 {
+        let key = self.seed
+            ^ (shard as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ update.wrapping_mul(0xD1B5_4A32_D192_ED03);
+        if Pcg32::new(key).next_f64() < self.rate {
+            self.delay_us * 1_000
+        } else {
+            0
+        }
+    }
+}
+
+/// Sharded-execution knobs on [`super::controller::TrainerConfig`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardConfig {
+    /// shard executors (1 = degenerate ring, still exercised end to end)
+    pub shards: usize,
+    /// ring chunks the flattened gradient is pipelined as
+    pub chunks: usize,
+    /// wire compression for reduce/gather payloads (default: none —
+    /// bitwise-transparent)
+    pub compression: Compression,
+    pub straggler: Option<StragglerPlan>,
+    pub mitigation: Mitigation,
+    /// max consecutive stale substitutions per shard (`Stale` only)
+    pub staleness_bound: u32,
+}
+
+impl ShardConfig {
+    pub fn new(shards: usize) -> ShardConfig {
+        ShardConfig {
+            shards,
+            chunks: 4,
+            compression: Compression::None,
+            straggler: None,
+            mitigation: Mitigation::Wait,
+            staleness_bound: 1,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            bail!("shards must be >= 1");
+        }
+        if self.chunks == 0 {
+            bail!("comm chunks must be >= 1");
+        }
+        if let Some(p) = &self.straggler {
+            if !(0.0..=1.0).contains(&p.rate) {
+                bail!("straggler rate {} outside [0, 1]", p.rate);
+            }
+        }
+        if self.mitigation == Mitigation::Stale && self.staleness_bound == 0 {
+            bail!("stale mitigation needs staleness_bound >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Flatten a gradient ParamSet into the canonical-tree leaf for one
+/// slot: `w · g` over the concatenated tensors, `None` for zero weight.
+/// Elementwise identical to `allreduce::scaled_leaf` per tensor, so the
+/// sharded and unsharded reductions see the same leaves bit for bit.
+pub fn flatten_scaled(grads: &ParamSet, weight: f64) -> Option<Vec<f32>> {
+    let w = weight as f32;
+    if w == 0.0 {
+        return None;
+    }
+    let mut out = Vec::with_capacity(grads.total_len());
+    for buf in &grads.bufs {
+        out.extend(buf.iter().map(|&x| w * x));
+    }
+    Some(out)
+}
+
+/// Scatter a flat reduced vector back into a ParamSet's tensor layout.
+pub fn unflatten_into(flat: &[f32], dst: &mut ParamSet) {
+    assert_eq!(flat.len(), dst.total_len(), "flat gradient length mismatch");
+    let mut off = 0;
+    for buf in dst.bufs.iter_mut() {
+        buf.copy_from_slice(&flat[off..off + buf.len()]);
+        off += buf.len();
+    }
+    dst.touch();
+}
+
+/// One planned straggle that fired on an update: which shard, the
+/// planned delay, and whether bounded-staleness substituted its
+/// contribution. Returned by [`ShardPool::begin`] so the controller can
+/// record deterministic `straggler` trace spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StragglerEvent {
+    pub shard: u32,
+    pub delay_ns: u64,
+    pub substituted: bool,
+}
+
+enum Cmd {
+    Begin { update: u64, substituted: bool, delay_ns: u64 },
+    Finish,
+}
+
+struct DoneMsg {
+    shard: usize,
+    update: u64,
+    /// shard 0 carries the reduced vector; the others' results are
+    /// bitwise identical by construction (property-tested in `comm`)
+    result: Result<Option<Vec<f32>>>,
+    stats: CommStats,
+}
+
+/// The in-process shard transport: one executor thread per shard, ring
+/// edges as byte channels, scoped to one training run (alongside the
+/// engine, inside the controller's `thread::scope`).
+pub struct ShardPool<'scope> {
+    spec: RingSpec,
+    cfg: ShardConfig,
+    cmd_txs: Vec<Sender<Cmd>>,
+    feed_txs: Vec<Sender<(usize, Option<Vec<f32>>)>>,
+    done_rx: Receiver<DoneMsg>,
+    handles: Vec<ScopedJoinHandle<'scope, CommStats>>,
+    update: u64,
+    weights: Vec<f64>,
+    stale_counts: Vec<u32>,
+    prev_totals: CommStats,
+    pending: bool,
+}
+
+impl<'scope> ShardPool<'scope> {
+    /// Spawn the executors. `n_slots` is the engine's canonical slot
+    /// count, `total_len` the flattened gradient length; both are fixed
+    /// for the run, which is what keeps the chunk partition and slot
+    /// layout — and therefore the summation order — constant.
+    pub fn start<'env: 'scope>(
+        scope: &'scope Scope<'scope, 'env>,
+        cfg: &ShardConfig,
+        n_slots: usize,
+        total_len: usize,
+    ) -> Result<ShardPool<'scope>> {
+        cfg.validate()?;
+        if cfg.shards > n_slots {
+            bail!("shards {} cannot exceed slots {n_slots}", cfg.shards);
+        }
+        let spec = RingSpec::new(cfg.shards, cfg.chunks, n_slots, total_len, cfg.compression);
+        let p = cfg.shards;
+        // ring_in[s] receives the edge (s-1 → s); the matching sender is
+        // moved into executor s-1 (never kept by the pool, so executor
+        // exits cascade disconnections around the ring)
+        let mut ring_in_rx: Vec<Option<Receiver<Vec<u8>>>> = Vec::with_capacity(p);
+        let mut ring_in_tx: Vec<Option<Sender<Vec<u8>>>> = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = channel();
+            ring_in_rx.push(Some(rx));
+            ring_in_tx.push(Some(tx));
+        }
+        let (done_tx, done_rx) = channel();
+        let mut cmd_txs = Vec::with_capacity(p);
+        let mut feed_txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for s in 0..p {
+            let (cmd_tx, cmd_rx) = channel();
+            let (feed_tx, feed_rx) = channel();
+            let ring_rx = ring_in_rx[s].take().unwrap();
+            let ring_tx = ring_in_tx[(s + 1) % p].take().unwrap();
+            let done_tx = done_tx.clone();
+            let spec = spec.clone();
+            let keep_cache = cfg.mitigation == Mitigation::Stale;
+            handles.push(scope.spawn(move || {
+                executor_loop(s, spec, keep_cache, cmd_rx, feed_rx, ring_rx, ring_tx, done_tx)
+            }));
+            cmd_txs.push(cmd_tx);
+            feed_txs.push(feed_tx);
+        }
+        Ok(ShardPool {
+            spec,
+            cfg: cfg.clone(),
+            cmd_txs,
+            feed_txs,
+            done_rx,
+            handles,
+            update: 0,
+            weights: vec![0.0; n_slots],
+            stale_counts: vec![0; p],
+            prev_totals: CommStats::default(),
+            pending: false,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.cfg.shards
+    }
+
+    /// Open one update's exchange: fix the slot weights and issue each
+    /// executor its (plan-driven) straggler delay and staleness verdict.
+    /// Substitution is decided here, deterministically: a planned
+    /// straggler under `Stale` mitigation contributes its cached
+    /// previous-update leaves instead of waiting, but never on the first
+    /// update and never more than `staleness_bound` times in a row.
+    /// Returns the straggles that fired, for trace recording.
+    pub fn begin(&mut self, weights: &[f64]) -> Result<Vec<StragglerEvent>> {
+        assert!(!self.pending, "finish() the previous update first");
+        assert_eq!(weights.len(), self.spec.n_slots, "one weight per slot");
+        self.weights.copy_from_slice(weights);
+        let upd = self.update;
+        let mut events = Vec::new();
+        for s in 0..self.cfg.shards {
+            let delay_ns = self.cfg.straggler.as_ref().map_or(0, |p| p.delay_ns(s, upd));
+            let substituted = self.cfg.mitigation == Mitigation::Stale
+                && delay_ns > 0
+                && upd > 0
+                && self.stale_counts[s] < self.cfg.staleness_bound;
+            self.stale_counts[s] = if substituted { self.stale_counts[s] + 1 } else { 0 };
+            if delay_ns > 0 {
+                events.push(StragglerEvent { shard: s as u32, delay_ns, substituted });
+            }
+            self.cmd_txs[s]
+                .send(Cmd::Begin { update: upd, substituted, delay_ns })
+                .map_err(|_| anyhow!("shard executor {s} shut down"))?;
+        }
+        self.pending = true;
+        Ok(events)
+    }
+
+    /// Stream one slot's gradient to its owning executor (called from
+    /// the engine's per-slot completion callback, so exchanges start
+    /// while other workers still compute).
+    pub fn feed(&mut self, slot: usize, grads: &ParamSet) -> Result<()> {
+        assert!(self.pending, "feed outside begin()/finish()");
+        let leaf = flatten_scaled(grads, self.weights[slot]);
+        let s = self.owning_shard(slot);
+        self.feed_txs[s]
+            .send((slot, leaf))
+            .map_err(|_| anyhow!("shard executor {s} shut down"))
+    }
+
+    fn owning_shard(&self, slot: usize) -> usize {
+        let n = self.spec.n_slots;
+        let p = self.cfg.shards;
+        let base = n / p;
+        let extra = n % p;
+        let wide = (base + 1) * extra;
+        if slot < wide {
+            slot / (base + 1)
+        } else {
+            extra + (slot - wide) / base
+        }
+    }
+
+    /// Barrier: wait for every executor to finish the exchange; returns
+    /// the reduced flat gradient and this update's traffic delta.
+    pub fn finish(&mut self) -> Result<(Vec<f32>, CommStats)> {
+        assert!(self.pending, "finish without begin");
+        let mut reduced: Option<Vec<f32>> = None;
+        let mut totals = CommStats::default();
+        let mut first_err: Option<anyhow::Error> = None;
+        for _ in 0..self.cfg.shards {
+            let msg = loop {
+                match self.done_rx.recv_timeout(Duration::from_millis(100)) {
+                    Ok(msg) => break msg,
+                    Err(RecvTimeoutError::Timeout) => {
+                        if self.handles.iter().any(|h| h.is_finished()) {
+                            bail!("a shard executor exited mid-exchange (panicked?)");
+                        }
+                    }
+                    Err(RecvTimeoutError::Disconnected) => {
+                        bail!("shard pool died mid-exchange");
+                    }
+                }
+            };
+            if msg.update != self.update {
+                bail!(
+                    "shard {} replied for update {} during update {}",
+                    msg.shard,
+                    msg.update,
+                    self.update
+                );
+            }
+            totals.add(&msg.stats);
+            match msg.result {
+                Ok(Some(v)) => reduced = Some(v),
+                Ok(None) => {}
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+        self.pending = false;
+        self.update += 1;
+        if let Some(e) = first_err {
+            return Err(e).context("shard exchange failed");
+        }
+        let delta = CommStats {
+            payload_bytes: totals.payload_bytes - self.prev_totals.payload_bytes,
+            wire_bytes: totals.wire_bytes - self.prev_totals.wire_bytes,
+            frames: totals.frames - self.prev_totals.frames,
+            stale_substitutions: totals.stale_substitutions
+                - self.prev_totals.stale_substitutions,
+        };
+        self.prev_totals = totals;
+        let reduced = reduced.ok_or_else(|| anyhow!("no shard returned the reduction"))?;
+        Ok((reduced, delta))
+    }
+
+    /// Stop the executors and return the run's cumulative traffic.
+    pub fn shutdown(self) -> CommStats {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Finish);
+        }
+        drop(self.feed_txs);
+        drop(self.cmd_txs);
+        let mut totals = CommStats::default();
+        for handle in self.handles {
+            match handle.join() {
+                Ok(stats) => totals.add(&stats),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        totals
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn executor_loop(
+    shard: usize,
+    spec: RingSpec,
+    keep_cache: bool,
+    cmds: Receiver<Cmd>,
+    feeds: Receiver<(usize, Option<Vec<f32>>)>,
+    ring_rx: Receiver<Vec<u8>>,
+    ring_tx: Sender<Vec<u8>>,
+    done_tx: Sender<DoneMsg>,
+) -> CommStats {
+    let range = spec.slot_range(shard);
+    let mut peer = ShardPeer::new(spec, shard);
+    let mut cache: Vec<Option<Vec<f32>>> = Vec::new();
+    while let Ok(cmd) = cmds.recv() {
+        let Cmd::Begin { update, substituted, delay_ns } = cmd else { break };
+        // collect this update's fresh leaves for the owned range (the
+        // engine computes them regardless of any substitution — they
+        // become the cache a later substitution reuses)
+        let mut fresh: Vec<Option<Vec<f32>>> = Vec::with_capacity(range.len());
+        fresh.resize_with(range.len(), || None);
+        let mut seen = vec![false; range.len()];
+        let mut missing = range.len();
+        while missing > 0 {
+            let Ok((slot, leaf)) = feeds.recv() else {
+                return peer.stats(); // pool dropped mid-update
+            };
+            let i = slot - range.start;
+            debug_assert!(!seen[i], "slot {slot} fed twice");
+            seen[i] = true;
+            fresh[i] = leaf;
+            missing -= 1;
+        }
+        let use_cache = substituted && !cache.is_empty();
+        if use_cache {
+            peer.note_stale_substitution();
+        } else if delay_ns > 0 {
+            // Wait mitigation (or an unsubstitutable straggle): the
+            // injected delay plays out, values untouched
+            std::thread::sleep(Duration::from_nanos(delay_ns));
+        }
+        let contrib = if use_cache { &cache } else { &fresh };
+        let leaves: Vec<Option<&[f32]>> = contrib.iter().map(|o| o.as_deref()).collect();
+        let result = run_exchange(&mut peer, &leaves, &ring_rx, &ring_tx);
+        if keep_cache {
+            cache = fresh;
+        }
+        let failed = result.is_err();
+        let msg = DoneMsg {
+            shard,
+            update,
+            result: result.map(|v| if shard == 0 { Some(v) } else { None }),
+            stats: peer.stats(),
+        };
+        if done_tx.send(msg).is_err() || failed {
+            break;
+        }
+    }
+    peer.stats()
+}
+
+/// Drive one update's protocol to completion for this shard.
+fn run_exchange(
+    peer: &mut ShardPeer,
+    leaves: &[Option<&[f32]>],
+    ring_rx: &Receiver<Vec<u8>>,
+    ring_tx: &Sender<Vec<u8>>,
+) -> Result<Vec<f32>> {
+    for frame in peer.begin(leaves)? {
+        let _ = ring_tx.send(frame);
+    }
+    while !peer.done() {
+        match ring_rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(bytes) => {
+                for frame in peer.on_frame(&bytes)? {
+                    let _ = ring_tx.send(frame);
+                }
+            }
+            // timeouts are benign: a neighbor may still be waiting on
+            // compute (that *is* the overlap) or sleeping out a planned
+            // straggle — only disconnection (pool teardown or a peer
+            // executor's exit) ends the wait
+            Err(RecvTimeoutError::Timeout) => {}
+            Err(RecvTimeoutError::Disconnected) => {
+                bail!("ring neighbor disconnected mid-exchange");
+            }
+        }
+    }
+    Ok(peer.take_result())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::allreduce::{allreduce_params, Algorithm};
+    use crate::optim::param::{Init, ParamSpec};
+    use crate::util::rng::Pcg32;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec { name: "w".into(), shape: vec![5, 3], init: Init::Zeros },
+            ParamSpec { name: "b".into(), shape: vec![4], init: Init::Zeros },
+        ]
+    }
+
+    fn random_grads(n_slots: usize, seed: u64) -> Vec<ParamSet> {
+        let mut rng = Pcg32::new(seed);
+        (0..n_slots)
+            .map(|_| {
+                let mut p = ParamSet::zeros_like(&specs());
+                for buf in p.bufs.iter_mut() {
+                    for v in buf.iter_mut() {
+                        *v = rng.normal();
+                    }
+                }
+                p.touch();
+                p
+            })
+            .collect()
+    }
+
+    fn run_pool(
+        cfg: &ShardConfig,
+        updates: &[(Vec<ParamSet>, Vec<f64>)],
+    ) -> Vec<(Vec<f32>, CommStats)> {
+        let n_slots = updates[0].0.len();
+        let total_len = updates[0].0[0].total_len();
+        std::thread::scope(|scope| {
+            let mut pool = ShardPool::start(scope, cfg, n_slots, total_len).unwrap();
+            let mut out = Vec::new();
+            for (grads, weights) in updates {
+                pool.begin(weights).unwrap();
+                // feed out of slot order on purpose: arrival order must
+                // not matter
+                for slot in (0..n_slots).rev() {
+                    pool.feed(slot, &grads[slot]).unwrap();
+                }
+                out.push(pool.finish().unwrap());
+            }
+            pool.shutdown();
+            out
+        })
+    }
+
+    #[test]
+    fn pool_matches_unsharded_allreduce_bitwise() {
+        let n_slots = 4;
+        let grads = random_grads(n_slots, 21);
+        let weights = vec![0.4, 0.3, 0.2, 0.1];
+        let mut reference = grads.clone();
+        allreduce_params(&mut reference, &weights, Algorithm::Ring);
+        let expect: Vec<u32> =
+            reference[0].bufs.iter().flatten().map(|v| v.to_bits()).collect();
+        for shards in [1, 2, 3, 4] {
+            for chunks in [1, 3, 5] {
+                let mut cfg = ShardConfig::new(shards);
+                cfg.chunks = chunks;
+                let out = run_pool(&cfg, &[(grads.clone(), weights.clone())]);
+                let got: Vec<u32> = out[0].0.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, expect, "shards={shards} chunks={chunks} diverged");
+                assert_eq!(out[0].1.stale_substitutions, 0);
+                if shards > 1 {
+                    assert!(out[0].1.frames > 0, "multi-shard exchange moved no frames");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_weight_slots_are_inert_through_the_pool() {
+        let n_slots = 4;
+        let grads = random_grads(n_slots, 33);
+        // slots 2,3 idle (zero weight, zero grads — like an undersized
+        // batch on an elastic pool)
+        let mut grads_padded = grads.clone();
+        for g in grads_padded.iter_mut().skip(2) {
+            g.zero();
+        }
+        let weights = vec![0.5, 0.5, 0.0, 0.0];
+        let mut reference = grads_padded.clone();
+        allreduce_params(&mut reference, &weights, Algorithm::Chunked);
+        let expect: Vec<u32> =
+            reference[0].bufs.iter().flatten().map(|v| v.to_bits()).collect();
+        let mut cfg = ShardConfig::new(3);
+        cfg.chunks = 2;
+        let out = run_pool(&cfg, &[(grads_padded, weights)]);
+        let got: Vec<u32> = out[0].0.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn straggler_wait_is_bitwise_invisible() {
+        let grads = random_grads(4, 55);
+        let weights = vec![0.25; 4];
+        let clean = run_pool(&ShardConfig::new(4), &[(grads.clone(), weights.clone())]);
+        let mut cfg = ShardConfig::new(4);
+        cfg.straggler = Some(StragglerPlan { rate: 1.0, delay_us: 200, seed: 9 });
+        cfg.mitigation = Mitigation::Wait;
+        let delayed = run_pool(&cfg, &[(grads, weights)]);
+        assert_eq!(
+            clean[0].0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            delayed[0].0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "Wait mitigation must not perturb values"
+        );
+    }
+
+    #[test]
+    fn stale_mitigation_is_bounded_deterministic_and_resets() {
+        // every shard straggles every update; bound 2 → per shard the
+        // pattern is fresh, stale, stale, fresh, stale, stale...
+        let updates: Vec<(Vec<ParamSet>, Vec<f64>)> = (0..4)
+            .map(|u| (random_grads(4, 100 + u), vec![0.25; 4]))
+            .collect();
+        let mut cfg = ShardConfig::new(2);
+        cfg.chunks = 2;
+        cfg.straggler = Some(StragglerPlan { rate: 1.0, delay_us: 50, seed: 3 });
+        cfg.mitigation = Mitigation::Stale;
+        cfg.staleness_bound = 2;
+        let a = run_pool(&cfg, &updates);
+        let b = run_pool(&cfg, &updates);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "stale-mitigated run must replay bitwise"
+            );
+            assert_eq!(x.1, y.1);
+        }
+        let subs: Vec<u64> = a.iter().map(|(_, s)| s.stale_substitutions).collect();
+        // update 0 is always fresh; updates 1,2 substitute both shards;
+        // update 3 hits the bound and forces fresh contributions
+        assert_eq!(subs, vec![0, 2, 2, 0]);
+        // update 1's substituted exchange reduces update 0's leaves
+        let clean = run_pool(
+            &ShardConfig::new(2),
+            &[updates[0].clone(), updates[3].clone()],
+        );
+        assert_eq!(
+            a[1].0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            clean[0].0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "full substitution must reproduce the previous update's reduction"
+        );
+        // and the bounded fresh update equals its clean counterpart
+        assert_eq!(
+            a[3].0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            clean[1].0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "post-bound fresh update must match the clean reduction"
+        );
+    }
+
+    #[test]
+    fn compression_is_deterministic_through_the_pool() {
+        let updates: Vec<(Vec<ParamSet>, Vec<f64>)> = (0..3)
+            .map(|u| (random_grads(4, 7 + u), vec![0.25; 4]))
+            .collect();
+        let mut cfg = ShardConfig::new(4);
+        cfg.compression = Compression::Int8;
+        let a = run_pool(&cfg, &updates);
+        let b = run_pool(&cfg, &updates);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.0.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        // int8 moves fewer wire bytes than the uncompressed run
+        let none = run_pool(&ShardConfig::new(4), &updates);
+        assert!(a[0].1.wire_bytes < none[0].1.wire_bytes / 2);
+        assert_eq!(a[0].1.payload_bytes, none[0].1.payload_bytes);
+    }
+
+    #[test]
+    fn flatten_unflatten_roundtrip() {
+        let grads = random_grads(1, 77).remove(0);
+        let flat = flatten_scaled(&grads, 1.0).unwrap();
+        assert_eq!(flat.len(), grads.total_len());
+        let mut back = ParamSet::zeros_like(&specs());
+        unflatten_into(&flat, &mut back);
+        assert_eq!(back.bufs, grads.bufs);
+        assert!(flatten_scaled(&grads, 0.0).is_none());
+    }
+
+    #[test]
+    fn config_validation_rejects_nonsense() {
+        assert!(ShardConfig::new(0).validate().is_err());
+        let mut c = ShardConfig::new(2);
+        c.chunks = 0;
+        assert!(c.validate().is_err());
+        let mut c = ShardConfig::new(2);
+        c.straggler = Some(StragglerPlan { rate: 1.5, delay_us: 1, seed: 0 });
+        assert!(c.validate().is_err());
+        let mut c = ShardConfig::new(2);
+        c.mitigation = Mitigation::Stale;
+        c.staleness_bound = 0;
+        assert!(c.validate().is_err());
+        assert!(ShardConfig::new(4).validate().is_ok());
+        // and the pool refuses more shards than slots
+        std::thread::scope(|s| {
+            assert!(ShardPool::start(s, &ShardConfig::new(8), 4, 16).is_err());
+        });
+    }
+}

@@ -35,6 +35,7 @@
 #[global_allocator]
 static TEST_ALLOC: util::alloc::CountingAlloc = util::alloc::CountingAlloc;
 
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

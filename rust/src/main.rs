@@ -26,7 +26,8 @@ use adabatch::config::{
     allreduce_from_name, build_policy, reference_runtime, DatasetChoice, JobConfig, ModelArch,
     ServeConfig, TrafficShape,
 };
-use adabatch::coordinator::{train, TrainData};
+use adabatch::comm::Compression;
+use adabatch::coordinator::{train, Mitigation, ShardConfig, StragglerPlan, TrainData};
 use adabatch::data::corpus::LmDataset;
 use adabatch::data::synthetic::{generate, SyntheticSpec};
 use adabatch::experiments::{self, harness::ExpCtx};
@@ -116,8 +117,16 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .flag("elastic", "scale active workers with the governed batch (DESIGN.md §10)")
         .opt("max-workers", "4", "elastic: worker threads spawned (activation cap)")
         .opt("samples-per-worker", "256", "elastic: target per-worker share of the batch")
-        .opt("allreduce", "ring", "naive|ring|tree")
+        .opt("allreduce", "ring", "naive|ring|tree|chunked")
         .opt("max-microbatch", "0", "device memory cap (0 = none)")
+        .opt("shards", "0", "shard executors for the chunked-ring exchange (0 = monolithic)")
+        .opt("comm-chunks", "4", "ring chunks per exchange (pipelining depth)")
+        .opt("compress", "none", "gradient frame compression: none|bf16|int8")
+        .opt("straggler-rate", "0", "per-shard per-update straggle probability (0 = off)")
+        .opt("straggler-delay-us", "0", "injected straggler delay in microseconds")
+        .opt("straggler-seed", "0", "seed for the deterministic straggler plan")
+        .opt("mitigation", "wait", "straggler mitigation: wait|stale")
+        .opt("staleness-bound", "1", "max consecutive stale substitutions per shard")
         .opt("seed", "0", "PRNG seed")
         .opt("governor", "interval", "criterion: interval|variance|diversity")
         .opt("max-batch", "0", "adaptive-governor batch cap (0 = 16× initial)")
@@ -165,6 +174,27 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     job.trainer.allreduce = allreduce_from_name(&a.str("allreduce"))?;
     let cap = a.usize("max-microbatch")?;
     job.trainer.max_microbatch = (cap > 0).then_some(cap);
+    let shards = a.usize("shards")?;
+    if shards > 0 {
+        let mut sc = ShardConfig::new(shards);
+        sc.chunks = a.usize("comm-chunks")?;
+        sc.compression = Compression::from_name(&a.str("compress"))?;
+        let rate = a.f64("straggler-rate")?;
+        if rate > 0.0 {
+            sc.straggler = Some(StragglerPlan {
+                rate,
+                delay_us: a.u64("straggler-delay-us")?,
+                seed: a.u64("straggler-seed")?,
+            });
+        }
+        sc.mitigation = match a.str("mitigation").as_str() {
+            "wait" => Mitigation::Wait,
+            "stale" => Mitigation::Stale,
+            other => bail!("unknown mitigation {other:?} (wait|stale)"),
+        };
+        sc.staleness_bound = a.usize("staleness-bound")? as u32;
+        job.trainer.shard = Some(sc);
+    }
     let ckpt_dir = a.str("checkpoint-dir");
     if !ckpt_dir.is_empty() {
         job.trainer.checkpoint_dir = Some(ckpt_dir.into());
@@ -308,6 +338,25 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         ("pack_count", Json::num(wstats.pack_count as f64)),
         ("pack_hit_rate", Json::num(wstats.hit_rate())),
         ("alloc_bytes_steady_state", Json::num(wstats.alloc_bytes as f64)),
+        // sharded-exchange provenance + traffic. The counters are pure
+        // functions of (seed, config) — DESIGN.md §14 — so they are safe
+        // for the byte-compared CI reports.
+        ("shards", Json::num(job.trainer.shard.as_ref().map_or(0, |s| s.shards) as f64)),
+        ("comm_chunks", Json::num(job.trainer.shard.as_ref().map_or(0, |s| s.chunks) as f64)),
+        (
+            "compression",
+            Json::str(job.trainer.shard.as_ref().map_or("none", |s| s.compression.name())),
+        ),
+        (
+            "comm_payload_bytes",
+            Json::num(hist.comm.map_or(0, |c| c.payload_bytes) as f64),
+        ),
+        ("comm_wire_bytes", Json::num(hist.comm.map_or(0, |c| c.wire_bytes) as f64)),
+        ("comm_frames", Json::num(hist.comm.map_or(0, |c| c.frames) as f64)),
+        (
+            "comm_stale_substitutions",
+            Json::num(hist.comm.map_or(0, |c| c.stale_substitutions) as f64),
+        ),
     ]);
     let rendered = report.to_string();
     println!("{rendered}");

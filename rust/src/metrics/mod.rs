@@ -133,6 +133,11 @@ pub struct RunHistory {
     /// activity, steady-state arena bytes) — feeds the train report's
     /// `alloc_bytes_steady_state`/`pack_count` fields
     pub workspace: crate::runtime::WorkspaceStats,
+    /// cumulative ring-exchange traffic for sharded runs (None on the
+    /// monolithic path) — feeds the train report's `comm_*` fields. All
+    /// four counters are pure functions of (seed, config), so they are
+    /// safe for byte-compared reports.
+    pub comm: Option<crate::comm::CommStats>,
 }
 
 impl RunHistory {
@@ -142,6 +147,7 @@ impl RunHistory {
             epochs: Vec::new(),
             diverged: false,
             workspace: Default::default(),
+            comm: None,
         }
     }
 

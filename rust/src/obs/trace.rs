@@ -67,6 +67,26 @@ pub enum SpanPayload {
     Suspend,
     /// Worker pool woken.
     Resume,
+    /// One epoch's aggregate sharded gradient exchange (DESIGN.md §14):
+    /// traffic over the ring for that epoch's updates. The duration is
+    /// the controller's *exposed* comm time (blocked in finish, after
+    /// compute/comm overlap). Recorded before the owning epoch's
+    /// `Epoch` span; `validate_trace` enforces the pairing.
+    Comm {
+        epoch: u32,
+        shards: u32,
+        chunks: u32,
+        /// logical f32 payload bytes moved (pre-compression)
+        bytes: u64,
+        /// encoded bytes on the wire (frames + compression)
+        wire_bytes: u64,
+        frames: u64,
+        stale: u64,
+    },
+    /// A planned straggler delay fired on one shard for one update
+    /// (plan-driven, so the field is the *planned* delay, never wall
+    /// time); `substituted` marks a bounded-staleness substitution.
+    Straggler { epoch: u32, shard: u32, delay_ns: u64, substituted: bool },
 }
 
 impl SpanPayload {
@@ -87,6 +107,8 @@ impl SpanPayload {
             SpanPayload::Reload { .. } => "reload",
             SpanPayload::Suspend => "suspend",
             SpanPayload::Resume => "resume",
+            SpanPayload::Comm { .. } => "comm",
+            SpanPayload::Straggler { .. } => "straggler",
         }
     }
 }

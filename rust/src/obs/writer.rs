@@ -108,6 +108,23 @@ fn payload_fields(p: &SpanPayload, m: &mut BTreeMap<String, Json>) {
             put("slo_ns", Json::num(slo_ns as f64));
         }
         SpanPayload::Suspend | SpanPayload::Resume => {}
+        SpanPayload::Comm { epoch, shards, chunks, bytes, wire_bytes, frames, stale } => {
+            put("epoch", Json::num(epoch as f64));
+            put("shards", Json::num(shards as f64));
+            put("chunks", Json::num(chunks as f64));
+            put("bytes", Json::num(bytes as f64));
+            put("wire_bytes", Json::num(wire_bytes as f64));
+            put("frames", Json::num(frames as f64));
+            put("stale", Json::num(stale as f64));
+        }
+        SpanPayload::Straggler { epoch, shard, delay_ns, substituted } => {
+            put("epoch", Json::num(epoch as f64));
+            put("shard", Json::num(shard as f64));
+            // the *planned* delay (a pure function of seed/shard/update),
+            // never a measured one — safe for the byte-compared JSONL
+            put("delay_ns", Json::num(delay_ns as f64));
+            put("substituted", Json::Bool(substituted));
+        }
     }
 }
 
@@ -210,11 +227,17 @@ pub struct TraceSummary {
 }
 
 /// Validate a JSONL trace's schema: every non-empty line parses as a
-/// JSON object with string `kind`/`tid` and numeric `seq`, and per-tid
+/// JSON object with string `kind`/`tid` and numeric `seq`, per-tid
 /// sequence numbers are strictly increasing (the CI `obs-smoke`
-/// contract, exposed as `adabatch validate-trace`).
+/// contract, exposed as `adabatch validate-trace`), and comm/straggler
+/// spans nest inside their owning epoch: the train controller records
+/// the `epoch` span at epoch end, so every `comm`/`straggler` line must
+/// carry the same `epoch` value as the *next* `epoch` line on its tid —
+/// a dangling comm span (no owning epoch) is a schema error.
 pub fn validate_trace(text: &str) -> Result<TraceSummary> {
     let mut last_seq: BTreeMap<String, u64> = BTreeMap::new();
+    // tid → (line, epoch) of comm/straggler spans awaiting their epoch
+    let mut pending_comm: BTreeMap<String, Vec<(usize, i64)>> = BTreeMap::new();
     let mut lines = 0usize;
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
@@ -222,7 +245,8 @@ pub fn validate_trace(text: &str) -> Result<TraceSummary> {
         }
         let n = i + 1;
         let j = Json::parse(line).map_err(|e| anyhow!("line {n}: {e}"))?;
-        j.get("kind")
+        let kind = j
+            .get("kind")
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow!("line {n}: missing string key \"kind\""))?;
         let tid = j
@@ -240,11 +264,45 @@ pub fn validate_trace(text: &str) -> Result<TraceSummary> {
                 ));
             }
         }
+        match kind {
+            "comm" | "straggler" => {
+                let ep = j.get("epoch").and_then(Json::as_i64).ok_or_else(|| {
+                    anyhow!("line {n}: {kind} span missing integer key \"epoch\"")
+                })?;
+                pending_comm.entry(tid.to_string()).or_default().push((n, ep));
+            }
+            "epoch" => {
+                let ep = j.get("epoch").and_then(Json::as_i64).ok_or_else(|| {
+                    anyhow!("line {n}: epoch span missing integer key \"epoch\"")
+                })?;
+                if let Some(pend) = pending_comm.get_mut(tid) {
+                    for &(ln, pe) in pend.iter() {
+                        if pe != ep {
+                            return Err(anyhow!(
+                                "line {ln}: comm/straggler span for epoch {pe} is not \
+                                 enclosed by its epoch (next epoch span at line {n} is \
+                                 epoch {ep})"
+                            ));
+                        }
+                    }
+                    pend.clear();
+                }
+            }
+            _ => {}
+        }
         last_seq.insert(tid.to_string(), seq);
         lines += 1;
     }
     if lines == 0 {
         return Err(anyhow!("trace contains no events"));
+    }
+    for (tid, pend) in &pending_comm {
+        if let Some(&(ln, ep)) = pend.first() {
+            return Err(anyhow!(
+                "line {ln}: dangling comm/straggler span for epoch {ep} on tid {tid:?} \
+                 (no owning epoch span follows)"
+            ));
+        }
     }
     Ok(TraceSummary { lines, threads: last_seq.len() })
 }
@@ -325,6 +383,74 @@ mod tests {
                           {\"kind\":\"a\",\"tid\":\"ctl\",\"seq\":6}\n";
         let summary = validate_trace(per_thread).unwrap();
         assert_eq!(summary.threads, 2, "monotonicity is per thread, not global");
+    }
+
+    #[test]
+    fn comm_spans_must_nest_inside_their_epoch() {
+        let line = |kind: &str, seq: u64, epoch: u32| {
+            format!("{{\"kind\":\"{kind}\",\"tid\":\"ctl\",\"seq\":{seq},\"epoch\":{epoch}}}\n")
+        };
+        // well-formed: comm + straggler before their epoch span
+        let good = format!(
+            "{}{}{}{}{}",
+            line("straggler", 1, 0),
+            line("comm", 2, 0),
+            line("epoch", 3, 0),
+            line("comm", 4, 1),
+            line("epoch", 5, 1),
+        );
+        assert_eq!(validate_trace(&good).unwrap().lines, 5);
+        // comm span claiming a different epoch than its enclosing one
+        let crossed = format!("{}{}", line("comm", 1, 1), line("epoch", 2, 0));
+        let err = validate_trace(&crossed).unwrap_err().to_string();
+        assert!(err.contains("not"), "{err}");
+        // dangling comm span with no owning epoch at all
+        let dangling = format!("{}{}", line("epoch", 1, 0), line("comm", 2, 1));
+        let err = validate_trace(&dangling).unwrap_err().to_string();
+        assert!(err.contains("dangling"), "{err}");
+        // comm spans missing the epoch key are rejected outright
+        assert!(
+            validate_trace("{\"kind\":\"comm\",\"tid\":\"ctl\",\"seq\":1}\n").is_err(),
+            "comm span without epoch key"
+        );
+        // nesting is tracked per tid: a worker's epoch cannot adopt the
+        // controller's comm span
+        let cross_tid = format!(
+            "{}{}",
+            line("comm", 1, 0),
+            "{\"kind\":\"epoch\",\"tid\":\"w0\",\"seq\":1,\"epoch\":0}\n"
+        );
+        assert!(validate_trace(&cross_tid).is_err(), "cross-tid adoption");
+    }
+
+    #[test]
+    fn comm_and_straggler_fields_serialize() {
+        let mut buf = TraceBuf::new(8);
+        buf.record(SpanPayload::Straggler {
+            epoch: 0,
+            shard: 2,
+            delay_ns: 5_000,
+            substituted: true,
+        });
+        buf.record_span(
+            SpanPayload::Comm {
+                epoch: 0,
+                shards: 4,
+                chunks: 8,
+                bytes: 1024,
+                wire_bytes: 600,
+                frames: 24,
+                stale: 1,
+            },
+            42,
+        );
+        let evs = buf.drain();
+        let streams: Vec<(String, &[TraceEvent])> = vec![("ctl".to_string(), evs.as_slice())];
+        let text = jsonl(&streams, false);
+        assert!(text.contains("\"kind\":\"straggler\""));
+        assert!(text.contains("\"substituted\":true"));
+        assert!(text.contains("\"wire_bytes\":600"));
+        assert!(text.contains("\"delay_ns\":5000"));
     }
 
     #[test]

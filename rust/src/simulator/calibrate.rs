@@ -20,6 +20,68 @@
 //! validation DESIGN.md promises.
 
 use crate::schedule::BatchSchedule;
+use crate::simulator::Interconnect;
+
+/// One measured chunked-ring exchange: `secs` observed for a payload of
+/// `bytes` across `p` shards in `chunks` pipeline stages. Collected by
+/// `bench_runtime`'s multi-shard pass and fed to [`fit_interconnect`].
+#[derive(Debug, Clone, Copy)]
+pub struct CommSample {
+    pub bytes: usize,
+    pub p: usize,
+    pub chunks: usize,
+    pub secs: f64,
+}
+
+/// Least-squares fit of an [`Interconnect`] (bandwidth, latency) from
+/// measured chunked-ring timings.
+///
+/// The cost model `T = x/BW + y·λ` is linear in `(1/BW, λ)` with
+/// `x = 2(p−1)/p · bytes` and `y = 2(p−1) + K − 1`, so the fit is the
+/// 2×2 normal-equations solve
+///
+/// ```text
+/// [Σx²  Σxy] [1/BW]   [Σx·t]
+/// [Σxy  Σy²] [ λ  ] = [Σy·t]
+/// ```
+///
+/// Needs ≥ 2 samples that vary in *both* x and y (e.g. two payload sizes
+/// at two shard counts); returns None for degenerate systems or unphysical
+/// fits (non-positive bandwidth, negative latency). Samples with `p ≤ 1`
+/// carry no communication and are skipped.
+pub fn fit_interconnect(name: &str, samples: &[CommSample]) -> Option<Interconnect> {
+    let (mut sxx, mut sxy, mut syy, mut sxt, mut syt) = (0.0, 0.0, 0.0, 0.0, 0.0);
+    let mut n = 0usize;
+    for s in samples {
+        if s.p <= 1 || !s.secs.is_finite() || s.secs <= 0.0 {
+            continue;
+        }
+        let p = s.p as f64;
+        let x = 2.0 * (p - 1.0) / p * s.bytes as f64;
+        let y = 2.0 * (p - 1.0) + s.chunks.max(1) as f64 - 1.0;
+        sxx += x * x;
+        sxy += x * y;
+        syy += y * y;
+        sxt += x * s.secs;
+        syt += y * s.secs;
+        n += 1;
+    }
+    if n < 2 {
+        return None;
+    }
+    let det = sxx * syy - sxy * sxy;
+    // relative determinant guard: collinear designs (single payload size
+    // at a single shard count) cannot separate bandwidth from latency
+    if det.abs() <= 1e-12 * sxx * syy {
+        return None;
+    }
+    let inv_bw = (sxt * syy - syt * sxy) / det;
+    let lat = (syt * sxx - sxt * sxy) / det;
+    if !(inv_bw > 0.0) || !lat.is_finite() || lat < 0.0 {
+        return None;
+    }
+    Some(Interconnect { name: name.into(), bandwidth: 1.0 / inv_bw, latency: lat })
+}
 
 /// mean over epochs of 1/r_e for a schedule.
 pub fn mean_inv_batch(schedule: &BatchSchedule, epochs: usize) -> f64 {
@@ -152,6 +214,48 @@ mod tests {
         // 20 epochs each of 1/128, 1/256, ... 1/2048
         let expect = (1.0 / 128.0 + 1.0 / 256.0 + 1.0 / 512.0 + 1.0 / 1024.0 + 1.0 / 2048.0) / 5.0;
         assert!((mean_inv_batch(&sched, 100) - expect).abs() < 1e-15);
+    }
+
+    /// Synthetic timings generated *from* the model must fit back to the
+    /// generating constants exactly (the design matrix is full rank when
+    /// payloads, shard counts and chunk depths all vary).
+    #[test]
+    fn interconnect_fit_roundtrips_synthetic_timings() {
+        let truth = Interconnect::nvlink_p100();
+        let mut samples = Vec::new();
+        for &bytes in &[1 << 16, 1 << 20, 8 << 20] {
+            for &p in &[2usize, 4] {
+                for &k in &[1usize, 4] {
+                    samples.push(CommSample {
+                        bytes,
+                        p,
+                        chunks: k,
+                        secs: truth.ring_allreduce_chunked(bytes, p, k),
+                    });
+                }
+            }
+        }
+        let fit = fit_interconnect("fit", &samples).unwrap();
+        assert!((fit.bandwidth - truth.bandwidth).abs() / truth.bandwidth < 1e-6, "{fit:?}");
+        assert!((fit.latency - truth.latency).abs() / truth.latency < 1e-6, "{fit:?}");
+    }
+
+    #[test]
+    fn interconnect_fit_rejects_degenerate_designs() {
+        // all samples identical in (x, y): bandwidth and latency are not
+        // separable — the fit must refuse rather than divide by ~0
+        let s = CommSample { bytes: 1 << 20, p: 4, chunks: 2, secs: 1e-3 };
+        assert!(fit_interconnect("degenerate", &[s, s, s]).is_none());
+        // fewer than two usable samples (p=1 carries no comm)
+        let solo = CommSample { bytes: 1 << 20, p: 1, chunks: 2, secs: 1e-3 };
+        assert!(fit_interconnect("solo", &[solo, s]).is_none());
+        // noise driving the latency negative is unphysical
+        let fast = CommSample { bytes: 64, p: 2, chunks: 1, secs: 1e-12 };
+        let slow = CommSample { bytes: 1 << 26, p: 2, chunks: 8, secs: 1.0 };
+        let fit = fit_interconnect("noisy", &[fast, slow]);
+        if let Some(ic) = fit {
+            assert!(ic.latency >= 0.0 && ic.bandwidth > 0.0, "{ic:?}");
+        }
     }
 
     #[test]

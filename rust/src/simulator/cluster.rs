@@ -67,6 +67,20 @@ impl ClusterModel {
         EpochCost { fwd, bwd, comm }
     }
 
+    /// Cost of one epoch at batch `r` with the gradient exchange walked
+    /// through the *chunked* ring ([`Interconnect::ring_allreduce_chunked`])
+    /// — the predicted side of `bench_runtime`'s multi-shard
+    /// predicted-vs-measured column. Comm here is the full (un-overlapped)
+    /// exchange; the measured side hides part of it behind backward
+    /// compute, so predicted comm is an upper bound on exposed comm.
+    pub fn sharded_epoch_cost(&self, w: &Workload, r: usize, chunks: usize) -> EpochCost {
+        let mut cost = self.epoch_cost(w, r);
+        let updates = (w.n_samples / r.max(1)).max(1) as f64;
+        cost.comm =
+            updates * self.interconnect.ring_allreduce_chunked(w.param_bytes, self.gpus, chunks);
+        cost
+    }
+
     /// Total cost of `epochs` epochs under a batch schedule.
     pub fn schedule_cost(&self, w: &Workload, schedule: &BatchSchedule, epochs: usize) -> EpochCost {
         let mut acc = EpochCost::default();
@@ -195,6 +209,24 @@ mod tests {
         assert!(large.comm < small.comm);
         // flops/epoch identical -> fwd+bwd differ only via utilization
         assert!(large.fwd < small.fwd);
+    }
+
+    #[test]
+    fn sharded_comm_fraction_shrinks_as_batch_grows() {
+        // the AdaBatch §3.2 amortization argument, through the chunked
+        // model: comm is per update, updates/epoch fall as 1/r
+        let c = cluster(4);
+        let w = workload();
+        let frac = |r: usize| {
+            let cost = c.sharded_epoch_cost(&w, r, 4);
+            cost.comm / cost.total()
+        };
+        assert!(frac(512) > frac(2048));
+        assert!(frac(2048) > frac(8192));
+        // K=1 chunking degenerates to the plain ring epoch cost
+        let plain = c.epoch_cost(&w, 1024);
+        let k1 = c.sharded_epoch_cost(&w, 1024, 1);
+        assert_eq!(plain.total(), k1.total());
     }
 
     #[test]

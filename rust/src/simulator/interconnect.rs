@@ -23,13 +23,22 @@ pub struct Interconnect {
 }
 
 impl Interconnect {
-    /// NVLink 1.0 on P100: 4 links × 20 GB/s per direction; an effective
-    /// ring uses one link pair — 40 GB/s effective with µs-scale latency.
+    /// NVLink 1.0 on P100 (the paper's §4.2 DGX-1 testbed). Each P100
+    /// carries 4 NVLink 1.0 links at 20 GB/s per direction (NVIDIA P100
+    /// whitepaper, "NVLink High Speed Interconnect"); a ring schedule
+    /// drives one bidirectional link pair per neighbor, so we take
+    /// 2 × 20 GB/s = 40 GB/s effective, and the µs-scale per-hop latency
+    /// reported for NCCL rings on NVLink (NCCL 2.x launch material quotes
+    /// single-digit µs per hop).
     pub fn nvlink_p100() -> Self {
         Interconnect { name: "NVLink".into(), bandwidth: 40e9, latency: 5e-6 }
     }
 
-    /// PCIe 3.0 x16 fallback (for the ablation contrasting interconnects).
+    /// PCIe 3.0 x16 fallback (the ablation contrasting interconnects).
+    /// Nominal 15.75 GB/s per direction; ~12 GB/s is the sustained
+    /// large-transfer figure after 128b/130b framing + TLP overhead
+    /// (bandwidthTest on Broadwell-era hosts), with host-hop latencies an
+    /// order of magnitude above NVLink's.
     pub fn pcie3() -> Self {
         Interconnect { name: "PCIe3".into(), bandwidth: 12e9, latency: 15e-6 }
     }
@@ -41,6 +50,34 @@ impl Interconnect {
         }
         let p = p as f64;
         2.0 * (p - 1.0) / p * bytes as f64 / self.bandwidth + 2.0 * (p - 1.0) * self.latency
+    }
+
+    /// Seconds for a *chunked* ring all-reduce of `bytes` across `p`
+    /// devices with the payload split into `chunks` pipeline stages — the
+    /// cost model for [`crate::comm`]'s exchange (DESIGN.md §14).
+    ///
+    /// Chunking does not change the total volume — every byte still
+    /// crosses each link 2(p−1)/p times — but it deepens the pipeline:
+    /// the chunks flow through the ring back-to-back, so the serial
+    /// latency chain grows from 2(p−1) hops to 2(p−1) + (K−1) hop slots
+    /// (the extra K−1 is the fill/drain of the pipeline):
+    ///
+    /// ```text
+    /// T(bytes, p, K) = 2·(p−1)/p · bytes / BW  +  (2·(p−1) + K − 1) · latency
+    /// ```
+    ///
+    /// K = 1 degenerates to [`Self::ring_allreduce`]. The win chunking
+    /// buys is *overlap with compute* (reduce-scatter starts while
+    /// backward still runs), which this pure-comm figure deliberately
+    /// excludes — the cluster model composes the two.
+    pub fn ring_allreduce_chunked(&self, bytes: usize, p: usize, chunks: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let k = chunks.max(1) as f64;
+        let p = p as f64;
+        2.0 * (p - 1.0) / p * bytes as f64 / self.bandwidth
+            + (2.0 * (p - 1.0) + k - 1.0) * self.latency
     }
 
     /// Seconds for a naive all-to-root reduce + broadcast (the baseline
@@ -88,6 +125,26 @@ mod tests {
             Interconnect::nvlink_p100().ring_allreduce(bytes, 4)
                 < Interconnect::pcie3().ring_allreduce(bytes, 4)
         );
+    }
+
+    #[test]
+    fn chunked_k1_degenerates_to_plain_ring() {
+        let ic = Interconnect::nvlink_p100();
+        for p in [2, 4, 8] {
+            let bytes = 10 << 20;
+            assert_eq!(ic.ring_allreduce_chunked(bytes, p, 1), ic.ring_allreduce(bytes, p));
+        }
+        assert_eq!(ic.ring_allreduce_chunked(1 << 30, 1, 8), 0.0);
+    }
+
+    #[test]
+    fn chunking_adds_only_pipeline_latency() {
+        let ic = Interconnect::pcie3();
+        let bytes = 10 << 20;
+        let t1 = ic.ring_allreduce_chunked(bytes, 4, 1);
+        let t8 = ic.ring_allreduce_chunked(bytes, 4, 8);
+        // extra cost is exactly (K-1) latency slots — volume is unchanged
+        assert!((t8 - t1 - 7.0 * ic.latency).abs() < 1e-12, "{t1} {t8}");
     }
 
     #[test]

@@ -13,7 +13,10 @@ pub mod flops;
 pub mod gpu;
 pub mod interconnect;
 
-pub use calibrate::{calibrate, fit_r_half, predicted_speedup, Table1Anchor, TABLE1_ANCHORS};
+pub use calibrate::{
+    calibrate, fit_interconnect, fit_r_half, predicted_speedup, CommSample, Table1Anchor,
+    TABLE1_ANCHORS,
+};
 pub use cluster::{ClusterModel, EpochCost, Workload};
 pub use gpu::GpuModel;
 pub use interconnect::Interconnect;

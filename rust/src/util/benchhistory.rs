@@ -44,11 +44,45 @@ pub fn load(path: &Path) -> Result<Vec<Json>> {
     }
 }
 
+/// Short git revision of the working tree, or `"unknown"` outside a git
+/// checkout (tarball builds, sandboxed CI runners without `.git`).
+pub fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
 /// Append `record` to the history at `path` (creating it if absent) and
 /// return the new record count. The whole file is rewritten — histories
 /// are small and the one-record-per-line layout keeps diffs minimal.
+///
+/// Every appended object is stamped with provenance the regression gates
+/// need (existing keys are never overwritten):
+///
+/// * `git_rev` — which commit produced the number;
+/// * `calibrated` — `false` for analytic bootstrap records (`"mode":
+///   "bootstrap"`, synthesized from the cost model rather than measured
+///   on this machine), `true` otherwise. `--check` baseline selection
+///   skips uncalibrated records: comparing a wall-clock run against an
+///   analytic bootstrap flags phantom regressions.
 pub fn append(path: &Path, record: Json) -> Result<usize> {
     let mut records = load(path)?;
+    let record = match record {
+        Json::Obj(mut m) => {
+            let bootstrap = m.get("mode").and_then(Json::as_str) == Some("bootstrap");
+            m.entry("git_rev".to_string()).or_insert_with(|| Json::Str(git_rev()));
+            m.entry("calibrated".to_string()).or_insert(Json::Bool(!bootstrap));
+            Json::Obj(m)
+        }
+        other => other,
+    };
     records.push(record);
     let mut out = String::from("[\n");
     for (i, r) in records.iter().enumerate() {
@@ -96,6 +130,34 @@ mod tests {
             latest(&records, |r| r.get("tag").and_then(Json::as_str) == Some("a")).unwrap();
         assert_eq!(last_a.get("run").and_then(Json::as_f64), Some(1.0));
         assert!(latest(&records, |r| r.get("tag").and_then(Json::as_str) == Some("z")).is_none());
+
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_stamps_provenance() {
+        let dir = std::env::temp_dir().join("adabatch_benchhistory_test");
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("prov_{}.json", std::process::id()));
+        let _ = fs::remove_file(&path);
+
+        append(&path, Json::obj(vec![("mode", Json::str("measured"))])).unwrap();
+        append(&path, Json::obj(vec![("mode", Json::str("bootstrap"))])).unwrap();
+        // caller-set keys win over the automatic stamp
+        append(
+            &path,
+            Json::obj(vec![("mode", Json::str("bootstrap")), ("calibrated", Json::Bool(true))]),
+        )
+        .unwrap();
+
+        let records = load(&path).unwrap();
+        assert_eq!(records[0].get("calibrated"), Some(&Json::Bool(true)));
+        assert_eq!(records[1].get("calibrated"), Some(&Json::Bool(false)));
+        assert_eq!(records[2].get("calibrated"), Some(&Json::Bool(true)));
+        for r in &records {
+            let rev = r.get("git_rev").and_then(Json::as_str).unwrap();
+            assert!(!rev.is_empty());
+        }
 
         let _ = fs::remove_file(&path);
     }

@@ -1,0 +1,140 @@
+//! End-to-end sharded-execution contracts (DESIGN.md §14).
+//!
+//! The chunked-ring shard pool replaces the monolithic all-reduce on the
+//! training hot path, and its headline promise is *bitwise* neutrality:
+//! at the same slot layout, 1..=N shard executors produce exactly the
+//! monolithic trajectory, because every shard folds its aligned slot
+//! blocks in the one canonical lane-tree order. These tests pin that
+//! promise through the full `train()` stack — governor transitions,
+//! accumulation, elastic activation, eval — on the reference backend (no
+//! artifacts needed), plus the determinism of the lossy knobs
+//! (compression, straggler substitution) that are allowed to change the
+//! bits but never the replay.
+
+use adabatch::comm::Compression;
+use adabatch::coordinator::{train, Mitigation, StragglerPlan, TrainData, TrainerConfig};
+use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use adabatch::metrics::RunHistory;
+use adabatch::runtime::ModelRuntime;
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
+
+fn small_images(classes: usize) -> (TrainData, TrainData) {
+    let mut spec = SyntheticSpec::cifar10();
+    spec.n_classes = classes;
+    spec.train_per_class = 128 / classes;
+    spec.test_per_class = 32 / classes;
+    let d = generate(&spec);
+    (TrainData::Images(d.train), TrainData::Images(d.test))
+}
+
+fn mlp_rt() -> ModelRuntime {
+    ModelRuntime::reference_mlp("ref_mlp", IMG_LEN, 8, 4, &[8, 16, 32, 64], 64)
+}
+
+fn doubling_gov(initial: usize, interval: usize) -> IntervalGovernor {
+    IntervalGovernor::new(AdaBatchPolicy::new(
+        "shard-eq",
+        BatchSchedule::doubling(initial, interval),
+        LrSchedule::step(0.05, 0.75, interval),
+    ))
+}
+
+fn run(cfg: &TrainerConfig) -> RunHistory {
+    let (train_d, test_d) = small_images(4);
+    let rt = mlp_rt();
+    let mut gov = doubling_gov(16, 2);
+    train(&rt, cfg, &mut gov, &train_d, &test_d).unwrap().0
+}
+
+/// Every epoch metric, as bits — fp equality up to the last ulp.
+fn fingerprint(h: &RunHistory) -> Vec<(usize, u64, u64, u64)> {
+    h.epochs
+        .iter()
+        .map(|e| (e.batch, e.train_loss.to_bits(), e.test_loss.to_bits(), e.test_error.to_bits()))
+        .collect()
+}
+
+#[test]
+fn sharded_training_matches_monolithic_across_shard_counts() {
+    let mono = run(&TrainerConfig::new(4).with_seed(11).with_workers(4));
+    assert!(!mono.epochs.is_empty() && !mono.diverged);
+    assert!(mono.comm.is_none(), "monolithic path must not report comm traffic");
+    for shards in [1usize, 2, 4] {
+        for chunks in [1usize, 3] {
+            let cfg =
+                TrainerConfig::new(4).with_seed(11).with_workers(4).with_shards(shards, chunks);
+            let sharded = run(&cfg);
+            assert_eq!(
+                fingerprint(&sharded),
+                fingerprint(&mono),
+                "{shards} shards x {chunks} chunks diverged from the monolithic bits"
+            );
+            let comm = sharded.comm.expect("sharded runs report comm traffic");
+            if shards > 1 {
+                assert!(comm.frames > 0, "ring frames must flow for {shards} shards");
+                assert!(comm.wire_bytes > 0);
+            } else {
+                assert_eq!(comm.frames, 0, "a 1-shard ring sends nothing");
+            }
+        }
+    }
+}
+
+/// Sharding composes with elastic activation: parked workers are
+/// zero-weight slots, which the ring treats as covered-but-absent — the
+/// elastic trajectory keeps its bits.
+#[test]
+fn sharded_elastic_run_matches_monolithic_elastic_bitwise() {
+    let base = TrainerConfig::new(4).with_seed(23).with_elastic(4, 16);
+    let mono = run(&base);
+    assert!(!mono.epochs.is_empty());
+    let sharded = run(&base.clone().with_shards(4, 2));
+    assert_eq!(
+        fingerprint(&sharded),
+        fingerprint(&mono),
+        "elastic + sharded exchange diverged from elastic + monolithic all-reduce"
+    );
+}
+
+/// Lossy knobs may change the result but never the replay: an int8 +
+/// planned-straggler + stale-substitution run is a pure function of
+/// (seed, config), down to its comm counters.
+#[test]
+fn compressed_straggler_run_replays_bitwise() {
+    let mut cfg = TrainerConfig::new(3).with_seed(5).with_workers(4).with_shards(4, 2);
+    {
+        let sc = cfg.shard.as_mut().unwrap();
+        sc.compression = Compression::Int8;
+        sc.straggler = Some(StragglerPlan { rate: 0.5, delay_us: 30, seed: 9 });
+        sc.mitigation = Mitigation::Stale;
+        sc.staleness_bound = 2;
+    }
+    let a = run(&cfg);
+    let b = run(&cfg);
+    assert_eq!(fingerprint(&a), fingerprint(&b), "lossy sharded run must replay bitwise");
+    assert_eq!(a.comm, b.comm, "comm counters are part of the deterministic contract");
+    let comm = a.comm.unwrap();
+    assert!(
+        comm.wire_bytes * 2 < comm.payload_bytes,
+        "int8 frames should be well under half the f32 payload: {comm:?}"
+    );
+}
+
+/// bf16 compression is deterministic and close enough that the small MLP
+/// still trains (the error-feedback residual keeps quantization noise
+/// from accumulating).
+#[test]
+fn bf16_compression_still_learns() {
+    let mut cfg = TrainerConfig::new(4).with_seed(11).with_workers(4).with_shards(4, 4);
+    cfg.shard.as_mut().unwrap().compression = Compression::Bf16;
+    let h = run(&cfg);
+    assert!(!h.diverged, "bf16 exchange must not destabilize the run");
+    let (first, last) = (h.epochs.first().unwrap(), h.epochs.last().unwrap());
+    assert!(
+        last.train_loss < first.train_loss,
+        "bf16 run stopped learning: {} -> {}",
+        first.train_loss,
+        last.train_loss
+    );
+    assert_eq!(fingerprint(&run(&cfg)), fingerprint(&h), "bf16 run must replay bitwise");
+}
