@@ -5,7 +5,10 @@
 //! statistics (decision quality at zero training cost).
 
 use adabatch::data::loader::BatchPlanner;
-use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, GradStats, GradVarianceController};
+use adabatch::schedule::{
+    AdaBatchPolicy, BatchGovernor, BatchSchedule, CabsGovernor, GradStats,
+    GradVarianceController, LrSchedule, SievertGovernor,
+};
 use adabatch::util::benchkit::{black_box, BenchSuite};
 use adabatch::util::rng::Pcg32;
 use adabatch::util::table::Table;
@@ -28,34 +31,47 @@ fn main() {
     });
     suite.print_report();
 
-    // ablation: interval doubling vs variance criterion on a synthetic
-    // training trace where gradient signal decays geometrically (the
-    // classic SGD regime) — compare when each schedule reaches large batch.
+    // ablation: interval doubling vs the data-driven criteria on a
+    // synthetic training trace where gradient signal and loss decay
+    // geometrically (the classic SGD regime) — compare when each
+    // criterion reaches large batch at zero training cost.
     let mut table = Table::new(
-        "ablation: interval-doubling (paper) vs gradient-variance criterion",
-        &["iteration", "signal/noise", "AdaBatch batch", "variance-ctrl batch"],
+        "ablation: interval-doubling (paper) vs variance / CABS / loss-plateau criteria",
+        &["iteration", "signal/noise", "AdaBatch", "variance", "CABS", "sievert"],
     );
     let interval_iters = 200; // "epoch" = 100 iters, double every 2 epochs
     let schedule = BatchSchedule::doubling(128, 2);
     let mut ctrl = GradVarianceController::new(128, 2.0, 25, 2, 16384);
+    let flat = LrSchedule::step(0.1, 1.0, 1000);
+    let mut cabs = CabsGovernor::new(128, flat.clone(), 25, 2, 16384);
+    let mut sievert = SievertGovernor::new(128, flat, 100, 2, 16384);
     let mut rng = Pcg32::new(9);
     for it in 0..1200usize {
         let epoch = it / 100;
         let signal = (0.98f64).powi(it as i32); // decaying mean-gradient norm²
         let noise = 1.0 + 0.1 * rng.normal() as f64; // stationary variance
-        let _ = ctrl.observe(GradStats { mean_grad_sq_norm: signal, grad_variance: noise.max(0.0) });
+        // loss decays fast early, then plateaus — the sievert regime
+        let loss = 0.1 + (0.995f64).powi(it as i32);
+        let stats = GradStats { mean_grad_sq_norm: signal, grad_variance: noise.max(0.0) };
+        let _ = ctrl.observe(stats);
+        cabs.observe_loss(loss);
+        cabs.observe(stats);
+        sievert.observe_loss(loss);
         if it % interval_iters == 0 {
             table.row(vec![
                 it.to_string(),
                 format!("{:.3}", signal / (noise / ctrl.current_batch() as f64)),
                 schedule.batch_at(epoch).to_string(),
                 ctrl.current_batch().to_string(),
+                cabs.current_batch().to_string(),
+                sievert.current_batch().to_string(),
             ]);
         }
     }
     table.print();
     println!(
-        "Both schedules reach large batches as gradient signal decays; the paper's\n\
-         fixed-interval rule needs no statistics plumbing — the trade DESIGN.md discusses."
+        "All criteria reach large batches as gradient signal decays and the loss\n\
+         plateaus; the paper's fixed-interval rule needs no statistics plumbing —\n\
+         the trade DESIGN.md discusses."
     );
 }

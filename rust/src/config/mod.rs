@@ -11,7 +11,7 @@ use crate::data::corpus::VOCAB;
 use crate::data::synthetic::IMG_LEN;
 use crate::obs::TelemetryConfig;
 use crate::runtime::{ModelRuntime, REF_EVAL_BATCH, REF_TRAIN_LADDER};
-use crate::schedule::{AdaBatchPolicy, BatchSchedule, LrSchedule};
+use crate::schedule::{AdaBatchPolicy, BatchSchedule, CouplingRule, LrSchedule};
 use crate::serve::lifecycle::LifecycleConfig;
 use crate::serve::serve_ladder;
 
@@ -131,6 +131,9 @@ pub struct JobConfig {
     pub dataset: DatasetChoice,
     pub policy: AdaBatchPolicy,
     pub trainer: TrainerConfig,
+    /// LR rescale applied by the governor on batch growth (AdaBatch §3);
+    /// `CouplingRule::None` reproduces the pre-coupling behaviour.
+    pub coupling: CouplingRule,
 }
 
 impl JobConfig {
@@ -140,6 +143,7 @@ impl JobConfig {
             dataset,
             policy,
             trainer: TrainerConfig::new(epochs),
+            coupling: CouplingRule::None,
         }
     }
 

@@ -345,11 +345,12 @@ pub fn train<G: BatchGovernor + ?Sized>(
                 if elastic.is_some() {
                     ctl_trace.record(SpanPayload::Elastic { active: active as u32 });
                 }
+                let epoch_lr = governor.lr_coupling(epoch, 0, planner.iters_per_epoch(r).max(1));
                 ctl_trace.record(SpanPayload::GovernorDecision {
                     batch: r as u32,
                     decisions: governor.decisions() as u32,
+                    lr: epoch_lr,
                 });
-                let epoch_lr = governor.lr_coupling(epoch, 0, planner.iters_per_epoch(r).max(1));
                 if r != last_batch {
                     log::info!(
                         "[{}] epoch {epoch}: batch {r} = {} slots × {} µbatch × {} accum, \
@@ -409,9 +410,9 @@ pub fn train<G: BatchGovernor + ?Sized>(
                             engine.dispatch(&exe, &params, shards, plan.microbatch, active)?
                         }
                     };
-                    for (w, out) in outs.iter().enumerate() {
-                        loss_sum += out.loss * weights[w];
-                    }
+                    let iter_loss: f64 =
+                        outs.iter().enumerate().map(|(w, out)| out.loss * weights[w]).sum();
+                    loss_sum += iter_loss;
                     let micro_norms: Vec<f64> = if governor.wants_stats() {
                         outs.iter()
                             .flat_map(|o| o.micro_sq_norms.iter().copied())
@@ -468,6 +469,10 @@ pub fn train<G: BatchGovernor + ?Sized>(
                             &micro_norms,
                             grad.sq_norm(),
                         );
+                        // loss first, then stats: loss-window criteria
+                        // (sievert, CABS) see this iteration's loss when
+                        // the stats call closes their window
+                        governor.observe_loss(iter_loss);
                         governor.observe(stats);
                     }
 

@@ -33,10 +33,30 @@ pub struct ExpCtx {
     /// trials per arm (paper uses 5; scaled default 1–3)
     pub trials: usize,
     pub workers: usize,
+    /// base RNG seed: every trial's seed (and telemetry suffix) is
+    /// derived from it via [`trial_seed`], never from trial order alone
+    pub base_seed: u64,
+    /// frontier harness: adaptive best-loss tolerance vs fixed-small
+    pub frontier_tolerance: f64,
+    /// frontier harness: required simulated-wallclock speedup factor
+    pub frontier_gate: f64,
     /// telemetry template for every arm's runs (default: disabled). When
-    /// outputs are set, each trial suffixes its paths with `.t<trial>` so
+    /// outputs are set, each trial suffixes its paths with `.t<seed>` so
     /// trials never overwrite one another.
     pub telemetry: TelemetryConfig,
+}
+
+/// The RNG seed for one trial of one arm: a splitmix64-style mix of the
+/// base seed and the trial index. Pure function of `(base, trial)` — two
+/// invocations agree no matter how many trials run or in what order, and
+/// changing the base seed moves *every* trial's stream (the old
+/// `1000 + trial` scheme collided across bases and pinned trial 0 to the
+/// same stream forever).
+pub fn trial_seed(base: u64, trial: usize) -> u64 {
+    let mut z = base ^ (trial as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 impl ExpCtx {
@@ -54,6 +74,9 @@ impl ExpCtx {
             epochs,
             trials,
             workers: 1,
+            base_seed: 1000,
+            frontier_tolerance: 0.02,
+            frontier_gate: 2.0,
             telemetry: TelemetryConfig::default(),
         })
     }
@@ -114,7 +137,7 @@ impl ExpCtx {
         let mut out = Vec::with_capacity(self.trials);
         for trial in 0..self.trials {
             let mut cfg = TrainerConfig::new(self.epochs)
-                .with_seed(1000 + trial as u64)
+                .with_seed(trial_seed(self.base_seed, trial))
                 .with_workers(self.workers)
                 .with_telemetry(self.trial_telemetry(trial));
             cfg.max_microbatch = max_microbatch;
@@ -125,12 +148,16 @@ impl ExpCtx {
     }
 
     /// The context's telemetry template with per-trial output paths
-    /// (`trace.jsonl` → `trace.jsonl.t1`), so multi-trial arms keep every
-    /// trial's trace instead of overwriting the file `trials` times.
+    /// (`trace.jsonl` → `trace.jsonl.t<seed>`), so multi-trial arms keep
+    /// every trial's trace instead of overwriting the file `trials`
+    /// times. The suffix is the trial's *derived seed*, not its ordinal:
+    /// the same (base seed, trial) pair always lands on the same file,
+    /// however many trials around it run.
     fn trial_telemetry(&self, trial: usize) -> TelemetryConfig {
+        let seed = trial_seed(self.base_seed, trial);
         let suffix = |p: &std::path::Path| {
             let mut s = p.as_os_str().to_os_string();
-            s.push(format!(".t{trial}"));
+            s.push(format!(".t{seed}"));
             PathBuf::from(s)
         };
         TelemetryConfig {
@@ -214,5 +241,23 @@ mod tests {
     #[test]
     fn pm_formatting() {
         assert_eq!(pm(0.1234, 0.0021), "0.123 ± 0.002");
+    }
+
+    #[test]
+    fn trial_seeds_derive_from_base_not_order() {
+        // pure function of (base, trial): reordering or adding trials
+        // around a given one never moves its stream
+        assert_eq!(trial_seed(1000, 3), trial_seed(1000, 3));
+        // distinct trials get distinct streams
+        let seeds: Vec<u64> = (0..8).map(|t| trial_seed(1000, t)).collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "seed collision: {seeds:?}");
+        // a different base moves EVERY trial (the old `1000 + trial`
+        // scheme pinned trial k of every base to the same stream)
+        for t in 0..8 {
+            assert_ne!(trial_seed(1000, t), trial_seed(1001, t));
+        }
     }
 }

@@ -35,8 +35,8 @@ use adabatch::obs::{validate_trace, TelemetryConfig};
 use adabatch::runtime::kernels;
 use adabatch::runtime::{default_artifacts_dir, Client, Manifest, ModelRuntime};
 use adabatch::schedule::{
-    BatchGovernor, BatchSchedule, DiversityGovernor, GradVarianceController, IntervalGovernor,
-    LrSchedule, VarianceGovernor,
+    BatchGovernor, BatchSchedule, CabsGovernor, CouplingRule, DiversityGovernor,
+    GradVarianceController, IntervalGovernor, LrSchedule, SievertGovernor, VarianceGovernor,
 };
 use adabatch::serve::loadgen::{governor_from_name, run_serve_bench, Clock};
 use adabatch::serve::{LifecycleConfig, ReloadSpec};
@@ -128,7 +128,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("mitigation", "wait", "straggler mitigation: wait|stale")
         .opt("staleness-bound", "1", "max consecutive stale substitutions per shard")
         .opt("seed", "0", "PRNG seed")
-        .opt("governor", "interval", "criterion: interval|variance|diversity")
+        .opt("governor", "interval", "criterion: interval|variance|diversity|cabs|sievert")
+        .opt("coupling", "none", "LR rescale on batch growth: none|linear|sqrt (AdaBatch §3)")
         .opt("max-batch", "0", "adaptive-governor batch cap (0 = 16× initial)")
         .opt("checkpoint-dir", "", "save checkpoints here (\"\" = off)")
         .opt("checkpoint-every", "1", "epochs between checkpoints")
@@ -229,16 +230,30 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         LrSchedule::step(a.f64("lr")?, 1.0, job.trainer.epochs + 1)
     };
     let governor_name = a.str("governor");
+    let coupling = CouplingRule::from_name(&a.str("coupling"))?;
+    job.coupling = coupling;
     let mut governor: Box<dyn BatchGovernor> = match governor_name.as_str() {
-        "interval" => Box::new(IntervalGovernor::new(job.policy.clone())),
-        "variance" => Box::new(VarianceGovernor::new(
-            GradVarianceController::new(initial_batch, 1.0, 8, factor, max_batch),
-            flat_lr,
-        )),
-        "diversity" => {
-            Box::new(DiversityGovernor::new(initial_batch, flat_lr, 8, factor, max_batch))
-        }
-        other => bail!("unknown governor {other:?} (interval|variance|diversity)"),
+        "interval" => Box::new(IntervalGovernor::new(job.policy.clone()).with_coupling(coupling)),
+        "variance" => Box::new(
+            VarianceGovernor::new(
+                GradVarianceController::new(initial_batch, 1.0, 8, factor, max_batch),
+                flat_lr,
+            )
+            .with_coupling(coupling),
+        ),
+        "diversity" => Box::new(
+            DiversityGovernor::new(initial_batch, flat_lr, 8, factor, max_batch)
+                .with_coupling(coupling),
+        ),
+        "cabs" => Box::new(
+            CabsGovernor::new(initial_batch, flat_lr, 8, factor, max_batch)
+                .with_coupling(coupling),
+        ),
+        "sievert" => Box::new(
+            SievertGovernor::new(initial_batch, flat_lr, 8, factor, max_batch)
+                .with_coupling(coupling),
+        ),
+        other => bail!("unknown governor {other:?} (interval|variance|diversity|cabs|sievert)"),
     };
     // `ref_*` models run on the pure-Rust reference backend (no artifacts
     // needed); anything else resolves through the AOT manifest.
@@ -319,6 +334,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         ("report", Json::str("train")),
         ("model", Json::str(&job.model)),
         ("governor", Json::str(governor.name())),
+        ("coupling", Json::str(coupling.name())),
         ("workers", Json::num(pool as f64)),
         // dispatch provenance: which kernel path trained the run and how
         // many intra-op threads per worker (neither changes a bit of the
@@ -608,6 +624,9 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
         .opt("epochs", "15", "epochs per run (scaled default)")
         .opt("trials", "1", "trials per arm")
         .opt("workers", "1", "logical replicas for functional runs")
+        .opt("seed", "1000", "base seed; per-trial streams derive from it")
+        .opt("tolerance", "0.02", "frontier: adaptive best-loss tolerance vs fixed-small")
+        .opt("speedup-gate", "2.0", "frontier: required simulated-wallclock speedup")
         .flag("help", "show usage");
     if argv.iter().any(|a| a == "--help") {
         println!("{}", cmd.usage());
@@ -620,6 +639,9 @@ fn cmd_experiment(argv: &[String]) -> Result<()> {
     }
     let mut ctx = ExpCtx::new(a.usize("epochs")?, a.usize("trials")?)?;
     ctx.workers = a.usize("workers")?;
+    ctx.base_seed = a.u64("seed")?;
+    ctx.frontier_tolerance = a.f64("tolerance")?;
+    ctx.frontier_gate = a.f64("speedup-gate")?;
     for id in &a.positional {
         experiments::run(id, &ctx)?;
     }

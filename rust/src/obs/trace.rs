@@ -41,8 +41,11 @@ pub enum SpanPayload {
     Microbatch { slot: u32, size: u32 },
     /// Kernel-pool dispatches issued while a worker ran one slot.
     KernelDispatch { delta: u64 },
-    /// A batch-size governor decision (train or serve).
-    GovernorDecision { batch: u32, decisions: u32 },
+    /// A batch-size governor decision (train or serve). `lr` is the
+    /// coupled learning rate in force after the decision (train side);
+    /// NaN on the serve path, where there is no learning rate — the
+    /// writer omits non-finite values.
+    GovernorDecision { batch: u32, decisions: u32, lr: f64 },
     /// One serve micro-batch (virtual clock).
     ServeBatch { batch: u32, padded: u32, depth: u32 },
     /// Periodic serve-path snapshot keyed to the virtual clock.

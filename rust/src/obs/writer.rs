@@ -66,9 +66,12 @@ fn payload_fields(p: &SpanPayload, m: &mut BTreeMap<String, Json>) {
         SpanPayload::KernelDispatch { delta } => {
             put("delta", Json::num(delta as f64));
         }
-        SpanPayload::GovernorDecision { batch, decisions } => {
+        SpanPayload::GovernorDecision { batch, decisions, lr } => {
             put("batch", Json::num(batch as f64));
             put("decisions", Json::num(decisions as f64));
+            if lr.is_finite() {
+                put("lr", Json::num(lr));
+            }
         }
         SpanPayload::ServeBatch { batch, padded, depth } => {
             put("batch", Json::num(batch as f64));
@@ -315,7 +318,8 @@ mod tests {
     fn events() -> Vec<TraceEvent> {
         let mut buf = TraceBuf::new(8);
         buf.record_at(SpanPayload::ServeBatch { batch: 3, padded: 4, depth: 2 }, 1000, 500);
-        buf.record_at(SpanPayload::GovernorDecision { batch: 8, decisions: 1 }, 1500, 0);
+        let decision = SpanPayload::GovernorDecision { batch: 8, decisions: 1, lr: f64::NAN };
+        buf.record_at(decision, 1500, 0);
         buf.drain()
     }
 

@@ -1,0 +1,100 @@
+//! AdaBatch §3's learning-rate rescaling-on-growth rule, factored out of
+//! the individual governors into one governor-owned [`CouplingRule`].
+//!
+//! When a governor grows the batch from its initial size `r₀` to `r`,
+//! the rule maps the growth ratio `ρ = r / r₀` to a multiplier on the
+//! governor's base learning-rate schedule:
+//!
+//! - `None`   — multiplier 1 (the base schedule already encodes any
+//!   compensation, e.g. the paper's matched §4.1 pair where the adaptive
+//!   arm's decay 0.75 = fixed decay 0.375 × growth factor 2);
+//! - `Linear` — multiplier ρ (Goyal et al.'s linear scaling rule: the
+//!   per-*sample* effective step α/r stays exactly what the fixed-small
+//!   baseline uses, AdaBatch §3);
+//! - `Sqrt`   — multiplier √ρ (Hoffer et al.'s variance-matching rule).
+//!
+//! The rule is applied inside every governor's `lr_coupling()`, so the
+//! trainer loop stays criterion-agnostic: it keeps asking the governor
+//! for the iteration LR and never learns which rule produced it.
+
+use anyhow::{bail, Result};
+
+/// How a governor rescales its base LR schedule when the batch grows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CouplingRule {
+    /// no rescaling: LR is the base schedule verbatim
+    #[default]
+    None,
+    /// LR × ρ on growth ratio ρ (constant per-sample effective step)
+    Linear,
+    /// LR × √ρ on growth ratio ρ (gradient-variance matching)
+    Sqrt,
+}
+
+impl CouplingRule {
+    /// Multiplier applied to the base LR at growth ratio `ratio`
+    /// (current batch / initial batch; 1.0 before any growth).
+    pub fn factor(&self, ratio: f64) -> f64 {
+        match self {
+            CouplingRule::None => 1.0,
+            CouplingRule::Linear => ratio,
+            CouplingRule::Sqrt => ratio.sqrt(),
+        }
+    }
+
+    pub fn from_name(name: &str) -> Result<Self> {
+        Ok(match name {
+            "none" => CouplingRule::None,
+            "linear" => CouplingRule::Linear,
+            "sqrt" => CouplingRule::Sqrt,
+            other => bail!("unknown coupling {other:?} (none|linear|sqrt)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CouplingRule::None => "none",
+            CouplingRule::Linear => "linear",
+            CouplingRule::Sqrt => "sqrt",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{self, UsizeRange};
+
+    #[test]
+    fn factors_match_the_rule() {
+        assert_eq!(CouplingRule::None.factor(8.0), 1.0);
+        assert_eq!(CouplingRule::Linear.factor(8.0), 8.0);
+        assert_eq!(CouplingRule::Sqrt.factor(4.0), 2.0);
+        // no growth -> every rule is the identity
+        for rule in [CouplingRule::None, CouplingRule::Linear, CouplingRule::Sqrt] {
+            assert_eq!(rule.factor(1.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn names_roundtrip_and_default_is_none() {
+        for rule in [CouplingRule::None, CouplingRule::Linear, CouplingRule::Sqrt] {
+            assert_eq!(CouplingRule::from_name(rule.name()).unwrap(), rule);
+        }
+        assert!(CouplingRule::from_name("cubic").is_err());
+        assert_eq!(CouplingRule::default(), CouplingRule::None);
+    }
+
+    #[test]
+    fn prop_factor_exact_on_power_of_two_ratios() {
+        // the governors only ever grow along power-of-two ladders, where
+        // both rules are exact in f64: linear is the ratio itself, sqrt
+        // of 4^k is 2^k
+        propcheck::check("coupling factors exact on ladder ratios", UsizeRange(0, 10), |&k| {
+            let ratio = (1usize << k) as f64;
+            let lin = CouplingRule::Linear.factor(ratio) == ratio;
+            let sq4 = CouplingRule::Sqrt.factor(ratio * ratio) == ratio;
+            lin && sq4
+        });
+    }
+}

@@ -15,16 +15,29 @@
 //!   below a threshold (wraps [`GradVarianceController`]).
 //! * [`DiversityGovernor`] — grows toward `initial × diversity` where
 //!   diversity is the measured gradient-diversity ratio.
+//! * [`CabsGovernor`] — CABS (Balles et al. 2017, 1612.05086 §3): batch
+//!   coupled to the learning rate via the gradient-variance estimate,
+//!   `m* ∝ α · tr(Σ) / L`.
+//! * [`SievertGovernor`] — geometric batch growth on loss-plateau
+//!   detection (Sievert & Shah 2019, 1910.08222).
+//!
+//! Every governor also owns a [`CouplingRule`] (AdaBatch §3's
+//! LR-rescaling-on-growth), applied inside `lr_coupling()` on top of the
+//! governor's base LR schedule — so the trainer loop stays
+//! criterion-agnostic and the rescale rule cannot drift per governor.
 //!
 //! Contract notes: `batch_for_epoch` is consulted once per epoch (batch
 //! transitions are epoch-granular so the executable ladder and epoch
 //! planner stay coherent); `observe` feeds per-iteration gradient
 //! statistics the accumulator produces for free, gated by `wants_stats`
-//! so static schedules pay nothing; `ladder` must enumerate every batch
-//! size the governor can ever request so the controller can pre-flight
-//! plan all of them before epoch 0.
+//! so static schedules pay nothing; `observe_loss` feeds the iteration's
+//! weighted training loss under the same gate (loss-driven criteria);
+//! `ladder` must enumerate every batch size the governor can ever
+//! request so the controller can pre-flight plan all of them before
+//! epoch 0.
 
 use super::adaptive::{GradStats, GradVarianceController};
+use super::coupling::CouplingRule;
 use super::lr::LrSchedule;
 use super::policy::AdaBatchPolicy;
 
@@ -48,15 +61,24 @@ pub trait BatchGovernor {
     fn decided_batch(&self) -> usize;
 
     /// Learning rate at (epoch, iter) — the coupling half of the paper's
-    /// effective-LR contract. Data-driven governors typically return a
-    /// flat (or warmup-only) schedule: batch growth *is* the decay (§3.1).
+    /// effective-LR contract: the governor's base schedule times its
+    /// [`CouplingRule`] factor at the current growth ratio. Data-driven
+    /// governors typically run a flat (or warmup-only) base schedule:
+    /// batch growth *is* the decay (§3.1).
     fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64;
 
     /// Feed one iteration's gradient statistics. Only called when
     /// [`BatchGovernor::wants_stats`] is true.
     fn observe(&mut self, _stats: GradStats) {}
 
-    /// Whether the loop should compute and feed [`GradStats`].
+    /// Feed one iteration's weighted training loss (loss-plateau and
+    /// CABS-style criteria). Only called when
+    /// [`BatchGovernor::wants_stats`] is true, immediately before the
+    /// same iteration's [`BatchGovernor::observe`].
+    fn observe_loss(&mut self, _loss: f64) {}
+
+    /// Whether the loop should compute and feed [`GradStats`] (and the
+    /// per-iteration loss).
     fn wants_stats(&self) -> bool {
         false
     }
@@ -72,11 +94,12 @@ pub trait BatchGovernor {
     }
 
     /// The governor's current adaptation signal — gradient SNR for the
-    /// variance criterion, mean diversity for the diversity criterion —
-    /// measured at its last decision window. `None` for static
-    /// schedules or before the first complete window. Telemetry only
-    /// (the epoch trace's `signal` field): reading it never advances
-    /// governor state.
+    /// variance criterion, mean diversity for the diversity criterion,
+    /// the CABS score for `cabs`, relative loss improvement for
+    /// `sievert` — measured at its last decision window. `None` for
+    /// static schedules or before the first complete window. Telemetry
+    /// only (the epoch trace's `signal` field): reading it never
+    /// advances governor state.
     fn signal(&self) -> Option<f64> {
         None
     }
@@ -86,13 +109,19 @@ pub trait BatchGovernor {
 #[derive(Debug, Clone)]
 pub struct IntervalGovernor {
     pub policy: AdaBatchPolicy,
+    coupling: CouplingRule,
     /// last `batch_for_epoch` decision (0 before the first)
     decided: usize,
 }
 
 impl IntervalGovernor {
     pub fn new(policy: AdaBatchPolicy) -> Self {
-        IntervalGovernor { policy, decided: 0 }
+        IntervalGovernor { policy, coupling: CouplingRule::None, decided: 0 }
+    }
+
+    pub fn with_coupling(mut self, rule: CouplingRule) -> Self {
+        self.coupling = rule;
+        self
     }
 }
 
@@ -111,7 +140,11 @@ impl BatchGovernor for IntervalGovernor {
     }
 
     fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
-        self.policy.at(epoch, iter, iters_per_epoch).lr
+        // schedule-driven: the growth ratio is a pure function of the
+        // epoch, so the coupled LR never depends on call order
+        let initial = self.policy.batch.initial().max(1);
+        let ratio = self.policy.batch.batch_at(epoch).max(initial) as f64 / initial as f64;
+        self.policy.at(epoch, iter, iters_per_epoch).lr * self.coupling.factor(ratio)
     }
 
     fn ladder(&self, epochs: usize) -> Vec<usize> {
@@ -129,6 +162,7 @@ pub struct VarianceGovernor {
     name: String,
     pub controller: GradVarianceController,
     pub lr: LrSchedule,
+    coupling: CouplingRule,
     initial_batch: usize,
 }
 
@@ -139,11 +173,17 @@ impl VarianceGovernor {
             initial_batch: controller.current_batch(),
             controller,
             lr,
+            coupling: CouplingRule::None,
         }
     }
 
     pub fn with_name(mut self, name: &str) -> Self {
         self.name = name.to_string();
+        self
+    }
+
+    pub fn with_coupling(mut self, rule: CouplingRule) -> Self {
+        self.coupling = rule;
         self
     }
 }
@@ -162,7 +202,8 @@ impl BatchGovernor for VarianceGovernor {
     }
 
     fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
-        self.lr.lr_at(epoch, iter, iters_per_epoch)
+        let ratio = self.controller.current_batch() as f64 / self.initial_batch.max(1) as f64;
+        self.lr.lr_at(epoch, iter, iters_per_epoch) * self.coupling.factor(ratio)
     }
 
     fn observe(&mut self, stats: GradStats) {
@@ -203,6 +244,7 @@ pub struct DiversityGovernor {
     /// iterations aggregated per decision
     pub window: usize,
     pub max_batch: usize,
+    coupling: CouplingRule,
     current: usize,
     div_sum: f64,
     count: usize,
@@ -228,6 +270,7 @@ impl DiversityGovernor {
             factor,
             window,
             max_batch,
+            coupling: CouplingRule::None,
             current: initial_batch,
             div_sum: 0.0,
             count: 0,
@@ -238,6 +281,11 @@ impl DiversityGovernor {
 
     pub fn with_name(mut self, name: &str) -> Self {
         self.name = name.to_string();
+        self
+    }
+
+    pub fn with_coupling(mut self, rule: CouplingRule) -> Self {
+        self.coupling = rule;
         self
     }
 
@@ -260,7 +308,8 @@ impl BatchGovernor for DiversityGovernor {
     }
 
     fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
-        self.lr.lr_at(epoch, iter, iters_per_epoch)
+        let ratio = self.current as f64 / self.initial_batch.max(1) as f64;
+        self.lr.lr_at(epoch, iter, iters_per_epoch) * self.coupling.factor(ratio)
     }
 
     fn observe(&mut self, stats: GradStats) {
@@ -307,6 +356,309 @@ impl BatchGovernor for DiversityGovernor {
     }
 }
 
+/// CABS (Balles, Romero & Hennig 2017, 1612.05086 §3): couple the batch
+/// size to the learning rate through the gradient-variance estimate,
+/// `m* ∝ α · tr(Σ) / L`. The proportionality constant is unknowable in
+/// the abstract, so the governor *self-calibrates*: the first complete
+/// window defines the score that corresponds to the initial batch, and
+/// later windows grow toward `initial × score / score₀` along the
+/// geometric ladder. Windows with no positive variance contribute
+/// nothing — in particular the calibration score is always positive, so
+/// no decision ever divides by zero.
+#[derive(Debug, Clone)]
+pub struct CabsGovernor {
+    name: String,
+    pub lr: LrSchedule,
+    pub initial_batch: usize,
+    pub factor: usize,
+    /// iterations (with positive variance) aggregated per decision
+    pub window: usize,
+    pub max_batch: usize,
+    coupling: CouplingRule,
+    current: usize,
+    /// base-schedule LR for the epoch in force (refreshed each
+    /// `batch_for_epoch`; the CABS score tracks the *base* LR, not the
+    /// coupled one, so coupling never feeds back into growth)
+    cur_lr: f64,
+    var_sum: f64,
+    var_count: usize,
+    loss_sum: f64,
+    loss_count: usize,
+    /// score-per-sample at the first complete window (None until then)
+    calib: Option<f64>,
+    decisions: usize,
+    /// CABS score `α · var / loss` at the last window close
+    last_signal: Option<f64>,
+}
+
+impl CabsGovernor {
+    pub fn new(
+        initial_batch: usize,
+        lr: LrSchedule,
+        window: usize,
+        factor: usize,
+        max_batch: usize,
+    ) -> Self {
+        assert!(factor >= 2, "growth factor must be ≥ 2");
+        assert!(window >= 1);
+        let cur_lr = lr.lr_epoch(0);
+        CabsGovernor {
+            name: "cabs".to_string(),
+            lr,
+            initial_batch,
+            factor,
+            window,
+            max_batch,
+            coupling: CouplingRule::None,
+            current: initial_batch,
+            cur_lr,
+            var_sum: 0.0,
+            var_count: 0,
+            loss_sum: 0.0,
+            loss_count: 0,
+            calib: None,
+            decisions: 0,
+            last_signal: None,
+        }
+    }
+
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn with_coupling(mut self, rule: CouplingRule) -> Self {
+        self.coupling = rule;
+        self
+    }
+
+    pub fn current_batch(&self) -> usize {
+        self.current
+    }
+}
+
+impl BatchGovernor for CabsGovernor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_for_epoch(&mut self, epoch: usize) -> usize {
+        self.cur_lr = self.lr.lr_epoch(epoch);
+        self.current
+    }
+
+    fn decided_batch(&self) -> usize {
+        self.current
+    }
+
+    fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
+        let ratio = self.current as f64 / self.initial_batch.max(1) as f64;
+        self.lr.lr_at(epoch, iter, iters_per_epoch) * self.coupling.factor(ratio)
+    }
+
+    fn observe_loss(&mut self, loss: f64) {
+        if loss.is_finite() {
+            self.loss_sum += loss;
+            self.loss_count += 1;
+        }
+    }
+
+    fn observe(&mut self, stats: GradStats) {
+        // the comparison is written so NaN variance is also rejected
+        if !(stats.grad_variance > 0.0 && stats.grad_variance.is_finite()) {
+            return; // degenerate iteration: no variance information
+        }
+        self.var_sum += stats.grad_variance;
+        self.var_count += 1;
+        if self.var_count < self.window {
+            return;
+        }
+        let var_mean = self.var_sum / self.var_count as f64;
+        let loss_mean =
+            if self.loss_count > 0 { self.loss_sum / self.loss_count as f64 } else { 1.0 };
+        // a vanishing/negative mean loss would blow the score up; treat
+        // it as the neutral 1.0 (classification losses are positive)
+        let loss_mean = if loss_mean.is_finite() && loss_mean > 0.0 { loss_mean } else { 1.0 };
+        self.var_sum = 0.0;
+        self.var_count = 0;
+        self.loss_sum = 0.0;
+        self.loss_count = 0;
+        let score = self.cur_lr * var_mean / loss_mean;
+        self.last_signal = Some(score);
+        let Some(calib) = self.calib else {
+            // first complete window: this score *defines* the initial
+            // batch. var_mean > 0 and cur_lr > 0 make it positive, so
+            // later divisions are by a strictly positive constant.
+            if score > 0.0 {
+                self.calib = Some(score / self.initial_batch.max(1) as f64);
+            }
+            return;
+        };
+        let target = score / calib;
+        let mut next = self.initial_batch;
+        while next * self.factor <= self.max_batch && (next * self.factor) as f64 <= target {
+            next *= self.factor;
+        }
+        if next > self.current {
+            self.current = next;
+            self.decisions += 1;
+        }
+    }
+
+    fn wants_stats(&self) -> bool {
+        true
+    }
+
+    fn ladder(&self, _epochs: usize) -> Vec<usize> {
+        geometric_ladder(self.initial_batch, self.factor, self.max_batch)
+    }
+
+    fn decisions(&self) -> usize {
+        self.decisions
+    }
+
+    fn signal(&self) -> Option<f64> {
+        self.last_signal
+    }
+}
+
+/// Loss-plateau criterion (Sievert & Shah 2019, 1910.08222): hold the
+/// batch while the training loss is still improving, grow it
+/// geometrically when a window's mean loss fails to improve on the
+/// previous window's by at least `plateau_threshold` (relative). The
+/// late-training regime then gets large batches — gradient noise needs
+/// averaging exactly when progress stalls — while early epochs keep the
+/// small-batch statistical efficiency.
+#[derive(Debug, Clone)]
+pub struct SievertGovernor {
+    name: String,
+    pub lr: LrSchedule,
+    pub initial_batch: usize,
+    pub factor: usize,
+    /// iterations aggregated per plateau check
+    pub window: usize,
+    pub max_batch: usize,
+    /// relative improvement below which the loss counts as plateaued
+    pub plateau_threshold: f64,
+    coupling: CouplingRule,
+    current: usize,
+    loss_sum: f64,
+    count: usize,
+    prev_mean: Option<f64>,
+    decisions: usize,
+    /// relative improvement at the last window close (telemetry only)
+    last_signal: Option<f64>,
+}
+
+impl SievertGovernor {
+    pub fn new(
+        initial_batch: usize,
+        lr: LrSchedule,
+        window: usize,
+        factor: usize,
+        max_batch: usize,
+    ) -> Self {
+        assert!(factor >= 2, "growth factor must be ≥ 2");
+        assert!(window >= 1);
+        SievertGovernor {
+            name: "sievert".to_string(),
+            lr,
+            initial_batch,
+            factor,
+            window,
+            max_batch,
+            plateau_threshold: 0.01,
+            coupling: CouplingRule::None,
+            current: initial_batch,
+            loss_sum: 0.0,
+            count: 0,
+            prev_mean: None,
+            decisions: 0,
+            last_signal: None,
+        }
+    }
+
+    pub fn with_name(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn with_coupling(mut self, rule: CouplingRule) -> Self {
+        self.coupling = rule;
+        self
+    }
+
+    pub fn with_plateau_threshold(mut self, threshold: f64) -> Self {
+        self.plateau_threshold = threshold;
+        self
+    }
+
+    pub fn current_batch(&self) -> usize {
+        self.current
+    }
+}
+
+impl BatchGovernor for SievertGovernor {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn batch_for_epoch(&mut self, _epoch: usize) -> usize {
+        self.current
+    }
+
+    fn decided_batch(&self) -> usize {
+        self.current
+    }
+
+    fn lr_coupling(&self, epoch: usize, iter: usize, iters_per_epoch: usize) -> f64 {
+        let ratio = self.current as f64 / self.initial_batch.max(1) as f64;
+        self.lr.lr_at(epoch, iter, iters_per_epoch) * self.coupling.factor(ratio)
+    }
+
+    fn observe_loss(&mut self, loss: f64) {
+        if !loss.is_finite() {
+            return;
+        }
+        self.loss_sum += loss;
+        self.count += 1;
+        if self.count < self.window {
+            return;
+        }
+        let mean = self.loss_sum / self.count as f64;
+        self.loss_sum = 0.0;
+        self.count = 0;
+        if let Some(prev) = self.prev_mean {
+            let improvement = (prev - mean) / prev.abs().max(1e-12);
+            self.last_signal = Some(improvement);
+            if improvement < self.plateau_threshold {
+                let next = self.current.saturating_mul(self.factor);
+                if next <= self.max_batch {
+                    self.current = next;
+                    self.decisions += 1;
+                }
+            }
+        }
+        self.prev_mean = Some(mean);
+    }
+
+    fn wants_stats(&self) -> bool {
+        true // gates the loop's observe_loss feed; observe() stays a no-op
+    }
+
+    fn ladder(&self, _epochs: usize) -> Vec<usize> {
+        geometric_ladder(self.initial_batch, self.factor, self.max_batch)
+    }
+
+    fn decisions(&self) -> usize {
+        self.decisions
+    }
+
+    fn signal(&self) -> Option<f64> {
+        self.last_signal
+    }
+}
+
 /// `initial × factor^k` for k = 0.. while ≤ `max_batch` (always includes
 /// `initial`).
 fn geometric_ladder(initial: usize, factor: usize, max_batch: usize) -> Vec<usize> {
@@ -326,6 +678,10 @@ mod tests {
 
     fn stats(signal: f64, noise: f64) -> GradStats {
         GradStats { mean_grad_sq_norm: signal, grad_variance: noise }
+    }
+
+    fn flat_lr(base: f64) -> LrSchedule {
+        LrSchedule::step(base, 1.0, 1000)
     }
 
     #[test]
@@ -404,6 +760,114 @@ mod tests {
         assert_eq!(g.ladder(10), vec![64, 128]);
     }
 
+    #[test]
+    fn cabs_governor_calibrates_then_grows_with_the_score() {
+        let mut g = CabsGovernor::new(32, flat_lr(0.1), 2, 2, 256);
+        assert!(g.wants_stats());
+        assert_eq!(g.batch_for_epoch(0), 32);
+        // window 1 calibrates: score 0.1·1.0/1.0 maps to batch 32
+        g.observe_loss(1.0);
+        g.observe(stats(1.0, 1.0));
+        g.observe_loss(1.0);
+        g.observe(stats(1.0, 1.0));
+        assert_eq!(g.decided_batch(), 32, "calibration window takes no decision");
+        assert_eq!(g.decisions(), 0);
+        // window 2: loss fell 4×, variance unchanged → score 4× → target
+        // 128, realized on the geometric ladder
+        g.observe_loss(0.25);
+        g.observe(stats(1.0, 1.0));
+        g.observe_loss(0.25);
+        g.observe(stats(1.0, 1.0));
+        assert_eq!(g.decided_batch(), 128);
+        assert_eq!(g.decisions(), 1);
+        let score = g.signal().expect("window closed");
+        assert!((score - 0.4).abs() < 1e-12, "score {score}");
+        // monotone: a later low-score window never shrinks the batch
+        g.observe_loss(100.0);
+        g.observe(stats(1.0, 1e-9));
+        g.observe_loss(100.0);
+        g.observe(stats(1.0, 1e-9));
+        assert_eq!(g.decided_batch(), 128);
+        assert_eq!(g.ladder(10), vec![32, 64, 128, 256]);
+    }
+
+    #[test]
+    fn cabs_governor_never_divides_by_zero_variance() {
+        // regression: an all-zero-variance stream must close no window,
+        // take no decision and keep every exposed value finite
+        let mut g = CabsGovernor::new(32, flat_lr(0.1), 2, 2, 256);
+        for _ in 0..16 {
+            g.observe_loss(0.0);
+            g.observe(stats(1.0, 0.0));
+        }
+        assert_eq!(g.decided_batch(), 32);
+        assert_eq!(g.decisions(), 0);
+        assert_eq!(g.signal(), None, "no window ever closed");
+        assert!(g.lr_coupling(0, 0, 10).is_finite());
+        // zero-loss windows with real variance: the neutral loss fallback
+        // keeps the score finite (and the calibration constant positive)
+        for _ in 0..4 {
+            g.observe_loss(0.0);
+            g.observe(stats(1.0, 1.0));
+        }
+        assert!(g.signal().expect("window closed").is_finite());
+        assert!(g.decided_batch() == 32 || g.ladder(10).contains(&g.decided_batch()));
+    }
+
+    #[test]
+    fn sievert_governor_grows_on_plateau() {
+        let mut g = SievertGovernor::new(32, flat_lr(0.1), 2, 2, 256).with_plateau_threshold(0.05);
+        assert!(g.wants_stats());
+        // first window only sets the reference mean
+        g.observe_loss(1.0);
+        g.observe_loss(1.0);
+        assert_eq!(g.decided_batch(), 32);
+        assert_eq!(g.signal(), None);
+        // strong improvement: 1.0 → 0.5 is 50% ≥ threshold, no growth
+        g.observe_loss(0.5);
+        g.observe_loss(0.5);
+        assert_eq!(g.decided_batch(), 32);
+        assert_eq!(g.decisions(), 0);
+        // plateau: 0.5 → 0.49 is 2% < 5% threshold → grow 32 → 64
+        g.observe_loss(0.49);
+        g.observe_loss(0.49);
+        assert_eq!(g.decided_batch(), 64);
+        assert_eq!(g.decisions(), 1);
+        let imp = g.signal().expect("plateau check ran");
+        assert!((imp - 0.02).abs() < 1e-9, "improvement {imp}");
+        // cap: repeated plateaus stop at max_batch
+        for _ in 0..10 {
+            g.observe_loss(0.49);
+            g.observe_loss(0.49);
+        }
+        assert_eq!(g.decided_batch(), 256);
+        assert_eq!(g.ladder(10), vec![32, 64, 128, 256]);
+    }
+
+    #[test]
+    fn coupling_rescales_on_growth() {
+        use crate::schedule::CouplingRule;
+        // variance governor, linear rule: one doubling doubles the LR
+        let ctrl = GradVarianceController::new(32, 1.0, 2, 2, 256);
+        let mut g = VarianceGovernor::new(ctrl, flat_lr(0.1)).with_coupling(CouplingRule::Linear);
+        let base = g.lr_coupling(0, 0, 10);
+        assert_eq!(base, 0.1, "no growth yet: base schedule verbatim");
+        g.observe(stats(1e-6, 10.0));
+        g.observe(stats(1e-6, 10.0));
+        assert_eq!(g.decided_batch(), 64);
+        assert_eq!(g.lr_coupling(0, 0, 10), 0.2, "LR × ratio on growth");
+        // sqrt rule on the interval governor: ratio is epoch-driven
+        let policy = AdaBatchPolicy::new(
+            "pw",
+            BatchSchedule::doubling(32, 2),
+            LrSchedule::step(0.1, 1.0, 1000),
+        );
+        let g = IntervalGovernor::new(policy).with_coupling(CouplingRule::Sqrt);
+        assert_eq!(g.lr_coupling(0, 0, 10), 0.1);
+        assert_eq!(g.lr_coupling(2, 0, 10), 0.1 * 2f64.sqrt());
+        assert_eq!(g.lr_coupling(4, 0, 10), 0.2, "two doublings: √4 = 2");
+    }
+
     /// ISSUE 7: governors surface their adaptation signal for the epoch
     /// trace — SNR for variance, mean diversity for diversity, nothing
     /// for static schedules — without advancing any state.
@@ -440,11 +904,14 @@ mod tests {
                 LrSchedule::step(0.01, 1.0, 1000),
             )),
             Box::new(DiversityGovernor::new(32, LrSchedule::step(0.01, 1.0, 1000), 4, 2, 512)),
+            Box::new(CabsGovernor::new(32, LrSchedule::step(0.01, 1.0, 1000), 4, 2, 512)),
+            Box::new(SievertGovernor::new(32, LrSchedule::step(0.01, 1.0, 1000), 4, 2, 512)),
         ];
         for g in govs.iter_mut() {
             assert!(g.batch_for_epoch(0) >= 32);
             assert!(g.lr_coupling(0, 0, 10) > 0.0);
             assert!(!g.ladder(20).is_empty());
+            g.observe_loss(1.0); // defaulted or real, must be callable on dyn
         }
     }
 

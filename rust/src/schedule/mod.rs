@@ -8,18 +8,25 @@
 //!   experiment arm in §4.
 //! * [`adaptive::GradVarianceController`] — the gradient-variance adaptive
 //!   baseline (Byrd/De/Balles et al.) used by the ablation benches.
+//! * [`coupling::CouplingRule`] — AdaBatch §3's LR-rescaling-on-growth
+//!   rule (none / linear / sqrt), owned by every governor.
 //! * [`governor::BatchGovernor`] — the criterion trait the generic
 //!   training loop is written against, with interval / variance /
-//!   diversity implementations.
+//!   diversity / CABS / loss-plateau implementations.
 
 pub mod adaptive;
 pub mod batch;
+pub mod coupling;
 pub mod governor;
 pub mod lr;
 pub mod policy;
 
 pub use adaptive::{GradStats, GradVarianceController};
 pub use batch::BatchSchedule;
-pub use governor::{BatchGovernor, DiversityGovernor, IntervalGovernor, VarianceGovernor};
+pub use coupling::CouplingRule;
+pub use governor::{
+    BatchGovernor, CabsGovernor, DiversityGovernor, IntervalGovernor, SievertGovernor,
+    VarianceGovernor,
+};
 pub use lr::LrSchedule;
 pub use policy::{AdaBatchPolicy, PolicyPoint};

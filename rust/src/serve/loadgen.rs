@@ -588,6 +588,7 @@ pub fn run_virtual(
                 SpanPayload::GovernorDecision {
                     batch: governor.current_batch() as u32,
                     decisions: governor.decisions() as u32,
+                    lr: f64::NAN, // no learning rate on the serve path
                 },
                 done,
                 0,

@@ -1,0 +1,127 @@
+//! Determinism contract for the frontier harness (ISSUE 10 satellite):
+//! same (seed, config) ⇒ a byte-identical frontier JSON report — the
+//! experiment-harness twin of `tests/serve_determinism.rs`. Everything
+//! in the report is a pure function of the inputs: training runs are
+//! seeded, wallclock is *simulated* (`ClusterModel::sharded_epoch_cost`),
+//! and the JSON object model sorts keys. Also pins the trial-seeding
+//! contract: a trial's RNG stream derives from `(base seed, trial
+//! index)`, never from how many trials run around it.
+
+use adabatch::coordinator::{train, TrainData, TrainerConfig};
+use adabatch::data::synthetic::{generate, SyntheticSpec, IMG_LEN};
+use adabatch::experiments::ablation::{run_frontier, FrontierSpec, COUPLINGS, GOVERNORS};
+use adabatch::experiments::harness::{trial_seed, ExpCtx};
+use adabatch::runtime::{ModelRuntime, REF_TRAIN_LADDER};
+use adabatch::schedule::{AdaBatchPolicy, BatchSchedule, IntervalGovernor, LrSchedule};
+use adabatch::util::json::Json;
+
+/// A deliberately small grid instance: 160-sample dataset, 16-unit MLP,
+/// so the full (governor × coupling) sweep stays test-sized.
+fn small_fixture() -> (ModelRuntime, (TrainData, TrainData), FrontierSpec<'static>) {
+    let rt = ModelRuntime::reference_mlp("ref_mlp", IMG_LEN, 16, 10, REF_TRAIN_LADDER, 64);
+    let spec = SyntheticSpec {
+        n_classes: 10,
+        train_per_class: 16,
+        test_per_class: 4,
+        signal: 1.2,
+        max_shift: 2,
+        seed: 42,
+    };
+    let d = generate(&spec);
+    let data = (TrainData::Images(d.train), TrainData::Images(d.test));
+    let frontier = FrontierSpec {
+        model: "ref_mlp",
+        initial_batch: 16,
+        max_batch: 64,
+        base_lr: 0.05,
+        lr_decay: 0.75,
+        window: 2,
+    };
+    (rt, data, frontier)
+}
+
+#[test]
+fn frontier_reports_are_byte_identical_per_seed() {
+    let (rt, data, spec) = small_fixture();
+    let ctx = ExpCtx::new(5, 1).unwrap();
+    let a = run_frontier(&ctx, &rt, &data, &spec).unwrap();
+    let b = run_frontier(&ctx, &rt, &data, &spec).unwrap();
+    assert_eq!(
+        a.to_string(),
+        b.to_string(),
+        "same (seed, config) must render a byte-identical frontier report"
+    );
+
+    // structural contract the CI smoke job greps for
+    let rendered = a.to_string();
+    assert!(rendered.contains("\"report\":\"frontier\""));
+    assert!(rendered.contains("\"frontier_ok\":"));
+    let Some(Json::Arr(cells)) = a.get("cells") else {
+        panic!("report has no cells array");
+    };
+    assert_eq!(
+        cells.len(),
+        GOVERNORS.len() * COUPLINGS.len(),
+        "one cell per (governor × coupling) point"
+    );
+    for c in cells {
+        assert!(c.get("pass").is_some(), "every cell carries a verdict");
+        let curve = c.get("curve").expect("every cell carries its curves");
+        for key in ["iterations", "sim_wall_secs", "train_loss", "test_loss", "batch"] {
+            assert!(curve.get(key).is_some(), "curve missing {key}");
+        }
+    }
+    assert!(a.get("baseline").is_some());
+}
+
+#[test]
+fn frontier_report_depends_on_the_seed() {
+    let (rt, data, spec) = small_fixture();
+    let mut ctx = ExpCtx::new(3, 1).unwrap();
+    let a = run_frontier(&ctx, &rt, &data, &spec).unwrap();
+    ctx.base_seed = 2026;
+    let b = run_frontier(&ctx, &rt, &data, &spec).unwrap();
+    assert_ne!(
+        a.to_string(),
+        b.to_string(),
+        "the base seed must be plumbed into the report (and its training runs)"
+    );
+    assert_eq!(a.get("seed").and_then(Json::as_f64), Some(1000.0));
+    assert_eq!(b.get("seed").and_then(Json::as_f64), Some(2026.0));
+}
+
+#[test]
+fn trial_streams_are_order_invariant() {
+    // run_arm's trial k must behave exactly like a direct train() at
+    // trial_seed(base, k): the surrounding trials are irrelevant
+    let (rt, data, _) = small_fixture();
+    let policy = AdaBatchPolicy::new(
+        "arm",
+        BatchSchedule::Fixed(16),
+        LrSchedule::step(0.05, 1.0, 1000),
+    );
+    let mut ctx = ExpCtx::new(3, 2).unwrap();
+    ctx.base_seed = 77;
+    let runs = ctx.run_arm(&rt, &policy, &data, None).unwrap();
+    assert_eq!(runs.len(), 2);
+
+    let cfg = TrainerConfig::new(3).with_seed(trial_seed(77, 1)).with_workers(1);
+    let mut gov = IntervalGovernor::new(policy.clone());
+    let (direct, _) = train(&rt, &cfg, &mut gov, &data.0, &data.1).unwrap();
+
+    let (arm_trial1, _) = &runs[1];
+    assert_eq!(arm_trial1.epochs.len(), direct.epochs.len());
+    for (a, b) in arm_trial1.epochs.iter().zip(&direct.epochs) {
+        assert_eq!(a.batch, b.batch);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.lr, b.lr);
+        assert_eq!(a.train_loss, b.train_loss, "epoch {}: loss must match bitwise", a.epoch);
+        assert_eq!(a.test_loss, b.test_loss);
+    }
+
+    // and the two trials are genuinely distinct streams
+    let losses = |h: &adabatch::metrics::RunHistory| {
+        h.epochs.iter().map(|e| e.train_loss).collect::<Vec<_>>()
+    };
+    assert_ne!(losses(&runs[0].0), losses(&runs[1].0), "trials must not share an RNG stream");
+}

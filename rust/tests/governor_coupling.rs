@@ -1,0 +1,130 @@
+//! Coupling contract (ISSUE 10 satellite): every governor's
+//! `lr_coupling` equals its base LR schedule times its
+//! [`CouplingRule`]'s factor at the current growth ratio — exactly
+//! (bitwise: both sides compute `base * factor(ratio)` over the same
+//! floats), scaling by the ratio under `Linear`, by √ratio under `Sqrt`,
+//! and not at all under `CouplingRule::None` — and stays constant
+//! between growth events.
+
+use adabatch::schedule::{
+    AdaBatchPolicy, BatchGovernor, BatchSchedule, CabsGovernor, CouplingRule, DiversityGovernor,
+    GradStats, GradVarianceController, IntervalGovernor, LrSchedule, SievertGovernor,
+    VarianceGovernor,
+};
+use adabatch::util::propcheck::{check, F64Range, Pair, UsizeRange};
+
+const RULES: &[CouplingRule] = &[CouplingRule::None, CouplingRule::Linear, CouplingRule::Sqrt];
+
+fn flat_lr(base: f64) -> LrSchedule {
+    LrSchedule::step(base, 1.0, 1000)
+}
+
+/// The contract both sides of every assertion share: base × rule factor
+/// at `decided / initial`.
+fn expected(base: f64, rule: CouplingRule, decided: usize, initial: usize) -> f64 {
+    base * rule.factor(decided as f64 / initial as f64)
+}
+
+/// Grow a data-driven governor to its cap by feeding it `windows` of a
+/// maximally growth-inducing stream, asserting the coupled LR tracks the
+/// contract after every window.
+fn drive_and_check(g: &mut dyn BatchGovernor, rule: CouplingRule, base: f64, initial: usize) {
+    assert_eq!(g.batch_for_epoch(0), initial);
+    for w in 0..12 {
+        for _ in 0..4 {
+            // late windows plateau (tiny loss change) AND carry huge
+            // variance/diversity, so every criterion wants growth
+            g.observe_loss(if w == 0 { 1.0 } else { 1e-9 });
+            g.observe(GradStats { mean_grad_sq_norm: 1e-9, grad_variance: 1e12 });
+        }
+        let decided = g.decided_batch();
+        let want = expected(base, rule, decided, initial);
+        let got = g.lr_coupling(0, 0, 10);
+        assert_eq!(got, want, "{}: decided {decided}, lr {got} vs {want}", g.name());
+        // constant between events: same decided batch ⇒ same LR at any
+        // (iter, epoch) of a flat base schedule
+        assert_eq!(g.lr_coupling(3, 7, 10), want, "{}: flat LR must not drift", g.name());
+    }
+}
+
+#[test]
+fn data_driven_governors_rescale_exactly_under_every_rule() {
+    check(
+        "coupled lr == base × factor(ratio)",
+        Pair(UsizeRange(3, 6), F64Range(0.005, 0.5)),
+        |&(pow, base)| {
+            let initial = 1usize << pow;
+            let max = initial << 4;
+            for &rule in RULES {
+                let mut govs: Vec<Box<dyn BatchGovernor>> = vec![
+                    Box::new(
+                        VarianceGovernor::new(
+                            GradVarianceController::new(initial, 1.0, 4, 2, max),
+                            flat_lr(base),
+                        )
+                        .with_coupling(rule),
+                    ),
+                    Box::new(
+                        DiversityGovernor::new(initial, flat_lr(base), 4, 2, max)
+                            .with_coupling(rule),
+                    ),
+                    Box::new(
+                        CabsGovernor::new(initial, flat_lr(base), 4, 2, max).with_coupling(rule),
+                    ),
+                    Box::new(
+                        SievertGovernor::new(initial, flat_lr(base), 4, 2, max)
+                            .with_coupling(rule),
+                    ),
+                ];
+                for g in govs.iter_mut() {
+                    drive_and_check(g.as_mut(), rule, base, initial);
+                    assert_eq!(
+                        g.decided_batch(),
+                        max,
+                        "{}: the growth stream must reach the cap",
+                        g.name()
+                    );
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn interval_governor_ratio_is_epoch_driven() {
+    check(
+        "interval coupling follows batch_at(epoch)",
+        Pair(UsizeRange(0, 12), F64Range(0.005, 0.5)),
+        |&(epoch, base)| {
+            let schedule = BatchSchedule::doubling(32, 2);
+            for &rule in RULES {
+                let policy = AdaBatchPolicy::new("pw", schedule.clone(), flat_lr(base));
+                let g = IntervalGovernor::new(policy.clone()).with_coupling(rule);
+                let want = expected(policy.at(epoch, 0, 10).lr, rule, schedule.batch_at(epoch), 32);
+                assert_eq!(g.lr_coupling(epoch, 0, 10), want, "epoch {epoch} rule {rule:?}");
+                // within an epoch the ratio is frozen: every iter agrees
+                assert_eq!(g.lr_coupling(epoch, 9, 10), g.lr_coupling(epoch, 0, 10));
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn none_rule_is_the_identity() {
+    // CouplingRule::None must reproduce the pre-coupling governors
+    // verbatim, growth or no growth
+    let ctrl = GradVarianceController::new(32, 1.0, 2, 2, 256);
+    let mut with = VarianceGovernor::new(ctrl.clone(), flat_lr(0.1))
+        .with_coupling(CouplingRule::None);
+    let mut without = VarianceGovernor::new(ctrl, flat_lr(0.1));
+    for _ in 0..8 {
+        let s = GradStats { mean_grad_sq_norm: 1e-9, grad_variance: 10.0 };
+        with.observe(s);
+        without.observe(s);
+        assert_eq!(with.decided_batch(), without.decided_batch());
+        assert_eq!(with.lr_coupling(0, 0, 10), without.lr_coupling(0, 0, 10));
+    }
+    assert!(with.decided_batch() > 32, "the stream must actually grow the batch");
+}

@@ -1,0 +1,141 @@
+//! Governor safety under adversarial gradient streams (ISSUE 10
+//! satellite): whatever a data-driven governor observes — all-zero
+//! statistics, wild (finite) spikes, monotone decay — its decided batch
+//! stays a member of its pre-flight ladder and inside
+//! `[initial, max_batch]`, and its exposed telemetry never poisons the
+//! coupled LR. The ladder contract is what lets the controller plan
+//! every executable before epoch 0; a governor that invents an
+//! off-ladder batch would fail there at best and mid-training at worst.
+
+use adabatch::schedule::{
+    BatchGovernor, CabsGovernor, DiversityGovernor, GradStats, GradVarianceController,
+    LrSchedule, SievertGovernor, VarianceGovernor,
+};
+use adabatch::util::propcheck::{check, Triple, UsizeRange};
+use adabatch::util::rng::Pcg32;
+
+fn flat_lr(base: f64) -> LrSchedule {
+    LrSchedule::step(base, 1.0, 1000)
+}
+
+/// The three adversarial stream shapes the satellite calls out.
+#[derive(Debug, Clone, Copy)]
+enum Stream {
+    /// degenerate: zero signal, zero variance, zero loss
+    Zeros,
+    /// NaN-free spikes alternating across ~60 orders of magnitude
+    Spikes,
+    /// the classic SGD regime: everything decays geometrically
+    Decay,
+}
+
+const STREAMS: &[Stream] = &[Stream::Zeros, Stream::Spikes, Stream::Decay];
+
+fn feed(g: &mut dyn BatchGovernor, stream: Stream, iters: usize, seed: u64) {
+    let mut rng = Pcg32::new(seed);
+    for it in 0..iters {
+        let (loss, signal, var) = match stream {
+            Stream::Zeros => (0.0, 0.0, 0.0),
+            Stream::Spikes => {
+                let up = rng.next_f64() < 0.5;
+                let mag = if up { 1e30 } else { 1e-30 };
+                (mag, mag, if rng.next_f64() < 0.5 { 1e30 } else { 1e-30 })
+            }
+            Stream::Decay => {
+                let d = 0.9f64.powi(it as i32);
+                (d, d, d * 0.1)
+            }
+        };
+        g.observe_loss(loss);
+        g.observe(GradStats { mean_grad_sq_norm: signal, grad_variance: var });
+    }
+}
+
+fn governors(initial: usize, window: usize, max: usize) -> Vec<Box<dyn BatchGovernor>> {
+    vec![
+        Box::new(VarianceGovernor::new(
+            GradVarianceController::new(initial, 1.0, window, 2, max),
+            flat_lr(0.1),
+        )),
+        Box::new(DiversityGovernor::new(initial, flat_lr(0.1), window, 2, max)),
+        Box::new(CabsGovernor::new(initial, flat_lr(0.1), window, 2, max)),
+        Box::new(SievertGovernor::new(initial, flat_lr(0.1), window, 2, max)),
+    ]
+}
+
+#[test]
+fn decided_batch_stays_on_the_ladder_under_adversarial_streams() {
+    check(
+        "decided batch ∈ ladder ∩ [initial, max]",
+        Triple(UsizeRange(3, 6), UsizeRange(1, 6), UsizeRange(0, 200)),
+        |&(pow, window, iters)| {
+            let initial = 1usize << pow;
+            let max = initial << 3;
+            for &stream in STREAMS {
+                for g in governors(initial, window, max).iter_mut() {
+                    let ladder = g.ladder(20);
+                    assert!(ladder.contains(&initial), "{}: ladder misses initial", g.name());
+                    // interleave decisions with epoch boundaries the way
+                    // the controller does
+                    for epoch in 0..3 {
+                        let b = g.batch_for_epoch(epoch);
+                        assert!(ladder.contains(&b), "{}: {b} off-ladder", g.name());
+                        feed(g.as_mut(), stream, iters, 7 + epoch as u64);
+                        let d = g.decided_batch();
+                        assert!(
+                            ladder.contains(&d),
+                            "{}/{stream:?}: decided {d} not in ladder {ladder:?}",
+                            g.name()
+                        );
+                        assert!((initial..=max).contains(&d), "{}: {d} out of bounds", g.name());
+                        assert!(g.lr_coupling(epoch, 0, 10).is_finite(), "{}", g.name());
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn cabs_zero_variance_stream_takes_no_decision() {
+    // regression: CABS divides only by its calibration score, which an
+    // all-zero-variance stream can never set — so no decision, no NaN,
+    // no division by zero, however long the stream runs
+    let mut g = CabsGovernor::new(32, flat_lr(0.1), 3, 2, 512);
+    assert_eq!(g.batch_for_epoch(0), 32);
+    for _ in 0..500 {
+        g.observe_loss(0.0);
+        g.observe(GradStats { mean_grad_sq_norm: 0.0, grad_variance: 0.0 });
+    }
+    assert_eq!(g.decided_batch(), 32);
+    assert_eq!(g.decisions(), 0);
+    assert_eq!(g.signal(), None, "no window may close on zero variance");
+    assert!(g.lr_coupling(0, 0, 10).is_finite());
+    // and a later healthy stream still calibrates and grows normally
+    for _ in 0..6 {
+        g.observe_loss(1.0);
+        g.observe(GradStats { mean_grad_sq_norm: 1.0, grad_variance: 1.0 });
+    }
+    for _ in 0..6 {
+        g.observe_loss(1e-6);
+        g.observe(GradStats { mean_grad_sq_norm: 1.0, grad_variance: 1.0 });
+    }
+    assert!(g.decided_batch() > 32, "recovery: the healthy stream must grow the batch");
+    assert!(g.ladder(20).contains(&g.decided_batch()));
+}
+
+#[test]
+fn monotone_decay_never_shrinks_the_batch() {
+    for g in governors(16, 2, 256).iter_mut() {
+        let mut prev = g.batch_for_epoch(0);
+        for it in 0..64usize {
+            let d = 0.95f64.powi(it as i32);
+            g.observe_loss(d);
+            g.observe(GradStats { mean_grad_sq_norm: d, grad_variance: d });
+            let cur = g.decided_batch();
+            assert!(cur >= prev, "{}: batch shrank {prev} → {cur}", g.name());
+            prev = cur;
+        }
+    }
+}
